@@ -1,0 +1,38 @@
+"""Fig 10 — average query time across (build size × query size) pairs."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import lsm_levels, BUILD_SIZE, KEY_SPACE, emit, keyset, time_call
+from repro import core
+from repro.core.baselines import btree, hash_table as ht, lsm
+
+
+def run() -> None:
+    rng = np.random.default_rng(5)
+    for bp in (BUILD_SIZE // 4, BUILD_SIZE):
+        for qp in (BUILD_SIZE // 4, BUILD_SIZE):
+            keys = keyset(rng, bp)
+            vals = np.arange(bp, dtype=np.int32)
+            sk, sv = np.sort(keys), vals[np.argsort(keys)]
+            flix = core.build(keys, vals, node_size=32, nodes_per_bucket=16)
+            bt = btree.build(keys, vals)
+            lsmu = lsm.insert(
+                lsm.empty_state(chunk=4096, num_levels=lsm_levels(bp, 4096)),
+                jnp.asarray(sk), jnp.asarray(sv),
+            )
+            h = ht.empty_state(capacity=int(bp / 0.8) + 64)
+            h, _ = ht.insert(h, jnp.asarray(sk), jnp.asarray(sv))
+
+            half = qp // 2
+            qhit = rng.choice(keys, size=half)
+            qmiss = rng.integers(0, KEY_SPACE, size=qp - half).astype(np.int32)
+            q = jnp.asarray(np.sort(np.concatenate([qhit, qmiss])))
+
+            tag = f"fig10_b{bp}_q{qp}"
+            emit(f"{tag}_flix", time_call(lambda: core.point_query(flix, q)))
+            emit(f"{tag}_btree", time_call(lambda: btree.point_query(bt, q)))
+            emit(f"{tag}_lsmu", time_call(lambda: lsm.point_query(lsmu, q)))
+            emit(f"{tag}_hashtable", time_call(lambda: ht.point_query(h, q)))

@@ -1,0 +1,66 @@
+"""Shared benchmark harness utilities.
+
+CPU-host scaling note (DESIGN.md §7): the paper benchmarks on an A6000 at
+build sizes 2^24–2^27; this container is a single-CPU JAX host, so the
+default sizes are 2^14–2^17 and we measure the same *relative* quantities
+(FliX vs baselines, round-over-round dynamics, QTMF orderings).  Every
+table prints ``name,us_per_call,derived`` CSV rows so `benchmarks.run`
+aggregates uniformly.  Set REPRO_BENCH_SCALE=large for 2^20-size runs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+BUILD_SIZE = {"small": 1 << 14, "medium": 1 << 17, "large": 1 << 20}[SCALE]
+KEY_SPACE = BUILD_SIZE * 8
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time of fn(*args) in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def keyset(rng: np.random.Generator, n: int, space: int = None):
+    space = space or KEY_SPACE
+    return rng.choice(space, size=n, replace=False).astype(np.int32)
+
+
+def make_workload(rng, n_build: int, n_update: int, x_pct: float, y_pct: float):
+    """Paper §5.2.1 workloads: X% of the key range gets Y% of the updates."""
+    build = np.sort(keyset(rng, n_build + n_update))
+    idx = rng.permutation(n_build + n_update)
+    build_keys = np.sort(build[idx[:n_build]])
+    pool = build[idx[n_build:]]
+    lo = int(KEY_SPACE * rng.random() * (1 - x_pct))
+    hi = lo + int(KEY_SPACE * x_pct)
+    dense = pool[(pool >= lo) & (pool < hi)]
+    sparse = pool[(pool < lo) | (pool >= hi)]
+    n_dense = min(int(n_update * y_pct), len(dense))
+    upd = np.concatenate([dense[:n_dense], sparse[: n_update - n_dense]])
+    rng.shuffle(upd)
+    return build_keys, upd[:n_update].astype(np.int32)
+
+
+def lsm_levels(total_keys: int, chunk: int) -> int:
+    """Right-sized level count: capacity ≈ 2× the final key count."""
+    import math
+
+    need = max(1, math.ceil(total_keys / chunk))
+    return max(3, math.ceil(math.log2(need)) + 2)

@@ -1,0 +1,60 @@
+"""Fig 8 — rounds of batched deletions (after an insertion phase)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import lsm_levels, BUILD_SIZE, emit, keyset, time_call
+from repro import core
+from repro.core.baselines import btree, hash_table as ht, lsm, sorted_array as sa
+
+
+def run() -> None:
+    rng = np.random.default_rng(2)
+    n = BUILD_SIZE
+    allk = keyset(rng, 2 * n)
+    build, extra = allk[:n], allk[n:]
+    vals = np.arange(n, dtype=np.int32)
+    sk, sv = np.sort(build), vals[np.argsort(build)]
+
+    flix = core.build(build, vals, node_size=32, nodes_per_bucket=16)
+    bt = btree.build(build, vals)
+    lsmu = lsm.empty_state(chunk=4096, num_levels=lsm_levels(2 * n, 4096))
+    lsmu = lsm.insert(lsmu, jnp.asarray(sk), jnp.asarray(sv))
+    h = ht.empty_state(capacity=int(2 * n / 0.8))
+    h, _ = ht.insert(h, jnp.asarray(sk), jnp.asarray(sv))
+    sarr = sa.build(jnp.asarray(sk), jnp.asarray(sv), capacity=2 * n)
+
+    # insert phase (100% growth), then delete it back in 4 rounds
+    sik, siv = core.sort_batch(jnp.asarray(extra), jnp.asarray(np.arange(n, dtype=np.int32)))
+    flix, _ = core.insert_safe(flix, sik, siv)
+    bt = btree.insert(bt, sik, siv)
+    lsmu = lsm.insert(lsmu, sik, siv)
+    h, _ = ht.insert(h, jnp.asarray(extra), jnp.asarray(np.arange(n, dtype=np.int32)))
+    sarr = sa.insert(sarr, sik, siv)
+
+    per_round = n // 4
+    dels = np.sort(extra)
+    for rnd in range(4):
+        dk = jnp.asarray(np.sort(dels[rnd * per_round : (rnd + 1) * per_round]))
+
+        us = time_call(lambda: core.delete(flix, dk))
+        flix, _ = core.delete(flix, dk)
+        emit(f"fig8_delete_r{rnd}_flix_tlbulk", us, f"live={int(flix.live_keys())}")
+
+        us = time_call(lambda: btree.delete(bt, dk))
+        bt = btree.delete(bt, dk)
+        emit(f"fig8_delete_r{rnd}_btree", us)
+
+        us = time_call(lambda: lsm.delete(lsmu, dk))
+        lsmu = lsm.delete(lsmu, dk)
+        emit(f"fig8_delete_r{rnd}_lsmu_tombstone", us)
+
+        us = time_call(lambda: ht.delete(h, dk))
+        h = ht.delete(h, dk)
+        emit(f"fig8_delete_r{rnd}_hashtable_tombstone", us)
+
+        us = time_call(lambda: sa.delete(sarr, dk))
+        sarr = sa.delete(sarr, dk)
+        emit(f"fig8_delete_r{rnd}_sortedarray", us)

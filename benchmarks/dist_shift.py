@@ -1,0 +1,39 @@
+"""Fig 11 — distributional shift: X% of the key range gets Y=90% of inserts.
+
+Measures FliX query latency after each of 8 insertion rounds, for X from
+uniform (90%) down to 2% — the compute-to-bucket robustness claim.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BUILD_SIZE, emit, make_workload, time_call
+from repro import core
+
+
+def run() -> None:
+    n = BUILD_SIZE
+    growth = 3 * n
+    for x_pct in (0.90, 0.25, 0.06, 0.02):
+        rng = np.random.default_rng(6)
+        build, updates = make_workload(rng, n, growth, x_pct, 0.90)
+        vals = np.arange(n, dtype=np.int32)
+        flix = core.build(build, vals, node_size=32, nodes_per_bucket=16)
+        per_round = growth // 8
+        for rnd in range(8):
+            ins = updates[rnd * per_round : (rnd + 1) * per_round]
+            iv = np.arange(len(ins), dtype=np.int32)
+            sik, siv = core.sort_batch(jnp.asarray(ins), jnp.asarray(iv))
+            flix, _ = core.insert_safe(flix, sik, siv)
+
+            live = int(flix.live_keys())
+            qk = jnp.asarray(
+                np.sort(rng.choice(updates[: (rnd + 1) * per_round], size=n))
+            )
+            us = time_call(lambda: core.point_query(flix, qk))
+            emit(
+                f"fig11_x{int(x_pct*100)}_r{rnd}", us,
+                f"live={live};max_chain={int(jnp.max(flix.num_nodes))}",
+            )

@@ -1,0 +1,50 @@
+"""Fig 5 — formative sweep: node size (NS) × compute-block assignment.
+
+The paper sweeps NS ∈ {8, 14, 32} × TPB ∈ {1024..128} per insert kernel.
+The TPU analogue (DESIGN.md §3): NS stays NS; the TPB axis becomes the
+kernel block geometry — nodes-per-bucket here (bucket stripe height), and
+block_q/block_b for the Pallas query kernel (kernels bench).  Scores are
+normalized per round against the best variant, like the paper's heat map.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BUILD_SIZE, emit, keyset, time_call
+from repro import core
+
+
+def run() -> None:
+    rng = np.random.default_rng(4)
+    n = BUILD_SIZE // 2
+    allk = keyset(rng, 3 * n)
+    build, updates = allk[:n], allk[n:]
+    vals = np.arange(n, dtype=np.int32)
+    per_round = n // 2
+
+    variants = [
+        (ns, npb)
+        for ns in (8, 14, 16, 32)
+        for npb in (4, 8, 16)
+    ]
+    times = {v: [] for v in variants}
+    for ns, npb in variants:
+        flix = core.build(build, vals, node_size=ns, nodes_per_bucket=npb)
+        for rnd in range(4):
+            ins = updates[rnd * per_round : (rnd + 1) * per_round]
+            iv = np.arange(per_round, dtype=np.int32)
+            sik, siv = core.sort_batch(jnp.asarray(ins), jnp.asarray(iv))
+            us = time_call(lambda: core.insert(flix, sik, siv), iters=2)
+            flix, _ = core.insert_safe(flix, sik, siv)
+            times[(ns, npb)].append(us)
+
+    for rnd in range(4):
+        best = min(times[v][rnd] for v in variants)
+        for ns, npb in variants:
+            us = times[(ns, npb)][rnd]
+            emit(
+                f"fig5_heatmap_r{rnd}_ns{ns}_npb{npb}", us,
+                f"score={us / best:.2f}",
+            )

@@ -1,0 +1,66 @@
+"""Fig 6/7 — rounds of batched insertions: FliX vs B-tree / LSMu / HT / SA.
+
+4 rounds × 50% of build size each → 200% overall growth, uniform keys
+(X=90,Y=90).  Also emits the per-structure memory footprint after the last
+round (Fig 7d).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import lsm_levels, BUILD_SIZE, emit, keyset, time_call
+from repro import core
+from repro.core.baselines import btree, hash_table as ht, lsm, sorted_array as sa
+
+
+def run() -> None:
+    rng = np.random.default_rng(1)
+    n = BUILD_SIZE
+    total = n * 3
+    allk = keyset(rng, total)
+    build, updates = allk[:n], allk[n:]
+    vals = np.arange(n, dtype=np.int32)
+    sk = np.sort(build)
+    sv = vals[np.argsort(build)]
+    per_round = n // 2
+
+    flix = core.build(build, vals, node_size=32, nodes_per_bucket=16)
+    bt = btree.build(build, vals)
+    lsmu = lsm.empty_state(chunk=4096, num_levels=lsm_levels(total, 4096))
+    lsmu = lsm.insert(lsmu, jnp.asarray(sk), jnp.asarray(sv))
+    h = ht.empty_state(capacity=int(total / 0.8))
+    h, _ = ht.insert(h, jnp.asarray(sk), jnp.asarray(sv))
+    sarr = sa.build(jnp.asarray(sk), jnp.asarray(sv), capacity=total)
+
+    for rnd in range(4):
+        ins = updates[rnd * per_round : (rnd + 1) * per_round]
+        iv = np.arange(per_round, dtype=np.int32)
+        sik, siv = core.sort_batch(jnp.asarray(ins), jnp.asarray(iv))
+
+        us = time_call(lambda: core.insert(flix, sik, siv))
+        flix, _ = core.insert_safe(flix, sik, siv)
+        emit(f"fig7_insert_r{rnd}_flix_tlbulk", us, f"live={int(flix.live_keys())}")
+
+        us = time_call(lambda: btree.insert(bt, sik, siv))
+        bt = btree.insert(bt, sik, siv)
+        emit(f"fig7_insert_r{rnd}_btree", us)
+
+        us = time_call(lambda: lsm.insert(lsmu, sik, siv))
+        lsmu = lsm.insert(lsmu, sik, siv)
+        emit(f"fig7_insert_r{rnd}_lsmu", us)
+
+        us = time_call(lambda: ht.insert(h, jnp.asarray(ins), jnp.asarray(iv)))
+        h, _ = ht.insert(h, jnp.asarray(ins), jnp.asarray(iv))
+        emit(f"fig7_insert_r{rnd}_hashtable", us)
+
+        us = time_call(lambda: sa.insert(sarr, sik, siv))
+        sarr = sa.insert(sarr, sik, siv)
+        emit(f"fig7_insert_r{rnd}_sortedarray", us)
+
+    emit("fig7d_mem_flix", 0, f"bytes={flix.memory_bytes()}")
+    emit("fig7d_mem_btree", 0, f"bytes={bt.memory_bytes()}")
+    emit("fig7d_mem_lsmu", 0, f"bytes={lsmu.memory_bytes()}")
+    emit("fig7d_mem_hashtable", 0, f"bytes={h.memory_bytes()}")
+    emit("fig7d_mem_sortedarray", 0, f"bytes={sarr.memory_bytes()}")

@@ -1,0 +1,78 @@
+"""Fig 9 / Fig 2 — query latency (all-hit / all-miss) after each update
+round, plus Query-Throughput-per-Memory-Footprint (QTMF)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import lsm_levels, BUILD_SIZE, KEY_SPACE, emit, keyset, time_call
+from repro import core
+from repro.core.baselines import btree, hash_table as ht, lsm, sorted_array as sa
+
+
+def run() -> None:
+    rng = np.random.default_rng(3)
+    n = BUILD_SIZE
+    allk = keyset(rng, 2 * n)
+    build, extra = allk[:n], allk[n:]
+    vals = np.arange(n, dtype=np.int32)
+    sk, sv = np.sort(build), vals[np.argsort(build)]
+
+    flix = core.build(build, vals, node_size=32, nodes_per_bucket=16)
+    bt = btree.build(build, vals)
+    lsmu = lsm.empty_state(chunk=4096, num_levels=lsm_levels(2 * n, 4096))
+    lsmu = lsm.insert(lsmu, jnp.asarray(sk), jnp.asarray(sv))
+    h = ht.empty_state(capacity=int(2 * n / 0.8))
+    h, _ = ht.insert(h, jnp.asarray(sk), jnp.asarray(sv))
+    sarr = sa.build(jnp.asarray(sk), jnp.asarray(sv), capacity=2 * n)
+
+    live = set(build.tolist())
+    pool = extra.copy()
+    per_round = n // 4
+    nq = n
+
+    structures = {
+        "flix": (lambda q: core.point_query(flix, q), lambda: flix.memory_bytes()),
+        "btree": (lambda q: btree.point_query(bt, q), lambda: bt.memory_bytes()),
+        "lsmu": (lambda q: lsm.point_query(lsmu, q), lambda: lsmu.memory_bytes()),
+        "hashtable": (lambda q: ht.point_query(h, q), lambda: h.memory_bytes()),
+        "sortedarray": (lambda q: sa.point_query(sarr, q), lambda: sarr.memory_bytes()),
+    }
+
+    # 4 insert rounds then 4 delete rounds; queries after every round
+    for rnd in range(8):
+        if rnd < 4:
+            ins = pool[rnd * per_round : (rnd + 1) * per_round]
+            iv = np.arange(len(ins), dtype=np.int32)
+            sik, siv = core.sort_batch(jnp.asarray(ins), jnp.asarray(iv))
+            flix, _ = core.insert_safe(flix, sik, siv)
+            bt = btree.insert(bt, sik, siv)
+            lsmu = lsm.insert(lsmu, sik, siv)
+            h, _ = ht.insert(h, jnp.asarray(ins), jnp.asarray(iv))
+            sarr = sa.insert(sarr, sik, siv)
+            live |= set(ins.tolist())
+        else:
+            dels = np.sort(pool[(rnd - 4) * per_round : (rnd - 3) * per_round])
+            dk = jnp.asarray(dels)
+            flix, _ = core.delete(flix, dk)
+            bt = btree.delete(bt, dk)
+            lsmu = lsm.delete(lsmu, dk)
+            h = ht.delete(h, dk)
+            sarr = sa.delete(sarr, dk)
+            live -= set(dels.tolist())
+
+        live_arr = np.fromiter(live, dtype=np.int32)
+        hits = jnp.asarray(np.sort(rng.choice(live_arr, size=nq)))
+        missable = np.setdiff1d(
+            rng.integers(0, KEY_SPACE, size=2 * nq).astype(np.int32), live_arr
+        )[:nq]
+        misses = jnp.asarray(np.sort(missable))
+
+        for name, (qfn, memfn) in structures.items():
+            us_hit = time_call(qfn, hits)
+            us_miss = time_call(qfn, misses)
+            qtmf = (nq / (us_hit / 1e6)) / memfn()
+            emit(f"fig9_q_r{rnd}_hit_{name}", us_hit)
+            emit(f"fig9_q_r{rnd}_miss_{name}", us_miss)
+            emit(f"fig9b_qtmf_r{rnd}_{name}", 0, f"qtmf={qtmf:.3f}")

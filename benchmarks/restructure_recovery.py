@@ -1,0 +1,40 @@
+"""Table 4 — node recovery through restructuring after insert+delete phases."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BUILD_SIZE, emit, make_workload, time_call
+from repro import core
+
+
+def run() -> None:
+    n = BUILD_SIZE
+    for label, x_pct in (("X25Y90", 0.25), ("X90Y90", 0.90)):
+        rng = np.random.default_rng(9)
+        build, updates = make_workload(rng, n, 3 * n, x_pct, 0.90)
+        vals = np.arange(n, dtype=np.int32)
+        flix = core.build(build, vals, node_size=32, nodes_per_bucket=16)
+
+        per_round = (3 * n) // 8
+        for rnd in range(8):  # 8 insertion rounds → 300% growth
+            ins = updates[rnd * per_round : (rnd + 1) * per_round]
+            iv = np.arange(len(ins), dtype=np.int32)
+            sik, siv = core.sort_batch(jnp.asarray(ins), jnp.asarray(iv))
+            flix, _ = core.insert_safe(flix, sik, siv)
+        shuffled = rng.permutation(updates)
+        for rnd in range(8):  # 8 deletion rounds
+            dels = jnp.asarray(np.sort(shuffled[rnd * per_round : (rnd + 1) * per_round]))
+            flix, _ = core.delete(flix, dels)
+
+        nodes_before = int(flix.total_nodes())
+        us = time_call(lambda: core.restructure_auto(flix), iters=1)
+        flix2 = core.restructure_auto(flix)
+        nodes_after = int(flix2.total_nodes())
+        rec = nodes_before - nodes_after
+        emit(
+            f"table4_restructure_{label}", us,
+            f"nodes={nodes_before}->{nodes_after};recovered={rec};"
+            f"pct={100*rec/max(nodes_before,1):.0f}%",
+        )

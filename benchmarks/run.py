@@ -1,0 +1,62 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §7).
+
+  python -m benchmarks.run             # everything
+  python -m benchmarks.run fig9 fig13  # substring filter
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    build_query_grid,
+    delete_rounds,
+    dist_shift,
+    heatmap,
+    insert_rounds,
+    query_qtmf,
+    restructure_recovery,
+    sort_cost,
+    successor,
+    unsorted_queries,
+)
+
+SUITES = {
+    "table1_sort": sort_cost,
+    "fig5_heatmap": heatmap,
+    "fig7_insert_rounds": insert_rounds,
+    "fig8_delete_rounds": delete_rounds,
+    "fig9_query_qtmf": query_qtmf,
+    "fig10_build_query_grid": build_query_grid,
+    "fig11_dist_shift": dist_shift,
+    "fig12_unsorted_queries": unsorted_queries,
+    "fig13_successor": successor,
+    "table4_restructure": restructure_recovery,
+}
+
+
+def main() -> None:
+    filters = sys.argv[1:]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in SUITES.items():
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        print(f"# suite {name}", flush=True)
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001 — keep other suites running
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# suite {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

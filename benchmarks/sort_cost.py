@@ -1,0 +1,19 @@
+"""Table 1 — device sort time vs batch size (the one global step FliX pays)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SCALE, emit, time_call
+
+
+def run() -> None:
+    lo, hi = (10, 18) if SCALE == "small" else (15, 22)
+    sort = jax.jit(jnp.sort)
+    rng = np.random.default_rng(0)
+    for p in range(lo, hi):
+        keys = jnp.asarray(rng.integers(0, 1 << 30, size=1 << p, dtype=np.int32))
+        us = time_call(sort, keys)
+        emit(f"table1_sort_2^{p}", us, f"n={1 << p}")

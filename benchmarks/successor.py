@@ -1,0 +1,44 @@
+"""Fig 13 — successor queries: FliX vs LSMu under increasing deletion rates.
+
+LSMu successor must skip stale/tombstoned entries level by level — the
+bounded skip loop degenerates toward a linear scan as deletions accumulate
+(the paper reports a ≈69000× gap by round 8).  FliX deletes physically, so
+its successor path is deletion-rate-independent.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import lsm_levels, BUILD_SIZE, emit, keyset, time_call
+from repro import core
+from repro.core.baselines import lsm
+
+
+def run() -> None:
+    rng = np.random.default_rng(8)
+    n = BUILD_SIZE
+    keys = keyset(rng, n)
+    vals = np.arange(n, dtype=np.int32)
+    sk, sv = np.sort(keys), vals[np.argsort(keys)]
+
+    flix = core.build(keys, vals, node_size=32, nodes_per_bucket=16)
+    lsmu = lsm.insert(
+        lsm.empty_state(chunk=4096, num_levels=lsm_levels(n, 4096)), jnp.asarray(sk), jnp.asarray(sv)
+    )
+
+    shuffled = rng.permutation(keys)
+    per_round = n // 8
+    deleted = 0
+    for rnd in range(8):
+        dels = jnp.asarray(np.sort(shuffled[rnd * per_round : (rnd + 1) * per_round]))
+        flix, _ = core.delete(flix, dels)
+        lsmu = lsm.delete(lsmu, dels)
+        deleted += per_round
+
+        q = jnp.asarray(np.sort(rng.integers(0, keys.max(), size=n // 4).astype(np.int32)))
+        us_f = time_call(lambda: core.successor_query(flix, q))
+        us_l = time_call(lambda: lsm.successor_query(lsmu, q, max_skips=64))
+        emit(f"fig13_succ_r{rnd}_flix", us_f, f"deleted={deleted}")
+        emit(f"fig13_succ_r{rnd}_lsmu", us_l, f"ratio={us_l/us_f:.1f}x")

@@ -1,0 +1,40 @@
+"""Fig 12 — unsorted queries: baselines take them natively; FliX pays the
+sort and still wins at scale (the paper's fairness experiment)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import lsm_levels, BUILD_SIZE, emit, keyset, time_call
+from repro import core
+from repro.core.baselines import btree, hash_table as ht, lsm
+
+
+def run() -> None:
+    rng = np.random.default_rng(7)
+    n = BUILD_SIZE
+    keys = keyset(rng, n)
+    vals = np.arange(n, dtype=np.int32)
+    sk, sv = np.sort(keys), vals[np.argsort(keys)]
+
+    flix = core.build(keys, vals, node_size=32, nodes_per_bucket=16)
+    bt = btree.build(keys, vals)
+    lsmu = lsm.insert(
+        lsm.empty_state(chunk=4096, num_levels=lsm_levels(n, 4096)), jnp.asarray(sk), jnp.asarray(sv)
+    )
+    h = ht.empty_state(capacity=int(n / 0.8) + 64)
+    h, _ = ht.insert(h, jnp.asarray(sk), jnp.asarray(sv))
+
+    q_unsorted = jnp.asarray(rng.choice(keys, size=2 * n))
+
+    def flix_with_sort(q):
+        return core.point_query(flix, jnp.sort(q))
+
+    us_sort_only = time_call(jax.jit(jnp.sort), q_unsorted)
+    emit("fig12_sortcost", us_sort_only, f"q={2*n}")
+    emit("fig12_flix_incl_sort", time_call(flix_with_sort, q_unsorted))
+    emit("fig12_btree", time_call(lambda q: btree.point_query(bt, q), q_unsorted))
+    emit("fig12_lsmu", time_call(lambda q: lsm.point_query(lsmu, q), q_unsorted))
+    emit("fig12_hashtable", time_call(lambda q: ht.point_query(h, q), q_unsorted))

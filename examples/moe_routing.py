@@ -1,0 +1,49 @@
+"""Flipped MoE dispatch demo: the FliX paradigm applied to expert routing.
+
+Shows the exact correspondence (DESIGN.md §4):
+    sorted op batch        ↔ tokens sorted by expert id
+    MKBA fence searchsorted ↔ per-expert group offsets
+    bucket pulls its slice  ↔ expert's contiguous token slice (grouped GEMM)
+
+    PYTHONPATH=src python examples/moe_routing.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.moe_dispatch import combine, dispatch, make_plan, moe_ffn_reference
+from repro.kernels.ops import grouped_matmul
+
+T, D, F, E, K = 512, 256, 512, 8, 2
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+logits = jnp.asarray(rng.normal(size=(T, E)).astype(np.float32))
+w_up = jnp.asarray((rng.normal(size=(E, D, F)) * 0.05).astype(np.float32))
+w_down = jnp.asarray((rng.normal(size=(E, F, D)) * 0.05).astype(np.float32))
+
+# 1. route + sort — "sort the operation batch"
+plan = make_plan(logits, K, E)
+sizes = np.diff(np.asarray(plan.group_offsets))
+print("tokens per expert (each expert pulls a contiguous slice):")
+for e, s in enumerate(sizes):
+    print(f"  expert {e}: {s:4d} tokens  [{int(plan.group_offsets[e])}:{int(plan.group_offsets[e+1])})")
+
+# 2. each expert pulls its slice and runs a dense MXU matmul
+xs = dispatch(x, plan, K)
+h = jax.nn.silu(grouped_matmul(xs, w_up, plan.group_offsets, mode="ref"))
+ys = grouped_matmul(h, w_down, plan.group_offsets, mode="ref")
+
+# 3. weighted combine back to token order
+out = combine(ys, plan, K)
+
+# matches the dense every-expert-computes-every-token oracle
+want = moe_ffn_reference(x, logits, w_up, w_down, K)
+err = float(jnp.max(jnp.abs(out - want)))
+print(f"\nflipped dispatch vs dense oracle: max err {err:.2e} ✓")
+
+# FLOPs: flipped computes E slices of ~T*K/E tokens; dense computes E*T
+flipped = 2 * 2 * T * K * D * F
+dense = 2 * 2 * T * E * D * F
+print(f"FLOPs: flipped {flipped/1e9:.2f} GF vs dense {dense/1e9:.2f} GF "
+      f"({dense/flipped:.0f}× saved)")

@@ -1,0 +1,55 @@
+"""Quickstart: the FliX index end to end in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+
+rng = np.random.default_rng(0)
+
+# ---- build: sorted keys → half-full bucketed data layer -------------------
+keys = rng.choice(1_000_000, size=50_000, replace=False).astype(np.int32)
+row_ids = np.arange(50_000, dtype=np.int32)
+index = core.build(keys, row_ids, node_size=32, nodes_per_bucket=16)
+print(f"built: {index.num_buckets} buckets, {int(index.live_keys())} keys, "
+      f"{index.memory_bytes()/2**20:.1f} MiB")
+
+# ---- flipped point queries: sort the batch, buckets pull their slices -----
+queries = np.sort(rng.choice(keys, size=10_000))
+values = core.point_query(index, jnp.asarray(queries))
+assert (np.asarray(values) >= 0).all()
+print(f"10k point queries: all hits ✓")
+
+misses = np.sort(np.setdiff1d(rng.integers(0, 1_000_000, 10_000), keys)).astype(np.int32)
+assert (np.asarray(core.point_query(index, jnp.asarray(misses))) == -1).all()
+print(f"{len(misses)} point queries: all misses ✓")
+
+# ---- batched insert (TL-Bulk semantics: per-bucket merge + splits) --------
+new_keys = np.setdiff1d(rng.integers(0, 1_000_000, 30_000), keys)[:20_000].astype(np.int32)
+sk, sv = core.sort_batch(jnp.asarray(new_keys), jnp.asarray(new_keys))
+index, stats = core.insert_safe(index, sk, sv)
+print(f"inserted {int(stats['inserted'])} keys "
+      f"({int(stats['splits'])} node splits), live={int(index.live_keys())}")
+
+# ---- successor queries (ordered-map superpower) ----------------------------
+probe = jnp.asarray(np.sort(rng.integers(0, 1_000_000, 5)).astype(np.int32))
+succ_k, succ_v = core.successor_query(index, probe)
+for q, k in zip(np.asarray(probe), np.asarray(succ_k)):
+    print(f"  successor({q}) = {k}")
+
+# ---- batched delete: physical removal, no tombstones -----------------------
+live = np.sort(np.concatenate([keys, new_keys]))
+dels = jnp.asarray(live[~(np.arange(len(live)) % 3 == 0)])  # delete 2/3
+index, dstats = core.delete(index, dels)
+print(f"deleted {int(dstats['deleted'])} keys, "
+      f"freed {int(dstats['nodes_freed'])} nodes, live={int(index.live_keys())}")
+
+# ---- restructure: flatten chains, merge underfull nodes --------------------
+before = int(index.total_nodes())
+index = core.restructure_auto(index)
+print(f"restructure: {before} → {int(index.total_nodes())} nodes "
+      f"(recovered {before - int(index.total_nodes())}, "
+      f"{index.memory_bytes()/2**20:.1f} MiB)")

@@ -1,0 +1,62 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the same production train_step / data pipeline / checkpointing as the
+cluster launcher, on whatever devices exist.  Loss drops from ~ln(V) to
+well below it within the run — the optimization path is real.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.data import DataState, make_batch_iterator
+from repro.models.model import get_config, init_params, param_count
+from repro.train import make_train_step, train_state_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # a ~100M-param member of the assigned family (musicgen-medium scaffold)
+    cfg = dataclasses.replace(
+        get_config("musicgen-medium"),
+        num_layers=8, d_model=768, num_heads=12, num_kv_heads=12,
+        head_dim=64, d_ff=3072, vocab_size=8192, frontend=None,
+        frontend_len=0, dtype="float32",
+    )
+    rng = jax.random.PRNGKey(0)
+    state = train_state_init(rng, cfg)
+    print(f"model: {param_count(state.params)/1e6:.1f}M params")
+
+    step_fn = jax.jit(
+        make_train_step(
+            cfg, lr=3e-4, warmup=50, total_steps=args.steps, loss_chunk=128
+        ),
+        donate_argnums=(0,),
+    )
+    it = make_batch_iterator(
+        cfg.vocab_size, args.seq, args.batch, state=DataState(seed=0)
+    )
+    t0, first_loss = time.time(), None
+    for step, batch in it:
+        if step >= args.steps:
+            break
+        state, m = step_fn(state, batch)
+        if step % 25 == 0 or step == args.steps - 1:
+            loss = float(m["loss"])
+            first_loss = first_loss or loss
+            tok_s = args.batch * args.seq * (step + 1) / (time.time() - t0)
+            print(f"step {step:4d}  loss {loss:.4f}  ({tok_s:,.0f} tok/s)", flush=True)
+    print(f"loss: {first_loss:.3f} → {float(m['loss']):.3f} ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing (save/restore, async, elastic reshard)."""
+
+from repro.checkpoint.manager import CheckpointManager, restore_pytree, save_pytree

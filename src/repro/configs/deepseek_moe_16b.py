@@ -1,0 +1,21 @@
+"""deepseek-moe-16b [moe] — 2 shared + 64 routed top-6, fine-grained
+[arXiv:2401.06066; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=102400,
+    head_dim=128,
+    attention="full",
+    num_experts=64,
+    top_k=6,
+    num_shared_experts=2,
+    moe_d_ff=1408,
+    rope_theta=10_000.0,
+)

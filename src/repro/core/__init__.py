@@ -1,0 +1,28 @@
+"""FliX core: the paper's flipped-indexing CDS as a composable JAX module."""
+
+from repro.core.state import (
+    EMPTY,
+    KEY_DTYPE,
+    MAX_VALID,
+    MIN_KEY,
+    NOT_FOUND,
+    VAL_DTYPE,
+    FliXState,
+    empty_state,
+)
+from repro.core.batch import (
+    bucket_of,
+    bucket_slices,
+    dedup_last_wins,
+    gather_sublists,
+    sort_batch,
+)
+from repro.core.build import build, build_from_sorted, plan_geometry
+from repro.core.query import point_query, range_query, successor_query
+from repro.core.insert import insert, insert_safe
+from repro.core.delete import delete, merge_underfull
+from repro.core.restructure import (
+    restructure,
+    restructure_auto,
+    restructure_grow,
+)

@@ -1,0 +1,14 @@
+"""JAX implementations of the paper's experimental baselines (§5.1).
+
+* ``sorted_array``  — full-rebuild GPU Sorted Array (merge on insert).
+* ``lsm``           — LSMu: the authors' improved GPU LSM-tree (levels +
+                      cascade merge, in-place value tombstones, successor).
+* ``btree``         — B-link-style tree: same data layer as FliX but queries
+                      *traverse an index layer* (the comparison the paper's
+                      flipped-indexing claim is about) and updates pay index
+                      maintenance.
+* ``hash_table``    — Warpcore-style open addressing (fixed capacity, load
+                      factor, tombstone deletion, probe-chain misses).
+"""
+
+from repro.core.baselines import btree, hash_table, lsm, sorted_array  # noqa: F401

@@ -1,0 +1,157 @@
+"""Warpcore-style GPU hash table baseline (paper §2.2.3).
+
+Open addressing with linear probing, fixed capacity (initialized at a load
+factor, per §5.1 at 80%), tombstone-based deletion (marked, not reclaimed
+for probe-chain purposes until reinsertion), no ordered operations.
+
+Batched data-parallel emulation of concurrent insertion: each round, every
+unplaced key claims its current probe slot via a scatter-min; losers advance
+to the next probe distance.  This mirrors the CAS-retry loop of the real
+table at batch granularity.  Tombstone slots are reusable for insertion but
+do not terminate probe chains — which is exactly why miss-query performance
+degrades after deletion rounds (paper §6.1), an effect our benchmarks show.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND, VAL_DTYPE
+
+S_EMPTY, S_FULL, S_TOMB = jnp.int8(0), jnp.int8(1), jnp.int8(2)
+_MULT = jnp.uint32(2654435761)  # Knuth multiplicative hash
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HashTableState:
+    keys: jax.Array   # [cap] KEY_DTYPE
+    vals: jax.Array   # [cap] VAL_DTYPE
+    slot: jax.Array   # [cap] int8 state
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    def live_keys(self):
+        return jnp.sum(self.slot == S_FULL)
+
+    def memory_bytes(self) -> int:
+        return self.keys.size * 4 + self.vals.size * 4 + self.slot.size
+
+    def load_factor(self):
+        return jnp.mean((self.slot != S_EMPTY).astype(jnp.float32))
+
+
+def empty_state(capacity: int) -> HashTableState:
+    return HashTableState(
+        keys=jnp.full((capacity,), EMPTY, KEY_DTYPE),
+        vals=jnp.zeros((capacity,), VAL_DTYPE),
+        slot=jnp.zeros((capacity,), jnp.int8),
+    )
+
+
+def _hash(keys: jax.Array, capacity: int) -> jax.Array:
+    h = keys.astype(jnp.uint32) * _MULT
+    return (h % jnp.uint32(capacity)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("max_probe",))
+def insert(state: HashTableState, keys: jax.Array, vals: jax.Array, *, max_probe: int = 64):
+    """Batched insert/upsert. Batch must be deduplicated."""
+    cap = state.capacity
+    k = keys.astype(KEY_DTYPE)
+    v = vals.astype(VAL_DTYPE)
+    h0 = _hash(k, cap)
+    valid = k != EMPTY
+
+    def body(carry):
+        tk, tv, ts, placed, dist = carry
+        idx = (h0 + dist) % cap
+        cur_key = tk[idx]
+        cur_state = ts[idx]
+        # upsert: same key already resident at this probe slot
+        match = (cur_state == S_FULL) & (cur_key == k) & ~placed & valid
+        tv = tv.at[jnp.where(match, idx, cap)].set(v, mode="drop")
+        placed = placed | match
+        # claim empty/tomb slots via scatter-min of the key value
+        open_slot = cur_state != S_FULL
+        want = open_slot & ~placed & valid
+        claims = jnp.full((cap,), EMPTY, KEY_DTYPE)
+        claims = claims.at[jnp.where(want, idx, cap)].min(k, mode="drop")
+        won = want & (claims[idx] == k)
+        tk = tk.at[jnp.where(won, idx, cap)].set(k, mode="drop")
+        tv = tv.at[jnp.where(won, idx, cap)].set(v, mode="drop")
+        ts = ts.at[jnp.where(won, idx, cap)].set(S_FULL, mode="drop")
+        placed = placed | won
+        return tk, tv, ts, placed, dist + 1
+
+    def cond(carry):
+        *_, placed, dist = carry
+        return (~jnp.all(placed)) & (dist < max_probe)
+
+    tk, tv, ts, placed, _ = jax.lax.while_loop(
+        cond,
+        body,
+        (state.keys, state.vals, state.slot, ~valid, jnp.int32(0)),
+    )
+    return HashTableState(keys=tk, vals=tv, slot=ts), jnp.sum(~placed & valid)
+
+
+@partial(jax.jit, static_argnames=("max_probe",))
+def point_query(state: HashTableState, queries: jax.Array, *, max_probe: int = 64):
+    cap = state.capacity
+    q = queries.astype(KEY_DTYPE)
+    h0 = _hash(q, cap)
+
+    def body(carry):
+        res, done, dist = carry
+        idx = (h0 + dist) % cap
+        ck, cs = state.keys[idx], state.slot[idx]
+        hit = (cs == S_FULL) & (ck == q)
+        miss = cs == S_EMPTY  # tombstones do NOT stop the probe chain
+        res = jnp.where(hit & ~done, state.vals[idx], res)
+        done = done | hit | miss
+        return res, done, dist + 1
+
+    def cond(carry):
+        _, done, dist = carry
+        return (~jnp.all(done)) & (dist < max_probe)
+
+    res, done, dist = jax.lax.while_loop(
+        cond,
+        body,
+        (jnp.full(q.shape, NOT_FOUND, VAL_DTYPE), jnp.zeros(q.shape, bool), jnp.int32(0)),
+    )
+    return res
+
+
+@partial(jax.jit, static_argnames=("max_probe",))
+def delete(state: HashTableState, keys: jax.Array, *, max_probe: int = 64):
+    """Tombstone the slot holding each key (marked, not reclaimed)."""
+    cap = state.capacity
+    k = keys.astype(KEY_DTYPE)
+    h0 = _hash(k, cap)
+
+    def body(carry):
+        ts, done, dist = carry
+        idx = (h0 + dist) % cap
+        ck, cs = state.keys[idx], ts[idx]
+        hit = (cs == S_FULL) & (ck == k)
+        miss = cs == S_EMPTY
+        ts = ts.at[jnp.where(hit & ~done, idx, cap)].set(S_TOMB, mode="drop")
+        done = done | hit | miss
+        return ts, done, dist + 1
+
+    def cond(carry):
+        _, done, dist = carry
+        return (~jnp.all(done)) & (dist < max_probe)
+
+    ts, done, _ = jax.lax.while_loop(
+        cond, body, (state.slot, jnp.zeros(k.shape, bool), jnp.int32(0))
+    )
+    return HashTableState(keys=state.keys, vals=state.vals, slot=ts)

@@ -1,0 +1,208 @@
+"""LSMu: the authors' improved GPU LSM-tree (paper §2.2.1, §5.1).
+
+Design reproduced:
+  * fixed chunk size ``b``; level ``i`` holds a sorted run of ``b * 2**i``
+    pairs; a batch insert pushes chunks through the binary-counter cascade
+    (merge-and-carry), exactly the Ashkiani et al. scheme.
+  * **LSMu deletions**: locate the key's *newest* occurrence and set its
+    value to ``TOMBSTONE`` in place — no duplicate tombstone pairs are
+    inserted (the authors' improvement over the original GPU LSM).
+  * queries search levels newest→oldest; the first occurrence decides
+    (a TOMBSTONE value ⇒ miss).
+  * successor queries must skip stale/tombstoned keys, degrading toward a
+    linear scan as deletions accumulate (Figure 13's 69000× effect) — the
+    bounded skip loop below reproduces that behavior.
+  * merging is not in place: the auxiliary buffer proportional to the
+    largest level is charged to the memory footprint (Figure 7d).
+
+The cascade occupancy pattern is a binary counter over pushed chunks, so the
+host drives which jitted merge runs — mirroring the real implementation's
+host-launched merge kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND, VAL_DTYPE
+
+TOMBSTONE = jnp.int32(-2)  # value sentinel: logically deleted
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LSMState:
+    # level i arrays have shape [b * 2**i]; EMPTY-padded when unoccupied.
+    level_keys: tuple[jax.Array, ...]
+    level_vals: tuple[jax.Array, ...]
+    occupied: jax.Array  # [L] bool
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_keys)
+
+    @property
+    def chunk(self) -> int:
+        return self.level_keys[0].shape[0]
+
+    def live_keys(self):
+        """Upper bound: occupied slots minus tombstones (stale dups remain)."""
+        total = jnp.int32(0)
+        for k, v in zip(self.level_keys, self.level_vals):
+            total += jnp.sum((k != EMPTY) & (v != TOMBSTONE))
+        return total
+
+    def memory_bytes(self) -> int:
+        total = 0
+        for k in self.level_keys:
+            total += 2 * k.size * 4
+        # auxiliary merge buffer proportional to the largest level
+        total += 2 * self.level_keys[-1].size * 4
+        return total
+
+
+def empty_state(chunk: int, num_levels: int) -> LSMState:
+    lk = tuple(
+        jnp.full((chunk * 2**i,), EMPTY, KEY_DTYPE) for i in range(num_levels)
+    )
+    lv = tuple(jnp.zeros((chunk * 2**i,), VAL_DTYPE) for i in range(num_levels))
+    return LSMState(level_keys=lk, level_vals=lv, occupied=jnp.zeros(num_levels, bool))
+
+
+@jax.jit
+def _merge_runs(k1, v1, k2, v2):
+    """Merge two sorted runs; newer run (k1) wins on duplicate keys."""
+    allk = jnp.concatenate([k2, k1])
+    allv = jnp.concatenate([v2, v1])
+    src = jnp.concatenate(
+        [jnp.zeros(k2.shape[0], jnp.int32), jnp.ones(k1.shape[0], jnp.int32)]
+    )
+    order = jnp.lexsort((src, allk))
+    k_s, v_s = allk[order], allv[order]
+    keep = jnp.concatenate([k_s[1:] != k_s[:-1], jnp.array([True])])
+    keep &= k_s != EMPTY
+    masked = jnp.where(keep, k_s, EMPTY)
+    order2 = jnp.argsort(masked, stable=True)
+    return masked[order2], v_s[order2]
+
+
+def insert(state: LSMState, sorted_keys: jax.Array, sorted_vals: jax.Array) -> LSMState:
+    """Push the batch through the cascade, chunk by chunk (host-driven)."""
+    b = state.chunk
+    n = sorted_keys.shape[0]
+    lk = list(state.level_keys)
+    lv = list(state.level_vals)
+    occ = [bool(x) for x in state.occupied]
+    for c0 in range(0, n, b):
+        ck = jnp.full((b,), EMPTY, KEY_DTYPE).at[: min(b, n - c0)].set(
+            sorted_keys[c0 : c0 + b].astype(KEY_DTYPE)
+        )
+        cv = jnp.zeros((b,), VAL_DTYPE).at[: min(b, n - c0)].set(
+            sorted_vals[c0 : c0 + b].astype(VAL_DTYPE)
+        )
+        i = 0
+        while i < len(lk) and occ[i]:
+            # carry is newer than level i's resident run
+            merged_k, merged_v = _merge_runs(ck, cv, lk[i], lv[i])
+            lk[i] = jnp.full_like(lk[i], EMPTY)
+            occ[i] = False
+            ck, cv = merged_k, merged_v
+            i += 1
+        if i >= len(lk):
+            raise RuntimeError("LSM levels exhausted; increase num_levels")
+        pad = lk[i].shape[0]
+        lk[i] = jnp.full((pad,), EMPTY, KEY_DTYPE).at[: ck.shape[0]].set(ck)
+        lv[i] = jnp.zeros((pad,), VAL_DTYPE).at[: cv.shape[0]].set(cv)
+        occ[i] = True
+    return LSMState(
+        level_keys=tuple(lk), level_vals=tuple(lv), occupied=jnp.array(occ)
+    )
+
+
+@jax.jit
+def point_query(state: LSMState, queries: jax.Array) -> jax.Array:
+    """Search every level, newest (smallest) first; first hit decides."""
+    q = queries.astype(KEY_DTYPE)
+    result = jnp.full(q.shape, NOT_FOUND, VAL_DTYPE)
+    decided = jnp.zeros(q.shape, bool)
+    for i in range(state.num_levels):
+        lk, lv = state.level_keys[i], state.level_vals[i]
+        pos = jnp.searchsorted(lk, q, side="left")
+        pos_c = jnp.minimum(pos, lk.shape[0] - 1)
+        hit = (lk[pos_c] == q) & state.occupied[i]
+        val = lv[pos_c]
+        newly = hit & ~decided
+        result = jnp.where(newly, jnp.where(val == TOMBSTONE, NOT_FOUND, val), result)
+        decided |= hit
+    return result
+
+
+@jax.jit
+def delete(state: LSMState, sorted_keys: jax.Array) -> LSMState:
+    """In-place tombstone at the key's newest occurrence (LSMu semantics)."""
+    dq = sorted_keys.astype(KEY_DTYPE)
+    decided = jnp.zeros(dq.shape, bool)
+    new_vals = []
+    for i in range(state.num_levels):
+        lk, lv = state.level_keys[i], state.level_vals[i]
+        pos = jnp.searchsorted(lk, dq, side="left")
+        pos_c = jnp.minimum(pos, lk.shape[0] - 1)
+        hit = (lk[pos_c] == dq) & state.occupied[i] & ~decided
+        marks = jnp.zeros(lk.shape, bool).at[pos_c].max(hit)  # race-free OR
+        lv = jnp.where(marks, TOMBSTONE, lv)
+        decided |= hit
+        new_vals.append(lv)
+    return LSMState(
+        level_keys=state.level_keys,
+        level_vals=tuple(new_vals),
+        occupied=state.occupied,
+    )
+
+
+@partial(jax.jit, static_argnames=("max_skips",))
+def successor_query(state: LSMState, queries: jax.Array, *, max_skips: int = 64):
+    """Smallest live key ≥ q.  Each round proposes the min candidate across
+    levels, then validates it (newest occurrence not tombstoned).  Dead
+    candidates force another round — the per-thread skip scan the paper
+    blames for LSMu's successor collapse."""
+    q0 = queries.astype(KEY_DTYPE)
+
+    def candidate(q):
+        best = jnp.full(q.shape, EMPTY, KEY_DTYPE)
+        for i in range(state.num_levels):
+            lk = state.level_keys[i]
+            pos = jnp.searchsorted(lk, q, side="left")
+            pos_c = jnp.minimum(pos, lk.shape[0] - 1)
+            k = jnp.where(state.occupied[i], lk[pos_c], EMPTY)
+            best = jnp.minimum(best, k)
+        return best
+
+    def cond(carry):
+        _, done, _, it = carry
+        return (~jnp.all(done)) & (it < max_skips)
+
+    def body(carry):
+        q, done, res, it = carry
+        cand = candidate(q)
+        exhausted = cand == EMPTY
+        val = point_query(state, cand)  # liveness check (newest occurrence)
+        live = (val != NOT_FOUND) & ~exhausted
+        res = jnp.where(~done & live, cand, res)
+        res = jnp.where(~done & exhausted, EMPTY, res)
+        done = done | live | exhausted
+        q = jnp.where(done, q, cand + 1)
+        return (q, done, res, it + 1)
+
+    init = (
+        q0,
+        jnp.zeros(q0.shape, bool),
+        jnp.full(q0.shape, EMPTY, KEY_DTYPE),
+        jnp.int32(0),
+    )
+    qf, done, res, _ = jax.lax.while_loop(cond, body, init)
+    vals = point_query(state, jnp.where(res == EMPTY, 0, res))
+    return res, jnp.where(res == EMPTY, NOT_FOUND, vals)

@@ -1,0 +1,89 @@
+"""GPU Sorted Array baseline: a single sorted (key, val) array.
+
+Updates are full rebuilds (merge + sort), the classic static-GPU-index
+pattern the paper's dynamic structures are measured against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND, VAL_DTYPE
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SortedArrayState:
+    keys: jax.Array  # [cap] sorted, EMPTY-padded tail
+    vals: jax.Array  # [cap]
+
+    def live_keys(self):
+        return jnp.sum(self.keys != EMPTY)
+
+    def memory_bytes(self) -> int:
+        # rebuild requires a same-size merge buffer; count it (paper counts
+        # LSM auxiliary buffers the same way).
+        return 2 * (self.keys.size * 4 + self.vals.size * 4)
+
+
+def build(sorted_keys: jax.Array, sorted_vals: jax.Array, capacity: int) -> SortedArrayState:
+    k = jnp.full((capacity,), EMPTY, KEY_DTYPE).at[: sorted_keys.shape[0]].set(
+        sorted_keys.astype(KEY_DTYPE)
+    )
+    v = jnp.zeros((capacity,), VAL_DTYPE).at[: sorted_vals.shape[0]].set(
+        sorted_vals.astype(VAL_DTYPE)
+    )
+    order = jnp.argsort(k, stable=True)
+    return SortedArrayState(keys=k[order], vals=v[order])
+
+
+@jax.jit
+def point_query(state: SortedArrayState, queries: jax.Array) -> jax.Array:
+    q = queries.astype(KEY_DTYPE)
+    pos = jnp.searchsorted(state.keys, q, side="left")
+    pos_c = jnp.minimum(pos, state.keys.shape[0] - 1)
+    hit = state.keys[pos_c] == q
+    return jnp.where(hit, state.vals[pos_c], NOT_FOUND)
+
+
+@jax.jit
+def successor_query(state: SortedArrayState, queries: jax.Array):
+    q = queries.astype(KEY_DTYPE)
+    pos = jnp.searchsorted(state.keys, q, side="left")
+    pos_c = jnp.minimum(pos, state.keys.shape[0] - 1)
+    k = state.keys[pos_c]
+    found = k != EMPTY
+    return jnp.where(found, k, EMPTY), jnp.where(found, state.vals[pos_c], NOT_FOUND)
+
+
+@jax.jit
+def insert(state: SortedArrayState, sorted_keys: jax.Array, sorted_vals: jax.Array):
+    """Full rebuild: concat + sort + last-wins dedup (upsert)."""
+    allk = jnp.concatenate([state.keys, sorted_keys.astype(KEY_DTYPE)])
+    allv = jnp.concatenate([state.vals, sorted_vals.astype(VAL_DTYPE)])
+    src = jnp.concatenate(
+        [jnp.zeros(state.keys.shape[0], jnp.int32), jnp.ones(sorted_keys.shape[0], jnp.int32)]
+    )
+    order = jnp.lexsort((src, allk))
+    k_s, v_s = allk[order], allv[order]
+    keep = jnp.concatenate([k_s[1:] != k_s[:-1], jnp.array([True])])
+    keep &= k_s != EMPTY
+    masked = jnp.where(keep, k_s, EMPTY)
+    order2 = jnp.argsort(masked, stable=True)
+    cap = state.keys.shape[0]
+    return SortedArrayState(keys=masked[order2][:cap], vals=v_s[order2][:cap])
+
+
+@jax.jit
+def delete(state: SortedArrayState, sorted_keys: jax.Array):
+    """Physical removal + compaction (full rebuild)."""
+    dq = sorted_keys.astype(KEY_DTYPE)
+    pos = jnp.searchsorted(dq, state.keys, side="left")
+    pos_c = jnp.minimum(pos, dq.shape[0] - 1)
+    hit = (dq[pos_c] == state.keys) & (state.keys != EMPTY)
+    masked = jnp.where(hit, EMPTY, state.keys)
+    order = jnp.argsort(masked, stable=True)
+    return SortedArrayState(keys=masked[order], vals=state.vals[order])

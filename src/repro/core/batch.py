@@ -1,0 +1,85 @@
+"""Operation-batch preprocessing (the paper's "Common Steps", §4.1).
+
+Every FliX operation consumes a *sorted* batch.  Sorting is the one global
+step (Table 1 of the paper measures its cost); everything downstream is
+bucket-local.  ``bucket_slices`` is the flipped-indexing primitive: one
+vectorized ``searchsorted`` of the MKBA fences against the sorted batch gives
+*every* bucket its slice of operations — the TPU-native form of "each bucket
+binary-searches the batch and pulls its keys".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EMPTY, KEY_DTYPE, MIN_KEY, FliXState
+
+
+def sort_batch(keys: jax.Array, vals: jax.Array | None = None):
+    """Sort an operation batch by key (vals, if given, follow their key)."""
+    order = jnp.argsort(keys, stable=True)
+    skeys = keys[order]
+    if vals is None:
+        return skeys
+    return skeys, vals[order]
+
+
+def dedup_last_wins(keys: jax.Array, vals: jax.Array):
+    """Deduplicate a *sorted* batch; the last occurrence of a key wins.
+
+    Duplicates are replaced by EMPTY and compacted to the end, preserving
+    sortedness of the valid prefix.  Returns (keys, vals, valid_count).
+    """
+    n = keys.shape[0]
+    is_last = jnp.concatenate([keys[1:] != keys[:-1], jnp.array([True])])
+    keep = is_last & (keys != EMPTY)
+    masked = jnp.where(keep, keys, EMPTY)
+    order = jnp.argsort(masked, stable=True)
+    return masked[order], vals[order], jnp.sum(keep).astype(jnp.int32)
+
+
+def bucket_slices(state: FliXState, sorted_batch: jax.Array):
+    """Per-bucket [start, end) boundaries into the sorted batch.
+
+    Bucket b owns keys in (mkba[b-1], mkba[b]]:
+      start[b] = searchsorted(batch, mkba[b-1], 'right')
+      end[b]   = searchsorted(batch, mkba[b],   'right')
+    One searchsorted over the fences serves all buckets at once.
+    """
+    ends = jnp.searchsorted(sorted_batch, state.mkba, side="right")
+    starts = jnp.concatenate([jnp.zeros((1,), ends.dtype), ends[:-1]])
+    return starts.astype(jnp.int32), ends.astype(jnp.int32)
+
+
+def bucket_of(state: FliXState, keys: jax.Array) -> jax.Array:
+    """Bucket index for each key (the classical direction; used by oracles
+    and by baselines — FliX itself routes via ``bucket_slices``)."""
+    return jnp.searchsorted(state.mkba, keys, side="left").astype(jnp.int32)
+
+
+def gather_sublists(
+    sorted_batch: jax.Array,
+    starts: jax.Array,
+    ends: jax.Array,
+    max_len: int,
+    fill_value=EMPTY,
+):
+    """Materialize per-bucket sublists as a padded [nb, max_len] tile.
+
+    ``max_len`` is a static bound (≤ bucket capacity for updates).  Entries
+    beyond the slice are ``fill_value``.  Also returns per-bucket counts
+    (clamped to max_len) and the true counts for overflow detection.
+    """
+    nb = starts.shape[0]
+    true_counts = (ends - starts).astype(jnp.int32)
+    counts = jnp.minimum(true_counts, max_len)
+    padded = jnp.concatenate(
+        [sorted_batch, jnp.full((max_len,), fill_value, sorted_batch.dtype)]
+    )
+    idx = starts[:, None] + jnp.arange(max_len, dtype=jnp.int32)[None, :]
+    idx = jnp.minimum(idx, sorted_batch.shape[0])  # clamp into the pad region
+    tile = padded[idx]
+    mask = jnp.arange(max_len, dtype=jnp.int32)[None, :] < counts[:, None]
+    tile = jnp.where(mask, tile, fill_value)
+    return tile, counts, true_counts

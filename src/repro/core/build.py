@@ -1,0 +1,120 @@
+"""Initial build (paper §3.2, Figure 3a).
+
+The sorted build keys are grouped into partitions of ``p = node_size * fill``
+(default fill = 1/2 → nodes start half full, leaving headroom for inserts
+before splits are needed).  Each partition becomes one bucket holding a
+single node; the largest key of each partition is that bucket's MKBA entry.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import (
+    EMPTY,
+    KEY_DTYPE,
+    MAX_VALID,
+    VAL_DTYPE,
+    FliXState,
+)
+
+
+def plan_geometry(
+    n_keys: int,
+    *,
+    node_size: int = 32,
+    nodes_per_bucket: int = 16,
+    fill: float = 0.5,
+) -> tuple[int, int, int]:
+    """Host-side geometry: (num_buckets, nodes_per_bucket, node_size)."""
+    p = max(1, int(node_size * fill))
+    num_buckets = max(1, math.ceil(n_keys / p))
+    return num_buckets, nodes_per_bucket, node_size
+
+
+@partial(jax.jit, static_argnames=("num_buckets", "nodes_per_bucket", "node_size", "fill"))
+def build_from_sorted(
+    sorted_keys: jax.Array,
+    sorted_vals: jax.Array,
+    *,
+    num_buckets: int,
+    nodes_per_bucket: int = 16,
+    node_size: int = 32,
+    fill: float = 0.5,
+) -> FliXState:
+    """Build from a sorted, deduplicated key/val batch (EMPTY-padded ok).
+
+    Keys beyond the first ``num_buckets * p`` valid entries must not exist
+    (geometry comes from ``plan_geometry``).
+    """
+    nb, npb, ns = num_buckets, nodes_per_bucket, node_size
+    p = max(1, int(ns * fill))
+
+    take = min(sorted_keys.shape[0], nb * p)
+    k = jnp.full((nb * p,), EMPTY, dtype=KEY_DTYPE)
+    k = k.at[:take].set(sorted_keys[:take].astype(KEY_DTYPE))
+    v = jnp.zeros((nb * p,), dtype=VAL_DTYPE)
+    v = v.at[:take].set(sorted_vals[:take].astype(VAL_DTYPE))
+
+    bkeys = k.reshape(nb, p)          # partition i → bucket i
+    bvals = v.reshape(nb, p)
+
+    keys = jnp.full((nb, npb, ns), EMPTY, dtype=KEY_DTYPE)
+    vals = jnp.zeros((nb, npb, ns), dtype=VAL_DTYPE)
+    keys = keys.at[:, 0, :p].set(bkeys)
+    vals = vals.at[:, 0, :p].set(bvals)
+
+    counts0 = jnp.sum(bkeys != EMPTY, axis=1).astype(jnp.int32)   # [nb]
+    node_count = jnp.zeros((nb, npb), jnp.int32).at[:, 0].set(counts0)
+    nmax0 = jnp.where(
+        counts0 > 0,
+        bkeys[jnp.arange(nb), jnp.maximum(counts0 - 1, 0)],
+        EMPTY,
+    ).astype(KEY_DTYPE)
+    node_max = jnp.full((nb, npb), EMPTY, dtype=KEY_DTYPE).at[:, 0].set(nmax0)
+    num_nodes = (counts0 > 0).astype(jnp.int32)
+
+    # MKBA: bucket i's fence is its largest build key; the final bucket (and
+    # any empty trailing buckets) extend to MAX_VALID so the fences cover the
+    # whole key space.  Ensure ascending by propagating a running max.
+    mkba = jnp.where(counts0 > 0, nmax0, MAX_VALID).astype(KEY_DTYPE)
+    mkba = mkba.at[-1].set(MAX_VALID)
+    mkba = jax.lax.associative_scan(jnp.maximum, mkba)
+
+    return FliXState(
+        keys=keys,
+        vals=vals,
+        node_count=node_count,
+        node_max=node_max,
+        num_nodes=num_nodes,
+        mkba=mkba,
+        needs_restructure=jnp.array(False),
+    )
+
+
+def build(
+    keys,
+    vals,
+    *,
+    node_size: int = 32,
+    nodes_per_bucket: int = 16,
+    fill: float = 0.5,
+) -> FliXState:
+    """Convenience host-side build: sorts, dedups, plans geometry, builds."""
+    from repro.core.batch import dedup_last_wins, sort_batch
+
+    keys = jnp.asarray(keys, dtype=KEY_DTYPE)
+    vals = jnp.asarray(vals, dtype=VAL_DTYPE)
+    skeys, svals = sort_batch(keys, vals)
+    skeys, svals, count = dedup_last_wins(skeys, svals)
+    n = int(count)
+    nb, npb, ns = plan_geometry(
+        n, node_size=node_size, nodes_per_bucket=nodes_per_bucket, fill=fill
+    )
+    return build_from_sorted(
+        skeys, svals, num_buckets=nb, nodes_per_bucket=npb, node_size=ns, fill=fill
+    )

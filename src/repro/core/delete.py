@@ -1,0 +1,126 @@
+"""Bulk deletion (paper §4.4, Table 3 — TL-Bulk deletion with compaction).
+
+FliX deletes *physically and immediately* — no tombstones.  Per bucket:
+mark matches against the bucket's delete sublist (compare-count, the tile
+ballot analogue), shift survivors left inside each node, drop empty nodes
+from the chain, and make their slots available again.  Underfull nodes are
+*not* merged here (that is restructuring's job; the paper notes merging on
+delete as a future optimization — see ``merge_underfull`` for ours).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND, VAL_DTYPE, FliXState
+
+
+@jax.jit
+def delete(state: FliXState, sorted_keys: jax.Array):
+    """Bulk-delete a sorted batch of keys. Returns (state', stats).
+
+    Membership is one binary search of the *whole sorted batch* per stored
+    key — the flipped direction (data looks up the batch), with no per-
+    bucket tile bound, so arbitrarily skewed batches (e.g. range frees full
+    of absent keys) are handled exactly.
+    """
+    nb, npb, ns = state.num_buckets, state.nodes_per_bucket, state.node_size
+    dk_batch = sorted_keys.astype(KEY_DTYPE)
+
+    flat_k = state.keys.reshape(-1)
+    pos = jnp.searchsorted(dk_batch, flat_k, side="left")
+    pos_c = jnp.minimum(pos, dk_batch.shape[0] - 1)
+    hit = (dk_batch[pos_c] == flat_k) & (flat_k != EMPTY)
+    deleted = hit.reshape(nb, npb, ns)
+
+    # in-node compaction: survivors shift left, EMPTY fills the tail.
+    masked = jnp.where(deleted, EMPTY, state.keys)
+    order = jnp.argsort(masked, axis=2, stable=True)
+    new_keys = jnp.take_along_axis(masked, order, axis=2)
+    new_vals = jnp.take_along_axis(state.vals, order, axis=2)
+
+    node_count = jnp.sum(new_keys != EMPTY, axis=2).astype(jnp.int32)
+
+    # chain compaction: drop empty nodes, keep chain order (stable sort by
+    # "is-empty"), freeing their slots for future splits.
+    empty_slot = node_count == 0
+    slot_order = jnp.argsort(empty_slot, axis=1, stable=True)
+    new_keys = jnp.take_along_axis(new_keys, slot_order[..., None], axis=1)
+    new_vals = jnp.take_along_axis(new_vals, slot_order[..., None], axis=1)
+    node_count = jnp.take_along_axis(node_count, slot_order, axis=1)
+
+    node_max = jnp.where(
+        node_count > 0,
+        jnp.take_along_axis(
+            new_keys, jnp.maximum(node_count - 1, 0)[..., None], axis=2
+        )[..., 0],
+        EMPTY,
+    ).astype(KEY_DTYPE)
+    num_nodes = jnp.sum(node_count > 0, axis=1).astype(jnp.int32)
+
+    new_state = FliXState(
+        keys=new_keys,
+        vals=new_vals,
+        node_count=node_count,
+        node_max=node_max,
+        num_nodes=num_nodes,
+        mkba=state.mkba,
+        needs_restructure=state.needs_restructure,
+    )
+    stats = {
+        "deleted": jnp.sum(deleted),
+        "nodes_freed": jnp.sum(state.num_nodes - num_nodes),
+    }
+    return new_state, stats
+
+
+@jax.jit
+def merge_underfull(state: FliXState):
+    """Merge underfull *adjacent* nodes within each bucket (the paper's
+    suggested deletion-path optimization, §5.4.1): greedily repack each
+    bucket's content into half-full-or-better nodes without touching MKBA.
+
+    Equivalent to a bucket-local restructure; O(bucket) like delete itself.
+    """
+    from repro.core.state import flatten_bucket_sorted
+
+    nb, npb, ns = state.num_buckets, state.nodes_per_bucket, state.node_size
+    ck, cv = flatten_bucket_sorted(state)          # [nb, cap] sorted, EMPTY tail
+    live = jnp.sum(ck != EMPTY, axis=1).astype(jnp.int32)     # [nb]
+    # repack into ceil(live/ns) balanced pieces (≥ half full except the last)
+    i = jnp.arange(ck.shape[1], dtype=jnp.int32)[None, :]
+    s = jnp.maximum((live + ns - 1) // ns, 0)
+    s_r = jnp.maximum(s, 1)[:, None]
+    m_r = jnp.maximum(live, 1)[:, None]
+    piece = (i * s_r) // m_r
+    piece_start = (piece * m_r + s_r - 1) // s_r
+    pos = i - piece_start
+    valid = ck != EMPTY
+    dump = npb * ns
+    dest = jnp.where(valid & (piece < npb), piece * ns + pos, dump)
+    nk = jnp.full((nb, npb * ns + 1), EMPTY, KEY_DTYPE)
+    nv = jnp.zeros((nb, npb * ns + 1), VAL_DTYPE)
+    nk = nk.at[jnp.arange(nb)[:, None], dest].set(ck)
+    nv = nv.at[jnp.arange(nb)[:, None], dest].set(cv)
+    new_keys = nk[:, :-1].reshape(nb, npb, ns)
+    new_vals = nv[:, :-1].reshape(nb, npb, ns)
+
+    node_count = jnp.sum(new_keys != EMPTY, axis=2).astype(jnp.int32)
+    node_max = jnp.where(
+        node_count > 0,
+        jnp.take_along_axis(
+            new_keys, jnp.maximum(node_count - 1, 0)[..., None], axis=2
+        )[..., 0],
+        EMPTY,
+    ).astype(KEY_DTYPE)
+    num_nodes = jnp.sum(node_count > 0, axis=1).astype(jnp.int32)
+    return FliXState(
+        keys=new_keys,
+        vals=new_vals,
+        node_count=node_count,
+        node_max=node_max,
+        num_nodes=num_nodes,
+        mkba=state.mkba,
+        needs_restructure=state.needs_restructure,
+    )

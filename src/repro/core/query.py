@@ -1,0 +1,138 @@
+"""Flipped query execution (paper §3.3, Figure 4).
+
+The sorted query batch replaces the index layer: bucket slice boundaries come
+from one vectorized searchsorted (``batch.bucket_slices``); inside a bucket,
+node location and in-node position are *compare-and-count* reductions — the
+TPU analogue of the paper's tile threads each owning one key and voting.
+
+Two execution forms with identical semantics:
+  * ``point_query`` / ``successor_query``: fully vectorized jnp (the oracle
+    form; also what the CPU benchmarks run).
+  * ``kernels/flix_query.py``: the Pallas compute-to-bucket kernel (grid maps
+    to bucket blocks, each pulls its query slice).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND, FliXState
+
+
+def _locate(state: FliXState, queries: jax.Array):
+    """For each query: (bucket, node-slot, in-node position, key-at-position).
+
+    node-slot is the first active node whose maxKey ≥ q (compare-count over
+    the node_max row; inactive slots hold EMPTY so they never match first).
+    """
+    b = jnp.searchsorted(state.mkba, queries, side="left").astype(jnp.int32)
+    b = jnp.minimum(b, state.num_buckets - 1)
+    nmax_rows = state.node_max[b]                       # [Q, npb]
+    nidx = jnp.sum(nmax_rows < queries[:, None], axis=1).astype(jnp.int32)
+    in_bucket = nidx < state.num_nodes[b]
+    nidx_c = jnp.minimum(nidx, state.nodes_per_bucket - 1)
+    rows = state.keys[b, nidx_c]                        # [Q, ns]
+    pos = jnp.sum(rows < queries[:, None], axis=1).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, state.node_size - 1)
+    key_at = rows[jnp.arange(queries.shape[0]), pos_c]
+    return b, nidx_c, pos_c, key_at, in_bucket, pos
+
+
+@jax.jit
+def point_query(state: FliXState, sorted_queries: jax.Array) -> jax.Array:
+    """Point lookups for a sorted query batch. Misses return NOT_FOUND."""
+    q = sorted_queries.astype(KEY_DTYPE)
+    b, nidx, pos, key_at, in_bucket, raw_pos = _locate(state, q)
+    hit = in_bucket & (raw_pos < state.node_size) & (key_at == q)
+    vals = state.vals[b, nidx, pos]
+    return jnp.where(hit, vals, NOT_FOUND)
+
+
+def _suffix_min_with_index(g: jax.Array):
+    """suffix_min[i] = min(g[i:]), plus the index attaining it."""
+    n = g.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    def combine(a, b):
+        av, ai = a
+        bv, bi = b
+        take_a = av <= bv
+        return jnp.where(take_a, av, bv), jnp.where(take_a, ai, bi)
+
+    rv, ri = jax.lax.associative_scan(combine, (g[::-1], idx[::-1]))
+    return rv[::-1], ri[::-1]
+
+
+@jax.jit
+def successor_query(state: FliXState, sorted_queries: jax.Array):
+    """Smallest stored key ≥ q (and its value); (EMPTY, NOT_FOUND) if none.
+
+    In-bucket path: compare-count as in point queries.  Out-of-bucket path
+    (bucket's largest *present* key < q): suffix-min over per-bucket minimum
+    present keys gives the next non-empty bucket in O(1) per query.
+    """
+    q = sorted_queries.astype(KEY_DTYPE)
+    nb, npb = state.num_buckets, state.nodes_per_bucket
+    b = jnp.searchsorted(state.mkba, q, side="left").astype(jnp.int32)
+    b = jnp.minimum(b, nb - 1)
+
+    # in-bucket candidate
+    nmax_rows = state.node_max[b]
+    nidx = jnp.sum(nmax_rows < q[:, None], axis=1).astype(jnp.int32)
+    in_bucket = nidx < state.num_nodes[b]
+    nidx_c = jnp.minimum(nidx, npb - 1)
+    rows = state.keys[b, nidx_c]
+    pos = jnp.sum(rows < q[:, None], axis=1).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, state.node_size - 1)
+    in_key = rows[jnp.arange(q.shape[0]), pos_c]
+    in_val = state.vals[b, nidx_c, pos_c]
+
+    # out-of-bucket candidate: first non-empty bucket after b
+    bucket_min = jnp.where(
+        state.num_nodes > 0, state.keys[:, 0, 0], EMPTY
+    )  # [nb]
+    smin, sidx = _suffix_min_with_index(bucket_min)
+    smin_pad = jnp.concatenate([smin, jnp.array([EMPTY], KEY_DTYPE)])
+    sidx_pad = jnp.concatenate([sidx, jnp.array([0], jnp.int32)])
+    out_key = smin_pad[b + 1]
+    out_bucket = sidx_pad[b + 1]
+    out_val = state.vals[out_bucket, 0, 0]
+
+    use_in = in_bucket & (pos < state.node_size)
+    succ_key = jnp.where(use_in, in_key, out_key)
+    succ_val = jnp.where(use_in, in_val, out_val)
+    found = succ_key != EMPTY
+    return succ_key, jnp.where(found, succ_val, NOT_FOUND)
+
+
+@partial(jax.jit, static_argnames=("max_results",))
+def range_query(
+    state: FliXState, lo: jax.Array, hi: jax.Array, *, max_results: int = 128
+):
+    """Keys/vals in [lo, hi] per query pair, padded to max_results.
+
+    Implemented by walking forward from the successor of ``lo`` over the
+    bucket-sorted flattened view.  Bonus operation (the paper discusses but
+    does not benchmark range queries); used by the serving KV index.
+    """
+    from repro.core.state import flatten_bucket_sorted
+
+    flat_k, flat_v = flatten_bucket_sorted(state)        # [nb, cap]
+    cap = flat_k.shape[1]
+    allk = flat_k.reshape(-1)
+    allv = flat_v.reshape(-1)
+    order = jnp.argsort(allk, stable=True)               # global sorted view
+    gk, gv = allk[order], allv[order]
+
+    start = jnp.searchsorted(gk, lo.astype(KEY_DTYPE), side="left")
+    idx = start[:, None] + jnp.arange(max_results)[None, :]
+    idx = jnp.minimum(idx, gk.shape[0] - 1)
+    rk = gk[idx]
+    rv = gv[idx]
+    valid = (rk <= hi[:, None]) & (rk != EMPTY)
+    return jnp.where(valid, rk, EMPTY), jnp.where(valid, rv, NOT_FOUND), jnp.sum(
+        valid, axis=1
+    )

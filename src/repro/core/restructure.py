@@ -1,0 +1,99 @@
+"""Restructuring (paper §3.5, Figure 3d, Table 4).
+
+Flattens every bucket's chain into single-node buckets, merges underfull
+nodes, and re-emits a uniform half-full structure aligned to the *current*
+key distribution — bounding both query latency (chain length → 1) and memory
+(node recovery).  Entirely device-resident: one global sort + the standard
+build; the host only chooses the new static geometry (the analogue of the
+paper's kernel relaunch with a new bucket count).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.build import build_from_sorted, plan_geometry
+from repro.core.state import EMPTY, FliXState
+
+
+@partial(
+    jax.jit,
+    static_argnames=("num_buckets", "nodes_per_bucket", "node_size", "fill"),
+)
+def restructure(
+    state: FliXState,
+    *,
+    num_buckets: int,
+    nodes_per_bucket: int | None = None,
+    node_size: int | None = None,
+    fill: float = 0.5,
+) -> FliXState:
+    """Rebuild into the given geometry from the current live contents."""
+    npb = nodes_per_bucket or state.nodes_per_bucket
+    ns = node_size or state.node_size
+    flat_k = state.keys.reshape(-1)
+    flat_v = state.vals.reshape(-1)
+    order = jnp.argsort(flat_k, stable=True)     # EMPTY sentinels sort last
+    return build_from_sorted(
+        flat_k[order],
+        flat_v[order],
+        num_buckets=num_buckets,
+        nodes_per_bucket=npb,
+        node_size=ns,
+        fill=fill,
+    )
+
+
+def plan(state: FliXState, *, extra_keys: int = 0, fill: float = 0.5):
+    """Host-side geometry planning from the current live count."""
+    live = int(state.live_keys()) + extra_keys
+    return plan_geometry(
+        live,
+        node_size=state.node_size,
+        nodes_per_bucket=state.nodes_per_bucket,
+        fill=fill,
+    )
+
+
+def restructure_auto(state: FliXState, *, fill: float = 0.5) -> FliXState:
+    """Restructure to the geometry the initial build would choose now."""
+    nb, npb, ns = plan(state, fill=fill)
+    return restructure(
+        state, num_buckets=nb, nodes_per_bucket=npb, node_size=ns, fill=fill
+    )
+
+
+def restructure_grow(state: FliXState, *, extra_keys: int, fill: float = 0.5) -> FliXState:
+    """Restructure sized for ``extra_keys`` more keys (overflow recovery).
+
+    Geometry guarantee used by ``insert_safe``: with ``fill`` ≤ 1/2 the new
+    buckets are half full, so a subsequent insert of ``extra_keys`` keys can
+    at most double any bucket's content — which fits, since capacity is
+    ``nodes_per_bucket/fill ≥ 2×`` the initial fill.  Worst-case skew (every
+    new key in one bucket) is additionally covered by sizing the bucket count
+    for ``live + extra`` and capping the per-bucket sublist at capacity.
+    """
+    live = int(state.live_keys())
+    p = max(1, int(state.node_size * fill))
+    # enough buckets that even if all extra keys land between two adjacent
+    # fences, that bucket's merged content (p + extra ≤ capacity) fits.
+    nb = max(1, math.ceil((live + extra_keys) / p))
+    cap = state.nodes_per_bucket * state.node_size
+    if p + extra_keys > cap:
+        # pathological skew: widen nodes_per_bucket so one bucket can absorb
+        # the whole batch (host-side realloc, mirrors the paper's adaptive
+        # compute-to-bucket discussion in §3.4).
+        npb = math.ceil((p + extra_keys) / state.node_size)
+    else:
+        npb = state.nodes_per_bucket
+    return restructure(
+        state,
+        num_buckets=nb,
+        nodes_per_bucket=npb,
+        node_size=state.node_size,
+        fill=fill,
+    )

@@ -1,0 +1,123 @@
+"""FliX data-layer state.
+
+The paper's data layer is a set of *buckets*, each a chain of fixed-capacity
+*nodes* with per-node metadata (``maxKey``, ``size``) plus a global
+max-key-per-bucket array (MKBA).  On TPU we use a pointerless layout: bucket
+``b`` owns node *slots* ``keys[b, 0..num_nodes[b])`` — slot order is chain
+order.  "Allocating" a node activates the next slot; "freeing" compacts slots
+left.  See DESIGN.md §3 for the GPU→TPU adaptation argument.
+
+Invariants (checked by ``tests/test_invariants.py``):
+  I1. within a node, ``keys[b, j, :count]`` is strictly ascending; the rest of
+      the row is ``EMPTY``.
+  I2. slots are chain-ordered: every key in node ``j`` < every key in ``j+1``.
+  I3. every key in bucket ``b`` is ≤ ``mkba[b]`` and > ``mkba[b-1]``.
+  I4. ``node_max[b, j]`` equals the largest key of node ``j`` (``EMPTY`` when
+      the slot is inactive), so each ``node_max[b]`` row is ascending.
+  I5. ``mkba`` is strictly ascending with ``mkba[-1] == MAX_VALID``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+KEY_DTYPE = jnp.int32
+VAL_DTYPE = jnp.int32
+
+EMPTY = jnp.iinfo(jnp.int32).max        # empty slot / inactive-node sentinel
+MAX_VALID = EMPTY - 1                   # largest storable key
+MIN_KEY = jnp.iinfo(jnp.int32).min      # conceptual lower fence
+NOT_FOUND = jnp.int32(-1)               # point-query miss sentinel
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FliXState:
+    """Functional FliX instance. All arrays are device arrays (a pytree)."""
+
+    keys: jax.Array        # [nb, npb, ns] KEY_DTYPE, EMPTY-padded
+    vals: jax.Array        # [nb, npb, ns] VAL_DTYPE
+    node_count: jax.Array  # [nb, npb] int32, keys stored per node slot
+    node_max: jax.Array    # [nb, npb] KEY_DTYPE, EMPTY when inactive
+    num_nodes: jax.Array   # [nb] int32, active slots per bucket
+    mkba: jax.Array        # [nb] KEY_DTYPE, max allowable key per bucket
+    needs_restructure: jax.Array  # [] bool, bucket overflow pressure flag
+
+    # ---- static geometry -------------------------------------------------
+    @property
+    def num_buckets(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def nodes_per_bucket(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def node_size(self) -> int:
+        return self.keys.shape[2]
+
+    @property
+    def bucket_capacity(self) -> int:
+        return self.nodes_per_bucket * self.node_size
+
+    # ---- derived metrics -------------------------------------------------
+    def live_keys(self) -> jax.Array:
+        return jnp.sum(self.node_count)
+
+    def total_nodes(self) -> jax.Array:
+        return jnp.sum(self.num_nodes)
+
+    def memory_bytes(self) -> int:
+        """Allocated footprint in bytes (QTMF denominator)."""
+        total = 0
+        for f in dataclasses.fields(self):
+            arr = getattr(self, f.name)
+            total += arr.size * arr.dtype.itemsize
+        return total
+
+    def bucket_lower_fence(self) -> jax.Array:
+        """mkba shifted right: bucket b covers keys in (fence[b], mkba[b]]."""
+        return jnp.concatenate(
+            [jnp.array([MIN_KEY], dtype=KEY_DTYPE), self.mkba[:-1]]
+        )
+
+
+def empty_state(num_buckets: int, nodes_per_bucket: int, node_size: int) -> FliXState:
+    """An all-empty FliX instance with the given static geometry."""
+    nb, npb, ns = num_buckets, nodes_per_bucket, node_size
+    mkba = jnp.full((nb,), MAX_VALID, dtype=KEY_DTYPE)
+    # ascending mkba with last = MAX_VALID: spread fences so inserts route
+    # everything to the final bucket until a build/restructure assigns ranges.
+    # For an empty structure we simply give every bucket the max fence except
+    # making them ascending by subtracting offsets is unnecessary: query and
+    # routing use searchsorted(side='left'), which tolerates equal fences.
+    return FliXState(
+        keys=jnp.full((nb, npb, ns), EMPTY, dtype=KEY_DTYPE),
+        vals=jnp.zeros((nb, npb, ns), dtype=VAL_DTYPE),
+        node_count=jnp.zeros((nb, npb), dtype=jnp.int32),
+        node_max=jnp.full((nb, npb), EMPTY, dtype=KEY_DTYPE),
+        num_nodes=jnp.zeros((nb,), dtype=jnp.int32),
+        mkba=mkba,
+        needs_restructure=jnp.array(False),
+    )
+
+
+def flatten_bucket_sorted(state: FliXState) -> tuple[jax.Array, jax.Array]:
+    """Per-bucket flattened (keys, vals), sorted ascending with EMPTY at end.
+
+    Node rows are already sorted and chain-ordered (I1+I2), but interior
+    EMPTY padding breaks global sortedness, so we re-sort each bucket row.
+    Shape: [nb, npb*ns].
+    """
+    nb = state.num_buckets
+    flat_k = state.keys.reshape(nb, -1)
+    flat_v = state.vals.reshape(nb, -1)
+    order = jnp.argsort(flat_k, axis=1, stable=True)
+    return (
+        jnp.take_along_axis(flat_k, order, axis=1),
+        jnp.take_along_axis(flat_v, order, axis=1),
+    )

@@ -1,0 +1,3 @@
+"""Deterministic, resumable, sharded synthetic data pipeline."""
+
+from repro.data.pipeline import DataState, SyntheticLM, make_batch_iterator

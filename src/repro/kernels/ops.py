@@ -1,0 +1,101 @@
+"""Public jit'd wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) they run in
+``interpret=True`` mode or fall back to the pure-jnp oracle, selected by
+``mode``:
+
+  * ``"auto"``      — Pallas-compiled on TPU, jnp oracle elsewhere (prod).
+  * ``"pallas"``    — force compiled Pallas (TPU only).
+  * ``"interpret"`` — Pallas in interpret mode (kernel-correctness testing).
+  * ``"ref"``       — pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import FliXState
+from repro.kernels import ref as _ref
+from repro.kernels.flix_delete import flix_delete_pallas
+from repro.kernels.flix_insert import flix_insert_pallas
+from repro.kernels.flix_query import flix_point_query_pallas
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: str) -> str:
+    if mode == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return mode
+
+
+def flix_point_query(
+    state: FliXState, sorted_queries: jax.Array, *, mode: str = "auto", **blocks
+) -> jax.Array:
+    mode = _resolve(mode)
+    if mode == "ref":
+        return _ref.flix_point_query_ref(
+            state.keys, state.vals, state.node_max, state.mkba, sorted_queries
+        )
+    return flix_point_query_pallas(
+        state.keys,
+        state.vals,
+        state.node_max,
+        state.mkba,
+        sorted_queries,
+        interpret=(mode == "interpret"),
+        **blocks,
+    )
+
+
+def flix_delete(
+    state: FliXState, sorted_del_keys: jax.Array, *, mode: str = "auto", **blocks
+) -> FliXState:
+    mode = _resolve(mode)
+    if mode == "ref":
+        from repro.core.delete import delete
+
+        new_state, _ = delete(state, sorted_del_keys)
+        return new_state
+    return flix_delete_pallas(
+        state, sorted_del_keys, interpret=(mode == "interpret"), **blocks
+    )
+
+
+def grouped_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    group_offsets: jax.Array,
+    *,
+    mode: str = "auto",
+    **blocks,
+) -> jax.Array:
+    mode = _resolve(mode)
+    if mode == "ref":
+        return _ref.grouped_matmul_ref(x, w, group_offsets)
+    return grouped_matmul_pallas(
+        x, w, group_offsets, interpret=(mode == "interpret"), **blocks
+    )
+
+
+def flix_insert(
+    state: FliXState,
+    sorted_keys: jax.Array,
+    sorted_vals: jax.Array,
+    *,
+    mode: str = "auto",
+):
+    """TL-Bulk insertion. Returns (new_state, per-bucket overflow counts)."""
+    mode = _resolve(mode)
+    if mode == "ref":
+        from repro.core.insert import insert
+
+        new_state, stats = insert(state, sorted_keys, sorted_vals)
+        return new_state, stats["overflowed_buckets"]
+    return flix_insert_pallas(
+        state, sorted_keys, sorted_vals, interpret=(mode == "interpret")
+    )

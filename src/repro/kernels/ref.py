@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle takes the same *raw arrays* as its kernel (no FliXState / model
+glue) so the kernel sweep tests can drive both sides identically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND
+
+
+def flix_point_query_ref(
+    keys3d: jax.Array,
+    vals3d: jax.Array,
+    node_max: jax.Array,
+    mkba: jax.Array,
+    sorted_queries: jax.Array,
+) -> jax.Array:
+    """Oracle for kernels.flix_query (identical math to core.query)."""
+    nb, npb, ns = keys3d.shape
+    q = sorted_queries.astype(KEY_DTYPE)
+    b = jnp.minimum(jnp.searchsorted(mkba, q, side="left"), nb - 1).astype(jnp.int32)
+    nmax_rows = node_max[b]
+    nidx = jnp.sum(nmax_rows < q[:, None], axis=1).astype(jnp.int32)
+    nidx_c = jnp.minimum(nidx, npb - 1)
+    rows = keys3d[b, nidx_c]
+    pos = jnp.sum(rows < q[:, None], axis=1).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, ns - 1)
+    key_at = rows[jnp.arange(q.shape[0]), pos_c]
+    hit = (pos < ns) & (key_at == q)
+    return jnp.where(hit, vals3d[b, nidx_c, pos_c], NOT_FOUND)
+
+
+def grouped_matmul_ref(
+    x: jax.Array,            # [T, D] tokens sorted by group
+    w: jax.Array,            # [E, D, F] per-group weights
+    group_offsets: jax.Array,  # [E+1] slice boundaries into x
+) -> jax.Array:
+    """Oracle for kernels.grouped_matmul: out[t] = x[t] @ w[group(t)]."""
+    t_idx = jnp.arange(x.shape[0])
+    group = (
+        jnp.searchsorted(group_offsets, t_idx, side="right").astype(jnp.int32) - 1
+    )
+    group = jnp.clip(group, 0, w.shape[0] - 1)
+    wt = w[group]                                 # [T, D, F]
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32), wt.astype(jnp.float32))
+
+
+def flix_delete_mark_ref(
+    keys2d: jax.Array,          # [nb, npb*ns] bucket stripes (chain order)
+    del_tile: jax.Array,        # [nb, L] per-bucket sorted delete sublists
+) -> jax.Array:
+    """Oracle for kernels.flix_delete's membership-mark stage."""
+    pos = jax.vmap(lambda row, xs: jnp.searchsorted(row, xs, side="left"))(
+        del_tile, keys2d
+    )
+    pos_c = jnp.minimum(pos, del_tile.shape[1] - 1)
+    return (jnp.take_along_axis(del_tile, pos_c, axis=1) == keys2d) & (
+        keys2d != EMPTY
+    )

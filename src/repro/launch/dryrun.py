@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input-shape) cell on the production
+16×16 single-pod mesh and the 2×16×16 multi-pod mesh, records
+``memory_analysis()`` (proves it fits), ``cost_analysis()`` (FLOPs/bytes for
+§Roofline), and the collective-bytes breakdown parsed from the compiled
+SPMD module.  Results land in ``experiments/dryrun/*.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from collections import defaultdict
+from pathlib import Path
+
+import jax
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-type output bytes of every collective op in the compiled module.
+
+    Result shapes sit between '=' and the op token; tuple-shaped results
+    (e.g. all-to-all) parse the same way since we cut at the op name."""
+    out: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        for c in _COLLECTIVES:
+            tok = f" {c}(" if f" {c}(" in line else (
+                f" {c}-start(" if f" {c}-start(" in line else None
+            )
+            if tok:
+                seg = line.split(tok, 1)[0]
+                if "=" in seg:
+                    seg = seg.split("=", 1)[1]
+                out[c]["count"] += 1
+                out[c]["bytes"] += _shape_bytes(seg)
+                break
+    return dict(out)
+
+
+def _analyze(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    mem = {
+        k: int(getattr(ma, k, 0))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+    ca = compiled.cost_analysis() or {}
+    cost = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    colls = collective_bytes(compiled.as_text())
+    return {
+        "memory": mem,
+        "cost": cost,
+        "collectives": colls,
+        "collective_bytes_total": sum(v["bytes"] for v in colls.values()),
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: Path,
+    *,
+    suffix: str = "",
+    **cell_kwargs,
+) -> dict:
+    """Compile the production (scan) program for the fit-proof, plus depth-1
+    and depth-2 unrolled programs so per-layer FLOPs/collectives can be
+    reconstructed (XLA cost analysis counts a scan body exactly once —
+    methodology in EXPERIMENTS.md §Dry-run)."""
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell, layer_period
+    from repro.models.model import get_config
+
+    mesh_name = ("multi" if multi_pod else "single") + suffix
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        cell = build_cell(arch, shape_name, mesh, **cell_kwargs)
+        lowered = cell.jitted.lower(*cell.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        prod = _analyze(compiled)
+
+        kind = cell.meta["kind"]
+        recon = None
+        if kind in ("train", "prefill"):
+            # depth-reconstruction compiles (small unrolled programs)
+            d1 = build_cell(arch, shape_name, mesh, depth_periods=1, **cell_kwargs)
+            a1 = _analyze(d1.jitted.lower(*d1.abstract_args).compile())
+            d2 = build_cell(arch, shape_name, mesh, depth_periods=2, **cell_kwargs)
+            a2 = _analyze(d2.jitted.lower(*d2.abstract_args).compile())
+            period = layer_period(cell.cfg)
+            n_periods = cell.cfg.num_layers // period
+            recon = {
+                "n_periods": n_periods,
+                "period": period,
+                "flops": a1["cost"]["flops"]
+                + (n_periods - 1) * (a2["cost"]["flops"] - a1["cost"]["flops"]),
+                "bytes_accessed": a1["cost"]["bytes_accessed"]
+                + (n_periods - 1)
+                * (a2["cost"]["bytes_accessed"] - a1["cost"]["bytes_accessed"]),
+                "collective_bytes": a1["collective_bytes_total"]
+                + (n_periods - 1)
+                * (a2["collective_bytes_total"] - a1["collective_bytes_total"]),
+                "depth1": a1,
+                "depth2": a2,
+            }
+        else:
+            # decode unrolls every layer: the compiled numbers are exact
+            recon = {
+                "flops": prod["cost"]["flops"],
+                "bytes_accessed": prod["cost"]["bytes_accessed"],
+                "collective_bytes": prod["collective_bytes_total"],
+            }
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "devices": int(mesh.devices.size),
+        "meta": cell.meta,
+        **prod,
+        "recon": recon,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "ok": True,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--suffix", default="", help="variant tag for §Perf runs")
+    ap.add_argument("--strategy", default="tp_sp", choices=["tp_sp", "fsdp"])
+    ap.add_argument("--no-moe-token-shard", action="store_true")
+    ap.add_argument("--moe-impl", default="gather", choices=["gather", "a2a", "auto"])
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override key=int (repeatable)")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    cell_kwargs = dict(
+        strategy=args.strategy,
+        moe_token_shard=not args.no_moe_token_shard,
+        moe_impl=args.moe_impl,
+    )
+    if args.override:
+        cell_kwargs["overrides"] = {
+            kv.split("=")[0]: int(kv.split("=")[1]) for kv in args.override
+        }
+
+    from repro.models.config import cells_for
+    from repro.models.model import list_archs
+
+    if args.all:
+        cells = [(a, s) for a in list_archs() for s in cells_for(a)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch, shape in cells:
+        for m in meshes:
+            path = out_dir / f"{arch}__{shape}__{m}{args.suffix}.json"
+            if args.skip_existing and path.exists():
+                print(f"skip {arch} {shape} {m}", flush=True)
+                continue
+            try:
+                r = run_cell(
+                    arch, shape, m == "multi", out_dir,
+                    suffix=args.suffix, **cell_kwargs,
+                )
+                print(
+                    f"OK  {arch:18s} {shape:12s} {m:6s} "
+                    f"flops={r['cost']['flops']:.3e} "
+                    f"coll={r['collective_bytes_total']:.3e}B "
+                    f"temp={r['memory']['temp_size_in_bytes']/2**30:.2f}GiB "
+                    f"compile={r['compile_s']}s",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — record, continue sweep
+                failures.append((arch, shape, m, repr(e)))
+                path.write_text(
+                    json.dumps(
+                        {
+                            "arch": arch, "shape": shape, "mesh": m,
+                            "ok": False, "error": traceback.format_exc(),
+                        },
+                        indent=2,
+                    )
+                )
+                print(f"FAIL {arch} {shape} {m}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures", file=sys.stderr)
+        sys.exit(1)
+    print("\nall cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serving driver: batched decode with the FliX KV-page control plane.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch musicgen-medium \
+        --reduced --batch 4 --steps 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+from repro.models.model import get_config
+from repro.serve.kv_index import KVPageIndex
+
+PAGE_TOKENS = 16  # tokens per KV page tracked by the index
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(dtype="float32")
+    rng = jax.random.PRNGKey(args.seed)
+    params = tf.init_params(rng, cfg)
+    cache = tf.init_cache(cfg, args.batch, args.max_len, dtype=jnp.float32)
+    kv_index = KVPageIndex()
+
+    step = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
+    token = jax.random.randint(rng, (args.batch,), 0, cfg.vocab_size)
+    t0 = time.time()
+    for i in range(args.steps):
+        logits, cache = step(params, cache, token)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if i % PAGE_TOKENS == 0:  # new KV page per sequence
+            seqs = np.arange(args.batch)
+            kv_index.allocate(seqs, np.full(args.batch, i // PAGE_TOKENS),
+                              seqs * 1000 + i // PAGE_TOKENS)
+    jax.block_until_ready(token)
+    dt = time.time() - t0
+    print(
+        f"decoded {args.steps} steps × batch {args.batch} "
+        f"({args.steps*args.batch/dt:.1f} tok/s); "
+        f"kv index tracks {kv_index.live_pages()} pages"
+    )
+    # sanity: page lookups resolve
+    got = np.asarray(kv_index.lookup(np.arange(args.batch), np.zeros(args.batch, int)))
+    assert (got == np.arange(args.batch) * 1000).all()
+    print("page table lookups consistent ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Assigned-architecture model stack (configs, layers, transformer, MoE, SSM)."""

@@ -1,0 +1,33 @@
+"""Modality frontend STUBS (per the assignment: ``[vlm]``/``[audio]`` cells
+specify the transformer backbone only; ``input_specs()`` provides
+precomputed patch/frame embeddings).
+
+The stubs define the *shapes* the real frontends (SigLIP for paligemma-3b,
+EnCodec for musicgen-medium) would emit, and a deterministic synthetic
+generator for smoke tests/examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def prefix_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct | None:
+    """ShapeDtypeStruct of the stub prefix embeddings (dry-run input)."""
+    if not cfg.frontend:
+        return None
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.frontend_len, cfg.d_model), jnp.bfloat16
+    )
+
+
+def synthetic_prefix(rng, cfg: ModelConfig, batch: int) -> jax.Array | None:
+    """Deterministic fake patch/frame embeddings for CPU smoke tests."""
+    if not cfg.frontend:
+        return None
+    return (
+        jax.random.normal(rng, (batch, cfg.frontend_len, cfg.d_model)) * 0.02
+    ).astype(jnp.bfloat16)

@@ -1,0 +1,122 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, gated MLP.
+
+Attention supports full / sliding-window / per-layer local:global causal
+masking, GQA/MQA head grouping, optional QKV bias, and a blockwise
+(q-chunked) softmax so the score matrix never materializes at [S, S]
+(peak transient = [B, H, q_chunk, S]).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * weight).astype(dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """cos/sin tables for the given positions: [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., S, H, Dh]; cos/sin: [..., S, Dh//2] (broadcast over H)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(
+        x.dtype
+    )
+
+
+def _mask(
+    q_pos: jax.Array,      # [Sq]
+    k_pos: jax.Array,      # [Sk]
+    window: int,
+    is_global,             # scalar bool (traced ok)
+    prefix_len: int = 0,
+):
+    """Causal (+windowed when local) mask; bidirectional within the prefix."""
+    i = q_pos[:, None]
+    j = k_pos[None, :]
+    causal = (j <= i) & (j >= 0)  # j < 0 marks unwritten ring-cache slots
+    if prefix_len:
+        causal |= (i < prefix_len) & (j < prefix_len) & (j >= 0)
+    local = causal & (j > i - window)
+    return jnp.where(is_global, causal, local)
+
+
+@partial(jax.jit, static_argnames=("q_chunk", "window", "prefix_len"))
+def attention(
+    q: jax.Array,          # [B, Sq, Hq, Dh]
+    k: jax.Array,          # [B, Sk, Hkv, Dh]
+    v: jax.Array,          # [B, Sk, Hkv, Dh]
+    q_positions: jax.Array,  # [Sq]
+    k_positions: jax.Array,  # [Sk]
+    is_global,             # traced scalar bool (layer flavor)
+    *,
+    window: int,
+    q_chunk: int = 512,
+    prefix_len: int = 0,
+) -> jax.Array:
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = Dh**-0.5
+    kq = k.astype(jnp.float32)
+    vq = v.astype(jnp.float32)
+
+    q_chunk = min(q_chunk, Sq)
+    n_chunks = max(Sq // q_chunk, 1)
+
+    def one_chunk(c):
+        qp = jax.lax.dynamic_slice_in_dim(q_positions, c * q_chunk, q_chunk)
+        qc = jax.lax.dynamic_slice_in_dim(q, c * q_chunk, q_chunk, axis=1)
+        qc = qc.reshape(B, q_chunk, Hkv, G, Dh).astype(jnp.float32)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kq) * scale
+        m = _mask(qp, k_positions, window, is_global, prefix_len)
+        scores = jnp.where(m[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vq)
+        return out.reshape(B, q_chunk, Hq, Dh)
+
+    if n_chunks == 1:
+        out = one_chunk(0)
+    else:
+        chunks = jax.lax.map(one_chunk, jnp.arange(n_chunks))
+        out = jnp.moveaxis(chunks, 0, 1).reshape(B, Sq, Hq, Dh)
+    return out.astype(q.dtype)
+
+
+def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    """SwiGLU: down( silu(x @ gate) * (x @ up) )."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def softmax_cross_entropy_sharded(
+    logits: jax.Array,   # [B, S, V] (V possibly sharded)
+    targets: jax.Array,  # [B, S]
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)

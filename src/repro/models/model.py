@@ -1,0 +1,64 @@
+"""Model registry + parameter init glue for the assigned architectures."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import SHAPES, ModelConfig, cells_for
+from repro.models.frontends import prefix_spec, synthetic_prefix
+
+
+def get_config(name: str) -> ModelConfig:
+    from repro import configs
+
+    return configs.get(name)
+
+
+def list_archs() -> list[str]:
+    from repro import configs
+
+    return sorted(configs.REGISTRY)
+
+
+def init_params(rng, cfg: ModelConfig, param_dtype=jnp.float32):
+    return transformer.init_params(rng, cfg, param_dtype)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def abstract_params(cfg: ModelConfig, param_dtype=jnp.float32):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg, param_dtype),
+        jax.random.PRNGKey(0),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    if sh["kind"] in ("train", "prefill"):
+        text = S - (cfg.frontend_len if cfg.frontend else 0)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, text), jnp.int32),
+        }
+        if sh["kind"] == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((B, text), jnp.int32)
+        pf = prefix_spec(cfg, B)
+        if pf is not None:
+            specs["prefix_embeds"] = pf
+        return specs
+    # decode: one new token against a seq_len cache
+    return {"token": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def abstract_cache(cfg: ModelConfig, shape_name: str, dtype=jnp.bfloat16):
+    sh = SHAPES[shape_name]
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, sh["global_batch"], sh["seq_len"], dtype)
+    )

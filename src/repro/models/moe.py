@@ -1,0 +1,118 @@
+"""MoE layer with flipped (sort-based) dispatch — FliX integration point.
+
+Tokens are sorted by expert id; each expert (bucket) pulls its contiguous
+slice through static per-expert capacity windows (GShard-style capacity so
+shapes stay static for pjit; overflow drops are counted).  FLOPs scale with
+*active* experts (E × C × D × F), not E × T — unlike the dense one-hot
+formulation — so the roofline's MODEL_FLOPS/HLO_FLOPs ratio stays honest.
+
+Expert weights are sharded over the ``model`` axis (expert parallelism);
+the dispatch gather/scatter becomes the all-to-all the §Roofline collective
+term measures.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def capacity(tokens: int, top_k: int, num_experts: int, factor: float) -> int:
+    c = math.ceil(tokens * top_k / num_experts * factor)
+    return max(8, math.ceil(c / 8) * 8)
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """x: [T, D] → [T, D].  Params:
+
+    router [D, E]; w_gate/w_up [E·split, D, F/split]; w_down [E·split, F/split, D];
+    shared_gate/shared_up [D, Fs]; shared_down [Fs, D] (when shared experts).
+
+    ``cfg.moe_split`` > 1 splits each expert's FFN into column chunks
+    ("virtual experts") so the expert dim matches a larger TP axis; a token
+    visits all chunks of its expert and the down-projection partial sums add
+    in the combine.  ``cfg.dispatch_spec`` shards the [E, C, ·] dispatch
+    intermediates over (expert axis × token axis) — without the token-axis
+    constraint every data-parallel replica computes identical expert work
+    (the 16× HLO-FLOP inflation in EXPERIMENTS.md §Perf iteration 1).
+    """
+    T, D = x.shape
+    E, k, split = cfg.num_experts, cfg.top_k, cfg.moe_split
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gate = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(gate, k)                   # [T, k]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    if split > 1:  # expand to virtual experts: e → (e·split … e·split+split-1)
+        experts = (
+            experts[..., None] * split + jnp.arange(split, dtype=experts.dtype)
+        ).reshape(T, k * split)
+        weights = jnp.repeat(weights, split, axis=-1)  # partial sums share w
+    E_v, k_v = E * split, k * split
+
+    flat_expert = experts.reshape(-1).astype(jnp.int32)         # [T·k_v]
+    sort_idx = jnp.argsort(flat_expert, stable=True)
+    expert_sorted = flat_expert[sort_idx]
+    group_offsets = jnp.searchsorted(
+        expert_sorted, jnp.arange(E_v + 1, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    C = capacity(T, k, E, cfg.moe_capacity_factor)  # per (virtual) expert
+
+    constrain3 = (
+        (lambda a: jax.lax.with_sharding_constraint(a, cfg.dispatch_spec))
+        if cfg.dispatch_spec is not None
+        else (lambda a: a)
+    )
+
+    # each (virtual) expert pulls its slice through a capacity window
+    idx = group_offsets[:-1, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    valid = idx < group_offsets[1:, None]                       # [E_v, C]
+    slot = jnp.minimum(idx, T * k_v - 1)
+    token = sort_idx[slot] // k_v                               # [E_v, C]
+    xe = x[token] * valid[..., None].astype(x.dtype)            # [E_v, C, D]
+    xe = constrain3(xe)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"]
+    )
+    h = constrain3(h)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])             # [E_v, C, D]
+    ye = constrain3(ye)
+
+    # combine: weighted scatter-add back to token order
+    w_slot = weights.reshape(-1)[sort_idx][slot] * valid        # [E_v, C]
+    contrib = (ye * w_slot[..., None]).reshape(E_v * C, D)
+    tok_flat = jnp.where(valid, token, T).reshape(E_v * C)      # T = dump row
+    y = jnp.zeros((T + 1, D), contrib.dtype).at[tok_flat].add(contrib)[:T]
+    if cfg.dispatch_spec is not None:
+        # token-sharded combine output → the partial-sum reduction becomes a
+        # reduce-scatter over (expert × token) shards instead of a full AR
+        from jax.sharding import PartitionSpec as _P
+
+        tok_axes = cfg.dispatch_spec[1]
+        y = jax.lax.with_sharding_constraint(y, _P(tok_axes, None))
+
+    if cfg.num_shared_experts:
+        hs = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
+        y = y + hs @ p["shared_down"]
+    return y.astype(x.dtype)
+
+
+def moe_ffn_dense_oracle(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """Every expert computes every token; exact combine (tests only)."""
+    E, k = cfg.num_experts, cfg.top_k
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gate = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(gate, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    h = jax.nn.silu(jnp.einsum("td,edf->etf", x, p["w_gate"])) * jnp.einsum(
+        "td,edf->etf", x, p["w_up"]
+    )
+    ye = jnp.einsum("etf,efd->etd", h, p["w_down"])
+    oh = jax.nn.one_hot(experts, E, axis=-1)
+    y = jnp.einsum("tke,etd,tk->td", oh, ye, weights).astype(x.dtype)
+    if cfg.num_shared_experts:
+        hs = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
+        y = y + hs @ p["shared_down"]
+    return y

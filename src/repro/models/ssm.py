@@ -1,0 +1,235 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Training uses the chunked SSD algorithm: quadratic attention-like compute
+inside length-``Q`` chunks, linear recurrent state passing between chunks
+(associative scan).  Decode is the O(1) recurrent update.  Single B/C group
+(n_groups=1), per-head scalar decay A — the published mamba2-1.3b layout.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def causal_conv1d(u: jax.Array, w: jax.Array, bias: jax.Array | None = None):
+    """Depthwise causal conv: u [B, S, C], w [K, C] → [B, S, C]."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    S = u.shape[1]
+    y = jnp.zeros_like(u, dtype=jnp.float32)
+    for k in range(K):  # K is 4: unrolled shifts beat a conv op here
+        y = y + pad[:, k : k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
+    if bias is not None:
+        y = y + bias
+    return y.astype(u.dtype)
+
+
+def ssd_chunked(
+    x: jax.Array,    # [B, S, H, P]
+    dt: jax.Array,   # [B, S, H]  (post-softplus, > 0)
+    A: jax.Array,    # [H]        (negative)
+    Bm: jax.Array,   # [B, S, N]
+    Cm: jax.Array,   # [B, S, N]
+    *,
+    chunk: int,
+    init_state: jax.Array | None = None,  # [B, H, P, N]
+):
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert nc * Q == S, (S, Q)
+
+    f32 = jnp.float32
+    xc = x.reshape(B_, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(B_, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(B_, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(B_, nc, Q, N).astype(f32)
+
+    a = dtc * A.astype(f32)                     # [B, nc, Q, H] log-decay
+    l = jnp.cumsum(a, axis=2)
+
+    # intra-chunk (the "attention-like" quadratic term)
+    seg = l[:, :, :, None, :] - l[:, :, None, :, :]      # [B,nc,t,s,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    dec = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)
+    scores = cb[..., None] * dec * dtc[:, :, None, :, :]
+    y = jnp.einsum("bctsh,bcshp->bcthp", scores, xc)
+
+    # chunk-final states
+    last = l[:, :, -1:, :]                                # [B,nc,1,H]
+    sdec = jnp.exp(last - l) * dtc                        # [B,nc,Q,H]
+    S_c = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, sdec, xc)
+
+    # inter-chunk recurrence: associative scan over chunks
+    chunk_decay = jnp.exp(last[:, :, 0, :])               # [B,nc,H]
+
+    def comb(c1, c2):
+        d1, s1 = c1
+        d2, s2 = c2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    d_in, s_in = jax.lax.associative_scan(comb, (chunk_decay, S_c), axis=1)
+    # state entering chunk c = seed·Π(decays of chunks < c) + s_in[c-1]
+    seed = (
+        jnp.zeros((B_, H, P, N), f32)
+        if init_state is None
+        else init_state.astype(f32)
+    )
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_in[:, :1]), s_in[:, :-1]], axis=1
+    )
+    d_prev = jnp.concatenate(
+        [jnp.ones((B_, 1, H), f32), d_in[:, :-1]], axis=1
+    )
+    s_enter = seed[:, None] * d_prev[..., None, None] + s_prev
+
+    y_inter = jnp.einsum("bctn,bchpn->bcthp", Cc, s_enter) * jnp.exp(l)[
+        ..., None
+    ]
+    out = (y + y_inter).reshape(B_, S, H, P)
+    final_state = seed * d_in[:, -1][..., None, None] + s_in[:, -1]
+    return out.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jax.Array,  # [B, H, P, N]
+    x: jax.Array,      # [B, H, P]
+    dt: jax.Array,     # [B, H]
+    A: jax.Array,      # [H]
+    Bm: jax.Array,     # [B, N]
+    Cm: jax.Array,     # [B, N]
+):
+    f32 = jnp.float32
+    decay = jnp.exp(dt.astype(f32) * A.astype(f32))       # [B, H]
+    upd = jnp.einsum(
+        "bh,bhp,bn->bhpn", dt.astype(f32), x.astype(f32), Bm.astype(f32)
+    )
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(f32))
+    return y.astype(x.dtype), new_state
+
+
+def mamba2_forward_split(x: jax.Array, p: dict, cfg, init=None):
+    """Mamba-2 block with *separated* projections (TP-shardable layout).
+
+    Params: in_z/in_x [D, d_inner], in_B/in_C [D, N], in_dt [D, H],
+    conv_x [K, d_inner], conv_B/conv_C [K, N], dt_bias/A_log/D_skip [H],
+    norm_w [d_inner], out_proj [d_inner, D].
+    x: [B, S, D] → ([B, S, D], final_state [B, H, P, N]).
+    """
+    B_, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = x @ p["in_z"]
+    xs = causal_conv1d(jax.nn.silu(x @ p["in_x"]), p["conv_x"])
+    Bm = causal_conv1d(jax.nn.silu(x @ p["in_B"]), p["conv_B"])
+    Cm = causal_conv1d(jax.nn.silu(x @ p["in_C"]), p["conv_C"])
+    dt = jax.nn.softplus((x @ p["in_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, final_state = ssd_chunked(
+        xs.reshape(B_, S, H, P), dt, A, Bm, Cm, chunk=cfg.ssm_chunk, init_state=init
+    )
+    y = y + xs.reshape(B_, S, H, P) * p["D_skip"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], final_state
+
+
+def mamba2_decode_split(x: jax.Array, p: dict, cfg, conv_state, ssm_state):
+    """One-token decode for the split layout. x: [B, D].
+
+    conv_state: [B, K-1, d_inner + 2N] (x ++ B ++ C channels).
+    Returns (y [B, D], new_conv_state, new_ssm_state).
+    """
+    B_, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner
+    K = cfg.conv_kernel
+
+    z = x @ p["in_z"]
+    u = jnp.concatenate(
+        [jax.nn.silu(x @ p["in_x"]), jax.nn.silu(x @ p["in_B"]), jax.nn.silu(x @ p["in_C"])],
+        axis=-1,
+    )
+    window = jnp.concatenate([conv_state, u[:, None]], axis=1)  # [B, K, C]
+    w_full = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=1)
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), w_full.astype(jnp.float32)
+    ).astype(x.dtype)
+    new_conv_state = window[:, 1:]
+
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus((x @ p["in_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_ssm_state = ssd_decode_step(
+        ssm_state, xs.reshape(B_, H, P), dt, A, Bm, Cm
+    )
+    y = y + xs.reshape(B_, H, P) * p["D_skip"].astype(xs.dtype)[None, :, None]
+    y = y.reshape(B_, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], new_conv_state, new_ssm_state
+
+
+def mamba2_forward(x: jax.Array, p: dict, cfg, init=None):
+    """Full-sequence Mamba-2 block. x: [B, S, D] → ([B, S, D], final_state)."""
+    B_, S, D = x.shape
+    d_inner = cfg.d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, d_inner + d_inner + 2 * N], axis=-1
+    )
+    xbc = causal_conv1d(jax.nn.silu(xbc), p["conv_w"], p.get("conv_b"))
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, final_state = ssd_chunked(
+        xs.reshape(B_, S, H, P), dt, A, Bm, Cm, chunk=cfg.ssm_chunk, init_state=init
+    )
+    y = y + xs.reshape(B_, S, H, P) * p["D_skip"][None, None, :, None]
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], final_state
+
+
+def mamba2_decode(x: jax.Array, p: dict, cfg, conv_state, ssm_state):
+    """One-token decode. x: [B, D]; conv_state: [B, K-1, conv_dim]."""
+    B_, D = x.shape
+    d_inner = cfg.d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.conv_kernel
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, d_inner + d_inner + 2 * N], axis=-1
+    )
+    xbc = jax.nn.silu(xbc)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # [B, K, C]
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+    )
+    if p.get("conv_b") is not None:
+        conv_out = conv_out + p["conv_b"]
+    conv_out = conv_out.astype(x.dtype)
+    new_conv_state = window[:, 1:]
+
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_ssm_state = ssd_decode_step(
+        ssm_state, xs.reshape(B_, H, P), dt, A, Bm, Cm
+    )
+    y = y + xs.reshape(B_, H, P) * p["D_skip"][None, :, None]
+    y = y.reshape(B_, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], new_conv_state, new_ssm_state

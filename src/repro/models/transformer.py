@@ -1,0 +1,450 @@
+"""Generic decoder covering all 10 assigned architectures.
+
+One parameter/forward scheme spans the families:
+
+  * dense / vlm / audio — pre-norm GQA attention + SwiGLU MLP blocks,
+    full / SWA / local:global masking, optional QKV bias, optional
+    bidirectional prefix (the VLM/audio stub embeddings).
+  * moe  — same attention; the FFN is the flipped-dispatch MoE layer.
+  * ssm  — Mamba-2 (SSD) blocks, attention-free.
+  * hybrid — Mamba-2 stack with one *shared* attention block applied every
+    ``attn_every`` layers (Zamba-2 scheme: same weights at every point).
+
+Training/prefill scans over stacked layer params (compact HLO, fast
+compiles at 512 devices); decode unrolls a Python loop so per-layer caches
+can be ragged (ring buffers for SWA/local layers, full for global).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, attention, rms_norm, rope_angles
+
+Params = dict[str, Any]
+_BIG = 1 << 30  # "infinite" attention window
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(rng, cfg: ModelConfig, scale_out: float, dtype):
+    d, hq, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh, f = cfg.resolved_head_dim, cfg.d_ff
+    ks = jax.random.split(rng, 8)
+    init = jax.nn.initializers.normal(0.02)
+    p = {
+        "attn_norm": jnp.ones((d,), dtype),
+        "wq": init(ks[0], (d, hq * dh), dtype),
+        "wk": init(ks[1], (d, hkv * dh), dtype),
+        "wv": init(ks[2], (d, hkv * dh), dtype),
+        "wo": init(ks[3], (hq * dh, d), dtype) * scale_out,
+        "mlp_norm": jnp.ones((d,), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.family == "moe":
+        e = cfg.num_experts * cfg.moe_split          # virtual experts
+        mf = cfg.moe_d_ff // cfg.moe_split
+        p["router"] = init(ks[4], (d, cfg.num_experts), jnp.float32)
+        p["w_gate"] = init(ks[5], (e, d, mf), dtype)
+        p["w_up"] = init(ks[6], (e, d, mf), dtype)
+        p["w_down"] = init(ks[7], (e, mf, d), dtype) * scale_out
+        if cfg.num_shared_experts:
+            fs = cfg.num_shared_experts * mf
+            sk = jax.random.split(ks[4], 3)
+            p["shared_gate"] = init(sk[0], (d, fs), dtype)
+            p["shared_up"] = init(sk[1], (d, fs), dtype)
+            p["shared_down"] = init(sk[2], (fs, d), dtype) * scale_out
+    else:
+        p["w_gate"] = init(ks[4], (d, f), dtype)
+        p["w_up"] = init(ks[5], (d, f), dtype)
+        p["w_down"] = init(ks[6], (f, d), dtype) * scale_out
+    return p
+
+
+def _ssm_layer_init(rng, cfg: ModelConfig, scale_out: float, dtype):
+    d = cfg.d_model
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.conv_kernel
+    ks = jax.random.split(rng, 8)
+    init = jax.nn.initializers.normal(0.02)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_z": init(ks[0], (d, di), dtype),
+        "in_x": init(ks[1], (d, di), dtype),
+        "in_B": init(ks[2], (d, n), dtype),
+        "in_C": init(ks[3], (d, n), dtype),
+        "in_dt": init(ks[4], (d, h), dtype),
+        "conv_x": init(ks[5], (k, di), dtype),
+        "conv_B": init(ks[6], (k, n), dtype),
+        "conv_C": init(ks[7], (k, n), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(0) = -1
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": init(ks[5], (di, d), dtype) * scale_out,
+    }
+
+
+def init_params(rng, cfg: ModelConfig, param_dtype=jnp.float32) -> Params:
+    dtype = param_dtype
+    scale_out = 1.0 / math.sqrt(2 * cfg.num_layers)
+    k_embed, k_layers, k_head, k_shared = jax.random.split(rng, 4)
+    init = jax.nn.initializers.normal(0.02)
+
+    params: Params = {
+        "embed": init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init(k_head, (cfg.d_model, cfg.vocab_size), dtype)
+
+    if cfg.family in ("ssm", "hybrid"):
+        layer_init = partial(_ssm_layer_init, cfg=cfg, scale_out=scale_out, dtype=dtype)
+    else:
+        layer_init = partial(_dense_layer_init, cfg=cfg, scale_out=scale_out, dtype=dtype)
+    keys = jax.random.split(k_layers, cfg.num_layers)
+    params["layers"] = jax.vmap(lambda k: layer_init(k))(keys)
+
+    if cfg.family == "hybrid":
+        # the shared transformer block (Zamba-2): one set of weights
+        params["shared_attn"] = _dense_layer_init(
+            k_shared, cfg, scale_out=scale_out, dtype=dtype
+        )
+    return params
+
+
+def layer_is_global(cfg: ModelConfig):
+    """Per-layer global-attention flags (host-side numpy: static under jit)."""
+    import numpy as np
+
+    idx = np.arange(cfg.num_layers)
+    if cfg.attention == "full":
+        return np.ones(cfg.num_layers, bool)
+    if cfg.attention == "swa":
+        return np.zeros(cfg.num_layers, bool)
+    r = cfg.local_global_ratio  # r local layers, then 1 global
+    return (idx + 1) % (r + 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_block(x, lp, cfg: ModelConfig, positions, is_global, prefix_len, q_chunk):
+    B, S, D = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, hq, dh)
+    k = k.reshape(B, S, hkv, dh)
+    v = v.reshape(B, S, hkv, dh)
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    out = attention(
+        q, k, v, positions, positions, is_global,
+        window=cfg.window, q_chunk=q_chunk, prefix_len=prefix_len,
+    )
+    return x + out.reshape(B, S, hq * dh) @ lp["wo"]
+
+
+def _ffn_block(x, lp, cfg: ModelConfig):
+    B, S, D = x.shape
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        if cfg.moe_impl == "a2a" and cfg.moe_mesh is not None:
+            from repro.models.moe_a2a import moe_ffn_a2a
+
+            y = moe_ffn_a2a(h.reshape(B * S, D), lp, cfg, cfg.moe_mesh).reshape(
+                B, S, D
+            )
+        else:
+            y = moe_lib.moe_ffn(h.reshape(B * S, D), lp, cfg).reshape(B, S, D)
+    else:
+        y = (jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])) @ lp["w_down"]
+    return x + y
+
+
+def _dense_layer(x, lp, cfg, positions, is_global, prefix_len, q_chunk):
+    x = _attn_block(x, lp, cfg, positions, is_global, prefix_len, q_chunk)
+    return _ffn_block(x, lp, cfg)
+
+
+def _ssm_layer(x, lp, cfg):
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    y, _ = ssm_lib.mamba2_forward_split(h, lp, cfg)
+    return x + y
+
+
+def forward_hidden(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                 # [B, S_text]
+    prefix_embeds: jax.Array | None = None,  # [B, P, D] stub frontend output
+    *,
+    remat: bool = False,
+    q_chunk: int = 512,
+    layer_loop: str = "scan",          # "scan" (prod) | "unroll" (analysis)
+    act_spec=None,                     # PartitionSpec for the residual stream
+) -> jax.Array:
+    """Full-sequence forward → post-final-norm hidden [B, S_total, D].
+
+    ``act_spec``: Megatron-SP-style constraint — the residual stream (and
+    hence every saved remat checkpoint) shards over the model axis on the
+    *sequence* dim; GSPMD inserts the all-gather/reduce-scatter pair around
+    attention.  Cuts per-device activation memory by ``tp×``.
+    """
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"][tokens].astype(compute)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        prefix_len = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(compute), x], axis=1)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    glob = layer_is_global(cfg)
+
+    constrain = (
+        (lambda h: jax.lax.with_sharding_constraint(h, act_spec))
+        if act_spec is not None
+        else (lambda h: h)
+    )
+    x = constrain(x)
+    cast = lambda t: jax.tree.map(lambda a: a.astype(compute) if a.dtype in (jnp.float32, jnp.bfloat16) else a, t)
+
+    if cfg.family in ("ssm", "hybrid"):
+        def ssm_step(h, lp):
+            return constrain(_ssm_layer(h, cast(lp), cfg)), None
+
+        if remat:
+            ssm_step = jax.checkpoint(ssm_step)
+
+        if cfg.family == "ssm":
+            if layer_loop == "scan":
+                x, _ = jax.lax.scan(ssm_step, x, params["layers"])
+            else:
+                for i in range(cfg.num_layers):
+                    x, _ = ssm_step(x, jax.tree.map(lambda a: a[i], params["layers"]))
+        else:
+            g = cfg.attn_every
+            ngroups = cfg.num_layers // g
+            grouped = jax.tree.map(
+                lambda a: a.reshape((ngroups, g) + a.shape[1:]), params["layers"]
+            )
+            shared = cast(params["shared_attn"])
+
+            def group_step(h, glp):
+                if layer_loop == "scan":
+                    h, _ = jax.lax.scan(ssm_step, h, glp)
+                else:
+                    for i in range(g):
+                        h, _ = ssm_step(h, jax.tree.map(lambda a: a[i], glp))
+                h = _dense_layer(
+                    h, shared, cfg, positions, jnp.array(True), prefix_len, q_chunk
+                )
+                return constrain(h), None
+
+            if remat:
+                group_step = jax.checkpoint(group_step)
+            if layer_loop == "scan":
+                x, _ = jax.lax.scan(group_step, x, grouped)
+            else:
+                for i in range(ngroups):
+                    x, _ = group_step(x, jax.tree.map(lambda a: a[i], grouped))
+    else:
+        def step(h, xs):
+            lp, is_g = xs
+            return constrain(
+                _dense_layer(h, cast(lp), cfg, positions, is_g, prefix_len, q_chunk)
+            ), None
+
+        if remat:
+            step = jax.checkpoint(step)
+        if layer_loop == "scan":
+            x, _ = jax.lax.scan(step, x, (params["layers"], jnp.asarray(glob)))
+        else:
+            for i in range(cfg.num_layers):
+                x, _ = step(
+                    x,
+                    (jax.tree.map(lambda a: a[i], params["layers"]), jnp.asarray(glob[i])),
+                )
+
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    prefix_embeds: jax.Array | None = None,
+    *,
+    remat: bool = False,
+    q_chunk: int = 512,
+) -> jax.Array:
+    """Full-sequence forward → logits [B, S_total, vocab]."""
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = forward_hidden(
+        params, cfg, tokens, prefix_embeds, remat=remat, q_chunk=q_chunk
+    )
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(compute)
+    return x @ head
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _cache_len(cfg: ModelConfig, layer_idx: int, max_len: int, glob) -> int:
+    if cfg.attention == "full" or bool(glob[layer_idx]):
+        return max_len
+    return min(cfg.window, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Ragged per-layer cache (ring buffers for local/SWA layers)."""
+    glob = layer_is_global(cfg)
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    layers = []
+    for i in range(cfg.num_layers):
+        if cfg.family in ("ssm", "hybrid"):
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            layers.append(
+                {
+                    "conv": jnp.zeros(
+                        (batch, cfg.conv_kernel - 1, conv_dim), dtype
+                    ),
+                    "ssm": jnp.zeros(
+                        (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                        jnp.float32,
+                    ),
+                }
+            )
+        else:
+            w = _cache_len(cfg, i, max_len, glob)
+            layers.append(
+                {
+                    "k": jnp.zeros((batch, w, hkv, dh), dtype),
+                    "v": jnp.zeros((batch, w, hkv, dh), dtype),
+                }
+            )
+    cache = {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        ngroups = cfg.num_layers // cfg.attn_every
+        cache["shared_kv"] = [
+            {
+                "k": jnp.zeros((batch, max_len, hkv, dh), dtype),
+                "v": jnp.zeros((batch, max_len, hkv, dh), dtype),
+            }
+            for _ in range(ngroups)
+        ]
+    return cache
+
+
+def _decode_attn(x, lp, cfg: ModelConfig, kv, pos, is_global: bool):
+    """One-token attention against a (ring or linear) KV cache."""
+    B, _, D = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    W = kv["k"].shape[1]
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, 1, hq, dh)
+    k = k.reshape(B, 1, hkv, dh)
+    v = v.reshape(B, 1, hkv, dh)
+    cos, sin = rope_angles(pos[None], dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    slot = pos % W
+    kc = jax.lax.dynamic_update_slice_in_dim(kv["k"], k.astype(kv["k"].dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(kv["v"], v.astype(kv["v"].dtype), slot, axis=1)
+    # true token position held by each ring slot
+    j = jnp.arange(W)
+    k_positions = pos - ((slot - j) % W)
+    out = attention(
+        q, kc, vc,
+        q_positions=pos[None],
+        k_positions=k_positions,
+        is_global=jnp.array(is_global),
+        window=cfg.window if not is_global else _BIG,
+        q_chunk=1,
+    )
+    x = x + out.reshape(B, 1, hq * dh) @ lp["wo"]
+    return x, {"k": kc, "v": vc}
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    cache,
+    token: jax.Array,   # [B] current token ids
+):
+    """serve_step: one new token against the cache. Returns (logits, cache)."""
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pos = cache["pos"]
+    x = params["embed"][token][:, None].astype(compute)   # [B, 1, D]
+    glob = layer_is_global(cfg)
+    cast = lambda t: jax.tree.map(
+        lambda a: a.astype(compute) if a.dtype in (jnp.float32, jnp.bfloat16) else a, t
+    )
+
+    new_layers = []
+    if cfg.family in ("ssm", "hybrid"):
+        new_shared = []
+        for i in range(cfg.num_layers):
+            lp = cast(jax.tree.map(lambda a: a[i], params["layers"]))
+            st = cache["layers"][i]
+            h = rms_norm(x[:, 0], lp["norm"], cfg.norm_eps)
+            y, conv2, ssm2 = ssm_lib.mamba2_decode_split(
+                h, lp, cfg, st["conv"], st["ssm"]
+            )
+            x = x + y[:, None]
+            new_layers.append({"conv": conv2, "ssm": ssm2})
+            if cfg.family == "hybrid" and (i + 1) % cfg.attn_every == 0:
+                gidx = (i + 1) // cfg.attn_every - 1
+                x, kv2 = _decode_attn(
+                    x, cast(params["shared_attn"]), cfg,
+                    cache["shared_kv"][gidx], pos, is_global=True,
+                )
+                x = _ffn_block(x, cast(params["shared_attn"]), cfg)
+                new_shared.append(kv2)
+    else:
+        for i in range(cfg.num_layers):
+            lp = cast(jax.tree.map(lambda a: a[i], params["layers"]))
+            x, kv2 = _decode_attn(
+                x, lp, cfg, cache["layers"][i], pos, is_global=bool(glob[i])
+            )
+            x = _ffn_block(x, lp, cfg)
+            new_layers.append(kv2)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(compute)
+    logits = x[:, 0] @ head
+    new_cache = {"layers": new_layers, "pos": pos + 1}
+    if cfg.family == "hybrid":
+        new_cache["shared_kv"] = new_shared
+    return logits, new_cache

@@ -1,0 +1,12 @@
+"""Sharded optimizer stack: AdamW, global-norm clipping, LR schedules, and
+int8 gradient compression with error feedback (for the microbatch
+accumulation path — halves the bytes the DP all-reduce moves)."""
+
+from repro.optim.adamw import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+from repro.optim.compress import CompressState, compress_init, decompress_add, quantize_grads

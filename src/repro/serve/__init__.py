@@ -1,0 +1,3 @@
+"""Serving layer: decode loop + FliX-backed KV request index."""
+
+from repro.serve.kv_index import KVPageIndex

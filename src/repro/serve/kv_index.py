@@ -1,0 +1,83 @@
+"""FliX-backed KV page index — the paper's CDS inside an LLM serving plane.
+
+The serving control plane must map (sequence_id, page_no) → cache slot for
+batched requests, under continuous allocation (prefill) and freeing
+(sequence completion) — exactly the dynamic ordered-map workload FliX is
+built for.  Keys are ``seq_id << PAGE_BITS | page_no``, so one successor /
+range query enumerates a sequence's pages *in order* (hash tables can't),
+and batched frees are physical deletions with immediate slot reclamation —
+no tombstone accumulation across the serving day (the paper's §6.5 LSMu
+collapse is precisely the failure mode this avoids).
+
+All operations are batched per engine step, matching the paper's batch
+execution model: one sorted batch of (allocate | lookup | free) per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    EMPTY,
+    NOT_FOUND,
+    build,
+    delete,
+    insert_safe,
+    point_query,
+    range_query,
+    sort_batch,
+)
+
+PAGE_BITS = 12  # up to 4096 pages (≈ pages × page_size tokens) per sequence
+
+
+def _key(seq_ids, page_nos):
+    return (seq_ids.astype(jnp.int32) << PAGE_BITS) | page_nos.astype(jnp.int32)
+
+
+class KVPageIndex:
+    """Host-driven wrapper around a FliXState (functional underneath)."""
+
+    def __init__(self, *, node_size: int = 16, nodes_per_bucket: int = 8):
+        # seed with one sentinel key (outside the (seq,page) space) so the
+        # structure is never empty
+        from repro.core import MAX_VALID
+
+        self.state = build(
+            jnp.array([MAX_VALID], jnp.int32),
+            jnp.array([0], jnp.int32),
+            node_size=node_size,
+            nodes_per_bucket=nodes_per_bucket,
+        )
+
+    def allocate(self, seq_ids, page_nos, slots):
+        """Batch-register pages → slots (an engine allocation step)."""
+        keys = _key(jnp.asarray(seq_ids), jnp.asarray(page_nos))
+        sk, sv = sort_batch(keys, jnp.asarray(slots, jnp.int32))
+        self.state, stats = insert_safe(self.state, sk, sv)
+        return stats
+
+    def lookup(self, seq_ids, page_nos):
+        """Batch lookup → cache slots (NOT_FOUND = -1 for unmapped pages)."""
+        keys = _key(jnp.asarray(seq_ids), jnp.asarray(page_nos))
+        return point_query(self.state, jnp.sort(keys))[jnp.argsort(jnp.argsort(keys))]
+
+    def pages_of(self, seq_id: int, *, max_pages: int = 256):
+        """All (page_no, slot) of a sequence, in order (range query)."""
+        lo = jnp.array([seq_id << PAGE_BITS], jnp.int32)
+        hi = jnp.array([((seq_id + 1) << PAGE_BITS) - 1], jnp.int32)
+        k, v, n = range_query(self.state, lo, hi, max_results=max_pages)
+        return k[0] & ((1 << PAGE_BITS) - 1), v[0], n[0]
+
+    def free_sequences(self, seq_ids, *, max_pages: int = 256):
+        """Batch-free every page of the given sequences (physical removal)."""
+        seq_ids = jnp.asarray(seq_ids, jnp.int32)
+        keys = (seq_ids[:, None] << PAGE_BITS) | jnp.arange(
+            max_pages, dtype=jnp.int32
+        )[None, :]
+        self.state, stats = delete(self.state, jnp.sort(keys.reshape(-1)))
+        return stats
+
+    def live_pages(self) -> int:
+        return int(self.state.live_keys()) - 1  # minus the seed key

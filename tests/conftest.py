@@ -1,0 +1,35 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS / device counts here — smoke tests must see the
+# single real device.  Multi-device tests spawn subprocesses (helpers below).
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with fake host devices."""
+    prelude = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"\n'
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env={"PYTHONPATH": f"{REPO}/src", "PATH": "/usr/bin:/bin"},
+        cwd=str(REPO),
+    )
+    assert proc.returncode == 0, f"subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,100 @@
+"""Baseline structures vs dict oracle + their documented pathologies."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sort_batch
+from repro.core.baselines import btree, hash_table as ht, lsm, sorted_array as sa
+from repro.core.state import EMPTY, NOT_FOUND
+
+
+@pytest.fixture
+def data(rng):
+    universe = rng.permutation(50000).astype(np.int32)
+    keys, extra = universe[:2000], universe[2000:4000]
+    vals = np.arange(2000, dtype=np.int32)
+    return keys, vals, extra, dict(zip(keys.tolist(), vals.tolist()))
+
+
+def test_sorted_array(data, rng):
+    keys, vals, extra, model = data
+    sk, sv = np.sort(keys), vals[np.argsort(keys)]
+    st = sa.build(jnp.asarray(sk), jnp.asarray(sv), capacity=8192)
+    res = np.asarray(sa.point_query(st, jnp.asarray(sk)))
+    assert all(res[i] == model[int(sk[i])] for i in range(len(sk)))
+    ik = np.sort(extra)
+    st = sa.insert(st, jnp.asarray(ik), jnp.asarray(ik))
+    res = np.asarray(sa.point_query(st, jnp.asarray(ik)))
+    assert (res == ik).all()
+    st = sa.delete(st, jnp.asarray(ik[:500]))
+    res = np.asarray(sa.point_query(st, jnp.asarray(ik[:500])))
+    assert (res == int(NOT_FOUND)).all()
+
+
+def test_lsm_push_cascade_and_queries(data):
+    keys, vals, extra, model = data
+    st = lsm.empty_state(chunk=128, num_levels=12)
+    sk, sv = np.sort(keys), vals[np.argsort(keys)]
+    st = lsm.insert(st, jnp.asarray(sk), jnp.asarray(sv))
+    res = np.asarray(lsm.point_query(st, jnp.asarray(sk)))
+    assert all(res[i] == model[int(sk[i])] for i in range(len(sk)))
+    # newest occurrence wins
+    up = sk[:200]
+    st = lsm.insert(st, jnp.asarray(up), jnp.asarray(np.full(200, 777, np.int32)))
+    res = np.asarray(lsm.point_query(st, jnp.asarray(up)))
+    assert (res == 777).all()
+
+
+def test_lsm_tombstones_and_successor_degradation(data):
+    keys, vals, extra, model = data
+    st = lsm.empty_state(chunk=128, num_levels=12)
+    sk, sv = np.sort(keys), vals[np.argsort(keys)]
+    st = lsm.insert(st, jnp.asarray(sk), jnp.asarray(sv))
+    dels = np.sort(keys[::2])
+    st = lsm.delete(st, jnp.asarray(dels))
+    res = np.asarray(lsm.point_query(st, jnp.asarray(dels)))
+    assert (res == int(NOT_FOUND)).all()
+    # successor must skip tombstoned keys to the next live key
+    live = np.setdiff1d(sk, dels)
+    q = dels[:100]
+    skk, svv = lsm.successor_query(st, jnp.asarray(np.sort(q)), max_skips=64)
+    skk = np.asarray(skk)
+    for i, qq in enumerate(np.sort(q)):
+        j = np.searchsorted(live, qq)
+        want = live[j] if j < len(live) else int(EMPTY)
+        assert skk[i] == want
+
+
+def test_btree_traversal(data):
+    keys, vals, extra, model = data
+    bt = btree.build(keys, vals, node_size=16, nodes_per_bucket=8)
+    assert len(bt.levels) >= 1
+    sk = np.sort(keys)
+    res = np.asarray(btree.point_query(bt, jnp.asarray(sk)))
+    assert all(res[i] == model[int(sk[i])] for i in range(len(sk)))
+    misses = np.setdiff1d(np.arange(50000, dtype=np.int32), np.concatenate([keys, extra]))[:300]
+    res = np.asarray(btree.point_query(bt, jnp.asarray(np.sort(misses))))
+    assert (res == int(NOT_FOUND)).all()
+
+
+def test_hash_table_probe_chains_and_tombstones(data):
+    keys, vals, extra, model = data
+    # 80% load factor per the paper; probe bound sized for the α=0.8 tail
+    MP = 256
+    h = ht.empty_state(capacity=int(len(keys) / 0.8))
+    h, fails = ht.insert(h, jnp.asarray(keys), jnp.asarray(vals), max_probe=MP)
+    assert int(fails) == 0
+    res = np.asarray(ht.point_query(h, jnp.asarray(keys), max_probe=MP))
+    assert all(res[i] == model[int(keys[i])] for i in range(len(keys)))
+    h = ht.delete(h, jnp.asarray(keys[:500]), max_probe=MP)
+    res = np.asarray(ht.point_query(h, jnp.asarray(keys[:500]), max_probe=MP))
+    assert (res == int(NOT_FOUND)).all()
+    # tombstones keep the rest of the probe chain reachable
+    res = np.asarray(ht.point_query(h, jnp.asarray(keys[500:]), max_probe=MP))
+    assert all(res[i] == model[int(keys[500 + i])] for i in range(len(keys) - 500))
+    # and tombstone slots are reusable for new keys
+    h, fails = ht.insert(h, jnp.asarray(extra[:500]), jnp.asarray(extra[:500]), max_probe=MP)
+    assert int(fails) == 0
+    res = np.asarray(ht.point_query(h, jnp.asarray(extra[:500]), max_probe=MP))
+    assert (res == extra[:500]).all()

@@ -1,0 +1,229 @@
+"""Distributed FliX + sharded train step on 8 fake host devices.
+
+These run in subprocesses so the main test process keeps its single real
+device (smoke tests must not see 512 devices — launcher contract)."""
+
+import pytest
+
+from tests.conftest import run_with_devices
+
+
+def test_sharded_flix_end_to_end():
+    out = run_with_devices(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import distributed as dist
+
+        mesh = jax.make_mesh((8,), ("shards",), axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(11)
+        universe = rng.permutation(200000).astype(np.int32)
+        keys, extra = universe[:8000], universe[8000:12000]
+        vals = np.arange(8000, dtype=np.int32)
+        sk = np.sort(keys); sv = vals[np.argsort(keys)]
+        model = dict(zip(keys.tolist(), vals.tolist()))
+
+        idx = dist.shard_build(jnp.asarray(sk), jnp.asarray(sv), mesh, node_size=16, nodes_per_bucket=8)
+        q = np.sort(np.concatenate([keys[:1000], rng.integers(0, 200000, 1000).astype(np.int32)]))
+        res = np.asarray(dist.point_query(idx, jnp.asarray(q), mesh))
+        assert all(res[i] == model.get(int(q[i]), -1) for i in range(len(q)))
+
+        ik = np.sort(extra); iv = (np.arange(4000) + 500000).astype(np.int32)[np.argsort(extra)]
+        idx = dist.insert(idx, jnp.asarray(ik), jnp.asarray(iv), mesh)
+        for k, v in zip(ik, iv): model[int(k)] = int(v)
+        res = np.asarray(dist.point_query(idx, jnp.asarray(ik), mesh))
+        assert all(res[i] == model[int(ik[i])] for i in range(len(ik)))
+
+        dels = np.sort(ik[::3])
+        idx = dist.delete(idx, jnp.asarray(dels), mesh)
+        res = np.asarray(dist.point_query(idx, jnp.asarray(dels), mesh))
+        assert (res == -1).all()
+
+        sq = np.sort(rng.integers(0, 200001, 500).astype(np.int32))
+        for k in dels: del model[int(k)]
+        live = np.array(sorted(model))
+        skk, vv = dist.successor_query(idx, jnp.asarray(sq), mesh)
+        skk = np.asarray(skk); vv = np.asarray(vv)
+        EMPTY = np.iinfo(np.int32).max
+        for i, qq in enumerate(sq):
+            j = np.searchsorted(live, qq)
+            want = live[j] if j < len(live) else EMPTY
+            assert skk[i] == want, (qq, skk[i], want)
+            if j < len(live): assert vv[i] == model[int(live[j])]
+        print("DIST_FLIX_OK")
+        """
+    )
+    assert "DIST_FLIX_OK" in out
+
+
+def test_a2a_routing():
+    out = run_with_devices(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import distributed as dist
+
+        mesh = jax.make_mesh((8,), ("shards",), axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(13)
+        keys = np.sort(rng.permutation(100000)[:8000]).astype(np.int32)
+        idx = dist.shard_build(jnp.asarray(keys), jnp.asarray(keys), mesh, node_size=16, nodes_per_bucket=8)
+
+        raw = rng.permutation(100000)[:4096].astype(np.int32)
+        local_sorted = np.sort(raw.reshape(8, 512), axis=1)
+        rk, rv, ov = dist.route_a2a(
+            idx, jnp.asarray(local_sorted.reshape(-1)), jnp.asarray(local_sorted.reshape(-1)),
+            mesh, capacity=160)
+        assert int(np.asarray(ov).sum()) == 0
+        EMPTY = np.iinfo(np.int32).max
+        routed = sorted(x for x in np.asarray(rk).tolist() if x != EMPTY)
+        assert routed == sorted(raw.tolist())
+        print("A2A_OK")
+        """
+    )
+    assert "A2A_OK" in out
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    """Same model, same data: 4x2-sharded loss == single-device loss."""
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.models.model import get_config
+        from repro.train import make_train_step, train_state_init, TrainState
+        from repro.optim import AdamWState
+        from repro import sharding as sh
+
+        cfg = get_config("h2o-danube-3-4b").reduced(dtype="float32")
+        rng = jax.random.PRNGKey(0)
+        state = train_state_init(rng, cfg)
+        tokens = jax.random.randint(rng, (8, 64), 0, cfg.vocab_size)
+        batch = {"tokens": tokens, "targets": tokens}
+        step = make_train_step(cfg, loss_chunk=16)
+
+        _, m1 = jax.jit(step)(state, batch)
+        loss_single = float(m1["loss"])
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        pspecs = sh.param_specs(cfg, state.params, tp=2)
+        sspecs = TrainState(params=pspecs, opt=AdamWState(step=P(), m=pspecs, v=pspecs))
+        ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                    is_leaf=lambda x: isinstance(x, P))
+        with mesh:
+            jstep = jax.jit(step, in_shardings=(ns(sspecs), ns(sh.input_specs_sharding(mesh, batch))))
+            _, m2 = jstep(state, batch)
+        loss_sharded = float(m2["loss"])
+        assert abs(loss_single - loss_sharded) < 1e-3, (loss_single, loss_sharded)
+        print("SHARDED_TRAIN_OK", loss_single, loss_sharded)
+        """
+    )
+    assert "SHARDED_TRAIN_OK" in out
+
+
+def test_tiny_dryrun_cell_compiles():
+    """build_cell lowers + compiles on an 8-device mesh (dryrun smoke)."""
+    out = run_with_devices(
+        """
+        import jax
+        from repro.launch.steps import build_cell
+        import repro.models.config as mc
+        import dataclasses
+
+        # shrink the shape table so the tiny mesh compiles fast
+        mc.SHAPES["train_4k"] = dict(kind="train", seq_len=256, global_batch=8)
+        mc.SHAPES["decode_32k"] = dict(kind="decode", seq_len=512, global_batch=8)
+        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        import repro.models.model as mm
+        from repro.models.model import get_config
+        real = get_config("musicgen-medium").reduced(dtype="bfloat16")
+        import repro.configs as configs
+        configs.REGISTRY["musicgen-medium"] = real
+        with mesh:
+            for shape in ("train_4k", "decode_32k"):
+                cell = build_cell("musicgen-medium", shape, mesh, loss_chunk=64)
+                compiled = cell.jitted.lower(*cell.abstract_args).compile()
+                assert compiled.cost_analysis() is not None
+        print("DRYRUN_SMOKE_OK")
+        """
+    )
+    assert "DRYRUN_SMOKE_OK" in out
+
+
+def test_gradient_compression_error_feedback():
+    """int8 EF quantizer: accumulated quantized grads ≈ true sum over steps."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.optim import compress_init, decompress_add, quantize_grads
+
+    rng = np.random.default_rng(5)
+    params = {"w": jnp.zeros((64, 64))}
+    state = compress_init(params)
+    true_sum = np.zeros((64, 64), np.float32)
+    acc = {"w": jnp.zeros((64, 64))}
+    for i in range(16):
+        g = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))}
+        true_sum += np.asarray(g["w"])
+        q8, scales, state = quantize_grads(g, state)
+        assert q8["w"].dtype == jnp.int8  # 4× fewer bytes on the wire
+        acc = decompress_add(acc, q8, scales)
+    rel = np.abs(np.asarray(acc["w"]) - true_sum).max() / np.abs(true_sum).max()
+    assert rel < 0.02, rel
+
+
+def test_moe_a2a_matches_dense_oracle():
+    """shard_map all-to-all MoE dispatch (§Perf iteration 4): exact vs the
+    dense oracle, including virtual-expert split and gradients."""
+    out = run_with_devices(
+        """
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models.model import get_config
+        from repro.models.moe import moe_ffn_dense_oracle
+        from repro.models.moe_a2a import moe_ffn_a2a
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = get_config("deepseek-moe-16b").reduced(dtype="float32", moe_capacity_factor=8.0)
+        cfg = dataclasses.replace(cfg, num_experts=4, top_k=2)
+        D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+        k = jax.random.split(jax.random.PRNGKey(4), 8)
+        p = {
+            "router": jax.random.normal(k[0], (D, E)) * 0.1,
+            "w_gate": jax.random.normal(k[1], (E, D, F)) * 0.05,
+            "w_up": jax.random.normal(k[2], (E, D, F)) * 0.05,
+            "w_down": jax.random.normal(k[3], (E, F, D)) * 0.05,
+            "shared_gate": jax.random.normal(k[4], (D, F)) * 0.05,
+            "shared_up": jax.random.normal(k[5], (D, F)) * 0.05,
+            "shared_down": jax.random.normal(k[6], (F, D)) * 0.05,
+        }
+        cfg = dataclasses.replace(cfg, num_shared_experts=1)
+        x = jax.random.normal(k[7], (64, D))
+        with mesh:
+            got = jax.jit(lambda x, p: moe_ffn_a2a(x, p, cfg, mesh))(x, p)
+        want = moe_ffn_dense_oracle(x, p, cfg)
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 2e-4, err
+
+        # split=2 virtual experts, same math
+        cfg2 = dataclasses.replace(cfg, moe_split=2)
+        def split_w(w, axis):
+            a, b = jnp.split(w, 2, axis=axis)
+            return jnp.stack([a, b], axis=1).reshape((E * 2,) + a.shape[1:])
+        p2 = dict(p)
+        p2["w_gate"] = split_w(p["w_gate"], 2)
+        p2["w_up"] = split_w(p["w_up"], 2)
+        p2["w_down"] = split_w(p["w_down"], 1)
+        with mesh:
+            got2 = jax.jit(lambda x, p: moe_ffn_a2a(x, p, cfg2, mesh))(x, p2)
+        assert float(jnp.max(jnp.abs(got2 - want))) < 2e-4
+
+        # differentiable end to end
+        def loss(p, x):
+            return jnp.sum(moe_ffn_a2a(x, p, cfg, mesh) ** 2)
+        with mesh:
+            g = jax.jit(jax.grad(loss))(p, x)
+        gn = float(jnp.sqrt(sum(jnp.sum(v.astype(jnp.float32)**2) for v in jax.tree.leaves(g))))
+        assert np.isfinite(gn) and gn > 0
+        print("MOE_A2A_OK")
+        """
+    )
+    assert "MOE_A2A_OK" in out

@@ -1,0 +1,222 @@
+"""FliX core vs a Python dict oracle + structural invariants I1–I5."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.state import EMPTY, MAX_VALID, NOT_FOUND
+
+
+def check_invariants(st: core.FliXState):
+    keys = np.asarray(st.keys)
+    counts = np.asarray(st.node_count)
+    nmax = np.asarray(st.node_max)
+    nn = np.asarray(st.num_nodes)
+    mkba = np.asarray(st.mkba)
+    nb, npb, ns = keys.shape
+    E = int(EMPTY)
+    for b in range(nb):
+        prev_max = None
+        for j in range(npb):
+            row = keys[b, j]
+            c = counts[b, j]
+            if j >= nn[b]:
+                assert c == 0 and (row == E).all(), f"inactive slot {b},{j} dirty"
+                continue
+            assert c > 0, f"active empty node {b},{j}"
+            valid = row[:c]
+            assert (np.diff(valid) > 0).all(), f"I1 violated at {b},{j}"
+            assert (row[c:] == E).all(), f"I1 padding violated at {b},{j}"
+            assert nmax[b, j] == valid[-1], f"I4 violated at {b},{j}"
+            if prev_max is not None:
+                assert valid[0] > prev_max, f"I2 violated at {b},{j}"
+            prev_max = valid[-1]
+            lf = mkba[b - 1] if b else np.iinfo(np.int32).min
+            assert valid[0] > lf and valid[-1] <= mkba[b], f"I3 violated at {b}"
+    assert (np.diff(mkba.astype(np.int64)) >= 0).all(), "I5 violated"
+    assert mkba[-1] == int(MAX_VALID)
+
+
+@pytest.fixture
+def built(rng):
+    keys = rng.choice(100000, size=3000, replace=False).astype(np.int32)
+    vals = np.arange(3000, dtype=np.int32)
+    st = core.build(keys, vals, node_size=8, nodes_per_bucket=8)
+    return st, dict(zip(keys.tolist(), vals.tolist()))
+
+
+def test_build_invariants(built):
+    st, model = built
+    check_invariants(st)
+    assert int(st.live_keys()) == len(model)
+
+
+def test_point_query_hits_and_misses(built, rng):
+    st, model = built
+    live = np.array(sorted(model), dtype=np.int32)
+    res = np.asarray(core.point_query(st, jnp.asarray(live)))
+    assert all(res[i] == model[int(live[i])] for i in range(len(live)))
+    misses = np.setdiff1d(
+        rng.integers(0, 100000, 500).astype(np.int32), live
+    )
+    res = np.asarray(core.point_query(st, jnp.asarray(np.sort(misses))))
+    assert (res == int(NOT_FOUND)).all()
+
+
+def test_insert_rounds_with_splits(built, rng):
+    st, model = built
+    pool = np.setdiff1d(np.arange(100000, dtype=np.int32), list(model))
+    for rnd in range(3):
+        ins = rng.choice(pool, size=1500, replace=False).astype(np.int32)
+        pool = np.setdiff1d(pool, ins)
+        iv = rng.integers(0, 1 << 30, size=1500).astype(np.int32)
+        sk, sv = core.sort_batch(jnp.asarray(ins), jnp.asarray(iv))
+        st, _ = core.insert_safe(st, sk, sv)
+        for k, v in zip(ins.tolist(), iv.tolist()):
+            model[k] = v
+        check_invariants(st)
+        assert int(st.live_keys()) == len(model)
+    live = np.array(sorted(model), dtype=np.int32)
+    res = np.asarray(core.point_query(st, jnp.asarray(live)))
+    assert all(res[i] == model[int(live[i])] for i in range(len(live)))
+
+
+def test_upsert_overwrites(built):
+    st, model = built
+    some = np.array(sorted(model)[:100], dtype=np.int32)
+    nv = jnp.full((100,), 424242, jnp.int32)
+    st, _ = core.insert(st, jnp.asarray(some), nv)
+    res = np.asarray(core.point_query(st, jnp.asarray(some)))
+    assert (res == 424242).all()
+    assert int(st.live_keys()) == len(model)  # no duplicates created
+
+
+def test_delete_physical_and_compaction(built, rng):
+    st, model = built
+    live = np.array(sorted(model), dtype=np.int32)
+    dels = live[::3]
+    nodes_before = int(st.total_nodes())
+    st, stats = core.delete(st, jnp.asarray(dels))
+    assert int(stats["deleted"]) == len(dels)
+    check_invariants(st)
+    res = np.asarray(core.point_query(st, jnp.asarray(dels)))
+    assert (res == int(NOT_FOUND)).all()
+    keep = np.setdiff1d(live, dels)
+    res = np.asarray(core.point_query(st, jnp.asarray(keep)))
+    assert all(res[i] == model[int(keep[i])] for i in range(len(keep)))
+
+
+def test_delete_everything(built):
+    st, model = built
+    live = np.array(sorted(model), dtype=np.int32)
+    st, _ = core.delete(st, jnp.asarray(live))
+    assert int(st.live_keys()) == 0
+    check_invariants(st)
+    res = np.asarray(core.point_query(st, jnp.asarray(live[:50])))
+    assert (res == int(NOT_FOUND)).all()
+
+
+def test_successor(built, rng):
+    st, model = built
+    live = np.array(sorted(model), dtype=np.int32)
+    q = np.sort(rng.integers(0, 100001, size=400).astype(np.int32))
+    sk, sv = core.successor_query(st, jnp.asarray(q))
+    sk, sv = np.asarray(sk), np.asarray(sv)
+    for i, qq in enumerate(q):
+        j = np.searchsorted(live, qq)
+        if j < len(live):
+            assert sk[i] == live[j] and sv[i] == model[int(live[j])]
+        else:
+            assert sk[i] == int(EMPTY) and sv[i] == int(NOT_FOUND)
+
+
+def test_range_query(built):
+    st, model = built
+    live = sorted(model)
+    lo, hi = live[100], live[160]
+    k, v, n = core.range_query(
+        st, jnp.array([lo], jnp.int32), jnp.array([hi], jnp.int32), max_results=128
+    )
+    want = [x for x in live if lo <= x <= hi]
+    got = [int(x) for x in np.asarray(k[0])[: int(n[0])]]
+    assert got == want
+
+
+def test_restructure_flattens_and_preserves(built, rng):
+    st, model = built
+    pool = np.setdiff1d(np.arange(100000, dtype=np.int32), list(model))
+    ins = rng.choice(pool, size=4000, replace=False).astype(np.int32)
+    sk, sv = core.sort_batch(jnp.asarray(ins), jnp.asarray(np.arange(4000, dtype=np.int32)))
+    st, _ = core.insert_safe(st, sk, sv)
+    for i, k in enumerate(ins.tolist()):
+        model[k] = i
+    live = np.array(sorted(model), dtype=np.int32)
+    dels = live[::2]
+    st, _ = core.delete(st, jnp.asarray(dels))
+    for k in dels.tolist():
+        del model[k]
+
+    st2 = core.restructure_auto(st)
+    check_invariants(st2)
+    assert int(st2.live_keys()) == len(model)
+    # restructuring flattens chains to single (half-full) nodes
+    assert int(jnp.max(st2.num_nodes)) == 1
+    live = np.array(sorted(model), dtype=np.int32)
+    res = np.asarray(core.point_query(st2, jnp.asarray(live)))
+    assert all(res[i] == model[int(live[i])] for i in range(len(live)))
+
+
+def test_merge_underfull(built, rng):
+    st, model = built
+    live = np.array(sorted(model), dtype=np.int32)
+    st, _ = core.delete(st, jnp.asarray(live[::2]))
+    for k in live[::2].tolist():
+        del model[k]
+    before = int(st.total_nodes())
+    st2 = core.merge_underfull(st)
+    check_invariants(st2)
+    assert int(st2.total_nodes()) <= before
+    assert int(st2.live_keys()) == len(model)
+
+
+def test_overflow_triggers_safe_restructure(rng):
+    keys = np.arange(0, 640, 10, dtype=np.int32)  # 64 keys
+    st = core.build(keys, keys, node_size=4, nodes_per_bucket=2)
+    # flood one bucket's range → overflow → insert_safe must regrow
+    flood = np.arange(1, 200, 2, dtype=np.int32)
+    sk, sv = core.sort_batch(jnp.asarray(flood), jnp.asarray(flood))
+    st1, _ = core.insert(st, sk, sv)
+    assert bool(st1.needs_restructure)
+    st2, _ = core.insert_safe(st, sk, sv)
+    assert not bool(st2.needs_restructure)
+    res = np.asarray(core.point_query(st2, jnp.asarray(np.sort(flood))))
+    assert (res == np.sort(flood)).all()
+
+
+def test_skewed_delete_batch_with_many_absent_keys(rng):
+    """Regression: a delete batch aiming thousands of absent keys at one
+    bucket's range must still remove the present ones exactly."""
+    keys = np.arange(0, 100000, 100, dtype=np.int32)  # 1000 sparse keys
+    st = core.build(keys, keys, node_size=8, nodes_per_bucket=4)
+    # delete range [0, 5000): 50 present keys buried in 5000 candidates
+    dels = jnp.asarray(np.arange(0, 5000, dtype=np.int32))
+    st, stats = core.delete(st, dels)
+    assert int(stats["deleted"]) == 50
+    res = np.asarray(core.point_query(st, jnp.asarray(keys[:50])))
+    assert (res == int(NOT_FOUND)).all()
+    res = np.asarray(core.point_query(st, jnp.asarray(keys[50:])))
+    assert (res == keys[50:]).all()
+    check_invariants(st)
+
+
+def test_skewed_delete_kernel_matches(rng):
+    from repro.kernels.flix_delete import flix_delete_pallas
+
+    keys = np.arange(0, 100000, 100, dtype=np.int32)
+    st = core.build(keys, keys, node_size=8, nodes_per_bucket=4)
+    dels = jnp.asarray(np.arange(0, 5000, dtype=np.int32))
+    want, _ = core.delete(st, dels)
+    got = flix_delete_pallas(st, dels, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want.keys), np.asarray(got.keys))
+    np.testing.assert_array_equal(np.asarray(want.num_nodes), np.asarray(got.num_nodes))

@@ -1,0 +1,105 @@
+"""Hypothesis property tests: FliX == dict under arbitrary op sequences."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro import core
+from repro.core.state import EMPTY, NOT_FOUND
+
+KEY = st.integers(min_value=0, max_value=5000)
+
+
+def _unique(xs):
+    return np.array(sorted(set(xs)), dtype=np.int32)
+
+
+@settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    build=st.lists(KEY, min_size=1, max_size=200),
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["insert", "delete", "upsert"]),
+            st.lists(KEY, min_size=1, max_size=60),
+        ),
+        max_size=6,
+    ),
+    probes=st.lists(KEY, min_size=1, max_size=60),
+)
+def test_flix_matches_dict(build, ops, probes):
+    bkeys = _unique(build)
+    bvals = np.arange(len(bkeys), dtype=np.int32)
+    state = core.build(bkeys, bvals, node_size=4, nodes_per_bucket=4)
+    model = dict(zip(bkeys.tolist(), bvals.tolist()))
+
+    tag = 1000
+    for op, keys in ops:
+        ks = _unique(keys)
+        if op == "delete":
+            state, _ = core.delete(state, jnp.asarray(ks))
+            for k in ks.tolist():
+                model.pop(k, None)
+        else:
+            if op == "upsert" and model:
+                ks = _unique(list(model)[: len(ks)])
+            vs = np.full(len(ks), tag, dtype=np.int32)
+            tag += 1
+            state, _ = core.insert_safe(state, jnp.asarray(ks), jnp.asarray(vs))
+            for k in ks.tolist():
+                model[k] = int(vs[0])
+
+    assert int(state.live_keys()) == len(model)
+
+    q = _unique(probes)
+    res = np.asarray(core.point_query(state, jnp.asarray(q)))
+    for i, k in enumerate(q.tolist()):
+        assert res[i] == model.get(k, int(NOT_FOUND)), (k, res[i], model.get(k))
+
+    sk, sv = core.successor_query(state, jnp.asarray(q))
+    sk, sv = np.asarray(sk), np.asarray(sv)
+    live = np.array(sorted(model), dtype=np.int32)
+    for i, k in enumerate(q.tolist()):
+        j = np.searchsorted(live, k)
+        if j < len(live):
+            assert sk[i] == live[j] and sv[i] == model[int(live[j])]
+        else:
+            assert sk[i] == int(EMPTY)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    keys=st.lists(KEY, min_size=1, max_size=300),
+    ns=st.sampled_from([4, 8, 14]),
+    npb=st.sampled_from([2, 4, 8]),
+)
+def test_restructure_identity(keys, ns, npb):
+    """Restructure never changes the mapping, for any geometry."""
+    ks = _unique(keys)
+    vs = np.arange(len(ks), dtype=np.int32)
+    state = core.build(ks, vs, node_size=ns, nodes_per_bucket=npb)
+    st2 = core.restructure_auto(state)
+    res = np.asarray(core.point_query(st2, jnp.asarray(ks)))
+    assert (res == vs).all()
+    assert int(st2.live_keys()) == len(ks)
+
+
+@settings(max_examples=15, deadline=None)
+@given(batch=st.lists(st.tuples(KEY, KEY), min_size=1, max_size=100))
+def test_dedup_last_wins(batch):
+    keys = np.array([k for k, _ in batch], dtype=np.int32)
+    vals = np.array([v for _, v in batch], dtype=np.int32)
+    sk, sv = core.sort_batch(jnp.asarray(keys), jnp.asarray(vals))
+    dk, dv, count = core.dedup_last_wins(sk, sv)
+    model = {}
+    for k, v in batch:
+        model[k] = v
+    assert int(count) == len(model)
+    dk, dv = np.asarray(dk), np.asarray(dv)
+    for i in range(int(count)):
+        assert model[int(dk[i])] == int(dv[i])
+    assert (dk[int(count):] == int(EMPTY)).all()

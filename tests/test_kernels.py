@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.kernels import ref
+from repro.kernels.flix_delete import flix_delete_pallas
+from repro.kernels.flix_query import flix_point_query_pallas
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.moe_dispatch import combine, dispatch, make_plan, moe_ffn_reference
+from repro.kernels.ops import grouped_matmul
+
+
+@pytest.mark.parametrize("ns,npb", [(8, 4), (16, 8), (32, 4), (14, 8)])
+@pytest.mark.parametrize("block_q,block_b", [(128, 8), (256, 4)])
+def test_flix_query_kernel_sweep(rng, ns, npb, block_q, block_b):
+    keys = rng.choice(200000, size=4000, replace=False).astype(np.int32)
+    vals = np.arange(4000, dtype=np.int32)
+    st = core.build(keys, vals, node_size=ns, nodes_per_bucket=npb)
+    q = np.sort(
+        np.concatenate([keys[:1000], rng.integers(0, 200000, 1000).astype(np.int32)])
+    )
+    want = ref.flix_point_query_ref(st.keys, st.vals, st.node_max, st.mkba, jnp.asarray(q))
+    got = flix_point_query_pallas(
+        st.keys, st.vals, st.node_max, st.mkba, jnp.asarray(q),
+        block_q=block_q, block_b=block_b, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_flix_query_kernel_after_updates(rng):
+    """Kernel correctness on a structure with multi-node chains."""
+    keys = rng.choice(100000, size=3000, replace=False).astype(np.int32)
+    st = core.build(keys, np.arange(3000, dtype=np.int32), node_size=8, nodes_per_bucket=8)
+    extra = np.setdiff1d(rng.choice(100000, 6000).astype(np.int32), keys)[:2000]
+    sk, sv = core.sort_batch(jnp.asarray(extra), jnp.asarray(np.arange(2000, dtype=np.int32)))
+    st, _ = core.insert_safe(st, sk, sv)
+    q = jnp.asarray(np.sort(np.concatenate([keys, extra])))
+    want = core.point_query(st, q)
+    got = flix_point_query_pallas(
+        st.keys, st.vals, st.node_max, st.mkba, q, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("ns,npb,block_b", [(8, 4, 4), (16, 8, 2), (32, 8, 8)])
+def test_flix_delete_kernel_sweep(rng, ns, npb, block_b):
+    keys = rng.choice(50000, size=2000, replace=False).astype(np.int32)
+    st = core.build(keys, np.arange(2000, dtype=np.int32), node_size=ns, nodes_per_bucket=npb)
+    dels = jnp.asarray(np.sort(keys[::3]))
+    want, _ = core.delete(st, dels)
+    got = flix_delete_pallas(st, dels, block_b=block_b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want.keys), np.asarray(got.keys))
+    np.testing.assert_array_equal(np.asarray(want.node_count), np.asarray(got.node_count))
+    np.testing.assert_array_equal(np.asarray(want.node_max), np.asarray(got.node_max))
+    np.testing.assert_array_equal(np.asarray(want.num_nodes), np.asarray(got.num_nodes))
+
+
+@pytest.mark.parametrize("T,D,F,E", [(256, 128, 256, 4), (512, 64, 128, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_sweep(rng, T, D, F, E, dtype):
+    sizes = rng.multinomial(T, np.ones(E) / E)
+    offs = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    x = jnp.asarray(rng.normal(size=(T, D)), dtype=dtype)
+    w = jnp.asarray(rng.normal(size=(E, D, F)) * 0.1, dtype=dtype)
+    want = ref.grouped_matmul_ref(x, w, jnp.asarray(offs))
+    got = grouped_matmul_pallas(
+        x, w, jnp.asarray(offs), block_t=128, block_f=64, interpret=True
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=tol, atol=tol)
+
+
+def test_grouped_matmul_empty_groups(rng):
+    T, D, F, E = 256, 64, 128, 8
+    offs = np.array([0, 0, 128, 128, 128, 256, 256, 256, 256], np.int32)
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(E, D, F)).astype(np.float32))
+    want = ref.grouped_matmul_ref(x, w, jnp.asarray(offs))
+    got = grouped_matmul_pallas(x, w, jnp.asarray(offs), interpret=True)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=1e-5)
+
+
+def test_flipped_moe_dispatch_matches_dense(rng):
+    T, D, F, E, K = 128, 64, 96, 8, 2
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    logits = jnp.asarray(rng.normal(size=(T, E)).astype(np.float32))
+    w_up = jnp.asarray((rng.normal(size=(E, D, F)) * 0.05).astype(np.float32))
+    w_down = jnp.asarray((rng.normal(size=(E, F, D)) * 0.05).astype(np.float32))
+    plan = make_plan(logits, K, E)
+    xs = dispatch(x, plan, K)
+    h = jax.nn.silu(grouped_matmul(xs, w_up, plan.group_offsets, mode="ref"))
+    ys = grouped_matmul(h, w_down, plan.group_offsets, mode="ref")
+    out = combine(ys, plan, K)
+    want = moe_ffn_reference(x, logits, w_up, w_down, K)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("ns,npb", [(8, 4), (16, 8), (14, 4)])
+def test_flix_insert_kernel_sweep(rng, ns, npb):
+    from repro.kernels.flix_insert import flix_insert_pallas
+
+    keys = rng.choice(100000, size=2000, replace=False).astype(np.int32)
+    st = core.build(keys, np.arange(2000, dtype=np.int32), node_size=ns, nodes_per_bucket=npb)
+    extra = np.setdiff1d(rng.choice(100000, 4000).astype(np.int32), keys)[:1500]
+    batch = np.concatenate([extra, keys[:300]])          # inserts + upserts
+    bv = np.arange(len(batch), dtype=np.int32) + 50000
+    sk, sv = core.sort_batch(jnp.asarray(batch), jnp.asarray(bv))
+    want, _ = core.insert(st, sk, sv)
+    got, oflow = flix_insert_pallas(st, sk, sv, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want.keys), np.asarray(got.keys))
+    np.testing.assert_array_equal(np.asarray(want.node_count), np.asarray(got.node_count))
+    np.testing.assert_array_equal(np.asarray(want.node_max), np.asarray(got.node_max))
+    np.testing.assert_array_equal(np.asarray(want.num_nodes), np.asarray(got.num_nodes))
+    mask = np.asarray(want.keys) != np.iinfo(np.int32).max
+    np.testing.assert_array_equal(np.asarray(want.vals)[mask], np.asarray(got.vals)[mask])
+    assert bool(want.needs_restructure) == bool(got.needs_restructure)
+
+
+def test_flix_insert_kernel_overflow_flag(rng):
+    from repro.kernels.flix_insert import flix_insert_pallas
+
+    st = core.build(
+        np.arange(0, 640, 10, dtype=np.int32), np.arange(64, dtype=np.int32),
+        node_size=4, nodes_per_bucket=2,
+    )
+    flood = np.arange(1, 200, 2, dtype=np.int32)
+    sk, sv = core.sort_batch(jnp.asarray(flood), jnp.asarray(flood))
+    _, oflow = flix_insert_pallas(st, sk, sv, interpret=True)
+    assert int(jnp.sum(oflow)) > 0

@@ -1,0 +1,96 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Round-trip the full FliX life cycle (the paper's experimental protocol) and
+the serving-plane integration (KV page index), plus a short real training
+run through the public driver.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core.state import NOT_FOUND
+from repro.serve.kv_index import KVPageIndex
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_paper_protocol_rounds(rng):
+    """Build → 4 insert rounds → queries → 4 delete rounds → restructure."""
+    n = 4096
+    universe = rng.permutation(200000).astype(np.int32)
+    build, pool = universe[:n], universe[n : 3 * n]
+    st = core.build(build, np.arange(n, dtype=np.int32), node_size=32, nodes_per_bucket=16)
+    model = dict(zip(build.tolist(), range(n)))
+
+    per = n // 2
+    for rnd in range(4):
+        ins = pool[rnd * per : (rnd + 1) * per]
+        iv = np.arange(len(ins), dtype=np.int32) + 1000 * rnd
+        sk, sv = core.sort_batch(jnp.asarray(ins), jnp.asarray(iv))
+        st, _ = core.insert_safe(st, sk, sv)
+        model.update(zip(ins.tolist(), iv.tolist()))
+        # all-hit and all-miss query batches after every round (paper §6)
+        live = np.array(sorted(model), dtype=np.int32)
+        hits = np.sort(rng.choice(live, size=n))
+        res = np.asarray(core.point_query(st, jnp.asarray(hits)))
+        assert all(res[i] == model[int(hits[i])] for i in range(n))
+        misses = np.setdiff1d(rng.integers(0, 200000, 2 * n).astype(np.int32), live)[:n]
+        res = np.asarray(core.point_query(st, jnp.asarray(np.sort(misses))))
+        assert (res == int(NOT_FOUND)).all()
+
+    for rnd in range(4):
+        dels = np.sort(pool[rnd * per : (rnd + 1) * per])
+        st, _ = core.delete(st, jnp.asarray(dels))
+        for k in dels.tolist():
+            model.pop(k)
+    assert int(st.live_keys()) == len(model)
+
+    st = core.restructure_auto(st)
+    live = np.array(sorted(model), dtype=np.int32)
+    res = np.asarray(core.point_query(st, jnp.asarray(live)))
+    assert all(res[i] == model[int(live[i])] for i in range(len(live)))
+
+
+def test_kv_page_index_serving_plane(rng):
+    idx = KVPageIndex()
+    # three sequences allocate pages across engine steps
+    idx.allocate([1, 1, 1, 2, 2, 3], [0, 1, 2, 0, 1, 0], [10, 11, 12, 20, 21, 30])
+    slots = np.asarray(idx.lookup([1, 2, 3, 2], [1, 0, 0, 1]))
+    assert slots.tolist() == [11, 20, 30, 21]
+    pages, slots, count = idx.pages_of(1)
+    assert int(count) == 3
+    assert np.asarray(slots)[:3].tolist() == [10, 11, 12]
+    assert np.asarray(pages)[:3].tolist() == [0, 1, 2]
+    # sequence 1 completes: physical free, slots reclaimed
+    idx.free_sequences([1])
+    assert idx.live_pages() == 3
+    assert np.asarray(idx.lookup([1], [0]))[0] == int(NOT_FOUND)
+    # slot reuse for a new sequence
+    idx.allocate([7, 7], [0, 1], [10, 11])
+    assert np.asarray(idx.lookup([7], [1]))[0] == 11
+
+
+def test_train_driver_resume_cli(tmp_path):
+    """The production driver trains, checkpoints, and resumes (CLI-level)."""
+    env = {"PYTHONPATH": f"{REPO}/src", "PATH": "/usr/bin:/bin"}
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "musicgen-medium", "--reduced", "--batch", "4",
+        "--seq", "64", "--ckpt-dir", str(tmp_path), "--ckpt-every", "10",
+    ]
+    p1 = subprocess.run(
+        cmd + ["--steps", "12"], capture_output=True, text=True, env=env,
+        cwd=str(REPO), timeout=900,
+    )
+    assert p1.returncode == 0, p1.stderr
+    p2 = subprocess.run(
+        cmd + ["--steps", "16"], capture_output=True, text=True, env=env,
+        cwd=str(REPO), timeout=900,
+    )
+    assert p2.returncode == 0, p2.stderr
+    assert "resumed from step 12" in p2.stdout
