@@ -1,0 +1,90 @@
+"""Mixed-operation batch engine: one sorted batch vs per-type passes.
+
+The paper's execution model is one sorted batch of mixed operations per
+step.  This suite sweeps the update ratio (0% = read-only … 100% = pure
+updates) on a fixed-size batch and times
+
+  * ``apply_ops``  — the unified engine: one global sort, one bucket
+    routing, per-type views derived by prefix counts (core/ops.py),
+  * ``sequential`` — the pre-engine serving path: sort + route the inserts,
+    sort + route the deletes, sort the reads, four separate passes.
+
+Both sides produce identical states and results (tests/test_differential.py),
+so the delta is pure routing/sort overhead — the quantity Table 1 of the
+paper isolates as the batch-preprocessing cost.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BUILD_SIZE, KEY_SPACE, emit, keyset, time_call
+from repro import core
+
+
+def run() -> None:
+    rng = np.random.default_rng(21)
+    n = BUILD_SIZE
+    batch = max(1024, n // 8)
+    keys = keyset(rng, n)
+    vals = np.arange(n, dtype=np.int32)
+    st = core.build(keys, vals, node_size=32, nodes_per_bucket=16)
+    absent = np.setdiff1d(
+        rng.integers(0, KEY_SPACE, 4 * batch).astype(np.int32), keys
+    )
+
+    for upd_pct in (0, 25, 50, 75, 100):
+        n_upd = batch * upd_pct // 100
+        n_ins, n_del = n_upd // 2, n_upd - n_upd // 2
+        n_read = batch - n_upd
+        n_point, n_succ = n_read // 2, n_read - n_read // 2
+
+        ins = absent[:n_ins]
+        dels = rng.choice(keys, size=n_del, replace=False).astype(np.int32)
+        points = rng.integers(0, KEY_SPACE, n_point).astype(np.int32)
+        succs = rng.integers(0, KEY_SPACE, n_succ).astype(np.int32)
+
+        tags = np.concatenate([
+            np.full(n_ins, core.OP_INSERT), np.full(n_del, core.OP_DELETE),
+            np.full(n_point, core.OP_POINT), np.full(n_succ, core.OP_SUCCESSOR),
+        ]).astype(np.int32)
+        bkeys = np.concatenate([ins, dels, points, succs]).astype(np.int32)
+        bvals = np.zeros(batch, np.int32)
+        bvals[:n_ins] = np.arange(n_ins)
+        jt, jk, jv = jnp.asarray(tags), jnp.asarray(bkeys), jnp.asarray(bvals)
+
+        def mixed():
+            ops, _ = core.make_ops(jt, jk, jv)
+            return core.apply_ops(st, ops)
+
+        jins_k, jins_v = jnp.asarray(ins), jnp.asarray(bvals[:n_ins])
+        jdel = jnp.asarray(dels)
+        jpoint, jsucc = jnp.asarray(points), jnp.asarray(succs)
+
+        def sequential():
+            s2 = st
+            if n_ins:
+                sk, sv = core.sort_batch(jins_k, jins_v)
+                s2, _ = core.insert(s2, sk, sv)
+            if n_del:
+                s2, _ = core.delete(s2, jnp.sort(jdel))
+            pv = sks = svs = None
+            if n_point:
+                pv = core.point_query(s2, jnp.sort(jpoint))
+            if n_succ:
+                sks, svs = core.successor_query(s2, jnp.sort(jsucc))
+            return s2, pv, sks, svs
+
+        t_mixed = time_call(mixed)
+        t_seq = time_call(sequential)
+        emit(
+            f"mixed_batch_apply_ops_upd{upd_pct}",
+            t_mixed,
+            f"batch={batch};ops_per_s={batch / t_mixed * 1e6:.0f}",
+        )
+        emit(
+            f"mixed_batch_sequential_upd{upd_pct}",
+            t_seq,
+            f"batch={batch};speedup={t_seq / t_mixed:.2f}x",
+        )

@@ -17,6 +17,7 @@ from benchmarks import (
     dist_shift,
     heatmap,
     insert_rounds,
+    mixed_batch,
     query_qtmf,
     restructure_recovery,
     sort_cost,
@@ -34,6 +35,7 @@ SUITES = {
     "fig11_dist_shift": dist_shift,
     "fig12_unsorted_queries": unsorted_queries,
     "fig13_successor": successor,
+    "mixed_batch_engine": mixed_batch,
     "table4_restructure": restructure_recovery,
 }
 

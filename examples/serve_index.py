@@ -33,20 +33,27 @@ for step in range(50):
             slots.append(next_slot)
             active[s] += 1
             next_slot += 1
-    if seqs:
-        idx.allocate(seqs, pages, slots)
+    # completions: sequences that didn't allocate this step may finish
+    alloc_set = set(seqs)
+    done = [
+        s for s in active
+        if active[s] > 0 and s not in alloc_set and rng.random() < 0.15
+    ]
 
-    # the attention kernel looks up this step's page table slice
-    if seqs:
-        got = np.asarray(idx.lookup(seqs, pages))
-        assert (got == np.array(slots)).all()
-
-    # completions: free all pages of finished sequences (physical delete)
-    done = [s for s in active if active[s] > 0 and rng.random() < 0.15]
-    if done:
-        idx.free_sequences(done)
-        for s in done:
-            del active[s]
+    # ONE mixed engine step: allocations, this step's page-table lookups,
+    # and physical frees travel in a single sorted batch (core.apply_ops) —
+    # update-then-read semantics means the lookups already see this step's
+    # allocations.
+    if seqs or done:
+        got, _ = idx.step(
+            allocs=(seqs, pages, slots) if seqs else None,
+            lookups=(seqs, pages) if seqs else None,
+            free_seqs=done if done else None,
+        )
+        if seqs:
+            assert (np.asarray(got) == np.array(slots)).all()
+    for s in done:
+        del active[s]
 
     if step % 10 == 0:
         print(

@@ -1,0 +1,21 @@
+"""Cross-version jax API compatibility (non-Pallas surface).
+
+Pallas-specific shims live in ``repro.kernels._compat``; mesh axis-type
+handling lives in ``repro.launch.mesh.make_mesh_auto``.  This module covers
+the rest: jax>=0.6 exposes ``shard_map`` at the top level, while this
+container's jax keeps it in ``jax.experimental``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def shard_map(*args, **kwargs):  # noqa: F811
+        # the replication-check kwarg was renamed check_rep -> check_vma
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _experimental_shard_map(*args, **kwargs)

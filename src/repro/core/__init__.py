@@ -19,8 +19,21 @@ from repro.core.batch import (
 )
 from repro.core.build import build, build_from_sorted, plan_geometry
 from repro.core.query import point_query, range_query, successor_query
-from repro.core.insert import insert, insert_safe
+from repro.core.insert import insert, insert_safe, insert_with_slices
 from repro.core.delete import delete, merge_underfull
+from repro.core.ops import (
+    OP_DELETE,
+    OP_INSERT,
+    OP_NOP,
+    OP_POINT,
+    OP_SUCCESSOR,
+    OpBatch,
+    apply_ops,
+    apply_ops_safe,
+    make_ops,
+    unsort,
+)
+from repro.core.invariants import check_invariants
 from repro.core.restructure import (
     restructure,
     restructure_auto,

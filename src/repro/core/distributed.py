@@ -39,6 +39,8 @@ from repro.core.query import point_query as local_point_query
 from repro.core.query import successor_query as local_successor
 from repro.core.state import EMPTY, KEY_DTYPE, MIN_KEY, NOT_FOUND, VAL_DTYPE, FliXState
 
+from repro.compat import shard_map as _shard_map
+
 
 class ShardedFliX(NamedTuple):
     state: FliXState          # bucket dim sharded over ``axis``
@@ -122,7 +124,7 @@ def point_query(idx: ShardedFliX, sorted_queries: jax.Array, mesh) -> jax.Array:
         return jax.lax.pmax(res, axis)
 
     return jax.jit(
-        jax.shard_map(
+        _shard_map(
             body,
             mesh=mesh,
             in_specs=(_state_specs(axis), P(axis), P()),
@@ -149,7 +151,7 @@ def successor_query(idx: ShardedFliX, sorted_queries: jax.Array, mesh):
         return kmin, jax.lax.pmax(vsel, axis)
 
     return jax.jit(
-        jax.shard_map(
+        _shard_map(
             body,
             mesh=mesh,
             in_specs=(_state_specs(axis), P(axis), P()),
@@ -174,7 +176,7 @@ def insert(idx: ShardedFliX, sorted_keys, sorted_vals, mesh) -> ShardedFliX:
         return dataclasses.replace(new_state, needs_restructure=flag)
 
     new_state = jax.jit(
-        jax.shard_map(
+        _shard_map(
             body,
             mesh=mesh,
             in_specs=(_state_specs(axis), P(axis), P(), P()),
@@ -197,7 +199,7 @@ def delete(idx: ShardedFliX, sorted_keys, mesh) -> ShardedFliX:
         return dataclasses.replace(new_state, needs_restructure=flag)
 
     new_state = jax.jit(
-        jax.shard_map(
+        _shard_map(
             body,
             mesh=mesh,
             in_specs=(_state_specs(axis), P(axis), P()),
@@ -245,7 +247,7 @@ def route_a2a(idx: ShardedFliX, keys_shard, vals_shard, mesh, *, capacity: int):
         )
 
     return jax.jit(
-        jax.shard_map(
+        _shard_map(
             body,
             mesh=mesh,
             in_specs=(P(axis), P(axis), P()),

@@ -94,22 +94,27 @@ def _merge_one_bucket(
     )
 
 
-@jax.jit
-def insert(state: FliXState, sorted_keys: jax.Array, sorted_vals: jax.Array):
-    """Bulk-insert a sorted, deduplicated batch. Returns (state', stats).
+def insert_with_slices(
+    state: FliXState,
+    sorted_keys: jax.Array,
+    sorted_vals: jax.Array,
+    starts: jax.Array,
+    ends: jax.Array,
+):
+    """Bulk-insert with precomputed per-bucket slice boundaries.
 
-    If any bucket overflows its capacity, the returned state's
-    ``needs_restructure`` flag is set and *that bucket's contents are not
-    trustworthy* — callers use :func:`insert_safe` (or check the flag and
-    retry on the original state after restructuring).  ``insert`` itself
-    never mutates its input (functional), so retry is always clean.
+    The routing (``starts``/``ends`` into the sorted batch) is supplied by
+    the caller: :func:`insert` computes it with ``bucket_slices``; the mixed
+    batch engine (``core.ops.apply_ops``) derives it from its *single*
+    routing of the whole mixed batch via prefix counts.  Both paths hit this
+    identical merge code, which is what makes mixed execution byte-identical
+    to per-type execution.
     """
     nb, npb, ns = state.num_buckets, state.nodes_per_bucket, state.node_size
     cap = state.bucket_capacity
     keys_in = sorted_keys.astype(KEY_DTYPE)
     vals_in = sorted_vals.astype(VAL_DTYPE)
 
-    starts, ends = bucket_slices(state, keys_in)
     ik, counts, true_counts = gather_sublists(keys_in, starts, ends, cap)
     # vals tile follows the same indices
     padded_v = jnp.concatenate([vals_in, jnp.zeros((cap,), VAL_DTYPE)])
@@ -152,6 +157,20 @@ def insert(state: FliXState, sorted_keys: jax.Array, sorted_vals: jax.Array):
         "overflowed_buckets": jnp.sum(overflow | slice_overflow),
     }
     return new_state, stats
+
+
+@jax.jit
+def insert(state: FliXState, sorted_keys: jax.Array, sorted_vals: jax.Array):
+    """Bulk-insert a sorted, deduplicated batch. Returns (state', stats).
+
+    If any bucket overflows its capacity, the returned state's
+    ``needs_restructure`` flag is set and *that bucket's contents are not
+    trustworthy* — callers use :func:`insert_safe` (or check the flag and
+    retry on the original state after restructuring).  ``insert`` itself
+    never mutates its input (functional), so retry is always clean.
+    """
+    starts, ends = bucket_slices(state, sorted_keys.astype(KEY_DTYPE))
+    return insert_with_slices(state, sorted_keys, sorted_vals, starts, ends)
 
 
 def insert_safe(state: FliXState, sorted_keys, sorted_vals):

@@ -1,0 +1,45 @@
+"""Structural invariant checker for FliXState (I1–I5, see state.py).
+
+Host-side (numpy) and O(total slots) — intended for tests and debugging,
+not the hot path.  ``check_invariants`` raises ``AssertionError`` with the
+first violated invariant; every mutating operation (build, insert, delete,
+merge_underfull, restructure, apply_ops) must preserve I1–I5 whenever its
+input satisfies them and no overflow was flagged.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.state import EMPTY, MAX_VALID, FliXState
+
+
+def check_invariants(st: FliXState) -> None:
+    """Assert I1–I5 hold for ``st`` (see the state.py module docstring)."""
+    keys = np.asarray(st.keys)
+    counts = np.asarray(st.node_count)
+    nmax = np.asarray(st.node_max)
+    nn = np.asarray(st.num_nodes)
+    mkba = np.asarray(st.mkba)
+    nb, npb, ns = keys.shape
+    E = int(EMPTY)
+    for b in range(nb):
+        prev_max = None
+        for j in range(npb):
+            row = keys[b, j]
+            c = counts[b, j]
+            if j >= nn[b]:
+                assert c == 0 and (row == E).all(), f"inactive slot {b},{j} dirty"
+                continue
+            assert c > 0, f"active empty node {b},{j}"
+            valid = row[:c]
+            assert (np.diff(valid) > 0).all(), f"I1 violated at {b},{j}"
+            assert (row[c:] == E).all(), f"I1 padding violated at {b},{j}"
+            assert nmax[b, j] == valid[-1], f"I4 violated at {b},{j}"
+            if prev_max is not None:
+                assert valid[0] > prev_max, f"I2 violated at {b},{j}"
+            prev_max = valid[-1]
+            lf = mkba[b - 1] if b else np.iinfo(np.int32).min
+            assert valid[0] > lf and valid[-1] <= mkba[b], f"I3 violated at {b}"
+    assert (np.diff(mkba.astype(np.int64)) >= 0).all(), "I5 violated"
+    assert mkba[-1] == int(MAX_VALID), "I5 violated: mkba[-1] != MAX_VALID"

@@ -1,0 +1,219 @@
+"""Mixed-operation batch engine (the paper's batch execution model, §4.1).
+
+The paper's execution unit is *one sorted batch per step*: the engine sorts
+whatever operations arrived — inserts, deletes, point lookups, successor
+probes — into a single key-ordered batch, and each bucket pulls *all* of its
+work with one binary search.  This module is that engine:
+
+  * ``OpBatch`` — a tagged operation batch (tag, key, val per slot).
+  * ``make_ops`` — the one global sort (the only O(N log N) step).
+  * ``apply_ops`` — the executor: one ``bucket_slices`` routing of the whole
+    mixed batch.  Per-type views are *derived* from it with no second sort:
+    order-preserving prefix-count scatters compact the insert/delete keys,
+    and the insert phase's slice boundaries come from the single routing via
+    prefix counts (``starts_ins = C_ins[starts]``) rather than a second
+    fence routing.  The delete phase then uses deletion's flipped
+    *whole-batch* membership search (data looks up the batch — no fence
+    routing at all), and reads are answered from the updated state by the
+    flipped compare-count forms (which binary-search the fences per query,
+    as every FliX read does).
+
+Within a batch the semantics are update-then-read:
+
+  1. INSERT ops merge in first (upsert — incoming value wins),
+  2. DELETE ops remove physically (present-key hits only),
+  3. POINT and SUCCESSOR ops observe the post-update state.
+
+``apply_ops`` is byte-identical to sequential per-type application
+(``insert`` → ``delete`` → ``point_query`` → ``successor_query`` on the
+sorted per-type sub-batches): the insert path literally shares
+``insert_with_slices`` with ``core.insert``, the delete path shares
+``core.delete``, and the read paths share ``core.query``.  The differential
+test in ``tests/test_differential.py`` pins this down.
+
+Precondition: at most one *update* op (INSERT or DELETE) per key per batch
+(reads may repeat keys freely) — the same uniqueness contract ``insert``
+already imposes.  ``OP_NOP`` slots (key must be ``EMPTY``) let callers pad
+batches to a fixed size so jit traces once per geometry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batch import bucket_slices
+from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND, VAL_DTYPE, FliXState
+
+OP_INSERT = 0
+OP_DELETE = 1
+OP_POINT = 2
+OP_SUCCESSOR = 3
+OP_NOP = 4  # padding slot; key must be EMPTY so it routes past every bucket
+
+OP_DTYPE = jnp.int32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OpBatch:
+    """A key-sorted batch of tagged operations (a pytree of device arrays)."""
+
+    tag: jax.Array  # [N] OP_DTYPE
+    key: jax.Array  # [N] KEY_DTYPE, ascending (EMPTY = NOP padding, at end)
+    val: jax.Array  # [N] VAL_DTYPE (meaningful for INSERT only)
+
+    @property
+    def size(self) -> int:
+        return self.key.shape[0]
+
+
+def make_ops(tags, keys, vals=None, *, pad_to: int | None = None):
+    """Sort a raw operation list by key into an :class:`OpBatch`.
+
+    This is the engine's one global sort.  Returns ``(ops, perm)`` where
+    ``perm[j]`` is the sorted position input op ``j`` landed at, so
+    ``sorted_result[perm]`` (= :func:`unsort`) maps per-op results back to
+    submission order.
+
+    ``pad_to`` appends ``OP_NOP`` slots up to a fixed size so callers with
+    variable-length steps trace one jit program per geometry.
+    """
+    tags = jnp.asarray(tags, OP_DTYPE)
+    keys = jnp.asarray(keys, KEY_DTYPE)
+    if vals is None:
+        vals = jnp.zeros(keys.shape, VAL_DTYPE)
+    vals = jnp.asarray(vals, VAL_DTYPE)
+    if pad_to is not None and pad_to > keys.shape[0]:
+        extra = pad_to - keys.shape[0]
+        tags = jnp.concatenate([tags, jnp.full((extra,), OP_NOP, OP_DTYPE)])
+        keys = jnp.concatenate([keys, jnp.full((extra,), EMPTY, KEY_DTYPE)])
+        vals = jnp.concatenate([vals, jnp.zeros((extra,), VAL_DTYPE)])
+    order = jnp.argsort(keys, stable=True)
+    # inverse permutation (input position -> sorted position) by O(N) scatter
+    perm = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    return OpBatch(tag=tags[order], key=keys[order], val=vals[order]), perm
+
+
+def unsort(sorted_result: jax.Array, perm: jax.Array) -> jax.Array:
+    """Map a sorted-order result array back to submission order."""
+    return sorted_result[perm]
+
+
+def _compact_by_mask(keys: jax.Array, mask: jax.Array, vals: jax.Array | None = None):
+    """Front-pack ``keys[mask]`` preserving order; EMPTY tail.  No sort:
+    destinations are a prefix count, so ascending order is preserved."""
+    n = keys.shape[0]
+    dest = jnp.where(mask, jnp.cumsum(mask) - 1, n)  # n = discard slot
+    out_k = jnp.full((n + 1,), EMPTY, KEY_DTYPE).at[dest].set(keys)[:n]
+    if vals is None:
+        return out_k
+    out_v = jnp.zeros((n + 1,), VAL_DTYPE).at[dest].set(vals)[:n]
+    return out_k, out_v
+
+
+@jax.jit
+def apply_ops(state: FliXState, ops: OpBatch):
+    """Execute one mixed sorted batch.  Returns ``(state', results, stats)``.
+
+    ``results`` is aligned with the sorted batch:
+      * ``value``    — POINT: stored value or NOT_FOUND; SUCCESSOR: successor
+                       value or NOT_FOUND; INSERT/DELETE/NOP: NOT_FOUND.
+      * ``succ_key`` — SUCCESSOR: smallest stored key ≥ op key (post-update)
+                       or EMPTY; other tags: EMPTY.
+
+    On bucket overflow the returned state carries ``needs_restructure`` and
+    the overflowing buckets are untrustworthy — same contract as ``insert``;
+    hosts use :func:`apply_ops_safe`.
+    """
+    from repro.core.delete import delete
+    from repro.core.insert import insert_with_slices
+    from repro.core.query import point_query, successor_query
+
+    tag, key, val = ops.tag, ops.key, ops.val
+    n = key.shape[0]
+
+    # --- the single routing: every bucket's slice of the *mixed* batch ----
+    starts, ends = bucket_slices(state, key)
+
+    # --- derive per-type views from that routing (no second sort) ---------
+    is_ins = tag == OP_INSERT
+    is_del = tag == OP_DELETE
+    ins_keys, ins_vals = _compact_by_mask(key, is_ins, val)
+    del_keys = _compact_by_mask(key, is_del)
+    # prefix counts map mixed-slice boundaries to insert-slice boundaries
+    c_ins = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(is_ins).astype(jnp.int32)]
+    )
+    ins_starts, ins_ends = c_ins[starts], c_ins[ends]
+
+    # --- update phase: merge inserts, then physical deletes ---------------
+    # an absent op class skips its phase entirely (lax.cond executes one
+    # branch), so read-heavy batches don't pay the merge machinery; the
+    # differential contract is correspondingly "apply the present types".
+    s1, ins_stats = jax.lax.cond(
+        c_ins[-1] > 0,
+        lambda: insert_with_slices(state, ins_keys, ins_vals, ins_starts, ins_ends),
+        lambda: (
+            state,
+            {
+                "inserted": jnp.int32(0),
+                "nodes_after": jnp.sum(state.num_nodes),
+                "splits": jnp.int32(0),
+                "overflowed_buckets": jnp.int32(0),
+            },
+        ),
+    )
+    s2, del_stats = jax.lax.cond(
+        jnp.any(is_del),
+        lambda: delete(s1, del_keys),
+        lambda: (s1, {"deleted": jnp.int32(0), "nodes_freed": jnp.int32(0)}),
+    )
+
+    # --- read phase: flipped compare-count against the updated state ------
+    is_point = tag == OP_POINT
+    is_succ = tag == OP_SUCCESSOR
+    pv = jax.lax.cond(
+        jnp.any(is_point),
+        lambda: point_query(s2, key),
+        lambda: jnp.full((n,), NOT_FOUND, VAL_DTYPE),
+    )
+    sk, sv = jax.lax.cond(
+        jnp.any(is_succ),
+        lambda: successor_query(s2, key),
+        lambda: (
+            jnp.full((n,), EMPTY, KEY_DTYPE),
+            jnp.full((n,), NOT_FOUND, VAL_DTYPE),
+        ),
+    )
+    results = {
+        "value": jnp.where(is_point, pv, jnp.where(is_succ, sv, NOT_FOUND)),
+        "succ_key": jnp.where(is_succ, sk, EMPTY),
+    }
+    stats = {
+        "inserted": ins_stats["inserted"],
+        "deleted": del_stats["deleted"],
+        "overflowed_buckets": ins_stats["overflowed_buckets"],
+    }
+    return s2, results, stats
+
+
+def apply_ops_safe(state: FliXState, ops: OpBatch):
+    """Host-level driver: apply, restructure-and-retry on overflow.
+
+    Mirrors ``insert_safe`` — restructuring is host-driven because the new
+    geometry changes static shapes.  The retry replays the *whole* batch on
+    the regrown pre-batch state, which is safe because ``apply_ops`` never
+    mutates its input.
+    """
+    from repro.core.restructure import restructure_grow
+
+    new_state, results, stats = apply_ops(state, ops)
+    if bool(new_state.needs_restructure) and not bool(state.needs_restructure):
+        n_ins = int(jnp.sum(ops.tag == OP_INSERT))
+        grown = restructure_grow(state, extra_keys=max(n_ins, 1))
+        new_state, results, stats = apply_ops(grown, ops)
+        assert not bool(new_state.needs_restructure), "post-restructure overflow"
+    return new_state, results, stats

@@ -114,25 +114,46 @@ def range_query(
 ):
     """Keys/vals in [lo, hi] per query pair, padded to max_results.
 
-    Implemented by walking forward from the successor of ``lo`` over the
-    bucket-sorted flattened view.  Bonus operation (the paper discusses but
-    does not benchmark range queries); used by the serving KV index.
+    Bucket-local walk from the successor position of ``lo`` — no global
+    argsort.  Bucket order *is* key order (I2/I3), so each bucket only needs
+    its own row sorted (``flatten_bucket_sorted``, a parallel per-row sort
+    over the short capacity axis); per-bucket live-count prefix sums then
+    turn (bucket, in-bucket position) into a global rank, and the walk is a
+    pure rank→(bucket, position) gather across chain/bucket boundaries.
+    Bonus operation (the paper discusses but does not benchmark range
+    queries); used by the serving KV index.
     """
     from repro.core.state import flatten_bucket_sorted
 
     flat_k, flat_v = flatten_bucket_sorted(state)        # [nb, cap]
-    cap = flat_k.shape[1]
-    allk = flat_k.reshape(-1)
-    allv = flat_v.reshape(-1)
-    order = jnp.argsort(allk, stable=True)               # global sorted view
-    gk, gv = allk[order], allv[order]
+    nb = state.num_buckets
+    loq = lo.astype(KEY_DTYPE)
 
-    start = jnp.searchsorted(gk, lo.astype(KEY_DTYPE), side="left")
-    idx = start[:, None] + jnp.arange(max_results)[None, :]
-    idx = jnp.minimum(idx, gk.shape[0] - 1)
-    rk = gk[idx]
-    rv = gv[idx]
-    valid = (rk <= hi[:, None]) & (rk != EMPTY)
+    live = jnp.sum(flat_k != EMPTY, axis=1).astype(jnp.int32)            # [nb]
+    pref = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(live).astype(jnp.int32)]
+    )                                                                    # [nb+1]
+    total = pref[-1]
+
+    # successor position of lo: owning bucket + compare-count inside it
+    b0 = jnp.minimum(
+        jnp.searchsorted(state.mkba, loq, side="left"), nb - 1
+    ).astype(jnp.int32)
+    p0 = jnp.sum(flat_k[b0] < loq[:, None], axis=1).astype(jnp.int32)
+    rank0 = pref[b0] + p0            # global rank of the first key ≥ lo
+
+    ranks = rank0[:, None] + jnp.arange(max_results, dtype=jnp.int32)[None, :]
+    in_range = ranks < total
+    ranks_c = jnp.clip(ranks, 0, jnp.maximum(total - 1, 0))
+    rb = jnp.clip(
+        jnp.searchsorted(pref, ranks_c, side="right").astype(jnp.int32) - 1,
+        0,
+        nb - 1,
+    )
+    rpos = ranks_c - pref[rb]
+    rk = flat_k[rb, rpos]
+    rv = flat_v[rb, rpos]
+    valid = in_range & (rk <= hi[:, None]) & (rk != EMPTY)
     return jnp.where(valid, rk, EMPTY), jnp.where(valid, rv, NOT_FOUND), jnp.sum(
         valid, axis=1
     )

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical hot spots (+ jnp oracles).
 
 flix_query      — flipped point-query kernel (compute-to-bucket streaming)
+flix_successor  — flipped successor kernel (in-bucket votes + suffix-min fallback)
+flix_insert     — TL-Bulk insertion kernel (upsert merge, balanced splits)
 flix_delete     — TL-Bulk deletion kernel (mark, compact, reclaim)
 grouped_matmul  — ragged grouped GEMM over expert slices (flipped MoE)
 moe_dispatch    — sort-based dispatch helpers (the sorted-batch step)

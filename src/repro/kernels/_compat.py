@@ -1,0 +1,12 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+Newer jax releases renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams``; this container's jax only has the old name.
+Every kernel imports ``CompilerParams`` from here so both spellings work.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core.batch import bucket_slices, gather_sublists
 from repro.core.state import EMPTY, KEY_DTYPE, FliXState
 
@@ -159,7 +161,7 @@ def flix_delete_pallas(
             jax.ShapeDtypeStruct((nb_p, 1), jnp.int32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
     )(keys, vals, del_tile)
 
     return FliXState(

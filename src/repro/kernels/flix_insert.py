@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core.batch import bucket_slices, gather_sublists
 from repro.core.state import EMPTY, KEY_DTYPE, VAL_DTYPE, FliXState
 
@@ -197,7 +199,7 @@ def flix_insert_pallas(
             jax.ShapeDtypeStruct((nb, 1), jnp.int32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
     )(
         state.keys.reshape(nb, npb * ns),
         state.vals.reshape(nb, npb * ns),

@@ -1,24 +1,24 @@
-"""Pallas TPU kernel for FliX flipped point queries (paper §3.3, Figure 4).
+"""Pallas TPU kernel for FliX flipped successor queries (paper §3.3 applied
+to the ordered-CDS capability hash-table competitors lack).
 
-Compute-to-bucket mapping on a TPU:
+Same compute-to-bucket mapping as ``flix_query``:
 
-  * grid = (query windows, bucket blocks).  The window dimension is outer,
-    so each (1, QB) query block and its output stay VMEM-resident while the
-    bucket blocks that window needs stream through.
-  * scalar-prefetched per-window bucket-block bounds ``lo[j]``/``hi[j]``
-    drive the bucket BlockSpec index_map: steps outside a window's range
-    *clamp to the boundary block index*, so Pallas issues **no DMA** for
-    them (same-index blocks are not refetched) and ``pl.when`` skips the
-    compute — the TPU analogue of the paper's "bucket with no queries
-    terminates immediately".
-  * inside the kernel every lookup is a compare-count (the tile-ballot
-    analogue) plus a one-hot MXU matmul gather: int32 rows are split into
-    two exact f16-range halves so the gather is exact in f32 arithmetic —
-    this is the TPU-idiomatic replacement for the warp's per-thread gather.
+  * grid = (query windows, bucket blocks); scalar-prefetched per-window
+    bucket-block bounds clamp out-of-range steps so they issue no DMA and
+    skip compute,
+  * inside the kernel the in-bucket candidate is the standard compare-count
+    pair (node by node-max votes, position by key votes) plus exact one-hot
+    gathers,
+  * the out-of-bucket candidate (bucket's largest present key < q) cannot be
+    resolved block-locally — the next non-empty bucket may live in a later
+    block — so the wrapper precomputes two per-bucket fence-like rows with
+    one O(nb) suffix scan: ``next_key[b]`` / ``next_val[b]`` = the smallest
+    key (and its value) stored in any bucket after ``b``.  They stream
+    through the same fence BlockSpec as the MKBA row, and the kernel picks
+    in-bucket vs next-bucket per query.
 
-VMEM working set per step: QB queries + one (BB, npb, ns) bucket stripe
-(keys+vals) + (BB, npb) node maxes + fences — all shaped by the BlockSpecs
-below; defaults (QB=128, BB=8, npb≤32, ns≤64) stay well under 1 MiB.
+Semantics are identical to ``core.query.successor_query``:
+returns (succ_key | EMPTY, succ_val | NOT_FOUND) per query.
 """
 
 from __future__ import annotations
@@ -31,27 +31,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
-
+from repro.kernels.flix_query import (
+    DEFAULT_BLOCK_B,
+    DEFAULT_BLOCK_Q,
+    _exact_gather_i32,
+)
 from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND
 
-DEFAULT_BLOCK_Q = 128   # queries per window
-DEFAULT_BLOCK_B = 8     # buckets per bucket block
-_MISS = -1              # NOT_FOUND as a Python literal (kernels must not
-                        # capture traced constants)
+_EMPTY = int(jnp.iinfo(jnp.int32).max)
+_MISS = -1
 
 
-def _exact_gather_i32(onehot_f32: jax.Array, table_i32: jax.Array) -> jax.Array:
-    """Exact int32 row gather as two f32 MXU matmuls (hi/lo 16-bit split)."""
-    u = table_i32.astype(jnp.uint32)
-    lo = (u & jnp.uint32(0xFFFF)).astype(jnp.float32)
-    hi = (u >> jnp.uint32(16)).astype(jnp.float32)
-    glo = jax.lax.dot(onehot_f32, lo, preferred_element_type=jnp.float32)
-    ghi = jax.lax.dot(onehot_f32, hi, preferred_element_type=jnp.float32)
-    out = ghi.astype(jnp.uint32) * jnp.uint32(65536) + glo.astype(jnp.uint32)
-    return out.astype(jnp.int32)
-
-
-def _query_kernel(
+def _successor_kernel(
     lo_ref,      # scalar prefetch: [n_windows] first bucket block of window
     hi_ref,      # scalar prefetch: [n_windows] last  bucket block of window
     q_ref,       # [1, QB] sorted queries for window j
@@ -59,8 +50,11 @@ def _query_kernel(
     vals_ref,    # [BB, npb*ns]
     nmax_ref,    # [BB, npb] per-node max keys (EMPTY when inactive)
     mkba_ref,    # [1, BB] bucket fences for the block
-    lf_ref,      # [1, BB] lower fences (previous bucket's mkba)
-    out_ref,     # [1, QB] values / NOT_FOUND
+    lf_ref,      # [1, BB] lower fences
+    nxk_ref,     # [1, BB] smallest key stored after bucket b (EMPTY if none)
+    nxv_ref,     # [1, BB] its value
+    outk_ref,    # [1, QB] successor keys / EMPTY
+    outv_ref,    # [1, QB] successor values / NOT_FOUND
     *,
     block_b: int,
     npb: int,
@@ -71,13 +65,13 @@ def _query_kernel(
 
     @pl.when(i == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref, _MISS)
+        outk_ref[...] = jnp.full_like(outk_ref, _EMPTY)
+        outv_ref[...] = jnp.full_like(outv_ref, _MISS)
 
     active = (i >= lo_ref[j]) & (i <= hi_ref[j])
 
     @pl.when(active)
     def _process():
-        blk = jnp.clip(i, lo_ref[j], hi_ref[j])
         q = q_ref[0, :]                                   # [QB]
         qcol = q[:, None]                                 # [QB, 1]
 
@@ -90,18 +84,18 @@ def _query_kernel(
             jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], block_b), 1)
             == b_sel[:, None]
         )
-        # ownership: q must exceed its bucket's lower fence and fall in block
         lf_q = jnp.sum(jnp.where(oh_b, lf, 0), axis=1)
         mine = (b_local < block_b) & (qcol[:, 0] > lf_q)
 
-        # locate node: compare-count over the bucket's node maxes
+        # in-bucket candidate: node by node-max votes, position by key votes
         nmax_rows = _exact_gather_i32(
             oh_b.astype(jnp.float32), nmax_ref[...]
         )                                                  # [QB, npb]
         nidx = jnp.sum(nmax_rows < qcol, axis=1)           # [QB]
+        n_active = jnp.sum((nmax_rows != _EMPTY).astype(jnp.int32), axis=1)
+        in_bucket = nidx < n_active
         nidx_c = jnp.minimum(nidx, npb - 1)
 
-        # gather the node row (keys+vals) with a flat one-hot over BB*npb
         flat = b_sel * npb + nidx_c                        # [QB]
         oh_n = (
             jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], block_b * npb), 1)
@@ -110,25 +104,36 @@ def _query_kernel(
         krow = _exact_gather_i32(oh_n, keys_ref[...].reshape(block_b * npb, ns))
         vrow = _exact_gather_i32(oh_n, vals_ref[...].reshape(block_b * npb, ns))
 
-        # in-node position by compare-count; hit iff the key matches
         pos = jnp.sum(krow < qcol, axis=1)
         pos_c = jnp.minimum(pos, ns - 1)
         oh_p = (
             jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], ns), 1)
             == pos_c[:, None]
         )
-        key_at = jnp.sum(jnp.where(oh_p, krow, 0), axis=1)
-        val_at = jnp.sum(jnp.where(oh_p, vrow, 0), axis=1)
-        hit = mine & (pos < ns) & (key_at == qcol[:, 0])
+        in_key = jnp.sum(jnp.where(oh_p, krow, 0), axis=1)
+        in_val = jnp.sum(jnp.where(oh_p, vrow, 0), axis=1)
 
-        out_ref[0, :] = jnp.where(hit, val_at, out_ref[0, :])
+        # out-of-bucket candidate: first key after the owning bucket
+        nxk = nxk_ref[0, :][None, :]
+        nxv = nxv_ref[0, :][None, :]
+        out_key = jnp.sum(jnp.where(oh_b, nxk, 0), axis=1)
+        out_val = jnp.sum(jnp.where(oh_b, nxv, 0), axis=1)
+
+        use_in = in_bucket & (pos < ns)
+        succ_key = jnp.where(use_in, in_key, out_key)
+        succ_val = jnp.where(use_in, in_val, out_val)
+        found = succ_key != _EMPTY
+        succ_val = jnp.where(found, succ_val, _MISS)
+
+        outk_ref[0, :] = jnp.where(mine, succ_key, outk_ref[0, :])
+        outv_ref[0, :] = jnp.where(mine, succ_val, outv_ref[0, :])
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("block_q", "block_b", "interpret"),
 )
-def flix_point_query_pallas(
+def flix_successor_pallas(
     keys3d: jax.Array,      # [nb, npb, ns] int32
     vals3d: jax.Array,      # [nb, npb, ns] int32
     node_max: jax.Array,    # [nb, npb] int32
@@ -138,9 +143,20 @@ def flix_point_query_pallas(
     block_q: int = DEFAULT_BLOCK_Q,
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
-) -> jax.Array:
+):
     nb, npb, ns = keys3d.shape
     qn = sorted_queries.shape[0]
+
+    # per-bucket "first key after b" rows: one O(nb) suffix scan on the host
+    # side of the kernel (the same associative scan successor_query uses).
+    from repro.core.query import _suffix_min_with_index
+
+    bucket_min = jnp.where(node_max[:, 0] != EMPTY, keys3d[:, 0, 0], EMPTY)
+    head_val = vals3d[:, 0, 0]
+    smin, sidx = _suffix_min_with_index(bucket_min)
+    next_key = jnp.concatenate([smin[1:], jnp.array([EMPTY], KEY_DTYPE)])
+    next_idx = jnp.concatenate([sidx[1:], jnp.array([0], jnp.int32)])
+    next_val = head_val[next_idx]
 
     # pad buckets to a block multiple (EMPTY stripes never match)
     nb_p = pl.cdiv(nb, block_b) * block_b
@@ -150,11 +166,13 @@ def flix_point_query_pallas(
         vals3d = jnp.pad(vals3d, ((0, pad), (0, 0), (0, 0)))
         node_max = jnp.pad(node_max, ((0, pad), (0, 0)), constant_values=EMPTY)
         mkba = jnp.pad(mkba, (0, pad), constant_values=EMPTY - 1)
+        next_key = jnp.pad(next_key, (0, pad), constant_values=EMPTY)
+        next_val = jnp.pad(next_val, (0, pad))
     lfence = jnp.concatenate(
         [jnp.array([jnp.iinfo(jnp.int32).min], KEY_DTYPE), mkba[:-1]]
     )
 
-    # pad queries to a window multiple (EMPTY-1 pads resolve to NOT_FOUND)
+    # pad queries to a window multiple (MAX_VALID pads are sliced off)
     qp = pl.cdiv(max(qn, 1), block_q) * block_q
     q = jnp.pad(
         sorted_queries.astype(KEY_DTYPE), (0, qp - qn), constant_values=EMPTY - 1
@@ -162,7 +180,6 @@ def flix_point_query_pallas(
     n_windows = qp // block_q
     q2 = q.reshape(n_windows, block_q)
 
-    # per-window bucket-block bounds (the flipped-index pre-pass)
     first_b = jnp.searchsorted(mkba, q2[:, 0], side="left")
     last_b = jnp.searchsorted(mkba, q2[:, -1], side="left")
     lo = jnp.minimum(first_b, nb_p - 1).astype(jnp.int32) // block_b
@@ -173,6 +190,8 @@ def flix_point_query_pallas(
     vals2d = vals3d.reshape(nb_p, npb * ns)
     mkba_row = mkba.reshape(1, nb_p)
     lf_row = lfence.reshape(1, nb_p)
+    nxk_row = next_key.reshape(1, nb_p)
+    nxv_row = next_val.reshape(1, nb_p)
 
     def bucket_map(j, i, lo_ref, hi_ref):
         return (jnp.clip(i, lo_ref[j], hi_ref[j]), 0)
@@ -190,17 +209,25 @@ def flix_point_query_pallas(
             pl.BlockSpec((block_b, npb), bucket_map),
             pl.BlockSpec((1, block_b), fence_map),
             pl.BlockSpec((1, block_b), fence_map),
+            pl.BlockSpec((1, block_b), fence_map),
+            pl.BlockSpec((1, block_b), fence_map),
         ],
-        out_specs=pl.BlockSpec((1, block_q), lambda j, i, lo, hi: (j, 0)),
+        out_specs=[
+            pl.BlockSpec((1, block_q), lambda j, i, lo, hi: (j, 0)),
+            pl.BlockSpec((1, block_q), lambda j, i, lo, hi: (j, 0)),
+        ],
     )
 
-    out = pl.pallas_call(
-        functools.partial(_query_kernel, block_b=block_b, npb=npb, ns=ns),
+    outk, outv = pl.pallas_call(
+        functools.partial(_successor_kernel, block_b=block_b, npb=npb, ns=ns),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_windows, block_q), jnp.int32),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_windows, block_q), jnp.int32),
+            jax.ShapeDtypeStruct((n_windows, block_q), jnp.int32),
+        ],
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")
         ),
-    )(lo, hi, q2, keys2d, vals2d, node_max, mkba_row, lf_row)
-    return out.reshape(qp)[:qn]
+    )(lo, hi, q2, keys2d, vals2d, node_max, mkba_row, lf_row, nxk_row, nxv_row)
+    return outk.reshape(qp)[:qn], outv.reshape(qp)[:qn]

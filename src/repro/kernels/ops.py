@@ -20,6 +20,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.flix_delete import flix_delete_pallas
 from repro.kernels.flix_insert import flix_insert_pallas
 from repro.kernels.flix_query import flix_point_query_pallas
+from repro.kernels.flix_successor import flix_successor_pallas
 from repro.kernels.grouped_matmul import grouped_matmul_pallas
 
 
@@ -42,6 +43,26 @@ def flix_point_query(
             state.keys, state.vals, state.node_max, state.mkba, sorted_queries
         )
     return flix_point_query_pallas(
+        state.keys,
+        state.vals,
+        state.node_max,
+        state.mkba,
+        sorted_queries,
+        interpret=(mode == "interpret"),
+        **blocks,
+    )
+
+
+def flix_successor(
+    state: FliXState, sorted_queries: jax.Array, *, mode: str = "auto", **blocks
+):
+    """Successor queries: (succ_key | EMPTY, succ_val | NOT_FOUND)."""
+    mode = _resolve(mode)
+    if mode == "ref":
+        return _ref.flix_successor_ref(
+            state.keys, state.vals, state.node_max, state.mkba, sorted_queries
+        )
+    return flix_successor_pallas(
         state.keys,
         state.vals,
         state.node_max,

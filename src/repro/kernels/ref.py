@@ -34,6 +34,46 @@ def flix_point_query_ref(
     return jnp.where(hit, vals3d[b, nidx_c, pos_c], NOT_FOUND)
 
 
+def flix_successor_ref(
+    keys3d: jax.Array,
+    vals3d: jax.Array,
+    node_max: jax.Array,
+    mkba: jax.Array,
+    sorted_queries: jax.Array,
+):
+    """Oracle for kernels.flix_successor (identical math to core.query's
+    ``successor_query``, with ``num_nodes`` derived from ``node_max``)."""
+    nb, npb, ns = keys3d.shape
+    q = sorted_queries.astype(KEY_DTYPE)
+    num_nodes = jnp.sum(node_max != EMPTY, axis=1).astype(jnp.int32)
+    b = jnp.minimum(jnp.searchsorted(mkba, q, side="left"), nb - 1).astype(jnp.int32)
+
+    nmax_rows = node_max[b]
+    nidx = jnp.sum(nmax_rows < q[:, None], axis=1).astype(jnp.int32)
+    in_bucket = nidx < num_nodes[b]
+    nidx_c = jnp.minimum(nidx, npb - 1)
+    rows = keys3d[b, nidx_c]
+    pos = jnp.sum(rows < q[:, None], axis=1).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, ns - 1)
+    in_key = rows[jnp.arange(q.shape[0]), pos_c]
+    in_val = vals3d[b, nidx_c, pos_c]
+
+    from repro.core.query import _suffix_min_with_index
+
+    bucket_min = jnp.where(num_nodes > 0, keys3d[:, 0, 0], EMPTY)
+    smin, sidx = _suffix_min_with_index(bucket_min)
+    smin_pad = jnp.concatenate([smin, jnp.array([EMPTY], KEY_DTYPE)])
+    sidx_pad = jnp.concatenate([sidx, jnp.array([0], jnp.int32)])
+    out_key = smin_pad[b + 1]
+    out_val = vals3d[sidx_pad[b + 1], 0, 0]
+
+    use_in = in_bucket & (pos < ns)
+    succ_key = jnp.where(use_in, in_key, out_key)
+    succ_val = jnp.where(use_in, in_val, out_val)
+    found = succ_key != EMPTY
+    return succ_key, jnp.where(found, succ_val, NOT_FOUND)
+
+
 def grouped_matmul_ref(
     x: jax.Array,            # [T, D] tokens sorted by group
     w: jax.Array,            # [E, D, F] per-group weights

@@ -10,13 +10,23 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_auto(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the jax version has them.
+
+    ``jax.sharding.AxisType`` only exists in newer jax; older releases treat
+    every axis as Auto already, so omitting the argument is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_auto(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):

@@ -45,9 +45,15 @@ def main() -> None:
         logits, cache = step(params, cache, token)
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if i % PAGE_TOKENS == 0:  # new KV page per sequence
+            # one mixed engine step: register the new pages AND resolve each
+            # sequence's head page in the same sorted batch (core.apply_ops)
             seqs = np.arange(args.batch)
-            kv_index.allocate(seqs, np.full(args.batch, i // PAGE_TOKENS),
-                              seqs * 1000 + i // PAGE_TOKENS)
+            slots, _ = kv_index.step(
+                allocs=(seqs, np.full(args.batch, i // PAGE_TOKENS),
+                        seqs * 1000 + i // PAGE_TOKENS),
+                lookups=(seqs, np.zeros(args.batch, int)),
+            )
+            assert (np.asarray(slots) == seqs * 1000).all()
     jax.block_until_ready(token)
     dt = time.time() - t0
     print(

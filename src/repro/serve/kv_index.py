@@ -9,24 +9,32 @@ and batched frees are physical deletions with immediate slot reclamation —
 no tombstone accumulation across the serving day (the paper's §6.5 LSMu
 collapse is precisely the failure mode this avoids).
 
-All operations are batched per engine step, matching the paper's batch
-execution model: one sorted batch of (allocate | lookup | free) per step.
+Execution matches the paper's batch model exactly: each engine step submits
+**one mixed sorted batch** of (allocate | lookup | free) operations through
+``core.ops.apply_ops`` — one sort, one bucket routing, one flipped pass —
+instead of sorting and routing three times for three per-type passes.
+Batches are padded to the next power of two so jit traces once per size
+class, not once per step.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import (
     EMPTY,
     NOT_FOUND,
+    OP_DELETE,
+    OP_INSERT,
+    OP_POINT,
+    apply_ops,
+    apply_ops_safe,
     build,
-    delete,
-    insert_safe,
-    point_query,
+    make_ops,
     range_query,
-    sort_batch,
+    unsort,
 )
 
 PAGE_BITS = 12  # up to 4096 pages (≈ pages × page_size tokens) per sequence
@@ -34,6 +42,10 @@ PAGE_BITS = 12  # up to 4096 pages (≈ pages × page_size tokens) per sequence
 
 def _key(seq_ids, page_nos):
     return (seq_ids.astype(jnp.int32) << PAGE_BITS) | page_nos.astype(jnp.int32)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
 
 
 class KVPageIndex:
@@ -51,17 +63,89 @@ class KVPageIndex:
             nodes_per_bucket=nodes_per_bucket,
         )
 
+    # ---- the engine step: one mixed batch ------------------------------
+    def step(self, *, allocs=None, lookups=None, free_seqs=None, max_pages: int = 256):
+        """Submit one engine step's mixed work as a single sorted batch.
+
+        ``allocs``    — (seq_ids, page_nos, slots): register pages.
+        ``lookups``   — (seq_ids, page_nos): resolve pages → slots.
+        ``free_seqs`` — sequence ids whose pages are all physically freed.
+
+        ``allocs`` and ``free_seqs`` must not share a sequence id: that
+        would put the same key in the batch as both INSERT and DELETE,
+        violating ``apply_ops``' one-update-op-per-key precondition (the
+        delete would silently win).  Checked here because the ids are host
+        values anyway.
+
+        Returns ``(lookup_slots, stats)``; ``lookup_slots`` is aligned with
+        the ``lookups`` input order (NOT_FOUND = -1 for unmapped pages).
+        """
+        if allocs is not None and free_seqs is not None:
+            overlap = set(np.asarray(allocs[0]).tolist()) & set(
+                np.asarray(free_seqs).tolist()
+            )
+            if overlap:
+                raise ValueError(
+                    f"sequences {sorted(overlap)} appear in both allocs and "
+                    "free_seqs within one step; free them the step after "
+                    "their last allocation"
+                )
+        tags, keys, vals = [], [], []
+        n_alloc = n_lookup = 0
+        if allocs is not None:
+            seq, page, slot = allocs
+            k = _key(jnp.asarray(seq), jnp.asarray(page))
+            n_alloc = k.shape[0]
+            tags.append(jnp.full((n_alloc,), OP_INSERT, jnp.int32))
+            keys.append(k)
+            vals.append(jnp.asarray(slot, jnp.int32))
+        if lookups is not None:
+            seq, page = lookups
+            k = _key(jnp.asarray(seq), jnp.asarray(page))
+            n_lookup = k.shape[0]
+            tags.append(jnp.full((n_lookup,), OP_POINT, jnp.int32))
+            keys.append(k)
+            vals.append(jnp.zeros((n_lookup,), jnp.int32))
+        if free_seqs is not None:
+            seq = jnp.asarray(free_seqs, jnp.int32)
+            k = (
+                (seq[:, None] << PAGE_BITS)
+                | jnp.arange(max_pages, dtype=jnp.int32)[None, :]
+            ).reshape(-1)
+            tags.append(jnp.full(k.shape, OP_DELETE, jnp.int32))
+            keys.append(k)
+            vals.append(jnp.zeros(k.shape, jnp.int32))
+        if not keys:
+            return jnp.zeros((0,), jnp.int32), {}
+
+        tag = jnp.concatenate(tags)
+        key = jnp.concatenate(keys)
+        val = jnp.concatenate(vals)
+        ops, perm = make_ops(tag, key, val, pad_to=_next_pow2(key.shape[0]))
+        if n_alloc == 0:
+            # only inserts can overflow — lookup/free steps skip the
+            # restructure-and-retry wrapper and its host sync entirely
+            self.state, results, stats = apply_ops(self.state, ops)
+        else:
+            self.state, results, stats = apply_ops_safe(self.state, ops)
+        values = unsort(results["value"], perm[: key.shape[0]])
+        return values[n_alloc : n_alloc + n_lookup], stats
+
+    # ---- per-type conveniences (each is still one engine step) ---------
     def allocate(self, seq_ids, page_nos, slots):
         """Batch-register pages → slots (an engine allocation step)."""
-        keys = _key(jnp.asarray(seq_ids), jnp.asarray(page_nos))
-        sk, sv = sort_batch(keys, jnp.asarray(slots, jnp.int32))
-        self.state, stats = insert_safe(self.state, sk, sv)
+        _, stats = self.step(allocs=(seq_ids, page_nos, slots))
         return stats
 
     def lookup(self, seq_ids, page_nos):
         """Batch lookup → cache slots (NOT_FOUND = -1 for unmapped pages)."""
-        keys = _key(jnp.asarray(seq_ids), jnp.asarray(page_nos))
-        return point_query(self.state, jnp.sort(keys))[jnp.argsort(jnp.argsort(keys))]
+        slots, _ = self.step(lookups=(seq_ids, page_nos))
+        return slots
+
+    def free_sequences(self, seq_ids, *, max_pages: int = 256):
+        """Batch-free every page of the given sequences (physical removal)."""
+        _, stats = self.step(free_seqs=seq_ids, max_pages=max_pages)
+        return stats
 
     def pages_of(self, seq_id: int, *, max_pages: int = 256):
         """All (page_no, slot) of a sequence, in order (range query)."""
@@ -69,15 +153,6 @@ class KVPageIndex:
         hi = jnp.array([((seq_id + 1) << PAGE_BITS) - 1], jnp.int32)
         k, v, n = range_query(self.state, lo, hi, max_results=max_pages)
         return k[0] & ((1 << PAGE_BITS) - 1), v[0], n[0]
-
-    def free_sequences(self, seq_ids, *, max_pages: int = 256):
-        """Batch-free every page of the given sequences (physical removal)."""
-        seq_ids = jnp.asarray(seq_ids, jnp.int32)
-        keys = (seq_ids[:, None] << PAGE_BITS) | jnp.arange(
-            max_pages, dtype=jnp.int32
-        )[None, :]
-        self.state, stats = delete(self.state, jnp.sort(keys.reshape(-1)))
-        return stats
 
     def live_pages(self) -> int:
         return int(self.state.live_keys()) - 1  # minus the seed key

@@ -65,6 +65,7 @@ def test_manager_async_save_retention_resume(tmp_path, tree):
     )
 
 
+@pytest.mark.slow
 def test_elastic_reshard_subprocess(tmp_path):
     """Save on a 4×2 mesh, restore onto 2×4 and 8×1 — elastic restart."""
     from tests.conftest import run_with_devices
@@ -77,13 +78,14 @@ def test_elastic_reshard_subprocess(tmp_path):
 
         tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
         specs = {{"w": P("data", "model")}}
-        mesh1 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_auto
+        mesh1 = make_mesh_auto((4, 2), ("data", "model"))
         sharded = jax.tree.map(
             lambda a: jax.device_put(a, NamedSharding(mesh1, P("data", "model"))), tree)
         save_pytree("{tmp_path}/ck", sharded, specs=specs, extra={{}})
 
         for shape in ((2, 4), (8, 1), (1, 1)):
-            mesh2 = jax.make_mesh(shape, ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh2 = make_mesh_auto(shape, ("data", "model"))
             restored, _ = restore_pytree("{tmp_path}/ck", tree, mesh=mesh2, specs=specs)
             np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
             assert restored["w"].sharding.mesh.shape["data"] == shape[0]

@@ -1,0 +1,289 @@
+"""Differential parity: Pallas kernels vs jnp oracles, mixed vs per-type.
+
+Two families of proofs:
+
+  1. Every Pallas kernel (flix_query, flix_insert, flix_delete,
+     flix_successor) matches its jnp oracle bit-for-bit in interpret mode on
+     *adversarial* batches — duplicate queries, all-miss batches, boundary
+     keys (0 and MAX_VALID), and states with emptied buckets and multi-node
+     chains.
+  2. ``apply_ops`` on a mixed batch is byte-identical — state arrays and
+     per-op results — to sequential per-type application of the present op
+     classes (insert → delete → point → successor on sorted sub-batches).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.invariants import check_invariants
+from repro.core.state import EMPTY, MAX_VALID, NOT_FOUND
+from repro.kernels import ref
+from repro.kernels.flix_delete import flix_delete_pallas
+from repro.kernels.flix_insert import flix_insert_pallas
+from repro.kernels.flix_query import flix_point_query_pallas
+from repro.kernels.flix_successor import flix_successor_pallas
+
+STATE_FIELDS = ("keys", "vals", "node_count", "node_max", "num_nodes", "mkba")
+
+
+def _assert_states_identical(a: core.FliXState, b: core.FliXState):
+    for f in STATE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+        )
+    assert bool(a.needs_restructure) == bool(b.needs_restructure)
+
+
+@pytest.fixture
+def adversarial(rng):
+    """A state with boundary keys, multi-node chains, and emptied buckets."""
+    keys = rng.choice(120000, size=2500, replace=False).astype(np.int32)
+    keys = np.unique(np.concatenate([keys, [0, int(MAX_VALID)]])).astype(np.int32)
+    st = core.build(
+        keys, np.arange(len(keys), dtype=np.int32), node_size=8, nodes_per_bucket=8
+    )
+    # grow chains so several buckets hold multiple nodes
+    extra = np.setdiff1d(
+        rng.choice(120000, 5000).astype(np.int32), keys
+    )[:1500]
+    sk, sv = core.sort_batch(
+        jnp.asarray(extra), jnp.asarray(np.arange(1500, dtype=np.int32))
+    )
+    st, _ = core.insert_safe(st, sk, sv)
+    # empty out a key range spanning whole buckets
+    st, _ = core.delete(st, jnp.asarray(np.arange(30000, 60000, dtype=np.int32)))
+    check_invariants(st)
+    live = np.unique(np.concatenate([keys, extra]))
+    live = live[(live < 30000) | (live >= 60000)].astype(np.int32)
+    return st, live
+
+
+def _adversarial_query_batches(rng, live):
+    absent = np.setdiff1d(
+        np.arange(0, 130000, 7, dtype=np.int32), live
+    )
+    return {
+        "duplicates": np.sort(np.repeat(rng.choice(live, 40), 8)).astype(np.int32),
+        "all_miss": np.sort(rng.choice(absent, 300)).astype(np.int32),
+        "boundary": np.array(
+            [0, 0, 1, int(MAX_VALID) - 1, int(MAX_VALID), int(MAX_VALID)], np.int32
+        ),
+        "empty_buckets": np.arange(29000, 61000, 50, dtype=np.int32),
+        "mixed": np.sort(
+            np.concatenate([rng.choice(live, 200), rng.choice(absent, 200)])
+        ).astype(np.int32),
+    }
+
+
+def test_point_query_kernel_adversarial(adversarial, rng):
+    st, live = adversarial
+    for name, q in _adversarial_query_batches(rng, live).items():
+        qj = jnp.asarray(q)
+        want = ref.flix_point_query_ref(st.keys, st.vals, st.node_max, st.mkba, qj)
+        got = flix_point_query_pallas(
+            st.keys, st.vals, st.node_max, st.mkba, qj, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got), err_msg=name)
+        # oracle itself agrees with the core form
+        np.testing.assert_array_equal(
+            np.asarray(want), np.asarray(core.point_query(st, qj)), err_msg=name
+        )
+
+
+def test_successor_kernel_adversarial(adversarial, rng):
+    st, live = adversarial
+    for name, q in _adversarial_query_batches(rng, live).items():
+        qj = jnp.asarray(q)
+        wk, wv = ref.flix_successor_ref(st.keys, st.vals, st.node_max, st.mkba, qj)
+        gk, gv = flix_successor_pallas(
+            st.keys, st.vals, st.node_max, st.mkba, qj, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(wk), np.asarray(gk), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(wv), np.asarray(gv), err_msg=name)
+        ck, cv = core.successor_query(st, qj)
+        np.testing.assert_array_equal(np.asarray(wk), np.asarray(ck), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(wv), np.asarray(cv), err_msg=name)
+
+
+def test_insert_kernel_adversarial(adversarial, rng):
+    st, live = adversarial
+    absent = np.setdiff1d(np.arange(0, 130000, 11, dtype=np.int32), live)
+    batches = {
+        # upserts of stored keys mixed with fresh keys, incl. boundary keys
+        "upsert_mix": np.concatenate(
+            [rng.choice(live, 150, replace=False), absent[:150], [0, int(MAX_VALID)]]
+        ),
+        # aimed at the emptied bucket range
+        "empty_buckets": np.arange(31000, 59000, 120, dtype=np.int32),
+    }
+    for name, b in batches.items():
+        b = np.unique(b).astype(np.int32)
+        v = np.arange(len(b), dtype=np.int32) + 7_000_000
+        sk, sv = core.sort_batch(jnp.asarray(b), jnp.asarray(v))
+        want, _ = core.insert(st, sk, sv)
+        got, _ = flix_insert_pallas(st, sk, sv, interpret=True)
+        # vals at EMPTY slots are unspecified for the jnp merge (garbage from
+        # the re-sort) — compare live positions exactly, like test_kernels
+        for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(want, f)), np.asarray(getattr(got, f)), err_msg=name
+            )
+        mask = np.asarray(want.keys) != int(EMPTY)
+        np.testing.assert_array_equal(
+            np.asarray(want.vals)[mask], np.asarray(got.vals)[mask], err_msg=name
+        )
+        assert bool(want.needs_restructure) == bool(got.needs_restructure)
+
+
+def test_delete_kernel_adversarial(adversarial, rng):
+    st, live = adversarial
+    absent = np.setdiff1d(np.arange(0, 130000, 13, dtype=np.int32), live)
+    batches = {
+        "all_miss": np.sort(absent[:400]),
+        "duplicates": np.sort(np.repeat(rng.choice(live, 60, replace=False), 5)),
+        "boundary": np.array([0, int(MAX_VALID)], np.int32),
+        "skewed_range": np.arange(60000, 90000, dtype=np.int32),
+    }
+    for name, b in batches.items():
+        bj = jnp.asarray(b.astype(np.int32))
+        want, _ = core.delete(st, bj)
+        got = flix_delete_pallas(st, bj, interpret=True)
+        # vals at freed slots are unspecified (jnp keeps garbage, the kernel
+        # zeroes) — compare live positions exactly
+        for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(want, f)), np.asarray(getattr(got, f)), err_msg=name
+            )
+        mask = np.asarray(want.keys) != int(EMPTY)
+        np.testing.assert_array_equal(
+            np.asarray(want.vals)[mask], np.asarray(got.vals)[mask], err_msg=name
+        )
+        check_invariants(got)
+
+
+# ---------------------------------------------------------------------------
+# apply_ops: mixed == sequential per-type, byte-identical
+# ---------------------------------------------------------------------------
+
+
+def _sequential(state, tags, keys, vals):
+    """Reference semantics: apply present op classes in engine order."""
+    s = state
+    ins = tags == core.OP_INSERT
+    if ins.any():
+        sk, sv = core.sort_batch(jnp.asarray(keys[ins]), jnp.asarray(vals[ins]))
+        s, _ = core.insert(s, sk, sv)
+    dels = tags == core.OP_DELETE
+    if dels.any():
+        s, _ = core.delete(s, jnp.asarray(np.sort(keys[dels])))
+    points = np.sort(keys[tags == core.OP_POINT])
+    pv = core.point_query(s, jnp.asarray(points)) if points.size else None
+    succs = np.sort(keys[tags == core.OP_SUCCESSOR])
+    sk_sv = core.successor_query(s, jnp.asarray(succs)) if succs.size else None
+    return s, (points, pv), (succs, sk_sv)
+
+
+def _compare_mixed_vs_sequential(st, tags, keys, vals, *, pad_to=None):
+    ops, perm = core.make_ops(tags, keys, vals, pad_to=pad_to)
+    s_mixed, res, _ = core.apply_ops(st, ops)
+    s_seq, (points, pv), (succs, ssv) = _sequential(st, tags, keys, vals)
+    _assert_states_identical(s_mixed, s_seq)
+
+    # results: gather mixed results back to submission order and compare
+    # against the sorted per-type query answers
+    val_in = np.asarray(core.unsort(res["value"], perm))[: len(keys)]
+    key_in = np.asarray(core.unsort(res["succ_key"], perm))[: len(keys)]
+    if pv is not None:
+        mine = np.sort(val_in[tags == core.OP_POINT])
+        np.testing.assert_array_equal(mine, np.sort(np.asarray(pv)))
+    if ssv is not None:
+        order = np.argsort(keys[tags == core.OP_SUCCESSOR], kind="stable")
+        np.testing.assert_array_equal(
+            key_in[tags == core.OP_SUCCESSOR][order], np.asarray(ssv[0])
+        )
+        np.testing.assert_array_equal(
+            val_in[tags == core.OP_SUCCESSOR][order], np.asarray(ssv[1])
+        )
+    # non-read ops report no results
+    upd = (tags == core.OP_INSERT) | (tags == core.OP_DELETE)
+    assert (val_in[upd] == int(NOT_FOUND)).all()
+    assert (key_in[upd] == int(EMPTY)).all()
+
+
+def test_apply_ops_matches_sequential_full_mix(adversarial, rng):
+    st, live = adversarial
+    absent = np.setdiff1d(np.arange(0, 130000, 3, dtype=np.int32), live)
+    ins = rng.choice(absent, 300, replace=False).astype(np.int32)
+    iv = rng.integers(0, 1 << 30, 300).astype(np.int32)
+    dels = rng.choice(live, 250, replace=False).astype(np.int32)
+    reads = rng.integers(0, 130000, 500).astype(np.int32)
+    tags = np.concatenate([
+        np.full(300, core.OP_INSERT), np.full(250, core.OP_DELETE),
+        np.full(250, core.OP_POINT), np.full(250, core.OP_SUCCESSOR),
+    ]).astype(np.int32)
+    keys = np.concatenate([ins, dels, reads]).astype(np.int32)
+    vals = np.concatenate([iv, np.zeros(750, np.int32)])
+    _compare_mixed_vs_sequential(st, tags, keys, vals, pad_to=2048)
+
+
+@pytest.mark.parametrize(
+    "present",
+    [
+        (core.OP_INSERT,),
+        (core.OP_DELETE,),
+        (core.OP_POINT,),
+        (core.OP_SUCCESSOR,),
+        (core.OP_INSERT, core.OP_POINT),
+        (core.OP_DELETE, core.OP_SUCCESSOR),
+        (core.OP_POINT, core.OP_SUCCESSOR),
+    ],
+)
+def test_apply_ops_partial_mixes(adversarial, rng, present):
+    """Absent op classes are skipped — state must match exactly, including
+    the lax.cond fast paths (no insert / no delete)."""
+    st, live = adversarial
+    absent_keys = np.setdiff1d(np.arange(0, 130000, 5, dtype=np.int32), live)
+    chunks = {"tags": [], "keys": [], "vals": []}
+    pools = {
+        core.OP_INSERT: rng.choice(absent_keys, 120, replace=False),
+        core.OP_DELETE: rng.choice(live, 120, replace=False),
+        core.OP_POINT: rng.integers(0, 130000, 120),
+        core.OP_SUCCESSOR: rng.integers(0, 130000, 120),
+    }
+    for t in present:
+        k = pools[t].astype(np.int32)
+        chunks["tags"].append(np.full(len(k), t, np.int32))
+        chunks["keys"].append(k)
+        chunks["vals"].append(
+            np.arange(len(k), dtype=np.int32) if t == core.OP_INSERT
+            else np.zeros(len(k), np.int32)
+        )
+    tags = np.concatenate(chunks["tags"])
+    keys = np.concatenate(chunks["keys"])
+    vals = np.concatenate(chunks["vals"])
+    _compare_mixed_vs_sequential(st, tags, keys, vals, pad_to=512)
+
+
+def test_apply_ops_safe_overflow_recovery(rng):
+    """A flooding mixed batch triggers restructure-and-retry, after which the
+    state answers every op of the batch correctly."""
+    keys = np.arange(0, 640, 10, dtype=np.int32)
+    st = core.build(keys, keys, node_size=4, nodes_per_bucket=2)
+    flood = np.arange(1, 200, 2, dtype=np.int32)
+    points = np.arange(0, 640, 10, dtype=np.int32)
+    tags = np.concatenate([
+        np.full(len(flood), core.OP_INSERT), np.full(len(points), core.OP_POINT)
+    ]).astype(np.int32)
+    ops, perm = core.make_ops(
+        tags, np.concatenate([flood, points]),
+        np.concatenate([flood, np.zeros(len(points), np.int32)]),
+    )
+    st2, res, stats = core.apply_ops_safe(st, ops)
+    assert not bool(st2.needs_restructure)
+    check_invariants(st2)
+    res_in = np.asarray(core.unsort(res["value"], perm))
+    np.testing.assert_array_equal(res_in[len(flood):], points)
+    got = np.asarray(core.point_query(st2, jnp.asarray(np.sort(flood))))
+    np.testing.assert_array_equal(got, np.sort(flood))

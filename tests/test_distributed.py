@@ -7,6 +7,8 @@ import pytest
 
 from tests.conftest import run_with_devices
 
+pytestmark = pytest.mark.slow  # subprocess multi-device runs
+
 
 def test_sharded_flix_end_to_end():
     out = run_with_devices(
@@ -14,7 +16,8 @@ def test_sharded_flix_end_to_end():
         import numpy as np, jax, jax.numpy as jnp
         from repro.core import distributed as dist
 
-        mesh = jax.make_mesh((8,), ("shards",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_auto
+        mesh = make_mesh_auto((8,), ("shards",))
         rng = np.random.default_rng(11)
         universe = rng.permutation(200000).astype(np.int32)
         keys, extra = universe[:8000], universe[8000:12000]
@@ -61,7 +64,8 @@ def test_a2a_routing():
         import numpy as np, jax, jax.numpy as jnp
         from repro.core import distributed as dist
 
-        mesh = jax.make_mesh((8,), ("shards",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_auto
+        mesh = make_mesh_auto((8,), ("shards",))
         rng = np.random.default_rng(13)
         keys = np.sort(rng.permutation(100000)[:8000]).astype(np.int32)
         idx = dist.shard_build(jnp.asarray(keys), jnp.asarray(keys), mesh, node_size=16, nodes_per_bucket=8)
@@ -102,7 +106,8 @@ def test_sharded_train_step_runs_and_matches_single_device():
         _, m1 = jax.jit(step)(state, batch)
         loss_single = float(m1["loss"])
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_auto
+        mesh = make_mesh_auto((4, 2), ("data", "model"))
         pspecs = sh.param_specs(cfg, state.params, tp=2)
         sspecs = TrainState(params=pspecs, opt=AdamWState(step=P(), m=pspecs, v=pspecs))
         ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
@@ -130,7 +135,8 @@ def test_tiny_dryrun_cell_compiles():
         # shrink the shape table so the tiny mesh compiles fast
         mc.SHAPES["train_4k"] = dict(kind="train", seq_len=256, global_batch=8)
         mc.SHAPES["decode_32k"] = dict(kind="decode", seq_len=512, global_batch=8)
-        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_auto
+        mesh = make_mesh_auto((4, 2), ("data", "model"))
         import repro.models.model as mm
         from repro.models.model import get_config
         real = get_config("musicgen-medium").reduced(dtype="bfloat16")
@@ -181,7 +187,8 @@ def test_moe_a2a_matches_dense_oracle():
         from repro.models.moe import moe_ffn_dense_oracle
         from repro.models.moe_a2a import moe_ffn_a2a
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_auto
+        mesh = make_mesh_auto((4, 2), ("data", "model"))
         cfg = get_config("deepseek-moe-16b").reduced(dtype="float32", moe_capacity_factor=8.0)
         cfg = dataclasses.replace(cfg, num_experts=4, top_k=2)
         D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff

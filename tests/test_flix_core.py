@@ -5,37 +5,8 @@ import numpy as np
 import pytest
 
 from repro import core
+from repro.core.invariants import check_invariants
 from repro.core.state import EMPTY, MAX_VALID, NOT_FOUND
-
-
-def check_invariants(st: core.FliXState):
-    keys = np.asarray(st.keys)
-    counts = np.asarray(st.node_count)
-    nmax = np.asarray(st.node_max)
-    nn = np.asarray(st.num_nodes)
-    mkba = np.asarray(st.mkba)
-    nb, npb, ns = keys.shape
-    E = int(EMPTY)
-    for b in range(nb):
-        prev_max = None
-        for j in range(npb):
-            row = keys[b, j]
-            c = counts[b, j]
-            if j >= nn[b]:
-                assert c == 0 and (row == E).all(), f"inactive slot {b},{j} dirty"
-                continue
-            assert c > 0, f"active empty node {b},{j}"
-            valid = row[:c]
-            assert (np.diff(valid) > 0).all(), f"I1 violated at {b},{j}"
-            assert (row[c:] == E).all(), f"I1 padding violated at {b},{j}"
-            assert nmax[b, j] == valid[-1], f"I4 violated at {b},{j}"
-            if prev_max is not None:
-                assert valid[0] > prev_max, f"I2 violated at {b},{j}"
-            prev_max = valid[-1]
-            lf = mkba[b - 1] if b else np.iinfo(np.int32).min
-            assert valid[0] > lf and valid[-1] <= mkba[b], f"I3 violated at {b}"
-    assert (np.diff(mkba.astype(np.int64)) >= 0).all(), "I5 violated"
-    assert mkba[-1] == int(MAX_VALID)
 
 
 @pytest.fixture

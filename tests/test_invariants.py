@@ -1,0 +1,107 @@
+"""Structural invariants I1–I5 under randomized operation sequences.
+
+``state.py`` documents the five invariants and this file checks them: every
+mutating operation must map an invariant-satisfying state to an
+invariant-satisfying state (overflow-flagged states excepted — their
+contents are declared untrustworthy until restructuring).  The reusable
+checker lives in ``repro.core.invariants`` so kernels and drivers can
+assert it too.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.invariants import check_invariants
+
+
+def _rand_state(rng, n=2000, ns=8, npb=8, space=100000):
+    keys = rng.choice(space, size=n, replace=False).astype(np.int32)
+    vals = np.arange(n, dtype=np.int32)
+    st = core.build(keys, vals, node_size=ns, nodes_per_bucket=npb)
+    return st, dict(zip(keys.tolist(), vals.tolist()))
+
+
+def test_empty_and_built_states_satisfy_invariants(rng):
+    check_invariants(core.empty_state(4, 4, 8))
+    st, model = _rand_state(rng)
+    check_invariants(st)
+    assert int(st.live_keys()) == len(model)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_insert_delete_sequences(seed):
+    rng = np.random.default_rng(seed)
+    st, model = _rand_state(rng, n=1500)
+    space = np.arange(100000, dtype=np.int32)
+    for step in range(6):
+        if step % 2 == 0:
+            pool = np.setdiff1d(space, np.array(sorted(model), np.int32))
+            ins = rng.choice(pool, size=400, replace=False).astype(np.int32)
+            iv = rng.integers(0, 1 << 30, size=400).astype(np.int32)
+            sk, sv = core.sort_batch(jnp.asarray(ins), jnp.asarray(iv))
+            st, _ = core.insert_safe(st, sk, sv)
+            model.update(zip(ins.tolist(), iv.tolist()))
+        else:
+            live = np.array(sorted(model), np.int32)
+            dels = rng.choice(live, size=min(500, len(live)), replace=False)
+            st, _ = core.delete(st, jnp.asarray(np.sort(dels)))
+            for k in dels.tolist():
+                model.pop(k)
+        check_invariants(st)
+        assert int(st.live_keys()) == len(model)
+
+
+def test_restructure_preserves_invariants(rng):
+    st, model = _rand_state(rng)
+    live = np.array(sorted(model), np.int32)
+    st, _ = core.delete(st, jnp.asarray(live[::2]))
+    for k in live[::2].tolist():
+        del model[k]
+    for fn in (core.merge_underfull, core.restructure_auto):
+        st2 = fn(st)
+        check_invariants(st2)
+        assert int(st2.live_keys()) == len(model)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_mixed_apply_ops_sequences(seed):
+    """apply_ops_safe preserves I1–I5 across randomized mixed steps."""
+    rng = np.random.default_rng(seed)
+    st, model = _rand_state(rng, n=1200)
+    space = np.arange(100000, dtype=np.int32)
+    for _ in range(4):
+        live = np.array(sorted(model), np.int32)
+        pool = np.setdiff1d(space, live)
+        ins = rng.choice(pool, size=200, replace=False).astype(np.int32)
+        iv = rng.integers(0, 1 << 30, size=200).astype(np.int32)
+        dels = rng.choice(live, size=150, replace=False).astype(np.int32)
+        reads = rng.integers(0, 100000, size=300).astype(np.int32)
+        tags = np.concatenate([
+            np.full(200, core.OP_INSERT), np.full(150, core.OP_DELETE),
+            np.full(150, core.OP_POINT), np.full(150, core.OP_SUCCESSOR),
+        ]).astype(np.int32)
+        keys = np.concatenate([ins, dels, reads]).astype(np.int32)
+        vals = np.concatenate([iv, np.zeros(450, np.int32)])
+        ops, _ = core.make_ops(tags, keys, vals, pad_to=1024)
+        st, _, stats = core.apply_ops_safe(st, ops)
+        model.update(zip(ins.tolist(), iv.tolist()))
+        for k in dels.tolist():
+            model.pop(k)
+        check_invariants(st)
+        assert int(st.live_keys()) == len(model)
+        assert int(stats["inserted"]) == 200
+        assert int(stats["deleted"]) == 150
+
+
+def test_overflowed_state_recovers_via_restructure(rng):
+    """Overflow marks the state; restructuring restores the invariants."""
+    keys = np.arange(0, 640, 10, dtype=np.int32)
+    st = core.build(keys, keys, node_size=4, nodes_per_bucket=2)
+    flood = np.arange(1, 200, 2, dtype=np.int32)
+    sk, sv = core.sort_batch(jnp.asarray(flood), jnp.asarray(flood))
+    st1, _ = core.insert(st, sk, sv)
+    assert bool(st1.needs_restructure)
+    st2, _ = core.insert_safe(st, sk, sv)
+    check_invariants(st2)

@@ -46,6 +46,27 @@ def test_flix_query_kernel_after_updates(rng):
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
+@pytest.mark.parametrize("ns,npb", [(8, 4), (16, 8), (14, 8)])
+@pytest.mark.parametrize("block_q,block_b", [(128, 8), (256, 4)])
+def test_flix_successor_kernel_sweep(rng, ns, npb, block_q, block_b):
+    from repro.kernels.flix_successor import flix_successor_pallas
+
+    keys = rng.choice(200000, size=4000, replace=False).astype(np.int32)
+    st = core.build(keys, np.arange(4000, dtype=np.int32), node_size=ns, nodes_per_bucket=npb)
+    # empty some buckets so the next-bucket fallback crosses block boundaries
+    st, _ = core.delete(st, jnp.asarray(np.arange(50000, 90000, dtype=np.int32)))
+    q = np.sort(
+        np.concatenate([keys[:800], rng.integers(0, 210000, 1200).astype(np.int32)])
+    ).astype(np.int32)
+    want_k, want_v = core.successor_query(st, jnp.asarray(q))
+    got_k, got_v = flix_successor_pallas(
+        st.keys, st.vals, st.node_max, st.mkba, jnp.asarray(q),
+        block_q=block_q, block_b=block_b, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(want_k), np.asarray(got_k))
+    np.testing.assert_array_equal(np.asarray(want_v), np.asarray(got_v))
+
+
 @pytest.mark.parametrize("ns,npb,block_b", [(8, 4, 4), (16, 8, 2), (32, 8, 8)])
 def test_flix_delete_kernel_sweep(rng, ns, npb, block_b):
     keys = rng.choice(50000, size=2000, replace=False).astype(np.int32)

@@ -11,6 +11,7 @@ from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import core
 from repro.core.state import NOT_FOUND
@@ -75,6 +76,7 @@ def test_kv_page_index_serving_plane(rng):
     assert np.asarray(idx.lookup([7], [1]))[0] == 11
 
 
+@pytest.mark.slow
 def test_train_driver_resume_cli(tmp_path):
     """The production driver trains, checkpoints, and resumes (CLI-level)."""
     env = {"PYTHONPATH": f"{REPO}/src", "PATH": "/usr/bin:/bin"}
