@@ -20,6 +20,10 @@ SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
 BUILD_SIZE = {"small": 1 << 14, "medium": 1 << 17, "large": 1 << 20}[SCALE]
 KEY_SPACE = BUILD_SIZE * 8
 
+# Every emit() row also lands here so ``benchmarks.run`` can serialize the
+# whole run as one machine-readable artifact (BENCH_PR2.json, DESIGN.md §7).
+RESULTS: list[tuple[str, float, str]] = []
+
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time of fn(*args) in microseconds (blocks on results)."""
@@ -34,6 +38,7 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 
 def emit(name: str, us: float, derived: str = "") -> None:
+    RESULTS.append((name, float(us), derived))
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 

@@ -1,17 +1,28 @@
-"""Mixed-operation batch engine: one sorted batch vs per-type passes.
+"""Mixed-operation batch engine: fused kernel vs reference vs per-type.
 
 The paper's execution model is one sorted batch of mixed operations per
 step.  This suite sweeps the update ratio (0% = read-only … 100% = pure
 updates) on a fixed-size batch and times
 
-  * ``apply_ops``  — the unified engine: one global sort, one bucket
-    routing, per-type views derived by prefix counts (core/ops.py),
+  * ``apply_ops(impl="reference")`` — the unified jnp engine: one global
+    sort, one bucket routing, but still four device passes over the state
+    (insert merge, delete, point, successor),
+  * ``apply_ops(impl="fused")`` — the compute-to-bucket Pallas kernel
+    (``kernels/flix_apply.py``): one VMEM-resident pass per bucket executes
+    the whole update-then-read sequence.  Compiled on TPU; in *interpret
+    mode* on this CPU container, where the recorded "speedup" is the honest
+    interpret-vs-jnp ratio (< 1) — the number to watch on real hardware.
+    Measured at the read-heavy (0%) and update-heavy (100%) sweep ends so
+    the interpret-mode cost stays bounded.
   * ``sequential`` — the pre-engine serving path: sort + route the inserts,
     sort + route the deletes, sort the reads, four separate passes.
 
-Both sides produce identical states and results (tests/test_differential.py),
-so the delta is pure routing/sort overhead — the quantity Table 1 of the
-paper isolates as the batch-preprocessing cost.
+All three produce identical states and results (tests/test_differential.py),
+so the deltas are pure execution-structure overhead — routing/sort cost for
+``sequential`` vs ``apply_ops``, HBM sweep count for reference vs fused.
+``benchmarks.run`` lifts the ``mixed_batch_apply_fused_upd*`` /
+``mixed_batch_apply_ops_upd*`` pairs into the ``apply_ops_fused_speedup``
+field of BENCH_PR2.json (DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -21,6 +32,8 @@ import numpy as np
 
 from benchmarks.common import BUILD_SIZE, KEY_SPACE, emit, keyset, time_call
 from repro import core
+
+FUSED_SWEEP_POINTS = (0, 100)  # read-heavy and update-heavy ends
 
 
 def run() -> None:
@@ -56,7 +69,7 @@ def run() -> None:
 
         def mixed():
             ops, _ = core.make_ops(jt, jk, jv)
-            return core.apply_ops(st, ops)
+            return core.apply_ops(st, ops, impl="reference")
 
         jins_k, jins_v = jnp.asarray(ins), jnp.asarray(bvals[:n_ins])
         jdel = jnp.asarray(dels)
@@ -88,3 +101,16 @@ def run() -> None:
             t_seq,
             f"batch={batch};speedup={t_seq / t_mixed:.2f}x",
         )
+
+        if upd_pct in FUSED_SWEEP_POINTS:
+
+            def fused():
+                ops, _ = core.make_ops(jt, jk, jv)
+                return core.apply_ops(st, ops, impl="fused")
+
+            t_fused = time_call(fused, iters=1)
+            emit(
+                f"mixed_batch_apply_fused_upd{upd_pct}",
+                t_fused,
+                f"batch={batch};speedup_vs_reference={t_mixed / t_fused:.2f}x",
+            )

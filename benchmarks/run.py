@@ -3,16 +3,24 @@
 
   python -m benchmarks.run             # everything
   python -m benchmarks.run fig9 fig13  # substring filter
+
+Besides the CSV rows on stdout, every run writes ``BENCH_PR2.json`` — the
+repo's machine-readable perf-trajectory artifact (schema in DESIGN.md §7):
+per-suite ``name → us_per_call`` maps plus the fused-vs-reference
+``apply_ops`` speedups extracted from the ``mixed_batch`` suite.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 import traceback
 
 from benchmarks import (
     build_query_grid,
+    common,
     delete_rounds,
     dist_shift,
     heatmap,
@@ -39,22 +47,80 @@ SUITES = {
     "table4_restructure": restructure_recovery,
 }
 
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR2.json")
+
+
+def _fused_speedups(rows: dict[str, float]) -> dict[str, float]:
+    """``apply_ops`` fused-vs-reference speedup per measured sweep point."""
+    out = {}
+    for name, us in rows.items():
+        prefix = "mixed_batch_apply_fused_upd"
+        if name.startswith(prefix) and us > 0:
+            pct = name[len(prefix):]
+            ref = rows.get(f"mixed_batch_apply_ops_upd{pct}")
+            if ref is not None:
+                out[f"upd{pct}"] = ref / us
+    return out
+
+
+def write_bench_json(
+    suites: dict[str, dict[str, dict]],
+    failed: list[str] = (),
+    path: str = BENCH_JSON,
+):
+    """Serialize the run (schema: DESIGN.md §7, ``flix-bench-v1``)."""
+    mixed = {
+        name: row["us_per_call"]
+        for name, row in suites.get("mixed_batch_engine", {}).items()
+    }
+    payload = {
+        "schema": "flix-bench-v1",
+        "scale": common.SCALE,
+        "build_size": common.BUILD_SIZE,
+        "suites": suites,
+        # non-empty means partial data: these suites threw mid-run, so their
+        # row maps are truncated — don't trend against such an artifact
+        "failed": list(failed),
+        "apply_ops_fused_speedup": _fused_speedups(mixed),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+    return payload
+
 
 def main() -> None:
     filters = sys.argv[1:]
     print("name,us_per_call,derived")
     failed = []
+    suites: dict[str, dict[str, dict]] = {}
     for name, mod in SUITES.items():
         if filters and not any(f in name for f in filters):
             continue
         t0 = time.time()
+        mark = len(common.RESULTS)
         print(f"# suite {name}", flush=True)
         try:
             mod.run()
         except Exception:  # noqa: BLE001 — keep other suites running
             failed.append(name)
             traceback.print_exc()
+        suites[name] = {
+            row_name: {"us_per_call": us, "derived": derived}
+            for row_name, us, derived in common.RESULTS[mark:]
+        }
         print(f"# suite {name} done in {time.time()-t0:.1f}s", flush=True)
+    # a filtered run only writes the artifact when asked for explicitly
+    # (REPRO_BENCH_JSON) — otherwise `benchmarks.run fig13` would clobber a
+    # committed full-run BENCH_PR2.json with a partial one
+    if not filters or "REPRO_BENCH_JSON" in os.environ:
+        write_bench_json(suites, failed)
+    else:
+        print(
+            "# filtered run: set REPRO_BENCH_JSON=<path> to write the JSON "
+            "artifact",
+            flush=True,
+        )
     if failed:
         print(f"# FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -14,11 +14,17 @@ from repro.core.batch import (
     bucket_of,
     bucket_slices,
     dedup_last_wins,
+    gather_kv_sublists,
     gather_sublists,
     sort_batch,
 )
 from repro.core.build import build, build_from_sorted, plan_geometry
-from repro.core.query import point_query, range_query, successor_query
+from repro.core.query import (
+    point_query,
+    range_query,
+    successor_query,
+    with_successor_cache,
+)
 from repro.core.insert import insert, insert_safe, insert_with_slices
 from repro.core.delete import delete, merge_underfull
 from repro.core.ops import (

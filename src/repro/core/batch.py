@@ -83,3 +83,25 @@ def gather_sublists(
     mask = jnp.arange(max_len, dtype=jnp.int32)[None, :] < counts[:, None]
     tile = jnp.where(mask, tile, fill_value)
     return tile, counts, true_counts
+
+
+def gather_kv_sublists(
+    sorted_keys: jax.Array,
+    sorted_vals: jax.Array,
+    starts: jax.Array,
+    ends: jax.Array,
+    max_len: int,
+):
+    """:func:`gather_sublists` for a (key, val) batch: the value tile follows
+    its key's slot (0 at EMPTY slots).  Returns (keys, vals, counts,
+    true_counts)."""
+    tile_k, counts, true_counts = gather_sublists(
+        sorted_keys, starts, ends, max_len
+    )
+    padded_v = jnp.concatenate(
+        [sorted_vals, jnp.zeros((max_len,), sorted_vals.dtype)]
+    )
+    idx = starts[:, None] + jnp.arange(max_len, dtype=jnp.int32)[None, :]
+    idx = jnp.minimum(idx, sorted_keys.shape[0])
+    tile_v = jnp.where(tile_k != EMPTY, padded_v[idx], 0)
+    return tile_k, tile_v, counts, true_counts

@@ -29,7 +29,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.batch import bucket_slices, gather_sublists
+from repro.core.batch import bucket_slices, gather_kv_sublists
 from repro.core.state import EMPTY, KEY_DTYPE, VAL_DTYPE, FliXState, flatten_bucket_sorted
 
 
@@ -41,20 +41,19 @@ def _merge_one_bucket(
     Returns new (keys [npb, ns], vals, overflow flag).  All shapes static.
     """
     ns, npb = node_size, nodes_per_bucket
-    allk = jnp.concatenate([ck, ik])
+    # upsert-dedup *before* the sort: both sides are sorted with EMPTY tails
+    # and unique valid keys, so a stripe key that reappears in the incoming
+    # sublist is found by one binary search.  Masking those to EMPTY up front
+    # collapses the old two-pass form (lexsort by (key, source) followed by a
+    # full argsort of the masked keys) into a single stable sort.
+    pos = jnp.searchsorted(ik, ck, side="left")
+    pos_c = jnp.minimum(pos, ik.shape[0] - 1)
+    dup = (ik[pos_c] == ck) & (ck != EMPTY)    # incoming value wins
+    allk = jnp.concatenate([jnp.where(dup, EMPTY, ck), ik])
     allv = jnp.concatenate([cv, iv])
-    src = jnp.concatenate(
-        [jnp.zeros(ck.shape[0], jnp.int32), jnp.ones(ik.shape[0], jnp.int32)]
-    )
-    order = jnp.lexsort((src, allk))          # by key, then existing<incoming
-    k_s, v_s = allk[order], allv[order]
-    # keep the last element of each equal-key run → incoming value wins
-    keep = jnp.concatenate([k_s[1:] != k_s[:-1], jnp.array([True])])
-    keep &= k_s != EMPTY
-    masked = jnp.where(keep, k_s, EMPTY)
-    order2 = jnp.argsort(masked, stable=True)
-    mk = masked[order2]                        # merged keys, EMPTY tail
-    mv = v_s[order2]
+    order = jnp.argsort(allk, stable=True)     # the single sort pass
+    mk = allk[order]                           # merged keys, EMPTY tail
+    mv = allv[order]
     L = mk.shape[0]
     valid = mk != EMPTY
     m_total = jnp.sum(valid).astype(jnp.int32)
@@ -115,12 +114,9 @@ def insert_with_slices(
     keys_in = sorted_keys.astype(KEY_DTYPE)
     vals_in = sorted_vals.astype(VAL_DTYPE)
 
-    ik, counts, true_counts = gather_sublists(keys_in, starts, ends, cap)
-    # vals tile follows the same indices
-    padded_v = jnp.concatenate([vals_in, jnp.zeros((cap,), VAL_DTYPE)])
-    idx = starts[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
-    idx = jnp.minimum(idx, keys_in.shape[0])
-    iv = jnp.where(ik != EMPTY, padded_v[idx], 0)
+    ik, iv, counts, true_counts = gather_kv_sublists(
+        keys_in, vals_in, starts, ends, cap
+    )
 
     ck, cv = flatten_bucket_sorted(state)
 

@@ -24,12 +24,15 @@ Within a batch the semantics are update-then-read:
   2. DELETE ops remove physically (present-key hits only),
   3. POINT and SUCCESSOR ops observe the post-update state.
 
-``apply_ops`` is byte-identical to sequential per-type application
+``apply_ops`` has two executors behind one contract (``impl=``): the jnp
+*reference* engine — four device passes whose insert path literally shares
+``insert_with_slices`` with ``core.insert``, delete path shares
+``core.delete``, read paths share ``core.query`` — and the *fused*
+compute-to-bucket Pallas kernel (``kernels/flix_apply``, DESIGN.md §9) that
+executes the whole update-then-read sequence in one VMEM-resident pass per
+bucket.  Both are byte-identical to sequential per-type application
 (``insert`` → ``delete`` → ``point_query`` → ``successor_query`` on the
-sorted per-type sub-batches): the insert path literally shares
-``insert_with_slices`` with ``core.insert``, the delete path shares
-``core.delete``, and the read paths share ``core.query``.  The differential
-test in ``tests/test_differential.py`` pins this down.
+sorted per-type sub-batches); ``tests/test_differential.py`` pins this down.
 
 Precondition: at most one *update* op (INSERT or DELETE) per key per batch
 (reads may repeat keys freely) — the same uniqueness contract ``insert``
@@ -114,47 +117,59 @@ def _compact_by_mask(keys: jax.Array, mask: jax.Array, vals: jax.Array | None = 
     return out_k, out_v
 
 
-@jax.jit
-def apply_ops(state: FliXState, ops: OpBatch):
-    """Execute one mixed sorted batch.  Returns ``(state', results, stats)``.
+def derive_type_views(state: FliXState, tag: jax.Array, key: jax.Array, val: jax.Array):
+    """The engine's single routing plus the per-type views derived from it.
 
-    ``results`` is aligned with the sorted batch:
-      * ``value``    — POINT: stored value or NOT_FOUND; SUCCESSOR: successor
-                       value or NOT_FOUND; INSERT/DELETE/NOP: NOT_FOUND.
-      * ``succ_key`` — SUCCESSOR: smallest stored key ≥ op key (post-update)
-                       or EMPTY; other tags: EMPTY.
-
-    On bucket overflow the returned state carries ``needs_restructure`` and
-    the overflowing buckets are untrustworthy — same contract as ``insert``;
-    hosts use :func:`apply_ops_safe`.
+    Shared by both executors (``_apply_ops_reference`` and
+    ``kernels.flix_apply``) so the routing contract cannot diverge between
+    them.  Returns ``(is_ins, is_del, ins_keys, ins_vals, del_keys,
+    ins_starts, ins_ends)``: the mixed-batch slice boundaries are mapped to
+    insert-slice boundaries by prefix counts — no second sort, no second
+    fence routing.
     """
-    from repro.core.delete import delete
-    from repro.core.insert import insert_with_slices
-    from repro.core.query import point_query, successor_query
-
-    tag, key, val = ops.tag, ops.key, ops.val
-    n = key.shape[0]
-
-    # --- the single routing: every bucket's slice of the *mixed* batch ----
     starts, ends = bucket_slices(state, key)
-
-    # --- derive per-type views from that routing (no second sort) ---------
     is_ins = tag == OP_INSERT
     is_del = tag == OP_DELETE
     ins_keys, ins_vals = _compact_by_mask(key, is_ins, val)
     del_keys = _compact_by_mask(key, is_del)
-    # prefix counts map mixed-slice boundaries to insert-slice boundaries
     c_ins = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(is_ins).astype(jnp.int32)]
     )
-    ins_starts, ins_ends = c_ins[starts], c_ins[ends]
+    return is_ins, is_del, ins_keys, ins_vals, del_keys, c_ins[starts], c_ins[ends]
+
+
+@jax.jit
+def _apply_ops_reference(state: FliXState, ops: OpBatch):
+    """Reference engine: four jnp phases (the oracle for the fused kernel)."""
+    from repro.core.delete import delete
+    from repro.core.insert import insert_with_slices
+    from repro.core.query import point_query, successor_query
+
+    # drop any successor cache up front: the update phases construct cache-
+    # free states, and lax.cond branches must agree on the pytree structure
+    if state.succ_smin is not None:
+        state = dataclasses.replace(state, succ_smin=None, succ_sidx=None)
+
+    tag, key, val = ops.tag, ops.key, ops.val
+    n = key.shape[0]
+
+    # --- the single routing + derived per-type views (no second sort) -----
+    (
+        is_ins,
+        is_del,
+        ins_keys,
+        ins_vals,
+        del_keys,
+        ins_starts,
+        ins_ends,
+    ) = derive_type_views(state, tag, key, val)
 
     # --- update phase: merge inserts, then physical deletes ---------------
     # an absent op class skips its phase entirely (lax.cond executes one
     # branch), so read-heavy batches don't pay the merge machinery; the
     # differential contract is correspondingly "apply the present types".
     s1, ins_stats = jax.lax.cond(
-        c_ins[-1] > 0,
+        jnp.any(is_ins),
         lambda: insert_with_slices(state, ins_keys, ins_vals, ins_starts, ins_ends),
         lambda: (
             state,
@@ -200,20 +215,84 @@ def apply_ops(state: FliXState, ops: OpBatch):
     return s2, results, stats
 
 
-def apply_ops_safe(state: FliXState, ops: OpBatch):
+def apply_ops(
+    state: FliXState,
+    ops: OpBatch,
+    *,
+    impl: str = "auto",
+    donate: bool = False,
+    block_q: int | None = None,
+    block_b: int | None = None,
+):
+    """Execute one mixed sorted batch.  Returns ``(state', results, stats)``.
+
+    ``results`` is aligned with the sorted batch:
+      * ``value``    — POINT: stored value or NOT_FOUND; SUCCESSOR: successor
+                       value or NOT_FOUND; INSERT/DELETE/NOP: NOT_FOUND.
+      * ``succ_key`` — SUCCESSOR: smallest stored key ≥ op key (post-update)
+                       or EMPTY; other tags: EMPTY.
+
+    ``impl`` selects the executor:
+      * ``"reference"`` — the four jnp phases above (insert merge, delete,
+        point, successor: ≥ 4 full state sweeps).  The differential oracle.
+      * ``"fused"``     — the compute-to-bucket Pallas kernel
+        (``kernels.flix_apply``): one VMEM-resident pass per bucket does the
+        whole update-then-read sequence.  Runs compiled on TPU, in interpret
+        mode elsewhere.
+      * ``"auto"``      — ``"fused"`` on TPU, ``"reference"`` otherwise
+        (interpret-mode Pallas is a correctness tool, not a fast path).
+
+    ``donate=True`` (fused only) donates the input state's buffers to the
+    step so step N+1 reuses step N's allocation instead of copying — the
+    caller must not touch ``state`` afterwards, so it is unsuitable when a
+    restructure-and-retry may replay the batch (``apply_ops_safe`` never
+    donates).  Ignored on CPU, where XLA does not implement donation.
+
+    On bucket overflow the returned state carries ``needs_restructure`` and
+    the overflowing buckets are untrustworthy — same contract as ``insert``;
+    hosts use :func:`apply_ops_safe`.
+    """
+    if impl == "auto":
+        impl = "fused" if jax.default_backend() == "tpu" else "reference"
+    if impl == "reference":
+        return _apply_ops_reference(state, ops)
+    if impl != "fused":
+        raise ValueError(f"unknown apply_ops impl: {impl!r}")
+
+    from repro.kernels.flix_apply import (
+        DEFAULT_BLOCK_B,
+        flix_apply_pallas,
+        flix_apply_pallas_donated,
+    )
+    from repro.kernels.flix_query import DEFAULT_BLOCK_Q
+
+    backend = jax.default_backend()
+    fn = flix_apply_pallas_donated if donate and backend != "cpu" else flix_apply_pallas
+    return fn(
+        state,
+        ops.tag,
+        ops.key,
+        ops.val,
+        block_q=block_q or DEFAULT_BLOCK_Q,
+        block_b=block_b or DEFAULT_BLOCK_B,
+        interpret=backend != "tpu",
+    )
+
+
+def apply_ops_safe(state: FliXState, ops: OpBatch, *, impl: str = "auto"):
     """Host-level driver: apply, restructure-and-retry on overflow.
 
     Mirrors ``insert_safe`` — restructuring is host-driven because the new
     geometry changes static shapes.  The retry replays the *whole* batch on
     the regrown pre-batch state, which is safe because ``apply_ops`` never
-    mutates its input.
+    mutates its input (which is also why this driver never donates).
     """
     from repro.core.restructure import restructure_grow
 
-    new_state, results, stats = apply_ops(state, ops)
+    new_state, results, stats = apply_ops(state, ops, impl=impl)
     if bool(new_state.needs_restructure) and not bool(state.needs_restructure):
         n_ins = int(jnp.sum(ops.tag == OP_INSERT))
         grown = restructure_grow(state, extra_keys=max(n_ins, 1))
-        new_state, results, stats = apply_ops(grown, ops)
+        new_state, results, stats = apply_ops(grown, ops, impl=impl)
         assert not bool(new_state.needs_restructure), "post-restructure overflow"
     return new_state, results, stats

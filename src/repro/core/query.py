@@ -14,6 +14,7 @@ Two execution forms with identical semantics:
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -66,13 +67,49 @@ def _suffix_min_with_index(g: jax.Array):
     return rv[::-1], ri[::-1]
 
 
+def _successor_fence_rows(state: FliXState):
+    """Padded suffix-min rows over per-bucket minimum present keys.
+
+    ``smin_pad[b+1]`` is the smallest key stored in any bucket after ``b``
+    (EMPTY if none) and ``sidx_pad[b+1]`` the bucket attaining it — the
+    successor fallback for queries past their bucket's largest present key.
+    """
+    bucket_min = jnp.where(
+        state.num_nodes > 0, state.keys[:, 0, 0], EMPTY
+    )  # [nb]
+    smin, sidx = _suffix_min_with_index(bucket_min)
+    smin_pad = jnp.concatenate([smin, jnp.array([EMPTY], KEY_DTYPE)])
+    sidx_pad = jnp.concatenate([sidx, jnp.array([0], jnp.int32)])
+    return smin_pad, sidx_pad
+
+
+_successor_fence_rows_jit = jax.jit(_successor_fence_rows)
+
+
+def with_successor_cache(state: FliXState) -> FliXState:
+    """Return ``state`` carrying the successor suffix-scan cache.
+
+    Read-only query streams call this once and reuse the returned state, so
+    every subsequent :func:`successor_query` skips the O(nb) ``bucket_min``
+    rebuild + suffix scan.  Mutating operations construct their result state
+    without the cache fields, which is the invalidation rule — no flags to
+    maintain.  Idempotent.
+    """
+    if state.succ_smin is not None:
+        return state
+    smin_pad, sidx_pad = _successor_fence_rows_jit(state)
+    return dataclasses.replace(state, succ_smin=smin_pad, succ_sidx=sidx_pad)
+
+
 @jax.jit
 def successor_query(state: FliXState, sorted_queries: jax.Array):
     """Smallest stored key ≥ q (and its value); (EMPTY, NOT_FOUND) if none.
 
     In-bucket path: compare-count as in point queries.  Out-of-bucket path
     (bucket's largest *present* key < q): suffix-min over per-bucket minimum
-    present keys gives the next non-empty bucket in O(1) per query.
+    present keys gives the next non-empty bucket in O(1) per query.  A state
+    carrying the :func:`with_successor_cache` rows skips that O(nb) scan
+    (the branch is structural, so each form jits separately).
     """
     q = sorted_queries.astype(KEY_DTYPE)
     nb, npb = state.num_buckets, state.nodes_per_bucket
@@ -91,12 +128,10 @@ def successor_query(state: FliXState, sorted_queries: jax.Array):
     in_val = state.vals[b, nidx_c, pos_c]
 
     # out-of-bucket candidate: first non-empty bucket after b
-    bucket_min = jnp.where(
-        state.num_nodes > 0, state.keys[:, 0, 0], EMPTY
-    )  # [nb]
-    smin, sidx = _suffix_min_with_index(bucket_min)
-    smin_pad = jnp.concatenate([smin, jnp.array([EMPTY], KEY_DTYPE)])
-    sidx_pad = jnp.concatenate([sidx, jnp.array([0], jnp.int32)])
+    if state.succ_smin is not None:
+        smin_pad, sidx_pad = state.succ_smin, state.succ_sidx
+    else:
+        smin_pad, sidx_pad = _successor_fence_rows(state)
     out_key = smin_pad[b + 1]
     out_bucket = sidx_pad[b + 1]
     out_val = state.vals[out_bucket, 0, 0]

@@ -47,6 +47,15 @@ class FliXState:
     mkba: jax.Array        # [nb] KEY_DTYPE, max allowable key per bucket
     needs_restructure: jax.Array  # [] bool, bucket overflow pressure flag
 
+    # Optional successor-fallback cache (``core.query.with_successor_cache``):
+    # the padded suffix-min rows over per-bucket minimum present keys,
+    # ``succ_smin``/``succ_sidx`` of shape [nb+1].  Every mutating operation
+    # (build, insert, delete, restructure, apply) constructs its result state
+    # without these fields, so the cache is invalidated by construction; only
+    # read-only query streams carry it forward.
+    succ_smin: jax.Array | None = None
+    succ_sidx: jax.Array | None = None
+
     # ---- static geometry -------------------------------------------------
     @property
     def num_buckets(self) -> int:
@@ -76,7 +85,8 @@ class FliXState:
         total = 0
         for f in dataclasses.fields(self):
             arr = getattr(self, f.name)
-            total += arr.size * arr.dtype.itemsize
+            if arr is not None:
+                total += arr.size * arr.dtype.itemsize
         return total
 
     def bucket_lower_fence(self) -> jax.Array:

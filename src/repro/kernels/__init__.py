@@ -4,6 +4,8 @@ flix_query      — flipped point-query kernel (compute-to-bucket streaming)
 flix_successor  — flipped successor kernel (in-bucket votes + suffix-min fallback)
 flix_insert     — TL-Bulk insertion kernel (upsert merge, balanced splits)
 flix_delete     — TL-Bulk deletion kernel (mark, compact, reclaim)
+flix_apply      — fused mixed-batch apply: merge + delete + post-update reads
+                  in one VMEM-resident pass per bucket (DESIGN.md §9)
 grouped_matmul  — ragged grouped GEMM over expert slices (flipped MoE)
 moe_dispatch    — sort-based dispatch helpers (the sorted-batch step)
 ops             — jit'd wrappers with backend dispatch

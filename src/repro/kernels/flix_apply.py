@@ -1,0 +1,549 @@
+"""Fused compute-to-bucket apply kernel: one VMEM-resident pass per bucket
+for the whole mixed batch (the paper's "a bucket does all of its work in one
+visit", §4.1, applied across the full operation mix).
+
+``core.ops.apply_ops`` in reference form executes a mixed batch as four
+separate device passes — insert merge, delete, point reads, successor reads —
+so every bucket stripe crosses HBM four-plus times per step.  This kernel
+collapses them: while a bucket stripe is VMEM-resident it
+
+  1. upsert-merges its INSERT slice with original-node-region re-chunking
+     (identical formulas to ``flix_insert`` / ``core.insert``),
+  2. physically DELETEs its DELETE slice with in-node and chain compaction
+     (identical formulas to ``flix_delete`` / ``core.delete``),
+  3. answers the batch's POINT and SUCCESSOR ops that fall in the bucket
+     against the *post-update* stripe (compare-count votes + one-hot MXU
+     gathers, as in ``flix_query`` / ``flix_successor``),
+
+writing the new stripe, the per-bucket metadata, and the per-op results in
+one pass.
+
+Grid layout — the established window/bucket-block scheme from
+``flix_query`` with one twist: **window 0 sweeps every bucket block** (its
+scalar-prefetched bounds are widened to [0, nb_blocks)), which is where the
+single full update pass happens; windows ≥ 1 only re-visit the blocks their
+own op range touches and *recompute* the update for those stripes.  The
+recompute is idempotent — the merge/delete depend only on per-bucket tiles
+gathered from the whole batch, not on the window — so revisited stripe
+blocks are rewritten with byte-identical data and every flush of an output
+block happens after a full in-window rewrite.  Total state traffic is one
+full sweep plus boundary revisits, versus ≥ 4 full sweeps for the reference
+engine.
+
+The successor out-of-bucket fallback cannot be resolved block-locally, so
+the wrapper feeds the same fence-row trick as ``flix_successor``: it derives
+the *post-update* per-bucket minimum (min of surviving stripe keys and the
+bucket's insert slice — exact because one batch never inserts and deletes
+the same key) and suffix-scans it into ``next_key``/``next_val`` rows that
+stream through the fence BlockSpec.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+from repro.kernels.flix_query import DEFAULT_BLOCK_Q, _exact_gather_i32
+from repro.core.batch import bucket_slices, gather_kv_sublists, gather_sublists
+from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND, FliXState
+
+DEFAULT_BLOCK_B = 2     # bucket stripes per block (merge masks are O(BB·S²))
+_EMPTY = int(jnp.iinfo(jnp.int32).max)
+_MISS = -1
+_OP_POINT = 2           # mirror core.ops tags as Python literals (kernels
+_OP_SUCCESSOR = 3       # must not capture traced constants)
+
+
+def _apply_kernel(
+    lo_ref,      # scalar prefetch: [n_windows] first bucket block of window
+    hi_ref,      # scalar prefetch: [n_windows] last  bucket block of window
+    t_ref,       # [1, QB] op tags for window j
+    q_ref,       # [1, QB] sorted op keys for window j
+    keys_ref,    # [BB, npb*ns] bucket-block key stripes (chain order)
+    vals_ref,    # [BB, npb*ns]
+    nmax_ref,    # [BB, npb] per-node max keys (EMPTY when inactive)
+    ik_ref,      # [BB, cap] sorted per-bucket INSERT keys (EMPTY-padded)
+    iv_ref,      # [BB, cap]
+    dk_ref,      # [BB, cap] sorted per-bucket DELETE keys (present only)
+    mkba_ref,    # [1, BB] bucket fences for the block
+    lf_ref,      # [1, BB] lower fences
+    nxk_ref,     # [1, BB] post-update "first key after bucket b" rows
+    nxv_ref,     # [1, BB]
+    okeys_ref,   # [BB, npb*ns] post-update stripes
+    ovals_ref,   # [BB, npb*ns]
+    ocnt_ref,    # [BB, npb]
+    omax_ref,    # [BB, npb]
+    onn_ref,     # [BB, 1]
+    oflow_ref,   # [BB, 1] bucket overflow flag
+    odel_ref,    # [BB, 1] keys physically deleted in this bucket
+    resv_ref,    # [1, QB] POINT/SUCCESSOR values / NOT_FOUND
+    resk_ref,    # [1, QB] SUCCESSOR keys / EMPTY
+    *,
+    block_b: int,
+    npb: int,
+    ns: int,
+    cap: int,
+):
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+    S = npb * ns
+    bb = block_b
+
+    @pl.when(i == 0)
+    def _init():
+        resv_ref[...] = jnp.full_like(resv_ref, _MISS)
+        resk_ref[...] = jnp.full_like(resk_ref, _EMPTY)
+
+    active = (i >= lo_ref[j]) & (i <= hi_ref[j])
+
+    @pl.when(active)
+    def _process():
+        # ---- phase 1: upsert merge of the INSERT slice (per stripe) ------
+        A = keys_ref[...]                          # [BB, S] stripe keys
+        Av = vals_ref[...]
+        B = ik_ref[...]                            # [BB, cap] incoming
+        Bv = iv_ref[...]
+        nmax = nmax_ref[...]                       # [BB, npb]
+
+        validA = A != _EMPTY
+        validB = B != _EMPTY
+        dupA = jnp.any(A[:, :, None] == B[:, None, :], axis=2) & validA
+        keepA = validA & ~dupA                     # incoming value wins
+
+        # merged ranks by compare-count (both sides sorted & unique)
+        lessA_A = jnp.sum(
+            (A[:, None, :] < A[:, :, None]) & keepA[:, None, :], axis=2
+        )
+        lessB_A = jnp.sum(
+            (B[:, None, :] < A[:, :, None]) & validB[:, None, :], axis=2
+        )
+        rankA = lessA_A + lessB_A                  # [BB, S]
+        lessA_B = jnp.sum(
+            (A[:, None, :] < B[:, :, None]) & keepA[:, None, :], axis=2
+        )
+        lessB_B = jnp.sum(
+            (B[:, None, :] < B[:, :, None]) & validB[:, None, :], axis=2
+        )
+        rankB = lessA_B + lessB_B                  # [BB, cap]
+
+        # original node regions (fixed boundaries; last region open-ended)
+        onn0 = jnp.sum((nmax != _EMPTY).astype(jnp.int32), axis=1)   # [BB]
+        onn_c = jnp.maximum(onn0 - 1, 0)
+
+        def region_of(z):
+            r = jnp.sum(
+                (nmax[:, None, :] < z[:, :, None]).astype(jnp.int32), axis=2
+            )
+            return jnp.minimum(r, onn_c[:, None])
+
+        regA = region_of(A)
+        regB = region_of(B)
+
+        iota_r = jax.lax.broadcasted_iota(jnp.int32, (bb, npb), 1)
+        mA = jnp.sum(
+            (regA[:, :, None] == iota_r[:, None, :]) & keepA[:, :, None],
+            axis=1,
+        )
+        mB = jnp.sum(
+            (regB[:, :, None] == iota_r[:, None, :]) & validB[:, :, None],
+            axis=1,
+        )
+        m_j = (mA + mB).astype(jnp.int32)          # [BB, npb]
+        s_j = (m_j + ns - 1) // ns                 # pieces per region
+        f_j = jnp.cumsum(m_j, axis=1) - m_j        # first rank of region
+        base_j = jnp.cumsum(s_j, axis=1) - s_j     # first output slot
+        total_new = jnp.sum(s_j, axis=1)           # [BB]
+
+        def dest_of(rank, reg, keep):
+            # balanced split within each region (same formulas as core/insert)
+            oh = reg[:, :, None] == iota_r[:, None, :]
+            m_r = jnp.maximum(
+                jnp.sum(jnp.where(oh, m_j[:, None, :], 0), axis=2), 1
+            )
+            s_r = jnp.maximum(
+                jnp.sum(jnp.where(oh, s_j[:, None, :], 0), axis=2), 1
+            )
+            f_r = jnp.sum(jnp.where(oh, f_j[:, None, :], 0), axis=2)
+            b_r = jnp.sum(jnp.where(oh, base_j[:, None, :], 0), axis=2)
+            rr = rank - f_r
+            piece = (rr * s_r) // m_r
+            start = (piece * m_r + s_r - 1) // s_r
+            pos = rr - start
+            slot = b_r + piece
+            return jnp.where(keep & (slot < npb), slot * ns + pos, S)
+
+        destA = dest_of(rankA, regA, keepA)        # [BB, S]
+        destB = dest_of(rankB, regB, validB)       # [BB, cap]
+
+        lane = jax.lax.broadcasted_iota(jnp.int32, (bb, 1, S), 2)
+        ohA = destA[:, :, None] == lane            # [BB, S, S]
+        ohB = destB[:, :, None] == lane            # [BB, cap, S]
+        mk = jnp.sum(jnp.where(ohA, A[:, :, None], 0), axis=1) + jnp.sum(
+            jnp.where(ohB, B[:, :, None], 0), axis=1
+        )
+        mv = jnp.sum(jnp.where(ohA, Av[:, :, None], 0), axis=1) + jnp.sum(
+            jnp.where(ohB, Bv[:, :, None], 0), axis=1
+        )
+        filled = jnp.any(ohA, axis=1) | jnp.any(ohB, axis=1)
+        mk = jnp.where(filled, mk, _EMPTY)         # [BB, S] merged stripe
+        mv = jnp.where(filled, mv, 0)
+
+        # ---- phase 2: physical delete on the merged stripe ---------------
+        D = dk_ref[...]                            # [BB, cap]
+        hit = jnp.any(mk[:, :, None] == D[:, None, :], axis=2)
+        hit &= mk != _EMPTY
+        del_cnt = jnp.sum(hit.astype(jnp.int32), axis=1)          # [BB]
+
+        rows = mk.reshape(bb, npb, ns)
+        vrows = mv.reshape(bb, npb, ns)
+        hitr = hit.reshape(bb, npb, ns)
+        keep = (~hitr) & (rows != _EMPTY)
+        dest = jnp.cumsum(keep.astype(jnp.int32), axis=2) - 1
+        lane_n = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, ns, ns), 3)
+        ohc = (dest[..., None] == lane_n) & keep[..., None]
+        nk = jnp.sum(jnp.where(ohc, rows[..., None], 0), axis=2)
+        nfill = jnp.any(ohc, axis=2)
+        nk = jnp.where(nfill, nk, _EMPTY)
+        nv = jnp.where(
+            nk == _EMPTY, 0, jnp.sum(jnp.where(ohc, vrows[..., None], 0), axis=2)
+        )
+        cnt = jnp.sum(keep.astype(jnp.int32), axis=2)             # [BB, npb]
+
+        # chain compaction: surviving nodes shift into the lowest slots
+        nonempty = cnt > 0
+        slot_dest = jnp.cumsum(nonempty.astype(jnp.int32), axis=1) - 1
+        slot_lane = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, npb), 2)
+        ohs = (slot_dest[:, :, None] == slot_lane) & nonempty[:, :, None]
+        fk = jnp.sum(jnp.where(ohs[..., None], nk[:, :, None, :], 0), axis=1)
+        fv = jnp.sum(jnp.where(ohs[..., None], nv[:, :, None, :], 0), axis=1)
+        row_filled = jnp.any(ohs, axis=1)                         # [BB, npb]
+        fk = jnp.where(row_filled[..., None], fk, _EMPTY)
+        fv = jnp.where(row_filled[..., None], fv, 0)
+
+        # metadata
+        ocnt = jnp.sum((fk != _EMPTY).astype(jnp.int32), axis=2)
+        last = jnp.maximum(ocnt - 1, 0)
+        lane3 = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, ns), 2)
+        omax = jnp.sum(jnp.where(lane3 == last[..., None], fk, 0), axis=2)
+        omax = jnp.where(ocnt > 0, omax, _EMPTY)
+        onn_new = jnp.sum((ocnt > 0).astype(jnp.int32), axis=1)   # [BB]
+
+        okeys_ref[...] = fk.reshape(bb, S)
+        ovals_ref[...] = fv.reshape(bb, S)
+        ocnt_ref[...] = ocnt
+        omax_ref[...] = omax
+        onn_ref[...] = onn_new[:, None]
+        oflow_ref[...] = (total_new > npb).astype(jnp.int32)[:, None]
+        odel_ref[...] = del_cnt[:, None]
+
+        # ---- phase 3: reads against the post-update stripe ---------------
+        t = t_ref[0, :]                            # [QB] op tags
+        q = q_ref[0, :]                            # [QB] op keys
+        qcol = q[:, None]
+
+        mkba = mkba_ref[0, :][None, :]             # [1, BB]
+        b_local = jnp.sum(mkba < qcol, axis=1)     # [QB]
+        lf = lf_ref[0, :][None, :]
+        b_sel = jnp.minimum(b_local, bb - 1)
+        oh_b = (
+            jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], bb), 1)
+            == b_sel[:, None]
+        )
+        lf_q = jnp.sum(jnp.where(oh_b, lf, 0), axis=1)
+        is_read = (t == _OP_POINT) | (t == _OP_SUCCESSOR)
+        mine = (b_local < bb) & (qcol[:, 0] > lf_q) & is_read
+
+        # node by post-update node-max votes, position by key votes
+        nmax_rows = _exact_gather_i32(oh_b.astype(jnp.float32), omax)
+        nn_q = jnp.sum(jnp.where(oh_b, onn_new[None, :], 0), axis=1)
+        nidx = jnp.sum(nmax_rows < qcol, axis=1)
+        in_bucket = nidx < nn_q
+        nidx_c = jnp.minimum(nidx, npb - 1)
+
+        flat = b_sel * npb + nidx_c
+        oh_n = (
+            jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], bb * npb), 1)
+            == flat[:, None]
+        ).astype(jnp.float32)
+        krow = _exact_gather_i32(oh_n, fk.reshape(bb * npb, ns))
+        vrow = _exact_gather_i32(oh_n, fv.reshape(bb * npb, ns))
+
+        pos = jnp.sum(krow < qcol, axis=1)
+        pos_c = jnp.minimum(pos, ns - 1)
+        oh_p = (
+            jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], ns), 1)
+            == pos_c[:, None]
+        )
+        key_at = jnp.sum(jnp.where(oh_p, krow, 0), axis=1)
+        val_at = jnp.sum(jnp.where(oh_p, vrow, 0), axis=1)
+
+        # POINT: hit iff the key is stored post-update
+        hit_q = in_bucket & (pos < ns) & (key_at == qcol[:, 0])
+        point_res = jnp.where(hit_q, val_at, _MISS)
+
+        # SUCCESSOR: in-bucket candidate, else the post-update fence rows
+        nxk = jnp.sum(jnp.where(oh_b, nxk_ref[0, :][None, :], 0), axis=1)
+        nxv = jnp.sum(jnp.where(oh_b, nxv_ref[0, :][None, :], 0), axis=1)
+        use_in = in_bucket & (pos < ns)
+        succ_key = jnp.where(use_in, key_at, nxk)
+        succ_val = jnp.where(use_in, val_at, nxv)
+        found = succ_key != _EMPTY
+        succ_val = jnp.where(found, succ_val, _MISS)
+
+        is_p = t == _OP_POINT
+        is_s = t == _OP_SUCCESSOR
+        resv_ref[0, :] = jnp.where(
+            mine & is_p,
+            point_res,
+            jnp.where(mine & is_s, succ_val, resv_ref[0, :]),
+        )
+        resk_ref[0, :] = jnp.where(mine & is_s, succ_key, resk_ref[0, :])
+
+
+def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
+    """Trace the fused apply: returns (new_state, results, stats)."""
+    from repro.core.ops import derive_type_views
+    from repro.core.query import _suffix_min_with_index, point_query
+
+    nb, npb, ns = state.num_buckets, state.nodes_per_bucket, state.node_size
+    cap = state.bucket_capacity
+    S = npb * ns
+    n = key.shape[0]
+
+    # --- the single routing + derived per-type views (shared with the
+    # reference engine, so the routing contract cannot diverge) ------------
+    _, _, ins_keys, ins_vals, del_keys, ins_starts, ins_ends = (
+        derive_type_views(state, tag, key, val)
+    )
+    true_counts = (ins_ends - ins_starts).astype(jnp.int32)
+
+    # per-bucket INSERT tiles (keys + aligned vals)
+    ik, iv, _, _ = gather_kv_sublists(
+        ins_keys, ins_vals, ins_starts, ins_ends, cap
+    )
+
+    # per-bucket DELETE tiles, pre-filtered to PRESENT keys so each bucket's
+    # sublist fits its capacity tile (same trick as flix_delete; filtering
+    # against the pre-insert state is exact because one batch never inserts
+    # and deletes the same key).
+    present = point_query(state, del_keys) != NOT_FOUND
+    dk_sorted = jnp.sort(jnp.where(present, del_keys, EMPTY))
+    dstarts, dends = bucket_slices(state, dk_sorted)
+    dk_tile, _, _ = gather_sublists(dk_sorted, dstarts, dends, cap)
+
+    # --- post-update successor fence rows (one O(nb) suffix scan) ---------
+    # surviving stripe minimum: smallest stored key not in the delete batch
+    flat_k = state.keys.reshape(nb, S)
+    flat_v = state.vals.reshape(nb, S)
+    dpos = jnp.searchsorted(del_keys, flat_k.reshape(-1), side="left")
+    dpos = jnp.minimum(dpos, jnp.maximum(del_keys.shape[0] - 1, 0))
+    dhit = (del_keys[dpos] == flat_k.reshape(-1)) & (
+        flat_k.reshape(-1) != EMPTY
+    )
+    masked = jnp.where(dhit.reshape(nb, S), EMPTY, flat_k)
+    surv_min = jnp.min(masked, axis=1)
+    amin = jnp.argmin(masked, axis=1)
+    surv_val = flat_v[jnp.arange(nb), amin]
+    ins_min = ik[:, 0]                       # tiles are sorted, EMPTY-padded
+    ins_val = iv[:, 0]
+    bucket_min = jnp.minimum(surv_min, ins_min)
+    # tie (same key upserted) → the incoming value wins
+    min_val = jnp.where(ins_min <= surv_min, ins_val, surv_val)
+    smin, sidx = _suffix_min_with_index(bucket_min)
+    next_key = jnp.concatenate([smin[1:], jnp.array([EMPTY], KEY_DTYPE)])
+    next_idx = jnp.concatenate([sidx[1:], jnp.array([0], jnp.int32)])
+    next_val = min_val[next_idx]
+
+    # --- pad buckets to a block multiple (EMPTY stripes merge to EMPTY) ---
+    nb_p = pl.cdiv(nb, block_b) * block_b
+    keys2d, vals2d, node_max, mkba = flat_k, flat_v, state.node_max, state.mkba
+    if nb_p != nb:
+        pad = nb_p - nb
+        keys2d = jnp.pad(keys2d, ((0, pad), (0, 0)), constant_values=EMPTY)
+        vals2d = jnp.pad(vals2d, ((0, pad), (0, 0)))
+        node_max = jnp.pad(node_max, ((0, pad), (0, 0)), constant_values=EMPTY)
+        mkba = jnp.pad(mkba, (0, pad), constant_values=EMPTY - 1)
+        ik = jnp.pad(ik, ((0, pad), (0, 0)), constant_values=EMPTY)
+        iv = jnp.pad(iv, ((0, pad), (0, 0)))
+        dk_tile = jnp.pad(dk_tile, ((0, pad), (0, 0)), constant_values=EMPTY)
+        next_key = jnp.pad(next_key, (0, pad), constant_values=EMPTY)
+        next_val = jnp.pad(next_val, (0, pad))
+    lfence = jnp.concatenate(
+        [jnp.array([jnp.iinfo(jnp.int32).min], KEY_DTYPE), mkba[:-1]]
+    )
+
+    # --- pad ops to a window multiple (NOP pads never match) --------------
+    qp = pl.cdiv(max(n, 1), block_q) * block_q
+    from repro.core.ops import OP_NOP
+
+    tpad = jnp.pad(tag, (0, qp - n), constant_values=OP_NOP)
+    qpad = jnp.pad(key.astype(KEY_DTYPE), (0, qp - n), constant_values=EMPTY)
+    n_windows = qp // block_q
+    t2 = tpad.reshape(n_windows, block_q)
+    q2 = qpad.reshape(n_windows, block_q)
+
+    # per-window bucket-block bounds; window 0 widens to the full sweep —
+    # that is where every stripe's update pass is guaranteed to happen.
+    first_b = jnp.searchsorted(mkba, q2[:, 0], side="left")
+    last_b = jnp.searchsorted(mkba, q2[:, -1], side="left")
+    nb_blocks = nb_p // block_b
+    lo = jnp.minimum(first_b, nb_p - 1).astype(jnp.int32) // block_b
+    hi = jnp.minimum(last_b, nb_p - 1).astype(jnp.int32) // block_b
+    lo = lo.at[0].set(0)
+    hi = hi.at[0].set(nb_blocks - 1)
+
+    mkba_row = mkba.reshape(1, nb_p)
+    lf_row = lfence.reshape(1, nb_p)
+    nxk_row = next_key.reshape(1, nb_p)
+    nxv_row = next_val.reshape(1, nb_p)
+
+    def bucket_map(j, i, lo_ref, hi_ref):
+        return (jnp.clip(i, lo_ref[j], hi_ref[j]), 0)
+
+    def fence_map(j, i, lo_ref, hi_ref):
+        return (0, jnp.clip(i, lo_ref[j], hi_ref[j]))
+
+    def window_map(j, i, lo_ref, hi_ref):
+        return (j, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_windows, nb_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q), window_map),
+            pl.BlockSpec((1, block_q), window_map),
+            pl.BlockSpec((block_b, S), bucket_map),
+            pl.BlockSpec((block_b, S), bucket_map),
+            pl.BlockSpec((block_b, npb), bucket_map),
+            pl.BlockSpec((block_b, cap), bucket_map),
+            pl.BlockSpec((block_b, cap), bucket_map),
+            pl.BlockSpec((block_b, cap), bucket_map),
+            pl.BlockSpec((1, block_b), fence_map),
+            pl.BlockSpec((1, block_b), fence_map),
+            pl.BlockSpec((1, block_b), fence_map),
+            pl.BlockSpec((1, block_b), fence_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, S), bucket_map),
+            pl.BlockSpec((block_b, S), bucket_map),
+            pl.BlockSpec((block_b, npb), bucket_map),
+            pl.BlockSpec((block_b, npb), bucket_map),
+            pl.BlockSpec((block_b, 1), bucket_map),
+            pl.BlockSpec((block_b, 1), bucket_map),
+            pl.BlockSpec((block_b, 1), bucket_map),
+            pl.BlockSpec((1, block_q), window_map),
+            pl.BlockSpec((1, block_q), window_map),
+        ],
+    )
+
+    okeys, ovals, ocnt, omax, onn, oflow, odel, resv, resk = pl.pallas_call(
+        functools.partial(
+            _apply_kernel, block_b=block_b, npb=npb, ns=ns, cap=cap
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nb_p, S), jnp.int32),
+            jax.ShapeDtypeStruct((nb_p, S), jnp.int32),
+            jax.ShapeDtypeStruct((nb_p, npb), jnp.int32),
+            jax.ShapeDtypeStruct((nb_p, npb), jnp.int32),
+            jax.ShapeDtypeStruct((nb_p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nb_p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nb_p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_windows, block_q), jnp.int32),
+            jax.ShapeDtypeStruct((n_windows, block_q), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        ),
+    )(
+        lo,
+        hi,
+        t2,
+        q2,
+        keys2d,
+        vals2d,
+        node_max,
+        ik,
+        iv,
+        dk_tile,
+        mkba_row,
+        lf_row,
+        nxk_row,
+        nxv_row,
+    )
+
+    slice_overflow = true_counts > cap
+    any_overflow = (jnp.sum(oflow[:nb]) > 0) | jnp.any(slice_overflow)
+    new_state = FliXState(
+        keys=okeys[:nb].reshape(nb, npb, ns),
+        vals=ovals[:nb].reshape(nb, npb, ns),
+        node_count=ocnt[:nb],
+        node_max=omax[:nb],
+        num_nodes=onn[:nb, 0],
+        mkba=state.mkba,
+        needs_restructure=state.needs_restructure | any_overflow,
+    )
+    results = {
+        "value": resv.reshape(qp)[:n],
+        "succ_key": resk.reshape(qp)[:n],
+    }
+    stats = {
+        "inserted": jnp.sum(jnp.minimum(true_counts, cap)),
+        "deleted": jnp.sum(odel[:nb]),
+        "overflowed_buckets": jnp.sum(
+            (oflow[:nb, 0] > 0) | slice_overflow
+        ),
+    }
+    return new_state, results, stats
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_b", "interpret")
+)
+def flix_apply_pallas(
+    state: FliXState,
+    tag: jax.Array,
+    key: jax.Array,
+    val: jax.Array,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+):
+    """Fused mixed-batch apply.  Same contract as ``core.ops.apply_ops``."""
+    return _fused_apply(
+        state, tag, key, val,
+        block_q=block_q, block_b=block_b, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_b", "interpret"),
+    donate_argnums=(0,),
+)
+def flix_apply_pallas_donated(
+    state: FliXState,
+    tag: jax.Array,
+    key: jax.Array,
+    val: jax.Array,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+):
+    """Donating variant: the input state's buffers are handed to XLA so step
+    N+1's stripes reuse step N's allocation instead of copying.  The caller
+    must not touch ``state`` afterwards — in particular the restructure-and-
+    retry driver (``apply_ops_safe``) must use the non-donating entry, since
+    a retry replays the batch on the *pre-batch* state."""
+    return _fused_apply(
+        state, tag, key, val,
+        block_q=block_q, block_b=block_b, interpret=interpret,
+    )

@@ -31,7 +31,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
-from repro.core.batch import bucket_slices, gather_sublists
+from repro.core.batch import bucket_slices, gather_kv_sublists
 from repro.core.state import EMPTY, KEY_DTYPE, VAL_DTYPE, FliXState
 
 _EMPTY = int(jnp.iinfo(jnp.int32).max)
@@ -164,11 +164,7 @@ def flix_insert_pallas(
     vals_in = sorted_vals.astype(VAL_DTYPE)
 
     starts, ends = bucket_slices(state, keys_in)
-    ik, _, true_counts = gather_sublists(keys_in, starts, ends, cap)
-    padded_v = jnp.concatenate([vals_in, jnp.zeros((cap,), VAL_DTYPE)])
-    idx = starts[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
-    idx = jnp.minimum(idx, keys_in.shape[0])
-    iv = jnp.where(ik != EMPTY, padded_v[idx], 0)
+    ik, iv, _, true_counts = gather_kv_sublists(keys_in, vals_in, starts, ends, cap)
 
     grid = (nb,)
     row = lambda i: (i, 0)

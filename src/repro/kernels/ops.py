@@ -120,3 +120,29 @@ def flix_insert(
     return flix_insert_pallas(
         state, sorted_keys, sorted_vals, interpret=(mode == "interpret")
     )
+
+
+def flix_apply(state: FliXState, ops, *, mode: str = "auto", **blocks):
+    """Fused mixed-batch apply (DESIGN.md §9): the whole update-then-read
+    sequence in one VMEM-resident pass per bucket.
+
+    ``ops`` is a ``core.ops.OpBatch``.  Returns ``(state', results, stats)``
+    with the same contract as ``core.ops.apply_ops`` (whose ``impl=`` kwarg
+    is the usual entry point; this wrapper exists for kernel-level mode
+    control, e.g. ``mode="interpret"`` in tests).
+    """
+    mode = _resolve(mode)
+    if mode == "ref":
+        from repro.core.ops import _apply_ops_reference
+
+        return _apply_ops_reference(state, ops)
+    from repro.kernels.flix_apply import flix_apply_pallas
+
+    return flix_apply_pallas(
+        state,
+        ops.tag,
+        ops.key,
+        ops.val,
+        interpret=(mode == "interpret"),
+        **blocks,
+    )

@@ -28,6 +28,14 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--index-impl",
+        choices=("auto", "reference", "fused"),
+        default="auto",
+        help="apply_ops executor for the KV page index: the fused "
+        "compute-to-bucket kernel, the jnp reference engine, or auto "
+        "(fused on TPU, reference elsewhere)",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,7 +44,7 @@ def main() -> None:
     rng = jax.random.PRNGKey(args.seed)
     params = tf.init_params(rng, cfg)
     cache = tf.init_cache(cfg, args.batch, args.max_len, dtype=jnp.float32)
-    kv_index = KVPageIndex()
+    kv_index = KVPageIndex(impl=args.index_impl)
 
     step = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
     token = jax.random.randint(rng, (args.batch,), 0, cfg.vocab_size)

@@ -49,13 +49,25 @@ def _next_pow2(n: int) -> int:
 
 
 class KVPageIndex:
-    """Host-driven wrapper around a FliXState (functional underneath)."""
+    """Host-driven wrapper around a FliXState (functional underneath).
 
-    def __init__(self, *, node_size: int = 16, nodes_per_bucket: int = 8):
+    ``impl`` selects the ``apply_ops`` executor for every engine step
+    (``"auto"`` = the fused compute-to-bucket kernel on TPU, the jnp
+    reference engine elsewhere — see ``core.ops.apply_ops``).
+    """
+
+    def __init__(
+        self,
+        *,
+        node_size: int = 16,
+        nodes_per_bucket: int = 8,
+        impl: str = "auto",
+    ):
         # seed with one sentinel key (outside the (seq,page) space) so the
         # structure is never empty
         from repro.core import MAX_VALID
 
+        self.impl = impl
         self.state = build(
             jnp.array([MAX_VALID], jnp.int32),
             jnp.array([0], jnp.int32),
@@ -80,6 +92,15 @@ class KVPageIndex:
         Returns ``(lookup_slots, stats)``; ``lookup_slots`` is aligned with
         the ``lookups`` input order (NOT_FOUND = -1 for unmapped pages).
         """
+        # empty op lists are the same as absent ones — callers naturally pass
+        # this step's (often empty) completion list every step, and an empty
+        # free list must not push a pure-lookup batch onto the update path
+        if allocs is not None and len(np.asarray(allocs[0])) == 0:
+            allocs = None
+        if free_seqs is not None and len(np.asarray(free_seqs)) == 0:
+            free_seqs = None
+        if lookups is not None and len(np.asarray(lookups[0])) == 0:
+            lookups = None
         if allocs is not None and free_seqs is not None:
             overlap = set(np.asarray(allocs[0]).tolist()) & set(
                 np.asarray(free_seqs).tolist()
@@ -122,12 +143,26 @@ class KVPageIndex:
         key = jnp.concatenate(keys)
         val = jnp.concatenate(vals)
         ops, perm = make_ops(tag, key, val, pad_to=_next_pow2(key.shape[0]))
-        if n_alloc == 0:
-            # only inserts can overflow — lookup/free steps skip the
-            # restructure-and-retry wrapper and its host sync entirely
-            self.state, results, stats = apply_ops(self.state, ops)
+        read_only = n_alloc == 0 and free_seqs is None
+        if read_only:
+            # pure-lookup step: the state is untouched, so keep self.state
+            # instead of swapping in the engine's pass-through copy.  Always
+            # the reference engine here — the fused kernel's update sweep
+            # rewrites the whole state, pure waste for an update-free batch
+            # (DESIGN.md §9), while the reference lax.cond phases skip it.
+            _, results, stats = apply_ops(self.state, ops, impl="reference")
+        elif n_alloc == 0:
+            # only inserts can overflow — free steps skip the restructure-
+            # and-retry wrapper (and its host sync), and since no retry can
+            # replay the batch, the old state's buffers are donated to the
+            # step (fused path; a no-op on CPU)
+            self.state, results, stats = apply_ops(
+                self.state, ops, impl=self.impl, donate=True
+            )
         else:
-            self.state, results, stats = apply_ops_safe(self.state, ops)
+            self.state, results, stats = apply_ops_safe(
+                self.state, ops, impl=self.impl
+            )
         values = unsort(results["value"], perm[: key.shape[0]])
         return values[n_alloc : n_alloc + n_lookup], stats
 

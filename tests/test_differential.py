@@ -1,6 +1,6 @@
 """Differential parity: Pallas kernels vs jnp oracles, mixed vs per-type.
 
-Two families of proofs:
+Three families of proofs:
 
   1. Every Pallas kernel (flix_query, flix_insert, flix_delete,
      flix_successor) matches its jnp oracle bit-for-bit in interpret mode on
@@ -10,6 +10,11 @@ Two families of proofs:
   2. ``apply_ops`` on a mixed batch is byte-identical — state arrays and
      per-op results — to sequential per-type application of the present op
      classes (insert → delete → point → successor on sorted sub-batches).
+  3. The fused compute-to-bucket apply kernel (``kernels/flix_apply``,
+     ``apply_ops(impl="fused")``) matches the reference engine on the same
+     adversarial batches across every op-mix ratio, including overflow +
+     restructure retries (live-position vals, like the per-kernel proofs:
+     vals at EMPTY slots are unspecified for the jnp merge).
 """
 
 import jax.numpy as jnp
@@ -264,6 +269,128 @@ def test_apply_ops_partial_mixes(adversarial, rng, present):
     keys = np.concatenate(chunks["keys"])
     vals = np.concatenate(chunks["vals"])
     _compare_mixed_vs_sequential(st, tags, keys, vals, pad_to=512)
+
+
+# ---------------------------------------------------------------------------
+# fused apply kernel: apply_ops(impl="fused") == apply_ops(impl="reference")
+# ---------------------------------------------------------------------------
+
+
+def _assert_fused_matches_reference(st, tags, keys, vals, *, pad_to):
+    ops, _ = core.make_ops(tags, keys, vals, pad_to=pad_to)
+    s_ref, r_ref, stats_ref = core.apply_ops(st, ops, impl="reference")
+    s_f, r_f, stats_f = core.apply_ops(st, ops, impl="fused")
+    for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_f, f)), err_msg=f
+        )
+    mask = np.asarray(s_ref.keys) != int(EMPTY)
+    np.testing.assert_array_equal(
+        np.asarray(s_ref.vals)[mask], np.asarray(s_f.vals)[mask]
+    )
+    assert bool(s_ref.needs_restructure) == bool(s_f.needs_restructure)
+    np.testing.assert_array_equal(
+        np.asarray(r_ref["value"]), np.asarray(r_f["value"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r_ref["succ_key"]), np.asarray(r_f["succ_key"])
+    )
+    for k in stats_ref:
+        assert int(stats_ref[k]) == int(stats_f[k]), k
+    if not bool(s_f.needs_restructure):
+        check_invariants(s_f)
+
+
+@pytest.mark.parametrize(
+    "present",
+    [
+        (core.OP_INSERT,),
+        (core.OP_DELETE,),
+        (core.OP_POINT,),
+        (core.OP_SUCCESSOR,),
+        (core.OP_INSERT, core.OP_POINT),
+        (core.OP_DELETE, core.OP_SUCCESSOR),
+        (core.OP_POINT, core.OP_SUCCESSOR),
+    ],
+)
+def test_fused_apply_partial_mixes(adversarial, rng, present):
+    """Every op-mix ratio, including the single-class extremes — the fused
+    kernel has no per-phase skip conds, so absent classes must fall out of
+    the math (empty tiles merge/delete to identity)."""
+    st, live = adversarial
+    absent_keys = np.setdiff1d(np.arange(0, 130000, 5, dtype=np.int32), live)
+    pools = {
+        core.OP_INSERT: rng.choice(absent_keys, 120, replace=False),
+        core.OP_DELETE: rng.choice(live, 120, replace=False),
+        core.OP_POINT: rng.integers(0, 130000, 120),
+        core.OP_SUCCESSOR: rng.integers(0, 130000, 120),
+    }
+    tags, keys, vals = [], [], []
+    for t in present:
+        k = pools[t].astype(np.int32)
+        tags.append(np.full(len(k), t, np.int32))
+        keys.append(k)
+        vals.append(
+            np.arange(len(k), dtype=np.int32) + 3_000_000
+            if t == core.OP_INSERT
+            else np.zeros(len(k), np.int32)
+        )
+    _assert_fused_matches_reference(
+        st,
+        np.concatenate(tags),
+        np.concatenate(keys),
+        np.concatenate(vals),
+        pad_to=512,
+    )
+
+
+def test_fused_apply_full_mix_adversarial(adversarial, rng):
+    """Full mix on the adversarial state: upserts of stored keys, deletions,
+    duplicate + boundary + emptied-bucket reads, multi-window batch."""
+    st, live = adversarial
+    absent = np.setdiff1d(np.arange(0, 130000, 3, dtype=np.int32), live)
+    ins = np.concatenate(
+        [rng.choice(absent, 200, replace=False), rng.choice(live, 100, replace=False)]
+    ).astype(np.int32)  # upserts included
+    iv = rng.integers(0, 1 << 30, 300).astype(np.int32)
+    dels = np.setdiff1d(rng.choice(live, 250, replace=False), ins).astype(np.int32)
+    reads = np.concatenate([
+        np.repeat(rng.choice(live, 30), 4),
+        rng.choice(absent, 100),
+        [0, int(MAX_VALID) - 1, int(MAX_VALID)],
+        np.arange(29000, 61000, 250),
+    ]).astype(np.int32)
+    tags = np.concatenate([
+        np.full(len(ins), core.OP_INSERT),
+        np.full(len(dels), core.OP_DELETE),
+        np.where(np.arange(len(reads)) % 2 == 0, core.OP_POINT, core.OP_SUCCESSOR),
+    ]).astype(np.int32)
+    keys = np.concatenate([ins, dels, reads]).astype(np.int32)
+    vals = np.concatenate([iv, np.zeros(len(dels) + len(reads), np.int32)])
+    _assert_fused_matches_reference(st, tags, keys, vals, pad_to=2048)
+
+
+def test_fused_apply_overflow_flag_and_state(rng):
+    """An overflowing batch: the pre-retry states (untrustworthy buckets
+    included) and the restructure flag agree between the two executors."""
+    keys = np.arange(0, 640, 10, dtype=np.int32)
+    st = core.build(keys, keys, node_size=4, nodes_per_bucket=2)
+    flood = np.arange(1, 200, 2, dtype=np.int32)
+    tags = np.concatenate([
+        np.full(len(flood), core.OP_INSERT),
+        np.full(len(keys), core.OP_POINT),
+    ]).astype(np.int32)
+    bkeys = np.concatenate([flood, keys]).astype(np.int32)
+    bvals = np.concatenate([flood, np.zeros(len(keys), np.int32)])
+    ops, _ = core.make_ops(tags, bkeys, bvals, pad_to=256)
+    s_ref, _, stats_ref = core.apply_ops(st, ops, impl="reference")
+    s_f, _, stats_f = core.apply_ops(st, ops, impl="fused")
+    assert bool(s_ref.needs_restructure) and bool(s_f.needs_restructure)
+    assert int(stats_ref["overflowed_buckets"]) == int(stats_f["overflowed_buckets"])
+    for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_f, f)), err_msg=f
+        )
 
 
 def test_apply_ops_safe_overflow_recovery(rng):

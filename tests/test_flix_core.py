@@ -102,6 +102,42 @@ def test_successor(built, rng):
             assert sk[i] == int(EMPTY) and sv[i] == int(NOT_FOUND)
 
 
+def test_successor_cache_identical_and_invalidated(built, rng):
+    st, model = built
+    q = jnp.asarray(np.sort(rng.integers(0, 100001, size=400).astype(np.int32)))
+    k0, v0 = core.successor_query(st, q)
+
+    stc = core.with_successor_cache(st)
+    assert stc.succ_smin is not None
+    assert core.with_successor_cache(stc) is stc  # idempotent
+    k1, v1 = core.successor_query(stc, q)
+    np.testing.assert_array_equal(np.asarray(k0), np.asarray(k1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+
+    # every mutating op constructs its result without the cache fields —
+    # invalidation by construction
+    sk, sv = core.sort_batch(
+        jnp.asarray(np.array([7, 13, 19], np.int32)),
+        jnp.asarray(np.arange(3, dtype=np.int32)),
+    )
+    st_ins, _ = core.insert(stc, sk, sv)
+    assert st_ins.succ_smin is None
+    st_del, _ = core.delete(stc, jnp.asarray(np.array([7], np.int32)))
+    assert st_del.succ_smin is None
+    assert core.restructure_auto(stc).succ_smin is None
+
+    # a cached state flows through both apply_ops executors unchanged
+    tags = np.full(64, core.OP_SUCCESSOR, np.int32)
+    bkeys = np.sort(rng.integers(0, 100001, 64).astype(np.int32))
+    ops, perm = core.make_ops(tags, bkeys, np.zeros(64, np.int32))
+    for impl in ("reference", "fused"):
+        s2, res, _ = core.apply_ops(stc, ops, impl=impl)
+        assert s2.succ_smin is None
+        got = np.asarray(core.unsort(res["succ_key"], perm))
+        want, _ = core.successor_query(st, jnp.asarray(bkeys))
+        np.testing.assert_array_equal(got, np.asarray(want), err_msg=impl)
+
+
 def test_range_query(built):
     st, model = built
     live = sorted(model)

@@ -1,0 +1,151 @@
+"""Restructure paths that the rest of the suite never exercises.
+
+Two cold paths from ``core.restructure`` / ``core.ops``:
+
+  1. ``restructure_grow``'s pathological-skew *widening* branch: when a
+     single bucket may have to absorb the whole incoming batch
+     (``p + extra_keys > cap``), the host widens ``nodes_per_bucket`` so one
+     bucket can hold it — the §3.4 adaptive compute-to-bucket analogue.
+  2. ``apply_ops_safe``'s restructure-and-replay round trip: a mixed batch
+     that overflows mid-mix is replayed in full on the regrown pre-batch
+     state, and every op class of the batch must come back correct.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.invariants import check_invariants
+from repro.core.restructure import restructure_grow
+from repro.core.state import EMPTY, NOT_FOUND
+
+
+def _tiny_state():
+    """cap = 8 (node_size 4 × npb 2), p = 2 — easy to overflow."""
+    keys = np.arange(0, 1000, 50, dtype=np.int32)  # 20 keys, spread out
+    return core.build(keys, keys, node_size=4, nodes_per_bucket=2), keys
+
+
+def test_restructure_grow_widening_branch():
+    st, keys = _tiny_state()
+    cap = st.bucket_capacity
+    p = st.node_size // 2
+    extra = 100
+    assert p + extra > cap, "precondition: this must hit the widening branch"
+
+    grown = restructure_grow(st, extra_keys=extra)
+    # geometry: nodes_per_bucket widened so one bucket can absorb the batch
+    assert grown.nodes_per_bucket == math.ceil((p + extra) / st.node_size)
+    assert grown.nodes_per_bucket > st.nodes_per_bucket
+    assert grown.num_buckets == max(1, math.ceil((len(keys) + extra) / p))
+    check_invariants(grown)
+    # contents preserved
+    got = np.asarray(core.point_query(grown, jnp.asarray(keys)))
+    np.testing.assert_array_equal(got, keys)
+
+
+def test_widening_branch_absorbs_single_bucket_flood():
+    """All extra keys landing between two adjacent fences must fit after the
+    widening restructure — the exact skew the branch exists for."""
+    st, keys = _tiny_state()
+    flood = np.arange(101, 148, dtype=np.int32)  # 47 keys inside one gap
+    assert st.node_size // 2 + len(flood) > st.bucket_capacity
+
+    sk, sv = core.sort_batch(jnp.asarray(flood), jnp.asarray(flood * 2))
+    st1, _ = core.insert(st, sk, sv)
+    assert bool(st1.needs_restructure)  # the direct insert must overflow
+
+    st2, _ = core.insert_safe(st, sk, sv)
+    assert not bool(st2.needs_restructure)
+    assert st2.nodes_per_bucket > st.nodes_per_bucket
+    check_invariants(st2)
+    allk = np.sort(np.concatenate([keys, flood]))
+    got = np.asarray(core.point_query(st2, jnp.asarray(allk)))
+    want = np.where(np.isin(allk, flood), allk * 2, allk)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("impl", ["reference", "fused"])
+def test_apply_ops_safe_replay_full_mix(impl):
+    """A mid-mix overflow triggers restructure-and-replay; afterwards every
+    op class of the batch (insert, delete, point, successor) is correct."""
+    st, keys = _tiny_state()
+    flood = np.arange(1, 200, 2, dtype=np.int32)          # overflowing inserts
+    dels = keys[::4].astype(np.int32)                     # present deletions
+    points = keys[1::4].astype(np.int32)                  # survivors
+    succs = (keys[2::4] + 1).astype(np.int32)             # between stored keys
+
+    tags = np.concatenate([
+        np.full(len(flood), core.OP_INSERT),
+        np.full(len(dels), core.OP_DELETE),
+        np.full(len(points), core.OP_POINT),
+        np.full(len(succs), core.OP_SUCCESSOR),
+    ]).astype(np.int32)
+    bkeys = np.concatenate([flood, dels, points, succs]).astype(np.int32)
+    bvals = np.concatenate(
+        [flood * 10, np.zeros(len(dels) + len(points) + len(succs), np.int32)]
+    )
+    ops, perm = core.make_ops(tags, bkeys, bvals, pad_to=256)
+
+    st2, res, stats = core.apply_ops_safe(st, ops, impl=impl)
+    assert not bool(st2.needs_restructure)
+    check_invariants(st2)
+
+    res_v = np.asarray(core.unsort(res["value"], perm))[: len(bkeys)]
+    res_k = np.asarray(core.unsort(res["succ_key"], perm))[: len(bkeys)]
+
+    # point results observe the post-update state (deletes already applied)
+    np.testing.assert_array_equal(res_v[tags == core.OP_POINT], points)
+    # successor results: model = (stored ∪ flood) − dels, next key ≥ q
+    model = np.sort(
+        np.setdiff1d(np.union1d(keys.astype(np.int64), flood), dels)
+    )
+    for q, sk_got, sv_got in zip(
+        succs,
+        res_k[tags == core.OP_SUCCESSOR],
+        res_v[tags == core.OP_SUCCESSOR],
+    ):
+        j = np.searchsorted(model, q)
+        want_k = int(model[j])
+        assert sk_got == want_k
+        assert sv_got == (want_k * 10 if want_k in flood else want_k)
+    # post-state: floods stored, deletions gone
+    got = np.asarray(core.point_query(st2, jnp.asarray(np.sort(flood))))
+    np.testing.assert_array_equal(got, np.sort(flood) * 10)
+    gone = np.asarray(core.point_query(st2, jnp.asarray(np.sort(dels))))
+    assert (gone == int(NOT_FOUND)).all()
+    assert int(stats["inserted"]) == len(flood)
+    assert int(stats["deleted"]) == len(dels)
+
+
+def test_apply_ops_safe_replay_reference_fused_identical():
+    """The replayed (post-restructure) states of both executors match."""
+    st, keys = _tiny_state()
+    flood = np.arange(3, 150, 2, dtype=np.int32)
+    tags = np.concatenate([
+        np.full(len(flood), core.OP_INSERT),
+        np.full(len(keys), core.OP_SUCCESSOR),
+    ]).astype(np.int32)
+    bkeys = np.concatenate([flood, keys]).astype(np.int32)
+    bvals = np.concatenate([flood, np.zeros(len(keys), np.int32)])
+    ops, _ = core.make_ops(tags, bkeys, bvals, pad_to=256)
+
+    s_ref, r_ref, _ = core.apply_ops_safe(st, ops, impl="reference")
+    s_f, r_f, _ = core.apply_ops_safe(st, ops, impl="fused")
+    for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_f, f)), err_msg=f
+        )
+    mask = np.asarray(s_ref.keys) != int(EMPTY)
+    np.testing.assert_array_equal(
+        np.asarray(s_ref.vals)[mask], np.asarray(s_f.vals)[mask]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r_ref["value"]), np.asarray(r_f["value"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r_ref["succ_key"]), np.asarray(r_f["succ_key"])
+    )
