@@ -4,10 +4,13 @@
   python -m benchmarks.run             # everything
   python -m benchmarks.run fig9 fig13  # substring filter
 
-Besides the CSV rows on stdout, every run writes ``BENCH_PR2.json`` — the
-repo's machine-readable perf-trajectory artifact (schema in DESIGN.md §7):
-per-suite ``name → us_per_call`` maps plus the fused-vs-reference
-``apply_ops`` speedups extracted from the ``mixed_batch`` suite.
+Besides the CSV rows on stdout, every run writes ``BENCH_PR3.json`` — the
+repo's machine-readable perf-trajectory artifact (schema ``flix-bench-v1``,
+DESIGN.md §7): per-suite ``name → us_per_call`` maps plus the
+fused-vs-reference ``apply_ops`` speedups extracted from the
+``mixed_batch`` suite and the RANGE-op speedups from ``range_mix``.
+(``BENCH_PR2.json`` in the repo root is the committed PR-2 snapshot —
+compare, don't overwrite.)
 """
 
 from __future__ import annotations
@@ -27,6 +30,7 @@ from benchmarks import (
     insert_rounds,
     mixed_batch,
     query_qtmf,
+    range_mix,
     restructure_recovery,
     sort_cost,
     successor,
@@ -44,22 +48,25 @@ SUITES = {
     "fig12_unsorted_queries": unsorted_queries,
     "fig13_successor": successor,
     "mixed_batch_engine": mixed_batch,
+    "range_mix_engine": range_mix,
     "table4_restructure": restructure_recovery,
 }
 
-BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR2.json")
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR3.json")
 
 
-def _fused_speedups(rows: dict[str, float]) -> dict[str, float]:
-    """``apply_ops`` fused-vs-reference speedup per measured sweep point."""
+def _speedups(
+    rows: dict[str, float], fused_prefix: str, ref_prefix: str, key_prefix: str = ""
+) -> dict[str, float]:
+    """Fused-vs-reference speedup per measured sweep point: every
+    ``<fused_prefix><point>`` row is paired with ``<ref_prefix><point>``."""
     out = {}
     for name, us in rows.items():
-        prefix = "mixed_batch_apply_fused_upd"
-        if name.startswith(prefix) and us > 0:
-            pct = name[len(prefix):]
-            ref = rows.get(f"mixed_batch_apply_ops_upd{pct}")
+        if name.startswith(fused_prefix) and us > 0:
+            point = name[len(fused_prefix):]
+            ref = rows.get(f"{ref_prefix}{point}")
             if ref is not None:
-                out[f"upd{pct}"] = ref / us
+                out[f"{key_prefix}{point}"] = ref / us
     return out
 
 
@@ -73,6 +80,10 @@ def write_bench_json(
         name: row["us_per_call"]
         for name, row in suites.get("mixed_batch_engine", {}).items()
     }
+    ranges = {
+        name: row["us_per_call"]
+        for name, row in suites.get("range_mix_engine", {}).items()
+    }
     payload = {
         "schema": "flix-bench-v1",
         "scale": common.SCALE,
@@ -81,7 +92,13 @@ def write_bench_json(
         # non-empty means partial data: these suites threw mid-run, so their
         # row maps are truncated — don't trend against such an artifact
         "failed": list(failed),
-        "apply_ops_fused_speedup": _fused_speedups(mixed),
+        "apply_ops_fused_speedup": _speedups(
+            mixed, "mixed_batch_apply_fused_upd", "mixed_batch_apply_ops_upd",
+            key_prefix="upd",
+        ),
+        "range_fused_speedup": _speedups(
+            ranges, "range_mix_fused_", "range_mix_ref_"
+        ),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -9,7 +9,7 @@ zero tombstone accumulation (the paper's long-running-execution claim).
 
 import numpy as np
 
-from repro.serve.kv_index import KVPageIndex
+from repro.serve.kv_index import PAGE_BITS, KVPageIndex
 
 rng = np.random.default_rng(0)
 idx = KVPageIndex(node_size=32, nodes_per_bucket=8)
@@ -41,17 +41,24 @@ for step in range(50):
     ]
 
     # ONE mixed engine step: allocations, this step's page-table lookups,
-    # and physical frees travel in a single sorted batch (core.apply_ops) —
-    # update-then-read semantics means the lookups already see this step's
-    # allocations.
+    # physical frees, AND an in-order page enumeration (RANGE op) travel in
+    # a single sorted batch (core.apply_ops) — update-then-read semantics
+    # means the lookups and the enumeration already see this step's
+    # allocations and frees.
     if seqs or done:
-        got, _ = idx.step(
+        probe = seqs[0] if seqs else done[0]
+        got, rng_out, _ = idx.step(
             allocs=(seqs, pages, slots) if seqs else None,
             lookups=(seqs, pages) if seqs else None,
             free_seqs=done if done else None,
+            ranges=([probe << PAGE_BITS], [(probe + 1) << PAGE_BITS]),
         )
         if seqs:
             assert (np.asarray(got) == np.array(slots)).all()
+        n_expect = 0 if probe in done else active[probe]
+        assert int(rng_out["count"][0]) == n_expect, (probe, n_expect)
+        got_pages = np.asarray(rng_out["keys"])[:n_expect] & ((1 << PAGE_BITS) - 1)
+        assert got_pages.tolist() == list(range(n_expect))  # in order
     for s in done:
         del active[s]
 

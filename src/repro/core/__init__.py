@@ -20,6 +20,7 @@ from repro.core.batch import (
 )
 from repro.core.build import build, build_from_sorted, plan_geometry
 from repro.core.query import (
+    dense_range_scan,
     point_query,
     range_query,
     successor_query,
@@ -28,10 +29,12 @@ from repro.core.query import (
 from repro.core.insert import insert, insert_safe, insert_with_slices
 from repro.core.delete import delete, merge_underfull
 from repro.core.ops import (
+    DEFAULT_MAX_RESULTS,
     OP_DELETE,
     OP_INSERT,
     OP_NOP,
     OP_POINT,
+    OP_RANGE,
     OP_SUCCESSOR,
     OpBatch,
     apply_ops,
@@ -39,7 +42,7 @@ from repro.core.ops import (
     make_ops,
     unsort,
 )
-from repro.core.invariants import check_invariants
+from repro.core.invariants import check_invariants, check_range_results
 from repro.core.restructure import (
     restructure,
     restructure_auto,

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.state import EMPTY, MAX_VALID, FliXState
+from repro.core.state import EMPTY, MAX_VALID, NOT_FOUND, FliXState
 
 
 def check_invariants(st: FliXState) -> None:
@@ -43,3 +43,45 @@ def check_invariants(st: FliXState) -> None:
             assert valid[0] > lf and valid[-1] <= mkba[b], f"I3 violated at {b}"
     assert (np.diff(mkba.astype(np.int64)) >= 0).all(), "I5 violated"
     assert mkba[-1] == int(MAX_VALID), "I5 violated: mkba[-1] != MAX_VALID"
+
+
+def check_range_results(ops, results, *, max_results: int) -> None:
+    """Structural checks on a batch's dense RANGE output (DESIGN.md §10).
+
+    For every RANGE op in the sorted batch: its segment of the dense arrays
+    is strictly ascending (hence duplicate-free), every key lies inside the
+    op's ``[lo, hi)``, segments are packed consecutively from offset 0 in
+    batch order, and slots beyond the emitted total hold EMPTY / NOT_FOUND.
+    Differential tests pin the *values*; this checker is the cheap
+    post-apply sanity used by ``apply_ops_safe(validate_ranges=True)``.
+    """
+    from repro.core.ops import OP_RANGE
+
+    tag = np.asarray(ops.tag)
+    lo = np.asarray(ops.key)
+    hi = np.asarray(ops.val)
+    keys = np.asarray(results["range_key"])
+    vals = np.asarray(results["range_val"])
+    start = np.asarray(results["range_start"])
+    count = np.asarray(results["range_count"])
+    assert keys.shape == (max_results,) and vals.shape == (max_results,)
+
+    is_range = tag == OP_RANGE
+    assert (start[~is_range] == 0).all(), "non-RANGE op with a range offset"
+    assert (count[~is_range] == 0).all(), "non-RANGE op with range results"
+
+    cursor = 0
+    for i in np.nonzero(is_range)[0]:
+        c = int(count[i])
+        assert 0 <= c <= max_results, f"op {i}: count {c} out of budget"
+        assert start[i] == cursor, (
+            f"op {i}: segment start {start[i]} != packed cursor {cursor}"
+        )
+        seg = keys[cursor : cursor + c].astype(np.int64)
+        assert (np.diff(seg) > 0).all(), f"op {i}: segment not strictly ascending"
+        assert ((seg >= int(lo[i])) & (seg < int(hi[i]))).all(), (
+            f"op {i}: key outside [{lo[i]}, {hi[i]})"
+        )
+        cursor += c
+    assert (keys[cursor:] == int(EMPTY)).all(), "dirty keys beyond emitted total"
+    assert (vals[cursor:] == int(NOT_FOUND)).all(), "dirty vals beyond emitted total"

@@ -22,7 +22,15 @@ Within a batch the semantics are update-then-read:
 
   1. INSERT ops merge in first (upsert — incoming value wins),
   2. DELETE ops remove physically (present-key hits only),
-  3. POINT and SUCCESSOR ops observe the post-update state.
+  3. POINT, SUCCESSOR, and RANGE ops observe the post-update state.
+
+RANGE is the ordered-CDS capability hash tables lack (the paper's central
+functionality claim): an op reuses the key column for ``lo`` and the val
+column for ``hi`` and answers the half-open ``[lo, hi)``.  Each batch
+carries one static ``max_results`` output budget; results are packed
+densely at exclusive-scan offsets (earlier sorted ops win the budget, each
+op emits a prefix of its smallest in-range keys — deterministic, and
+truncation is flagged in ``stats``).  See DESIGN.md §10.
 
 ``apply_ops`` has two executors behind one contract (``impl=``): the jnp
 *reference* engine — four device passes whose insert path literally shares
@@ -43,6 +51,7 @@ batches to a fixed size so jit traces once per geometry.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +64,11 @@ OP_DELETE = 1
 OP_POINT = 2
 OP_SUCCESSOR = 3
 OP_NOP = 4  # padding slot; key must be EMPTY so it routes past every bucket
+OP_RANGE = 5  # key column = lo, val column = hi; answers [lo, hi)
 
 OP_DTYPE = jnp.int32
+
+DEFAULT_MAX_RESULTS = 128  # per-batch RANGE output budget (static)
 
 
 @jax.tree_util.register_dataclass
@@ -65,8 +77,9 @@ class OpBatch:
     """A key-sorted batch of tagged operations (a pytree of device arrays)."""
 
     tag: jax.Array  # [N] OP_DTYPE
-    key: jax.Array  # [N] KEY_DTYPE, ascending (EMPTY = NOP padding, at end)
-    val: jax.Array  # [N] VAL_DTYPE (meaningful for INSERT only)
+    key: jax.Array  # [N] KEY_DTYPE, ascending (EMPTY = NOP padding, at end;
+    #                 RANGE ops sort by their lo, which lives here)
+    val: jax.Array  # [N] VAL_DTYPE (INSERT: value; RANGE: exclusive hi)
 
     @property
     def size(self) -> int:
@@ -138,12 +151,14 @@ def derive_type_views(state: FliXState, tag: jax.Array, key: jax.Array, val: jax
     return is_ins, is_del, ins_keys, ins_vals, del_keys, c_ins[starts], c_ins[ends]
 
 
-@jax.jit
-def _apply_ops_reference(state: FliXState, ops: OpBatch):
-    """Reference engine: four jnp phases (the oracle for the fused kernel)."""
+@functools.partial(jax.jit, static_argnames=("max_results",))
+def _apply_ops_reference(
+    state: FliXState, ops: OpBatch, *, max_results: int = DEFAULT_MAX_RESULTS
+):
+    """Reference engine: five jnp phases (the oracle for the fused kernel)."""
     from repro.core.delete import delete
     from repro.core.insert import insert_with_slices
-    from repro.core.query import point_query, successor_query
+    from repro.core.query import dense_range_scan, point_query, successor_query
 
     # drop any successor cache up front: the update phases construct cache-
     # free states, and lax.cond branches must agree on the pytree structure
@@ -203,14 +218,35 @@ def _apply_ops_reference(state: FliXState, ops: OpBatch):
             jnp.full((n,), NOT_FOUND, VAL_DTYPE),
         ),
     )
+    # --- range phase: dense [lo, hi) scans against the updated state ------
+    is_range = tag == OP_RANGE
+    rk, rv, rstart, rcnt, rtrunc = jax.lax.cond(
+        jnp.any(is_range),
+        lambda: dense_range_scan(
+            s2, is_range, key, val.astype(KEY_DTYPE), max_results=max_results
+        ),
+        lambda: (
+            jnp.full((max_results,), EMPTY, KEY_DTYPE),
+            jnp.full((max_results,), NOT_FOUND, VAL_DTYPE),
+            jnp.zeros((n,), jnp.int32),
+            jnp.zeros((n,), jnp.int32),
+            jnp.int32(0),
+        ),
+    )
+
     results = {
         "value": jnp.where(is_point, pv, jnp.where(is_succ, sv, NOT_FOUND)),
         "succ_key": jnp.where(is_succ, sk, EMPTY),
+        "range_key": rk,
+        "range_val": rv,
+        "range_start": rstart,
+        "range_count": rcnt,
     }
     stats = {
         "inserted": ins_stats["inserted"],
         "deleted": del_stats["deleted"],
         "overflowed_buckets": ins_stats["overflowed_buckets"],
+        "range_truncated": rtrunc,
     }
     return s2, results, stats
 
@@ -223,24 +259,42 @@ def apply_ops(
     donate: bool = False,
     block_q: int | None = None,
     block_b: int | None = None,
+    max_results: int = DEFAULT_MAX_RESULTS,
+    has_updates: bool | None = None,
 ):
     """Execute one mixed sorted batch.  Returns ``(state', results, stats)``.
 
     ``results`` is aligned with the sorted batch:
       * ``value``    — POINT: stored value or NOT_FOUND; SUCCESSOR: successor
-                       value or NOT_FOUND; INSERT/DELETE/NOP: NOT_FOUND.
+                       value or NOT_FOUND; other tags: NOT_FOUND.
       * ``succ_key`` — SUCCESSOR: smallest stored key ≥ op key (post-update)
                        or EMPTY; other tags: EMPTY.
+      * ``range_key`` / ``range_val`` — the dense ``[max_results]`` RANGE
+        output: all range ops' results packed consecutively (post-update,
+        key-ordered within each op's segment); EMPTY / NOT_FOUND beyond the
+        emitted total.
+      * ``range_start`` / ``range_count`` — per-op offset and length of its
+        segment in the dense arrays (0 / 0 for non-RANGE ops).  Truncation
+        under the budget is deterministic — earlier sorted ops win, each op
+        keeps a prefix of its smallest keys — and flagged via
+        ``stats["range_truncated"]``.
 
     ``impl`` selects the executor:
-      * ``"reference"`` — the four jnp phases above (insert merge, delete,
-        point, successor: ≥ 4 full state sweeps).  The differential oracle.
+      * ``"reference"`` — the five jnp phases above (insert merge, delete,
+        point, successor, range: ≥ 4 full state sweeps).  The differential
+        oracle.
       * ``"fused"``     — the compute-to-bucket Pallas kernel
         (``kernels.flix_apply``): one VMEM-resident pass per bucket does the
         whole update-then-read sequence.  Runs compiled on TPU, in interpret
         mode elsewhere.
-      * ``"auto"``      — ``"fused"`` on TPU, ``"reference"`` otherwise
-        (interpret-mode Pallas is a correctness tool, not a fast path).
+      * ``"auto"``      — ``"fused"`` on TPU for batches that contain
+        updates, ``"reference"`` otherwise: off-TPU interpret-mode Pallas is
+        a correctness tool, not a fast path, and an update-free batch (pure
+        point/successor/range reads — e.g. a range-heavy query stream) would
+        pay the fused kernel's full state rewrite for nothing (DESIGN.md
+        §10).  ``has_updates`` lets drivers that already know the batch
+        composition host-side (``serve/kv_index.py`` does) answer that
+        check without a device sync; leave it ``None`` to inspect the tags.
 
     ``donate=True`` (fused only) donates the input state's buffers to the
     step so step N+1 reuses step N's allocation instead of copying — the
@@ -253,9 +307,16 @@ def apply_ops(
     hosts use :func:`apply_ops_safe`.
     """
     if impl == "auto":
-        impl = "fused" if jax.default_backend() == "tpu" else "reference"
+        if jax.default_backend() != "tpu":
+            impl = "reference"
+        else:
+            if has_updates is None:
+                has_updates = bool(
+                    jnp.any((ops.tag == OP_INSERT) | (ops.tag == OP_DELETE))
+                )
+            impl = "fused" if has_updates else "reference"
     if impl == "reference":
-        return _apply_ops_reference(state, ops)
+        return _apply_ops_reference(state, ops, max_results=max_results)
     if impl != "fused":
         raise ValueError(f"unknown apply_ops impl: {impl!r}")
 
@@ -275,24 +336,47 @@ def apply_ops(
         ops.val,
         block_q=block_q or DEFAULT_BLOCK_Q,
         block_b=block_b or DEFAULT_BLOCK_B,
+        max_results=max_results,
         interpret=backend != "tpu",
     )
 
 
-def apply_ops_safe(state: FliXState, ops: OpBatch, *, impl: str = "auto"):
+def apply_ops_safe(
+    state: FliXState,
+    ops: OpBatch,
+    *,
+    impl: str = "auto",
+    max_results: int = DEFAULT_MAX_RESULTS,
+    validate_ranges: bool = False,
+    has_updates: bool | None = None,
+):
     """Host-level driver: apply, restructure-and-retry on overflow.
 
     Mirrors ``insert_safe`` — restructuring is host-driven because the new
     geometry changes static shapes.  The retry replays the *whole* batch on
     the regrown pre-batch state, which is safe because ``apply_ops`` never
     mutates its input (which is also why this driver never donates).
+
+    ``validate_ranges=True`` additionally runs the structural RANGE-result
+    checker (``core.invariants.check_range_results``: segments sorted,
+    in-bounds, duplicate-free, consecutively packed) on the final results —
+    a host-side debugging/testing aid, off on the hot path.
     """
     from repro.core.restructure import restructure_grow
 
-    new_state, results, stats = apply_ops(state, ops, impl=impl)
+    new_state, results, stats = apply_ops(
+        state, ops, impl=impl, max_results=max_results, has_updates=has_updates
+    )
     if bool(new_state.needs_restructure) and not bool(state.needs_restructure):
         n_ins = int(jnp.sum(ops.tag == OP_INSERT))
         grown = restructure_grow(state, extra_keys=max(n_ins, 1))
-        new_state, results, stats = apply_ops(grown, ops, impl=impl)
+        new_state, results, stats = apply_ops(
+            grown, ops, impl=impl, max_results=max_results,
+            has_updates=has_updates,
+        )
         assert not bool(new_state.needs_restructure), "post-restructure overflow"
+    if validate_ranges:
+        from repro.core.invariants import check_range_results
+
+        check_range_results(ops, results, max_results=max_results)
     return new_state, results, stats

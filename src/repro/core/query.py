@@ -143,6 +143,115 @@ def successor_query(state: FliXState, sorted_queries: jax.Array):
     return succ_key, jnp.where(found, succ_val, NOT_FOUND)
 
 
+# ---------------------------------------------------------------------------
+# Dense half-open range machinery (the RANGE batch op, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# A RANGE op carries ``[lo, hi)`` and the batch carries one static
+# ``max_results`` output budget.  All three executors — the jnp reference
+# phase, the standalone two-pass kernel (``kernels/flix_range``), and the
+# fused apply kernel (``kernels/flix_apply``) — share the formulas below so
+# the output contract cannot diverge: per-op *full* in-range counts are
+# exclusive-scanned into densely packed output offsets (earlier sorted ops
+# win the budget, each op emits a prefix of its smallest in-range keys), and
+# every output slot resolves to one global key rank.
+
+
+def flat_rank(flat_k: jax.Array, pref: jax.Array, mkba: jax.Array, q: jax.Array):
+    """Global rank (count of stored keys < q) per query, from per-bucket
+    sorted rows ``flat_k`` [nb, cap] and live-count prefix sums ``pref``
+    [nb+1].  One searchsorted to the owning bucket + one compare-count row."""
+    nb = flat_k.shape[0]
+    b = jnp.minimum(
+        jnp.searchsorted(mkba, q.astype(KEY_DTYPE), side="left"), nb - 1
+    ).astype(jnp.int32)
+    p = jnp.sum(flat_k[b] < q[:, None], axis=1).astype(jnp.int32)
+    return pref[b] + p
+
+
+def range_offsets(full: jax.Array, is_range: jax.Array, max_results: int):
+    """Deterministic budget split: exclusive-scan the full counts (sorted
+    batch order), clamp to the budget.  Returns ``(start, emit, total_emit,
+    truncated)`` — op i's results land at ``[start[i], start[i]+emit[i])``,
+    segments tile ``[0, total_emit)`` consecutively, and ``truncated`` counts
+    the range ops whose full result set did not fit."""
+    full = jnp.where(is_range, full, 0).astype(jnp.int32)
+    # guard the int32 scan: any count > budget behaves identically to
+    # budget+1 (start/emit are budget-clamped and emit < budget+1 still
+    # flags truncation), and the clamp bounds the running sum by
+    # N·(budget+1) so whole-keyspace range floods cannot wrap the cumsum
+    full = jnp.minimum(full, max_results + 1)
+    start_full = jnp.cumsum(full) - full
+    start = jnp.minimum(start_full, max_results).astype(jnp.int32)
+    emit = jnp.minimum(full, max_results - start).astype(jnp.int32)
+    total_emit = jnp.minimum(jnp.sum(full), max_results).astype(jnp.int32)
+    truncated = jnp.sum((emit < full) & is_range).astype(jnp.int32)
+    return start, emit, total_emit, truncated
+
+
+def range_slot_ranks(
+    rank_lo: jax.Array, start: jax.Array, total_emit: jax.Array, max_results: int
+):
+    """Per-output-slot global key rank.  Slot p belongs to the last op whose
+    (clamped) start ≤ p — zero-width segments share their start with the
+    following op, so ``side="right"`` lands on the true owner.  Invalid
+    slots (≥ total_emit) get rank -1."""
+    p = jnp.arange(max_results, dtype=jnp.int32)
+    owner = jnp.clip(
+        jnp.searchsorted(start, p, side="right").astype(jnp.int32) - 1,
+        0,
+        start.shape[0] - 1,
+    )
+    g = rank_lo[owner] + (p - start[owner])
+    return jnp.where(p < total_emit, g, -1)
+
+
+def dense_range_scan(
+    state: FliXState,
+    is_range: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    max_results: int,
+):
+    """The RANGE oracle: answer every active ``[lo, hi)`` op against
+    ``state``, packing results densely at exclusive-scan offsets.
+
+    Returns ``(keys[max_results], vals[max_results], start[N], count[N],
+    truncated)``.  Output is globally key-ordered within each op's segment
+    (and across segments when the ranges are disjoint); slots beyond the
+    emitted total hold EMPTY / NOT_FOUND.
+    """
+    from repro.core.state import flatten_bucket_sorted
+
+    flat_k, flat_v = flatten_bucket_sorted(state)
+    nb = state.num_buckets
+    live = jnp.sum(flat_k != EMPTY, axis=1).astype(jnp.int32)
+    pref = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(live).astype(jnp.int32)]
+    )
+    rank_lo = flat_rank(flat_k, pref, state.mkba, lo)
+    rank_hi = flat_rank(flat_k, pref, state.mkba, hi)
+    full = jnp.maximum(rank_hi - rank_lo, 0)
+    start, emit, total_emit, truncated = range_offsets(full, is_range, max_results)
+    g = range_slot_ranks(rank_lo, start, total_emit, max_results)
+    valid = g >= 0
+    g_c = jnp.where(valid, g, 0)
+    src_b = jnp.clip(
+        jnp.searchsorted(pref, g_c, side="right").astype(jnp.int32) - 1, 0, nb - 1
+    )
+    src_p = g_c - pref[src_b]
+    rk = jnp.where(valid, flat_k[src_b, src_p], EMPTY)
+    rv = jnp.where(valid, flat_v[src_b, src_p], NOT_FOUND)
+    return (
+        rk,
+        rv,
+        jnp.where(is_range, start, 0),
+        jnp.where(is_range, emit, 0),
+        truncated,
+    )
+
+
 @partial(jax.jit, static_argnames=("max_results",))
 def range_query(
     state: FliXState, lo: jax.Array, hi: jax.Array, *, max_results: int = 128

@@ -116,6 +116,16 @@ def empty_state(num_buckets: int, nodes_per_bucket: int, node_size: int) -> FliX
     )
 
 
+def sort_bucket_rows(flat_k: jax.Array, flat_v: jax.Array):
+    """Sort each [nb, cap] bucket row ascending (vals follow their key).
+    EMPTY is int32 max, so padding lands at the end of every row."""
+    order = jnp.argsort(flat_k, axis=1, stable=True)
+    return (
+        jnp.take_along_axis(flat_k, order, axis=1),
+        jnp.take_along_axis(flat_v, order, axis=1),
+    )
+
+
 def flatten_bucket_sorted(state: FliXState) -> tuple[jax.Array, jax.Array]:
     """Per-bucket flattened (keys, vals), sorted ascending with EMPTY at end.
 
@@ -124,10 +134,4 @@ def flatten_bucket_sorted(state: FliXState) -> tuple[jax.Array, jax.Array]:
     Shape: [nb, npb*ns].
     """
     nb = state.num_buckets
-    flat_k = state.keys.reshape(nb, -1)
-    flat_v = state.vals.reshape(nb, -1)
-    order = jnp.argsort(flat_k, axis=1, stable=True)
-    return (
-        jnp.take_along_axis(flat_k, order, axis=1),
-        jnp.take_along_axis(flat_v, order, axis=1),
-    )
+    return sort_bucket_rows(state.keys.reshape(nb, -1), state.vals.reshape(nb, -1))

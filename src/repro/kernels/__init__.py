@@ -5,7 +5,10 @@ flix_successor  — flipped successor kernel (in-bucket votes + suffix-min fallb
 flix_insert     — TL-Bulk insertion kernel (upsert merge, balanced splits)
 flix_delete     — TL-Bulk deletion kernel (mark, compact, reclaim)
 flix_apply      — fused mixed-batch apply: merge + delete + post-update reads
-                  in one VMEM-resident pass per bucket (DESIGN.md §9)
+                  (point / successor / dense RANGE) in one VMEM-resident
+                  pass per bucket (DESIGN.md §9, §10)
+flix_range      — standalone two-pass RANGE kernel: compute-to-bucket count,
+                  then rank-owned scatter to exclusive-scan offsets (§10)
 grouped_matmul  — ragged grouped GEMM over expert slices (flipped MoE)
 moe_dispatch    — sort-based dispatch helpers (the sorted-batch step)
 ops             — jit'd wrappers with backend dispatch

@@ -14,6 +14,10 @@ collapses them: while a bucket stripe is VMEM-resident it
   3. answers the batch's POINT and SUCCESSOR ops that fall in the bucket
      against the *post-update* stripe (compare-count votes + one-hot MXU
      gathers, as in ``flix_query`` / ``flix_successor``),
+  4. fills the output slots of the batch's RANGE ops whose global key rank
+     lands in the bucket — the dense count/scatter contract of
+     ``kernels/flix_range`` (DESIGN.md §10), read straight from the
+     post-update stripe in the same VMEM residency,
 
 writing the new stripe, the per-bucket metadata, and the per-op results in
 one pass.
@@ -36,6 +40,17 @@ the *post-update* per-bucket minimum (min of surviving stripe keys and the
 bucket's insert slice — exact because one batch never inserts and deletes
 the same key) and suffix-scans it into ``next_key``/``next_val`` rows that
 stream through the fence BlockSpec.
+
+RANGE uses the same predict-without-running-the-update trick, extended from
+the per-bucket minimum to the whole per-bucket key multiset: the wrapper
+sorts (surviving stripe keys minus upsert duplicates) ∪ (insert slice) per
+bucket, prefix-sums the live counts into post-update rank fences
+``pref[b]``/``pref[b+1]``, resolves every op's ``[lo, hi)`` to full counts
+→ clamped segment offsets → one global rank per output slot (the shared
+``core.query`` formulas), and streams the rank fences through the fence
+BlockSpec.  The kernel then only has to map "rank within my bucket" to a
+(node, position) of the stripe it just rebuilt — values come from VMEM, not
+from a second state pass.
 """
 
 from __future__ import annotations
@@ -57,6 +72,7 @@ _EMPTY = int(jnp.iinfo(jnp.int32).max)
 _MISS = -1
 _OP_POINT = 2           # mirror core.ops tags as Python literals (kernels
 _OP_SUCCESSOR = 3       # must not capture traced constants)
+_OP_RANGE = 5
 
 
 def _apply_kernel(
@@ -74,6 +90,9 @@ def _apply_kernel(
     lf_ref,      # [1, BB] lower fences
     nxk_ref,     # [1, BB] post-update "first key after bucket b" rows
     nxv_ref,     # [1, BB]
+    g_ref,       # [1, MR] per-RANGE-slot post-update global rank (-1 unused)
+    ps_ref,      # [1, BB] post-update rank fences pref[b]
+    pe_ref,      # [1, BB] post-update rank fences pref[b+1]
     okeys_ref,   # [BB, npb*ns] post-update stripes
     ovals_ref,   # [BB, npb*ns]
     ocnt_ref,    # [BB, npb]
@@ -83,6 +102,8 @@ def _apply_kernel(
     odel_ref,    # [BB, 1] keys physically deleted in this bucket
     resv_ref,    # [1, QB] POINT/SUCCESSOR values / NOT_FOUND
     resk_ref,    # [1, QB] SUCCESSOR keys / EMPTY
+    rngk_ref,    # [1, MR] dense RANGE keys / EMPTY (shared across windows)
+    rngv_ref,    # [1, MR] dense RANGE vals / NOT_FOUND
     *,
     block_b: int,
     npb: int,
@@ -98,6 +119,15 @@ def _apply_kernel(
     def _init():
         resv_ref[...] = jnp.full_like(resv_ref, _MISS)
         resk_ref[...] = jnp.full_like(resk_ref, _EMPTY)
+
+    # the RANGE output block is shared by every window (its slots belong to
+    # buckets, not windows), so it is initialised exactly once — window 0's
+    # full sweep then fills every owned slot, later windows rewrite
+    # idempotently
+    @pl.when((j == 0) & (i == 0))
+    def _init_range():
+        rngk_ref[...] = jnp.full_like(rngk_ref, _EMPTY)
+        rngv_ref[...] = jnp.full_like(rngv_ref, _MISS)
 
     active = (i >= lo_ref[j]) & (i <= hi_ref[j])
 
@@ -304,11 +334,68 @@ def _apply_kernel(
         )
         resk_ref[0, :] = jnp.where(mine & is_s, succ_key, resk_ref[0, :])
 
+        # ---- phase 4: dense RANGE slots owned by this block's buckets ----
+        # slot p carries the post-update global rank of its key; the block
+        # claims p iff the rank falls in one of its buckets' [pref[b],
+        # pref[b+1]) spans, then maps the in-bucket rank to a (node, pos) of
+        # the stripe just rebuilt above (ocnt cumsum = node boundaries).
+        # Valid slots are a prefix, so g[0] < 0 ⇔ nothing to emit — batches
+        # with no RANGE output skip the gather compute entirely and keep the
+        # PR-2 update-only cost (the init above already wrote EMPTY).
+        @pl.when(g_ref[0, 0] >= 0)
+        def _range_gather():
+            g = g_ref[0, :]                        # [MR]
+            gcol = g[:, None]
+            ps = ps_ref[0, :][None, :]             # [1, BB]
+            pe = pe_ref[0, :][None, :]
+            bloc = jnp.sum((pe <= gcol).astype(jnp.int32), axis=1)
+            bloc_c = jnp.minimum(bloc, bb - 1)
+            oh_rb = (
+                jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], bb), 1)
+                == bloc_c[:, None]
+            )
+            ps_g = jnp.sum(jnp.where(oh_rb, ps, 0), axis=1)
+            mine_r = (g >= 0) & (bloc < bb) & (g >= ps_g)
+            r = g - ps_g                           # rank within the bucket
 
-def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
+            cnt_rows = _exact_gather_i32(oh_rb.astype(jnp.float32), ocnt)
+            cum = jnp.cumsum(cnt_rows, axis=1)     # [MR, npb]
+            node_r = jnp.sum((cum <= r[:, None]).astype(jnp.int32), axis=1)
+            node_rc = jnp.minimum(node_r, npb - 1)
+            oh_nd = (
+                jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], npb), 1)
+                == node_rc[:, None]
+            )
+            base = jnp.sum(jnp.where(oh_nd, cum - cnt_rows, 0), axis=1)
+            pos_r = jnp.clip(r - base, 0, ns - 1)
+
+            flat_r = bloc_c * npb + node_rc
+            oh_fr = (
+                jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], bb * npb), 1)
+                == flat_r[:, None]
+            ).astype(jnp.float32)
+            krow_r = _exact_gather_i32(oh_fr, fk.reshape(bb * npb, ns))
+            vrow_r = _exact_gather_i32(oh_fr, fv.reshape(bb * npb, ns))
+            oh_pr = (
+                jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], ns), 1)
+                == pos_r[:, None]
+            )
+            kk = jnp.sum(jnp.where(oh_pr, krow_r, 0), axis=1)
+            vv = jnp.sum(jnp.where(oh_pr, vrow_r, 0), axis=1)
+            rngk_ref[0, :] = jnp.where(mine_r, kk, rngk_ref[0, :])
+            rngv_ref[0, :] = jnp.where(mine_r, vv, rngv_ref[0, :])
+
+
+def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpret):
     """Trace the fused apply: returns (new_state, results, stats)."""
     from repro.core.ops import derive_type_views
-    from repro.core.query import _suffix_min_with_index, point_query
+    from repro.core.query import (
+        _suffix_min_with_index,
+        flat_rank,
+        point_query,
+        range_offsets,
+        range_slot_ranks,
+    )
 
     nb, npb, ns = state.num_buckets, state.nodes_per_bucket, state.node_size
     cap = state.bucket_capacity
@@ -359,6 +446,58 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
     next_idx = jnp.concatenate([sidx[1:], jnp.array([0], jnp.int32)])
     next_val = min_val[next_idx]
 
+    # --- post-update RANGE rank fences + per-slot ranks -------------------
+    # same predict-without-running-the-update argument as the fence rows,
+    # extended to the whole multiset: post-update bucket contents are
+    # (survivors minus upsert duplicates) ∪ (insert slice) — exact because
+    # one batch never inserts and deletes the same key.  Sorting those rows
+    # gives per-bucket rank fences and every op's [lo, hi) full count; the
+    # shared core.query formulas then fix the dense output layout.
+    is_range = tag == _OP_RANGE
+
+    def _range_plumbing():
+        mflat = masked.reshape(-1)
+        ipos = jnp.clip(
+            jnp.searchsorted(ins_keys, mflat, side="left"), 0, max(n - 1, 0)
+        )
+        upserted = (ins_keys[ipos] == mflat) & (mflat != EMPTY)
+        post_rows = jnp.concatenate(
+            [jnp.where(upserted.reshape(nb, S), EMPTY, masked), ik], axis=1
+        )
+        post_sorted = jnp.sort(post_rows, axis=1)
+        live_post = jnp.sum(post_sorted != EMPTY, axis=1).astype(jnp.int32)
+        pref_post = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32),
+             jnp.cumsum(live_post).astype(jnp.int32)]
+        )
+        rank_lo = flat_rank(post_sorted, pref_post, state.mkba, key)
+        rank_hi = flat_rank(
+            post_sorted, pref_post, state.mkba, val.astype(KEY_DTYPE)
+        )
+        full = jnp.maximum(rank_hi - rank_lo, 0)
+        rstart, remit, total_emit, rtrunc = range_offsets(
+            full, is_range, max_results
+        )
+        g = range_slot_ranks(rank_lo, rstart, total_emit, max_results)
+        return g, pref_post[:-1], pref_post[1:], rstart, remit, rtrunc
+
+    # a batch with no RANGE ops skips the per-bucket post-state sort and
+    # rank scans entirely (lax.cond executes one branch — no host sync, and
+    # update-only fused steps keep their PR-2 cost); all slots dead (-1)
+    # makes the kernel's pl.when skip the phase-4 gather compute too
+    g, ps_row_post, pe_row_post, rstart, remit, rtrunc = jax.lax.cond(
+        jnp.any(is_range),
+        _range_plumbing,
+        lambda: (
+            jnp.full((max_results,), -1, jnp.int32),
+            jnp.zeros((nb,), jnp.int32),
+            jnp.zeros((nb,), jnp.int32),
+            jnp.zeros((n,), jnp.int32),
+            jnp.zeros((n,), jnp.int32),
+            jnp.int32(0),
+        ),
+    )
+
     # --- pad buckets to a block multiple (EMPTY stripes merge to EMPTY) ---
     nb_p = pl.cdiv(nb, block_b) * block_b
     keys2d, vals2d, node_max, mkba = flat_k, flat_v, state.node_max, state.mkba
@@ -373,8 +512,20 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
         dk_tile = jnp.pad(dk_tile, ((0, pad), (0, 0)), constant_values=EMPTY)
         next_key = jnp.pad(next_key, (0, pad), constant_values=EMPTY)
         next_val = jnp.pad(next_val, (0, pad))
+        # padded buckets own no ranks: empty [total, total) spans
+        total_post = pe_row_post[-1]
+        ps_row_post = jnp.concatenate(
+            [ps_row_post, jnp.full((pad,), total_post, jnp.int32)]
+        )
+        pe_row_post = jnp.concatenate(
+            [pe_row_post, jnp.full((pad,), total_post, jnp.int32)]
+        )
     lfence = jnp.concatenate(
         [jnp.array([jnp.iinfo(jnp.int32).min], KEY_DTYPE), mkba[:-1]]
+    )
+    mrp = pl.cdiv(max_results, 128) * 128
+    g_row = jnp.pad(g, (0, mrp - max_results), constant_values=-1).reshape(
+        1, mrp
     )
 
     # --- pad ops to a window multiple (NOP pads never match) --------------
@@ -401,6 +552,8 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
     lf_row = lfence.reshape(1, nb_p)
     nxk_row = next_key.reshape(1, nb_p)
     nxv_row = next_val.reshape(1, nb_p)
+    ps_row = ps_row_post.reshape(1, nb_p)
+    pe_row = pe_row_post.reshape(1, nb_p)
 
     def bucket_map(j, i, lo_ref, hi_ref):
         return (jnp.clip(i, lo_ref[j], hi_ref[j]), 0)
@@ -427,6 +580,9 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
             pl.BlockSpec((1, block_b), fence_map),
             pl.BlockSpec((1, block_b), fence_map),
             pl.BlockSpec((1, block_b), fence_map),
+            pl.BlockSpec((1, mrp), lambda j, i, lo, hi: (0, 0)),
+            pl.BlockSpec((1, block_b), fence_map),
+            pl.BlockSpec((1, block_b), fence_map),
         ],
         out_specs=[
             pl.BlockSpec((block_b, S), bucket_map),
@@ -438,10 +594,24 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
             pl.BlockSpec((block_b, 1), bucket_map),
             pl.BlockSpec((1, block_q), window_map),
             pl.BlockSpec((1, block_q), window_map),
+            pl.BlockSpec((1, mrp), lambda j, i, lo, hi: (0, 0)),
+            pl.BlockSpec((1, mrp), lambda j, i, lo, hi: (0, 0)),
         ],
     )
 
-    okeys, ovals, ocnt, omax, onn, oflow, odel, resv, resk = pl.pallas_call(
+    (
+        okeys,
+        ovals,
+        ocnt,
+        omax,
+        onn,
+        oflow,
+        odel,
+        resv,
+        resk,
+        rngk,
+        rngv,
+    ) = pl.pallas_call(
         functools.partial(
             _apply_kernel, block_b=block_b, npb=npb, ns=ns, cap=cap
         ),
@@ -456,6 +626,8 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
             jax.ShapeDtypeStruct((nb_p, 1), jnp.int32),
             jax.ShapeDtypeStruct((n_windows, block_q), jnp.int32),
             jax.ShapeDtypeStruct((n_windows, block_q), jnp.int32),
+            jax.ShapeDtypeStruct((1, mrp), jnp.int32),
+            jax.ShapeDtypeStruct((1, mrp), jnp.int32),
         ],
         interpret=interpret,
         compiler_params=CompilerParams(
@@ -476,6 +648,9 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
         lf_row,
         nxk_row,
         nxv_row,
+        g_row,
+        ps_row,
+        pe_row,
     )
 
     slice_overflow = true_counts > cap
@@ -492,6 +667,10 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
     results = {
         "value": resv.reshape(qp)[:n],
         "succ_key": resk.reshape(qp)[:n],
+        "range_key": rngk[0, :max_results],
+        "range_val": rngv[0, :max_results],
+        "range_start": jnp.where(is_range, rstart, 0),
+        "range_count": jnp.where(is_range, remit, 0),
     }
     stats = {
         "inserted": jnp.sum(jnp.minimum(true_counts, cap)),
@@ -499,12 +678,13 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, interpret):
         "overflowed_buckets": jnp.sum(
             (oflow[:nb, 0] > 0) | slice_overflow
         ),
+        "range_truncated": rtrunc,
     }
     return new_state, results, stats
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_q", "block_b", "interpret")
+    jax.jit, static_argnames=("block_q", "block_b", "max_results", "interpret")
 )
 def flix_apply_pallas(
     state: FliXState,
@@ -514,18 +694,20 @@ def flix_apply_pallas(
     *,
     block_q: int = DEFAULT_BLOCK_Q,
     block_b: int = DEFAULT_BLOCK_B,
+    max_results: int = 128,
     interpret: bool = False,
 ):
     """Fused mixed-batch apply.  Same contract as ``core.ops.apply_ops``."""
     return _fused_apply(
         state, tag, key, val,
-        block_q=block_q, block_b=block_b, interpret=interpret,
+        block_q=block_q, block_b=block_b, max_results=max_results,
+        interpret=interpret,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_q", "block_b", "interpret"),
+    static_argnames=("block_q", "block_b", "max_results", "interpret"),
     donate_argnums=(0,),
 )
 def flix_apply_pallas_donated(
@@ -536,6 +718,7 @@ def flix_apply_pallas_donated(
     *,
     block_q: int = DEFAULT_BLOCK_Q,
     block_b: int = DEFAULT_BLOCK_B,
+    max_results: int = 128,
     interpret: bool = False,
 ):
     """Donating variant: the input state's buffers are handed to XLA so step
@@ -545,5 +728,6 @@ def flix_apply_pallas_donated(
     a retry replays the batch on the *pre-batch* state."""
     return _fused_apply(
         state, tag, key, val,
-        block_q=block_q, block_b=block_b, interpret=interpret,
+        block_q=block_q, block_b=block_b, max_results=max_results,
+        interpret=interpret,
     )

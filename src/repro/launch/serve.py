@@ -56,7 +56,7 @@ def main() -> None:
             # one mixed engine step: register the new pages AND resolve each
             # sequence's head page in the same sorted batch (core.apply_ops)
             seqs = np.arange(args.batch)
-            slots, _ = kv_index.step(
+            slots, _, _ = kv_index.step(
                 allocs=(seqs, np.full(args.batch, i // PAGE_TOKENS),
                         seqs * 1000 + i // PAGE_TOKENS),
                 lookups=(seqs, np.zeros(args.batch, int)),
@@ -73,6 +73,13 @@ def main() -> None:
     got = np.asarray(kv_index.lookup(np.arange(args.batch), np.zeros(args.batch, int)))
     assert (got == np.arange(args.batch) * 1000).all()
     print("page table lookups consistent ✓")
+    # sanity: in-order page enumeration through the engine's RANGE op
+    n_pages = (args.steps - 1) // PAGE_TOKENS + 1
+    pages, slots, count = kv_index.pages_of(0, max_pages=max(256, n_pages))
+    assert int(count) == n_pages, (int(count), n_pages)
+    assert np.asarray(pages)[:n_pages].tolist() == list(range(n_pages))
+    assert np.asarray(slots)[:n_pages].tolist() == list(range(n_pages))
+    print(f"page enumeration in order ✓ ({n_pages} pages for seq 0)")
 
 
 if __name__ == "__main__":

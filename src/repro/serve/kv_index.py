@@ -10,11 +10,15 @@ no tombstone accumulation across the serving day (the paper's §6.5 LSMu
 collapse is precisely the failure mode this avoids).
 
 Execution matches the paper's batch model exactly: each engine step submits
-**one mixed sorted batch** of (allocate | lookup | free) operations through
-``core.ops.apply_ops`` — one sort, one bucket routing, one flipped pass —
-instead of sorting and routing three times for three per-type passes.
-Batches are padded to the next power of two so jit traces once per size
-class, not once per step.
+**one mixed sorted batch** of (allocate | lookup | enumerate | free)
+operations through ``core.ops.apply_ops`` — one sort, one bucket routing,
+one flipped pass — instead of sorting and routing per op type.  Sequence
+page enumeration (``pages_of``) is the RANGE op: ``[seq << PAGE_BITS,
+(seq+1) << PAGE_BITS)`` travels in the batch like any other operation, so
+there is no engine bypass and an enumeration in an update step observes
+that step's allocations and frees (update-then-read).  Batches are padded
+to the next power of two so jit traces once per size class, not once per
+step.
 """
 
 from __future__ import annotations
@@ -29,11 +33,11 @@ from repro.core import (
     OP_DELETE,
     OP_INSERT,
     OP_POINT,
+    OP_RANGE,
     apply_ops,
     apply_ops_safe,
     build,
     make_ops,
-    range_query,
     unsort,
 )
 
@@ -76,12 +80,26 @@ class KVPageIndex:
         )
 
     # ---- the engine step: one mixed batch ------------------------------
-    def step(self, *, allocs=None, lookups=None, free_seqs=None, max_pages: int = 256):
+    def step(
+        self,
+        *,
+        allocs=None,
+        lookups=None,
+        free_seqs=None,
+        ranges=None,
+        max_pages: int = 256,
+        range_budget: int = 256,
+    ):
         """Submit one engine step's mixed work as a single sorted batch.
 
         ``allocs``    — (seq_ids, page_nos, slots): register pages.
         ``lookups``   — (seq_ids, page_nos): resolve pages → slots.
         ``free_seqs`` — sequence ids whose pages are all physically freed.
+        ``ranges``    — (lo_keys, hi_keys): half-open ``[lo, hi)`` RANGE ops
+                        in raw key space, answered against this step's
+                        post-update state under the batch's static
+                        ``range_budget`` (see ``apply_ops``' truncation
+                        contract).
 
         ``allocs`` and ``free_seqs`` must not share a sequence id: that
         would put the same key in the batch as both INSERT and DELETE,
@@ -89,8 +107,11 @@ class KVPageIndex:
         delete would silently win).  Checked here because the ids are host
         values anyway.
 
-        Returns ``(lookup_slots, stats)``; ``lookup_slots`` is aligned with
-        the ``lookups`` input order (NOT_FOUND = -1 for unmapped pages).
+        Returns ``(lookup_slots, range_out, stats)``; ``lookup_slots`` is
+        aligned with the ``lookups`` input order (NOT_FOUND = -1 for
+        unmapped pages), and ``range_out`` is None without ``ranges``, else
+        a dict of the dense ``keys``/``vals`` arrays plus per-op
+        ``start``/``count`` aligned with the ``ranges`` input order.
         """
         # empty op lists are the same as absent ones — callers naturally pass
         # this step's (often empty) completion list every step, and an empty
@@ -101,6 +122,8 @@ class KVPageIndex:
             free_seqs = None
         if lookups is not None and len(np.asarray(lookups[0])) == 0:
             lookups = None
+        if ranges is not None and len(np.asarray(ranges[0])) == 0:
+            ranges = None
         if allocs is not None and free_seqs is not None:
             overlap = set(np.asarray(allocs[0]).tolist()) & set(
                 np.asarray(free_seqs).tolist()
@@ -136,8 +159,17 @@ class KVPageIndex:
             tags.append(jnp.full(k.shape, OP_DELETE, jnp.int32))
             keys.append(k)
             vals.append(jnp.zeros(k.shape, jnp.int32))
+        n_before_range = sum(int(k.shape[0]) for k in keys)
+        n_range = 0
+        if ranges is not None:
+            lo, hi = ranges
+            lo = jnp.asarray(lo, jnp.int32)
+            n_range = lo.shape[0]
+            tags.append(jnp.full((n_range,), OP_RANGE, jnp.int32))
+            keys.append(lo)
+            vals.append(jnp.asarray(hi, jnp.int32))
         if not keys:
-            return jnp.zeros((0,), jnp.int32), {}
+            return jnp.zeros((0,), jnp.int32), None, {}
 
         tag = jnp.concatenate(tags)
         key = jnp.concatenate(keys)
@@ -145,49 +177,75 @@ class KVPageIndex:
         ops, perm = make_ops(tag, key, val, pad_to=_next_pow2(key.shape[0]))
         read_only = n_alloc == 0 and free_seqs is None
         if read_only:
-            # pure-lookup step: the state is untouched, so keep self.state
-            # instead of swapping in the engine's pass-through copy.  Always
-            # the reference engine here — the fused kernel's update sweep
-            # rewrites the whole state, pure waste for an update-free batch
-            # (DESIGN.md §9), while the reference lax.cond phases skip it.
-            _, results, stats = apply_ops(self.state, ops, impl="reference")
+            # pure-read step (lookups and/or ranges): the state is
+            # untouched, so keep self.state instead of swapping in the
+            # engine's pass-through copy.  Always the reference engine here
+            # — the fused kernel's update sweep rewrites the whole state,
+            # pure waste for an update-free batch (DESIGN.md §9/§10), while
+            # the reference lax.cond phases skip it.
+            _, results, stats = apply_ops(
+                self.state, ops, impl="reference", max_results=range_budget
+            )
         elif n_alloc == 0:
             # only inserts can overflow — free steps skip the restructure-
             # and-retry wrapper (and its host sync), and since no retry can
             # replay the batch, the old state's buffers are donated to the
             # step (fused path; a no-op on CPU)
             self.state, results, stats = apply_ops(
-                self.state, ops, impl=self.impl, donate=True
+                self.state, ops, impl=self.impl, donate=True,
+                max_results=range_budget, has_updates=True,
             )
         else:
             self.state, results, stats = apply_ops_safe(
-                self.state, ops, impl=self.impl
+                self.state, ops, impl=self.impl, max_results=range_budget,
+                has_updates=True,
             )
         values = unsort(results["value"], perm[: key.shape[0]])
-        return values[n_alloc : n_alloc + n_lookup], stats
+        range_out = None
+        if n_range:
+            sub = perm[n_before_range : n_before_range + n_range]
+            range_out = {
+                "keys": results["range_key"],
+                "vals": results["range_val"],
+                "start": unsort(results["range_start"], sub),
+                "count": unsort(results["range_count"], sub),
+            }
+        return values[n_alloc : n_alloc + n_lookup], range_out, stats
 
     # ---- per-type conveniences (each is still one engine step) ---------
     def allocate(self, seq_ids, page_nos, slots):
         """Batch-register pages → slots (an engine allocation step)."""
-        _, stats = self.step(allocs=(seq_ids, page_nos, slots))
+        _, _, stats = self.step(allocs=(seq_ids, page_nos, slots))
         return stats
 
     def lookup(self, seq_ids, page_nos):
         """Batch lookup → cache slots (NOT_FOUND = -1 for unmapped pages)."""
-        slots, _ = self.step(lookups=(seq_ids, page_nos))
+        slots, _, _ = self.step(lookups=(seq_ids, page_nos))
         return slots
 
     def free_sequences(self, seq_ids, *, max_pages: int = 256):
         """Batch-free every page of the given sequences (physical removal)."""
-        _, stats = self.step(free_seqs=seq_ids, max_pages=max_pages)
+        _, _, stats = self.step(free_seqs=seq_ids, max_pages=max_pages)
         return stats
 
     def pages_of(self, seq_id: int, *, max_pages: int = 256):
-        """All (page_no, slot) of a sequence, in order (range query)."""
-        lo = jnp.array([seq_id << PAGE_BITS], jnp.int32)
-        hi = jnp.array([((seq_id + 1) << PAGE_BITS) - 1], jnp.int32)
-        k, v, n = range_query(self.state, lo, hi, max_results=max_pages)
-        return k[0] & ((1 << PAGE_BITS) - 1), v[0], n[0]
+        """All (page_no, slot) of a sequence, in order (a RANGE engine step).
+
+        Routed through ``apply_ops`` like every other operation — no
+        standalone ``range_query`` bypass, so enumeration always reads the
+        engine's own state (a cache-carrying read state included) and can
+        legally share a batch with updates via :meth:`step`.
+        """
+        lo = seq_id << PAGE_BITS
+        hi = (seq_id + 1) << PAGE_BITS
+        _, rng_out, _ = self.step(
+            ranges=([lo], [hi]), range_budget=max_pages
+        )
+        return (
+            rng_out["keys"] & ((1 << PAGE_BITS) - 1),
+            rng_out["vals"],
+            rng_out["count"][0],
+        )
 
     def live_pages(self) -> int:
         return int(self.state.live_keys()) - 1  # minus the seed key

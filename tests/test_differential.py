@@ -12,9 +12,13 @@ Three families of proofs:
      classes (insert → delete → point → successor on sorted sub-batches).
   3. The fused compute-to-bucket apply kernel (``kernels/flix_apply``,
      ``apply_ops(impl="fused")``) matches the reference engine on the same
-     adversarial batches across every op-mix ratio, including overflow +
-     restructure retries (live-position vals, like the per-kernel proofs:
-     vals at EMPTY slots are unspecified for the jnp merge).
+     adversarial batches across every op-mix ratio — RANGE included, from
+     single-class extremes to the fig-style 90/10 read/update shape — with
+     byte-identical dense range output, and a RANGE in a mixed batch
+     observes that batch's inserts and deletes (update-then-read), incl.
+     overflow + restructure retries (live-position vals, like the
+     per-kernel proofs: vals at EMPTY slots are unspecified for the jnp
+     merge).
 """
 
 import jax.numpy as jnp
@@ -276,10 +280,14 @@ def test_apply_ops_partial_mixes(adversarial, rng, present):
 # ---------------------------------------------------------------------------
 
 
-def _assert_fused_matches_reference(st, tags, keys, vals, *, pad_to):
+def _assert_fused_matches_reference(st, tags, keys, vals, *, pad_to, max_results=128):
     ops, _ = core.make_ops(tags, keys, vals, pad_to=pad_to)
-    s_ref, r_ref, stats_ref = core.apply_ops(st, ops, impl="reference")
-    s_f, r_f, stats_f = core.apply_ops(st, ops, impl="fused")
+    s_ref, r_ref, stats_ref = core.apply_ops(
+        st, ops, impl="reference", max_results=max_results
+    )
+    s_f, r_f, stats_f = core.apply_ops(
+        st, ops, impl="fused", max_results=max_results
+    )
     for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
         np.testing.assert_array_equal(
             np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_f, f)), err_msg=f
@@ -289,16 +297,17 @@ def _assert_fused_matches_reference(st, tags, keys, vals, *, pad_to):
         np.asarray(s_ref.vals)[mask], np.asarray(s_f.vals)[mask]
     )
     assert bool(s_ref.needs_restructure) == bool(s_f.needs_restructure)
-    np.testing.assert_array_equal(
-        np.asarray(r_ref["value"]), np.asarray(r_f["value"])
-    )
-    np.testing.assert_array_equal(
-        np.asarray(r_ref["succ_key"]), np.asarray(r_f["succ_key"])
-    )
+    for k in ("value", "succ_key", "range_key", "range_val",
+              "range_start", "range_count"):
+        np.testing.assert_array_equal(
+            np.asarray(r_ref[k]), np.asarray(r_f[k]), err_msg=k
+        )
     for k in stats_ref:
         assert int(stats_ref[k]) == int(stats_f[k]), k
     if not bool(s_f.needs_restructure):
         check_invariants(s_f)
+        core.check_range_results(ops, r_f, max_results=max_results)
+    return ops, r_ref, stats_ref
 
 
 @pytest.mark.parametrize(
@@ -308,9 +317,13 @@ def _assert_fused_matches_reference(st, tags, keys, vals, *, pad_to):
         (core.OP_DELETE,),
         (core.OP_POINT,),
         (core.OP_SUCCESSOR,),
+        (core.OP_RANGE,),
         (core.OP_INSERT, core.OP_POINT),
         (core.OP_DELETE, core.OP_SUCCESSOR),
         (core.OP_POINT, core.OP_SUCCESSOR),
+        (core.OP_INSERT, core.OP_RANGE),
+        (core.OP_DELETE, core.OP_RANGE),
+        (core.OP_RANGE, core.OP_SUCCESSOR),
     ],
 )
 def test_fused_apply_partial_mixes(adversarial, rng, present):
@@ -324,29 +337,33 @@ def test_fused_apply_partial_mixes(adversarial, rng, present):
         core.OP_DELETE: rng.choice(live, 120, replace=False),
         core.OP_POINT: rng.integers(0, 130000, 120),
         core.OP_SUCCESSOR: rng.integers(0, 130000, 120),
+        core.OP_RANGE: np.sort(rng.integers(0, 125000, 40)),
     }
     tags, keys, vals = [], [], []
     for t in present:
         k = pools[t].astype(np.int32)
         tags.append(np.full(len(k), t, np.int32))
         keys.append(k)
-        vals.append(
-            np.arange(len(k), dtype=np.int32) + 3_000_000
-            if t == core.OP_INSERT
-            else np.zeros(len(k), np.int32)
-        )
+        if t == core.OP_INSERT:
+            vals.append(np.arange(len(k), dtype=np.int32) + 3_000_000)
+        elif t == core.OP_RANGE:
+            vals.append((k + rng.integers(0, 2000, len(k))).astype(np.int32))
+        else:
+            vals.append(np.zeros(len(k), np.int32))
     _assert_fused_matches_reference(
         st,
         np.concatenate(tags),
         np.concatenate(keys),
         np.concatenate(vals),
         pad_to=512,
+        max_results=256,
     )
 
 
 def test_fused_apply_full_mix_adversarial(adversarial, rng):
     """Full mix on the adversarial state: upserts of stored keys, deletions,
-    duplicate + boundary + emptied-bucket reads, multi-window batch."""
+    duplicate + boundary + emptied-bucket reads, ranges spanning emptied and
+    boundary regions, multi-window batch."""
     st, live = adversarial
     absent = np.setdiff1d(np.arange(0, 130000, 3, dtype=np.int32), live)
     ins = np.concatenate(
@@ -360,14 +377,27 @@ def test_fused_apply_full_mix_adversarial(adversarial, rng):
         [0, int(MAX_VALID) - 1, int(MAX_VALID)],
         np.arange(29000, 61000, 250),
     ]).astype(np.int32)
+    rlo = np.concatenate([
+        rng.integers(0, 125000, 24),
+        [0, 29500, int(MAX_VALID) - 5],        # boundary + emptied regions
+    ]).astype(np.int32)
+    rhi = np.concatenate([
+        rlo[:24] + rng.integers(0, 3000, 24),
+        [50, 60500, int(EMPTY)],
+    ]).astype(np.int32)
     tags = np.concatenate([
         np.full(len(ins), core.OP_INSERT),
         np.full(len(dels), core.OP_DELETE),
         np.where(np.arange(len(reads)) % 2 == 0, core.OP_POINT, core.OP_SUCCESSOR),
+        np.full(len(rlo), core.OP_RANGE),
     ]).astype(np.int32)
-    keys = np.concatenate([ins, dels, reads]).astype(np.int32)
-    vals = np.concatenate([iv, np.zeros(len(dels) + len(reads), np.int32)])
-    _assert_fused_matches_reference(st, tags, keys, vals, pad_to=2048)
+    keys = np.concatenate([ins, dels, reads, rlo]).astype(np.int32)
+    vals = np.concatenate(
+        [iv, np.zeros(len(dels) + len(reads), np.int32), rhi]
+    )
+    _assert_fused_matches_reference(
+        st, tags, keys, vals, pad_to=2048, max_results=512
+    )
 
 
 def test_fused_apply_overflow_flag_and_state(rng):
@@ -391,6 +421,84 @@ def test_fused_apply_overflow_flag_and_state(rng):
         np.testing.assert_array_equal(
             np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_f, f)), err_msg=f
         )
+
+
+def test_fused_apply_range_heavy_90_10(adversarial, rng):
+    """The fig-style 90/10 read/update shape with RANGE carrying the read
+    side: 90% range+point reads, 10% updates — byte-identical executors."""
+    st, live = adversarial
+    absent = np.setdiff1d(np.arange(0, 130000, 3, dtype=np.int32), live)
+    n = 400
+    n_upd = n // 10
+    ins = rng.choice(absent, n_upd // 2, replace=False).astype(np.int32)
+    dels = rng.choice(live, n_upd - n_upd // 2, replace=False).astype(np.int32)
+    n_read = n - n_upd
+    n_rng = n_read // 2
+    rlo = np.sort(rng.integers(0, 125000, n_rng)).astype(np.int32)
+    rhi = (rlo + rng.integers(0, 1500, n_rng)).astype(np.int32)
+    points = rng.integers(0, 130000, n_read - n_rng).astype(np.int32)
+    tags = np.concatenate([
+        np.full(len(ins), core.OP_INSERT),
+        np.full(len(dels), core.OP_DELETE),
+        np.full(n_rng, core.OP_RANGE),
+        np.full(len(points), core.OP_POINT),
+    ]).astype(np.int32)
+    keys = np.concatenate([ins, dels, rlo, points]).astype(np.int32)
+    vals = np.concatenate([
+        np.arange(len(ins), dtype=np.int32) + 5_000_000,
+        np.zeros(len(dels), np.int32),
+        rhi,
+        np.zeros(len(points), np.int32),
+    ])
+    _assert_fused_matches_reference(
+        st, tags, keys, vals, pad_to=512, max_results=1024
+    )
+
+
+def test_range_observes_same_batch_updates(adversarial, rng):
+    """Update-then-read inside one batch: a RANGE must see that batch's
+    inserts and must not see its deletes — on both executors."""
+    st, live = adversarial
+    absent = np.setdiff1d(np.arange(70000, 90000, 3, dtype=np.int32), live)
+    ins = rng.choice(absent, 40, replace=False).astype(np.int32)
+    iv = (ins + 1_000_000).astype(np.int32)
+    dels = live[(live >= 70000) & (live < 90000)][:40].astype(np.int32)
+    # one range covering exactly the churned region, plus tight ranges
+    # pinned on individual inserted and deleted keys
+    rlo = np.concatenate([[70000], ins[:5], dels[:5]]).astype(np.int32)
+    rhi = np.concatenate([[90000], ins[:5] + 1, dels[:5] + 1]).astype(np.int32)
+    tags = np.concatenate([
+        np.full(len(ins), core.OP_INSERT),
+        np.full(len(dels), core.OP_DELETE),
+        np.full(len(rlo), core.OP_RANGE),
+    ]).astype(np.int32)
+    keys = np.concatenate([ins, dels, rlo]).astype(np.int32)
+    vals = np.concatenate([iv, np.zeros(len(dels), np.int32), rhi])
+    ops, r_ref, _ = _assert_fused_matches_reference(
+        st, tags, keys, vals, pad_to=512, max_results=2048
+    )
+    # model the post-update region contents
+    region = set(
+        live[(live >= 70000) & (live < 90000)].tolist()
+    ) - set(dels.tolist()) | set(ins.tolist())
+    t = np.asarray(ops.tag)
+    kk, vv = np.asarray(ops.key), np.asarray(ops.val)
+    rs = np.asarray(r_ref["range_start"])
+    rc = np.asarray(r_ref["range_count"])
+    dk = np.asarray(r_ref["range_key"])
+    dv = np.asarray(r_ref["range_val"])
+    val_of = dict(zip(ins.tolist(), iv.tolist()))
+    for i in np.nonzero(t == core.OP_RANGE)[0]:
+        seg = dk[rs[i] : rs[i] + rc[i]]
+        expect = np.array(
+            sorted(k for k in region if kk[i] <= k < vv[i]), np.int32
+        )
+        np.testing.assert_array_equal(seg, expect, err_msg=f"op {i}")
+        for j in range(rc[i]):  # inserted keys carry this batch's values
+            k = int(dk[rs[i] + j])
+            if k in val_of:
+                assert dv[rs[i] + j] == val_of[k]
+        assert not set(seg.tolist()) & set(dels.tolist())
 
 
 def test_apply_ops_safe_overflow_recovery(rng):

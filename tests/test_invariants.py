@@ -67,7 +67,10 @@ def test_restructure_preserves_invariants(rng):
 
 @pytest.mark.parametrize("seed", [3, 4])
 def test_mixed_apply_ops_sequences(seed):
-    """apply_ops_safe preserves I1–I5 across randomized mixed steps."""
+    """apply_ops_safe preserves I1–I5 across randomized mixed steps, and
+    every step's RANGE output passes the structural range checker (sorted,
+    in-bounds, duplicate-free, consecutively packed —
+    ``validate_ranges=True`` wires ``check_range_results`` in)."""
     rng = np.random.default_rng(seed)
     st, model = _rand_state(rng, n=1200)
     space = np.arange(100000, dtype=np.int32)
@@ -78,14 +81,19 @@ def test_mixed_apply_ops_sequences(seed):
         iv = rng.integers(0, 1 << 30, size=200).astype(np.int32)
         dels = rng.choice(live, size=150, replace=False).astype(np.int32)
         reads = rng.integers(0, 100000, size=300).astype(np.int32)
+        rlo = np.sort(rng.integers(0, 95000, size=20)).astype(np.int32)
+        rhi = (rlo + rng.integers(0, 5000, size=20)).astype(np.int32)
         tags = np.concatenate([
             np.full(200, core.OP_INSERT), np.full(150, core.OP_DELETE),
             np.full(150, core.OP_POINT), np.full(150, core.OP_SUCCESSOR),
+            np.full(20, core.OP_RANGE),
         ]).astype(np.int32)
-        keys = np.concatenate([ins, dels, reads]).astype(np.int32)
-        vals = np.concatenate([iv, np.zeros(450, np.int32)])
+        keys = np.concatenate([ins, dels, reads, rlo]).astype(np.int32)
+        vals = np.concatenate([iv, np.zeros(450, np.int32), rhi])
         ops, _ = core.make_ops(tags, keys, vals, pad_to=1024)
-        st, _, stats = core.apply_ops_safe(st, ops)
+        st, results, stats = core.apply_ops_safe(
+            st, ops, max_results=256, validate_ranges=True
+        )
         model.update(zip(ins.tolist(), iv.tolist()))
         for k in dels.tolist():
             model.pop(k)
@@ -93,6 +101,34 @@ def test_mixed_apply_ops_sequences(seed):
         assert int(st.live_keys()) == len(model)
         assert int(stats["inserted"]) == 200
         assert int(stats["deleted"]) == 150
+        # every emitted range key is live in the post-apply state
+        emitted = int(np.asarray(results["range_count"]).sum())
+        got = np.asarray(results["range_key"])[:emitted]
+        assert all(int(k) in model for k in got)
+
+
+def test_check_range_results_catches_violations(rng):
+    """The checker actually rejects malformed dense output."""
+    st, _ = _rand_state(rng, n=400)
+    rlo = np.array([100, 5000], np.int32)
+    rhi = np.array([4000, 60000], np.int32)
+    ops, _ = core.make_ops(
+        np.full(2, core.OP_RANGE, np.int32), rlo, rhi, pad_to=4
+    )
+    _, results, _ = core.apply_ops(st, ops, impl="reference", max_results=64)
+    core.check_range_results(ops, results, max_results=64)
+    bad = dict(results)
+    bad["range_key"] = np.asarray(results["range_key"]).copy()
+    c0 = int(np.asarray(results["range_count"])[np.asarray(ops.tag) == core.OP_RANGE][0])
+    if c0 >= 2:
+        bad["range_key"][[0, 1]] = bad["range_key"][[1, 0]]  # break sortedness
+        with pytest.raises(AssertionError):
+            core.check_range_results(ops, bad, max_results=64)
+    bad2 = dict(results)
+    bad2["range_count"] = np.asarray(results["range_count"]).copy()
+    bad2["range_count"][np.argmax(np.asarray(ops.tag) == core.OP_RANGE)] += 1
+    with pytest.raises(AssertionError):
+        core.check_range_results(ops, bad2, max_results=64)
 
 
 def test_overflowed_state_recovers_via_restructure(rng):

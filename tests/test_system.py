@@ -76,6 +76,73 @@ def test_kv_page_index_serving_plane(rng):
     assert np.asarray(idx.lookup([7], [1]))[0] == 11
 
 
+def test_kv_page_index_pages_of_via_engine(rng):
+    """Regression for the pages_of engine bypass: enumeration must go
+    through ``apply_ops`` — so it works on a cache-carrying read state,
+    reflects every preceding engine step, and can share a batch with the
+    updates it should observe (update-then-read)."""
+    from repro import core
+    from repro.serve.kv_index import PAGE_BITS
+
+    idx = KVPageIndex()
+    idx.allocate([5, 5, 5, 9], [0, 1, 2, 0], [50, 51, 52, 90])
+
+    # attach the successor cache, as a read-only query stream would; the
+    # old bypass ran range_query outside the engine against whatever state
+    # object happened to be cached on the wrapper
+    idx.state = core.with_successor_cache(idx.state)
+    pages, slots, count = idx.pages_of(5)
+    assert int(count) == 3
+    assert np.asarray(pages)[:3].tolist() == [0, 1, 2]
+    assert np.asarray(slots)[:3].tolist() == [50, 51, 52]
+
+    # a later engine step must be visible to the next enumeration
+    idx.state = core.with_successor_cache(idx.state)
+    idx.free_sequences([5])
+    _, _, count = idx.pages_of(5)
+    assert int(count) == 0
+
+    # update-then-read inside ONE engine step: the enumeration travels in
+    # the same batch as the allocations it observes
+    _, rng_out, _ = idx.step(
+        allocs=([3, 3], [0, 1], [30, 31]),
+        ranges=([3 << PAGE_BITS], [4 << PAGE_BITS]),
+    )
+    assert int(rng_out["count"][0]) == 2
+    got_pages = np.asarray(rng_out["keys"])[:2] & ((1 << PAGE_BITS) - 1)
+    assert got_pages.tolist() == [0, 1]
+    assert np.asarray(rng_out["vals"])[:2].tolist() == [30, 31]
+
+    # budget truncation surfaces deterministically through the serving API
+    pages, slots, count = idx.pages_of(3, max_pages=1)
+    assert int(count) == 1 and int(np.asarray(pages)[0]) == 0
+
+
+@pytest.mark.slow
+def test_range_mix_benchmark_cli(tmp_path):
+    """The selectivity sweep runs end-to-end and lands in the flix-bench-v1
+    artifact with the range speedup map populated."""
+    import json
+
+    out = tmp_path / "bench.json"
+    env = {
+        "PYTHONPATH": f"{REPO}/src",
+        "PATH": "/usr/bin:/bin",
+        "REPRO_BENCH_JSON": str(out),
+    }
+    p = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "range_mix"],
+        capture_output=True, text=True, env=env, cwd=str(REPO), timeout=3000,
+    )
+    assert p.returncode == 0, p.stderr
+    payload = json.loads(out.read_text())
+    assert payload["schema"] == "flix-bench-v1"
+    assert not payload["failed"]
+    rows = payload["suites"]["range_mix_engine"]
+    assert any(name.startswith("range_mix_ref_") for name in rows)
+    assert payload["range_fused_speedup"]  # fused/reference pair extracted
+
+
 @pytest.mark.slow
 def test_train_driver_resume_cli(tmp_path):
     """The production driver trains, checkpoints, and resumes (CLI-level)."""
