@@ -1,0 +1,168 @@
+"""Perf-regression gate: diff a fresh bench artifact against snapshots.
+
+  python -m benchmarks.compare FRESH.json BASELINE.json [BASELINE2.json ...]
+
+Both sides are ``flix-bench-v1`` artifacts (``benchmarks.run`` output /
+the committed ``BENCH_PR*.json`` snapshots).  Raw ``us_per_call`` numbers
+are host-dependent, so the *gate* only looks at the same-host speedup
+ratio maps (``apply_ops_fused_speedup``, ``range_fused_speedup``,
+``sharded_speedup``): a key regresses when
+
+    fresh < baseline * (1 - tolerance)
+
+with ``tolerance`` from ``--tolerance`` / ``$REPRO_BENCH_TOL``
+(default 0.20).  Keys whose baseline ratio is below ``--min-baseline`` /
+``$REPRO_BENCH_MIN_BASELINE`` (default 0.05) are reported but never
+gated — interpret-mode Pallas ratios on CPU runners are diagnostics, not
+perf promises (DESIGN.md §7).  Later baseline files override earlier ones
+key-by-key, so pass snapshots oldest-first.  Keys present on only one
+side are reported as ``new``/``missing`` without failing (a suite that
+did not run must not trip the gate); a fresh artifact with a non-empty
+``failed`` list fails outright — its row maps are truncated.
+
+The delta table lands on stdout and, when ``$GITHUB_STEP_SUMMARY`` is
+set, is appended there as Markdown (the CI ``bench-smoke`` job does
+this).  Exit status: 0 clean, 1 regression (or truncated artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+SPEEDUP_FIELDS = (
+    "apply_ops_fused_speedup",
+    "range_fused_speedup",
+    "sharded_speedup",
+)
+SCHEMA = "flix-bench-v1"
+
+
+def load_artifact(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != SCHEMA:
+        raise SystemExit(f"{path}: expected schema {SCHEMA!r}, got "
+                         f"{payload.get('schema')!r}")
+    return payload
+
+
+def collect_speedups(payload: dict) -> dict[str, float]:
+    """Flatten the ratio maps to ``field/key -> speedup``."""
+    out = {}
+    for field in SPEEDUP_FIELDS:
+        for key, value in (payload.get(field) or {}).items():
+            out[f"{field}/{key}"] = float(value)
+    return out
+
+
+def compare_speedups(
+    fresh: dict[str, float],
+    baseline: dict[str, float],
+    *,
+    tolerance: float,
+    min_baseline: float,
+) -> tuple[list[dict], list[str]]:
+    """Return (rows, regressed-key list).  One row per union key."""
+    rows, regressions = [], []
+    for key in sorted(set(fresh) | set(baseline)):
+        new, old = fresh.get(key), baseline.get(key)
+        if old is None:
+            status = "new"
+        elif new is None:
+            status = "missing"
+        elif old < min_baseline:
+            status = "ungated"
+        elif new < old * (1.0 - tolerance):
+            status = "REGRESSED"
+            regressions.append(key)
+        else:
+            status = "ok"
+        delta = (new / old - 1.0) if (new and old) else None
+        rows.append(
+            {"key": key, "baseline": old, "fresh": new, "delta": delta,
+             "status": status}
+        )
+    return rows, regressions
+
+
+def render_table(rows: list[dict], *, tolerance: float, min_baseline: float) -> str:
+    def fmt(x, spec):
+        return format(x, spec) if x is not None else "—"
+
+    lines = [
+        "## Bench speedup deltas (flix-bench-v1)",
+        "",
+        f"gate: fresh < baseline × (1 − {tolerance:.2f}) on keys with "
+        f"baseline ≥ {min_baseline:.2f}",
+        "",
+        "| key | baseline | fresh | delta | status |",
+        "| --- | ---: | ---: | ---: | --- |",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['key']} | {fmt(r['baseline'], '.4f')} | "
+            f"{fmt(r['fresh'], '.4f')} | {fmt(r['delta'], '+.1%')} | "
+            f"{r['status']} |"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="artifact from this run (benchmarks.run)")
+    ap.add_argument("baselines", nargs="+",
+                    help="committed snapshot(s), oldest first — later files "
+                    "override earlier ones key-by-key")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("REPRO_BENCH_TOL", "0.20")),
+        help="allowed fractional speedup drop before failing "
+        "(env REPRO_BENCH_TOL, default 0.20)",
+    )
+    ap.add_argument(
+        "--min-baseline",
+        type=float,
+        default=float(os.environ.get("REPRO_BENCH_MIN_BASELINE", "0.05")),
+        help="baseline ratios below this are reported but not gated "
+        "(env REPRO_BENCH_MIN_BASELINE, default 0.05)",
+    )
+    args = ap.parse_args(argv)
+
+    fresh_payload = load_artifact(args.fresh)
+    baseline_map: dict[str, float] = {}
+    for path in args.baselines:
+        baseline_map.update(collect_speedups(load_artifact(path)))
+    fresh_map = collect_speedups(fresh_payload)
+
+    rows, regressions = compare_speedups(
+        fresh_map, baseline_map,
+        tolerance=args.tolerance, min_baseline=args.min_baseline,
+    )
+    table = render_table(
+        rows, tolerance=args.tolerance, min_baseline=args.min_baseline
+    )
+    print(table)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(table + "\n")
+
+    failed_suites = fresh_payload.get("failed") or []
+    if failed_suites:
+        print(f"FAIL: fresh artifact is truncated (failed suites: "
+              f"{failed_suites})", file=sys.stderr)
+        return 1
+    if regressions:
+        print(f"FAIL: {len(regressions)} speedup regression(s) beyond "
+              f"{args.tolerance:.0%}: {regressions}", file=sys.stderr)
+        return 1
+    print(f"# gate clean: {len(rows)} keys compared, 0 regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

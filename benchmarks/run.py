@@ -4,13 +4,14 @@
   python -m benchmarks.run             # everything
   python -m benchmarks.run fig9 fig13  # substring filter
 
-Besides the CSV rows on stdout, every run writes ``BENCH_PR3.json`` — the
+Besides the CSV rows on stdout, every run writes ``BENCH_PR5.json`` — the
 repo's machine-readable perf-trajectory artifact (schema ``flix-bench-v1``,
 DESIGN.md §7): per-suite ``name → us_per_call`` maps plus the
 fused-vs-reference ``apply_ops`` speedups extracted from the
-``mixed_batch`` suite and the RANGE-op speedups from ``range_mix``.
-(``BENCH_PR2.json`` in the repo root is the committed PR-2 snapshot —
-compare, don't overwrite.)
+``mixed_batch`` suite, the RANGE-op speedups from ``range_mix``, and the
+sharded-vs-single speedups from ``sharded_mix``.  (``BENCH_PR*.json`` in
+the repo root are committed per-PR snapshots — ``benchmarks.compare``
+diffs against them; don't overwrite them outside a snapshot refresh.)
 """
 
 from __future__ import annotations
@@ -32,6 +33,7 @@ from benchmarks import (
     query_qtmf,
     range_mix,
     restructure_recovery,
+    sharded_mix,
     sort_cost,
     successor,
     unsorted_queries,
@@ -49,10 +51,11 @@ SUITES = {
     "fig13_successor": successor,
     "mixed_batch_engine": mixed_batch,
     "range_mix_engine": range_mix,
+    "sharded_mix_engine": sharded_mix,
     "table4_restructure": restructure_recovery,
 }
 
-BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR3.json")
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR5.json")
 
 
 def _speedups(
@@ -70,6 +73,22 @@ def _speedups(
     return out
 
 
+def _sharded_speedups(rows: dict[str, float]) -> dict[str, float]:
+    """Sharded-vs-single speedup per sweep point: every
+    ``sharded_mix_{rep|a2a}_s{S}_upd{U}`` row is normalized to its
+    ``sharded_mix_single_upd{U}`` baseline."""
+    out = {}
+    for name, us in rows.items():
+        if not name.startswith(("sharded_mix_rep_", "sharded_mix_a2a_")) or us <= 0:
+            continue
+        point = name[len("sharded_mix_"):]          # e.g. rep_s4_upd50
+        upd = point.rsplit("_", 1)[-1]              # upd50
+        single = rows.get(f"sharded_mix_single_{upd}")
+        if single is not None:
+            out[point] = single / us
+    return out
+
+
 def write_bench_json(
     suites: dict[str, dict[str, dict]],
     failed: list[str] = (),
@@ -83,6 +102,10 @@ def write_bench_json(
     ranges = {
         name: row["us_per_call"]
         for name, row in suites.get("range_mix_engine", {}).items()
+    }
+    sharded = {
+        name: row["us_per_call"]
+        for name, row in suites.get("sharded_mix_engine", {}).items()
     }
     payload = {
         "schema": "flix-bench-v1",
@@ -99,6 +122,7 @@ def write_bench_json(
         "range_fused_speedup": _speedups(
             ranges, "range_mix_fused_", "range_mix_ref_"
         ),
+        "sharded_speedup": _sharded_speedups(sharded),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -1,0 +1,115 @@
+"""Sharded mixed-batch engine: shard count × update ratio × routing mode.
+
+``shard_apply_ops`` (DESIGN.md §11) runs the whole mixed batch under one
+``shard_map`` step; this suite measures what the hierarchy costs on this
+host.  The grid:
+
+  * **shard count** — 2/4/8 (whatever the device count allows; on a CPU
+    host run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``,
+    as the CI ``bench-smoke`` job does).  A single-device ``apply_ops``
+    run of the same batch is the baseline every point is normalized to.
+  * **update ratio** — 0% (read-only), 50%, 100% (pure updates), the
+    fig-style read/update shape inside one batch.
+  * **routing mode** — ``replicated`` (broadcast batch, one collective
+    round) vs ``a2a`` (sharded ingest, padded all_to_all there and back).
+
+On fake host devices the "speedup" is an honest collective-overhead
+number (< 1 — eight XLA CPU shards time-slice one socket); the trend to
+watch on real hardware is rep-vs-a2a crossover as the update ratio grows.
+``benchmarks.run`` lifts the ``sharded_mix_{rep,a2a}_s*`` /
+``sharded_mix_single_*`` pairs into the ``sharded_speedup`` field of
+BENCH_PR5.json (schema flix-bench-v1, DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BUILD_SIZE, KEY_SPACE, emit, keyset, time_call
+from repro import core
+from repro.core import distributed as dist
+
+SHARD_COUNTS = (2, 4, 8)
+UPDATE_RATIOS = (0, 50, 100)
+
+
+def _batch(rng, keys, absent, batch, upd_pct):
+    n_upd = batch * upd_pct // 100
+    n_ins, n_del = n_upd // 2, n_upd - n_upd // 2
+    n_read = batch - n_upd
+    n_point, n_succ = n_read // 2, n_read - n_read // 2
+    tags = np.concatenate([
+        np.full(n_ins, core.OP_INSERT),
+        np.full(n_del, core.OP_DELETE),
+        np.full(n_point, core.OP_POINT),
+        np.full(n_succ, core.OP_SUCCESSOR),
+    ]).astype(np.int32)
+    bk = np.concatenate([
+        absent[:n_ins],
+        rng.choice(keys, size=n_del, replace=False).astype(np.int32),
+        rng.integers(0, KEY_SPACE, n_point).astype(np.int32),
+        rng.integers(0, KEY_SPACE, n_succ).astype(np.int32),
+    ]).astype(np.int32)
+    bv = np.zeros(batch, np.int32)
+    bv[:n_ins] = np.arange(n_ins)
+    ops, _ = core.make_ops(tags, bk, bv)
+    return ops
+
+
+def run() -> None:
+    rng = np.random.default_rng(33)
+    n = BUILD_SIZE
+    batch = max(1024, n // 16)
+    keys = keyset(rng, n)
+    vals = np.arange(n, dtype=np.int32)
+    sk = np.sort(keys)
+    sv = vals[np.argsort(keys)]
+    absent = np.setdiff1d(
+        rng.integers(0, KEY_SPACE, 4 * batch).astype(np.int32), keys
+    )
+    st = core.build(keys, vals, node_size=32, nodes_per_bucket=16)
+
+    shard_counts = [s for s in SHARD_COUNTS if s <= len(jax.devices())]
+    if not shard_counts:
+        emit("sharded_mix_skipped", 0.0, f"devices={len(jax.devices())}")
+        return
+
+    batches = {u: _batch(rng, keys, absent, batch, u) for u in UPDATE_RATIOS}
+    # the sharded index only depends on the shard count — build each once
+    meshes = {s: dist.make_shard_mesh(s) for s in shard_counts}
+    indexes = {
+        s: dist.shard_build(
+            jnp.asarray(sk),
+            jnp.asarray(sv),
+            meshes[s],
+            node_size=32,
+            nodes_per_bucket=16,
+        )
+        for s in shard_counts
+    }
+
+    # single-device baseline: the same batch through plain apply_ops
+    for upd, ops in batches.items():
+        t = time_call(lambda ops=ops: core.apply_ops(st, ops, impl="reference"))
+        emit(
+            f"sharded_mix_single_upd{upd}",
+            t,
+            f"batch={batch};ops_per_s={batch / t * 1e6:.0f}",
+        )
+        single = t
+
+        for s in shard_counts:
+            mesh, idx = meshes[s], indexes[s]
+            for mode in ("replicated", "a2a"):
+                t_sh = time_call(
+                    lambda ops=ops, idx=idx, mesh=mesh, mode=mode: (
+                        dist.shard_apply_ops(idx, ops, mesh, routing=mode)
+                    )
+                )
+                emit(
+                    f"sharded_mix_{mode[:3]}_s{s}_upd{upd}",
+                    t_sh,
+                    f"batch={batch};speedup_vs_single={single / t_sh:.3f}x",
+                )

@@ -14,7 +14,7 @@ import time
 import jax
 
 from repro.data import DataState, make_batch_iterator
-from repro.models.model import get_config, init_params, param_count
+from repro.models.model import get_config, param_count
 from repro.train import make_train_step, train_state_init
 
 

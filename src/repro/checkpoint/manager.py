@@ -23,7 +23,6 @@ import queue
 import shutil
 import threading
 from pathlib import Path
-from typing import Any
 
 import jax
 import numpy as np
@@ -80,7 +79,6 @@ def restore_pytree(path: Path, like, *, mesh=None, specs=None):
     restored = jax.tree_util.tree_unflatten(treedef, arrays)
     if mesh is not None and specs is not None:
         from jax.sharding import NamedSharding
-        from jax.sharding import PartitionSpec as P
 
         restored = jax.tree.map(
             lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,7 @@ import jax.numpy as jnp
 from repro.core.build import build as _flix_build
 from repro.core.delete import delete as _flix_delete
 from repro.core.insert import insert as _flix_insert, insert_safe as _flix_insert_safe
-from repro.core.state import EMPTY, KEY_DTYPE, MAX_VALID, NOT_FOUND, FliXState
+from repro.core.state import KEY_DTYPE, MAX_VALID, NOT_FOUND, FliXState
 
 FANOUT = 16  # paper uses 15 keys + pointers per 128B node; we use 16 lanes
 

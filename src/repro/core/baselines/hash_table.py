@@ -61,7 +61,9 @@ def _hash(keys: jax.Array, capacity: int) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("max_probe",))
-def insert(state: HashTableState, keys: jax.Array, vals: jax.Array, *, max_probe: int = 64):
+def insert(
+    state: HashTableState, keys: jax.Array, vals: jax.Array, *, max_probe: int = 64
+):
     """Batched insert/upsert. Batch must be deduplicated."""
     cap = state.capacity
     k = keys.astype(KEY_DTYPE)
@@ -125,7 +127,11 @@ def point_query(state: HashTableState, queries: jax.Array, *, max_probe: int = 6
     res, done, dist = jax.lax.while_loop(
         cond,
         body,
-        (jnp.full(q.shape, NOT_FOUND, VAL_DTYPE), jnp.zeros(q.shape, bool), jnp.int32(0)),
+        (
+            jnp.full(q.shape, NOT_FOUND, VAL_DTYPE),
+            jnp.zeros(q.shape, bool),
+            jnp.int32(0),
+        ),
     )
     return res
 

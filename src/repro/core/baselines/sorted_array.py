@@ -29,7 +29,9 @@ class SortedArrayState:
         return 2 * (self.keys.size * 4 + self.vals.size * 4)
 
 
-def build(sorted_keys: jax.Array, sorted_vals: jax.Array, capacity: int) -> SortedArrayState:
+def build(
+    sorted_keys: jax.Array, sorted_vals: jax.Array, capacity: int
+) -> SortedArrayState:
     k = jnp.full((capacity,), EMPTY, KEY_DTYPE).at[: sorted_keys.shape[0]].set(
         sorted_keys.astype(KEY_DTYPE)
     )
@@ -65,7 +67,10 @@ def insert(state: SortedArrayState, sorted_keys: jax.Array, sorted_vals: jax.Arr
     allk = jnp.concatenate([state.keys, sorted_keys.astype(KEY_DTYPE)])
     allv = jnp.concatenate([state.vals, sorted_vals.astype(VAL_DTYPE)])
     src = jnp.concatenate(
-        [jnp.zeros(state.keys.shape[0], jnp.int32), jnp.ones(sorted_keys.shape[0], jnp.int32)]
+        [
+            jnp.zeros(state.keys.shape[0], jnp.int32),
+            jnp.ones(sorted_keys.shape[0], jnp.int32),
+        ]
     )
     order = jnp.lexsort((src, allk))
     k_s, v_s = allk[order], allv[order]

@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.state import EMPTY, KEY_DTYPE, MIN_KEY, FliXState
+from repro.core.state import EMPTY, FliXState
 
 
 def sort_batch(keys: jax.Array, vals: jax.Array | None = None):
@@ -95,9 +95,7 @@ def gather_kv_sublists(
     """:func:`gather_sublists` for a (key, val) batch: the value tile follows
     its key's slot (0 at EMPTY slots).  Returns (keys, vals, counts,
     true_counts)."""
-    tile_k, counts, true_counts = gather_sublists(
-        sorted_keys, starts, ends, max_len
-    )
+    tile_k, counts, true_counts = gather_sublists(sorted_keys, starts, ends, max_len)
     padded_v = jnp.concatenate(
         [sorted_vals, jnp.zeros((max_len,), sorted_vals.dtype)]
     )

@@ -36,7 +36,9 @@ def plan_geometry(
     return num_buckets, nodes_per_bucket, node_size
 
 
-@partial(jax.jit, static_argnames=("num_buckets", "nodes_per_bucket", "node_size", "fill"))
+@partial(
+    jax.jit, static_argnames=("num_buckets", "nodes_per_bucket", "node_size", "fill")
+)
 def build_from_sorted(
     sorted_keys: jax.Array,
     sorted_vals: jax.Array,

@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND, VAL_DTYPE, FliXState
+from repro.core.state import EMPTY, KEY_DTYPE, VAL_DTYPE, FliXState
 
 
 @jax.jit

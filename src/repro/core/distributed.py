@@ -2,44 +2,82 @@
 
 Buckets are *range-partitioned* across shards (contiguous MKBA ranges per
 device), so the flipped paradigm lifts directly to the cluster level: a
-sorted operation batch is routed by the same fence-searchsorted primitive —
-each shard (a super-bucket) pulls its slice.
+shard is just a super-bucket, and a sorted operation batch is routed by the
+same fence-searchsorted primitive — each shard pulls its slice.
 
-Two routing modes:
-  * ``replicated`` — the sorted batch is broadcast; each shard masks to its
-    fence range and processes locally; results combine with one pmax/pmin.
-    Two collectives per batch; right for query-dominant workloads where the
-    batch is small relative to the structure (the paper's regime).
-  * ``a2a`` — each shard holds a batch shard; per-destination slice
-    boundaries (searchsorted of the global partition fences) drive a padded
-    ``all_to_all``.  Right at 1000-node scale where batches are ingested
-    sharded.  Fixed per-pair capacity keeps shapes static; overflow is
-    counted and surfaced (the caller re-routes with a bigger capacity).
+Since PR 5 the unit of distributed execution is the **mixed batch**:
+:func:`shard_apply_ops` runs one whole ``OpBatch`` (POINT / SUCCESSOR /
+INSERT / DELETE / RANGE) under a single ``shard_map`` step, with per-shard
+compute delegated to ``core.ops.apply_ops`` *unchanged* — including the
+``impl="fused"`` compute-to-bucket kernel and buffer donation — so the
+hierarchy composes: bucket ⊂ shard ⊂ cluster.  The legacy per-op-type
+entry points (``insert``/``delete``/``point_query``/``successor_query``)
+are gone.
 
-All ops run under ``shard_map`` over one mesh axis; per-shard compute is the
-single-device FliX code unchanged — compute-to-bucket composes across the
-hierarchy.
+Two routing modes (DESIGN.md §11):
+
+* ``replicated`` — the sorted batch is broadcast; each shard masks the
+  *update* ops to its fence range (reads run everywhere — a successor or
+  range answer may live outside the op key's owner shard) and recombines
+  with one collective round.  Right for query-dominant workloads where the
+  batch is small relative to the structure (the paper's regime).
+* ``a2a`` — each shard holds a batch shard; op rows are routed to their
+  owner shard by one partition-fence searchsorted driving a padded
+  ``all_to_all``, results travel back over the inverse ``all_to_all``.
+  Right at ingest scale where batches arrive sharded.  Fixed per-pair
+  ``capacity`` keeps shapes static; overflow is counted and surfaced in
+  ``stats["a2a_overflow"]`` (the caller re-routes with a bigger capacity —
+  ``shard_apply_ops`` never mutates its input, so the retry replays the
+  same batch on the same pre-batch index).
+
+RANGE results are recombined into the dense exclusive-scan contract of
+DESIGN.md §10 with *global* offsets: per-op local in-range counts are
+``all_gather``-ed, an exclusive scan over shards gives each shard its slot
+window inside every op's segment, and truncation is applied against the
+single global ``max_results`` budget — byte-identical to the single-device
+``apply_ops`` output.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.build import build_from_sorted
-from repro.core.delete import delete as local_delete
-from repro.core.insert import insert as local_insert
-from repro.core.query import point_query as local_point_query
-from repro.core.query import successor_query as local_successor
-from repro.core.state import EMPTY, KEY_DTYPE, MIN_KEY, NOT_FOUND, VAL_DTYPE, FliXState
-
 from repro.compat import shard_map as _shard_map
+from repro.core.build import build_from_sorted
+from repro.core.ops import (
+    DEFAULT_MAX_RESULTS,
+    OP_DELETE,
+    OP_INSERT,
+    OP_NOP,
+    OP_POINT,
+    OP_RANGE,
+    OP_SUCCESSOR,
+    OpBatch,
+    apply_ops,
+)
+from repro.core.query import _suffix_min_with_index, flat_rank, range_offsets
+from repro.core.state import (
+    EMPTY,
+    KEY_DTYPE,
+    MIN_KEY,
+    NOT_FOUND,
+    VAL_DTYPE,
+    FliXState,
+    flatten_bucket_sorted,
+)
+
+# max_results handed to the *inner* apply_ops when the cross-shard range
+# phase answers the batch's RANGE ops (the inner dense arrays are ignored)
+_INNER_MR = 8
 
 
 class ShardedFliX(NamedTuple):
@@ -49,27 +87,49 @@ class ShardedFliX(NamedTuple):
     axis: str
 
 
-def shard_build(
-    sorted_keys, sorted_vals, mesh, *, axis: str = "shards",
-    node_size: int = 32, nodes_per_bucket: int = 16, fill: float = 0.5,
-) -> ShardedFliX:
-    """Build then range-partition across ``mesh``'s ``axis``."""
-    import math
+def make_shard_mesh(n_shards: int, *, axis: str = "shards") -> jax.sharding.Mesh:
+    """A 1-D mesh over the first ``n_shards`` local devices."""
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        raise ValueError(
+            f"need {n_shards} devices for {n_shards} shards, have {len(devs)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU)"
+        )
+    return jax.sharding.Mesh(np.array(devs[:n_shards]), (axis,))
 
+
+def shard_build(
+    sorted_keys,
+    sorted_vals,
+    mesh,
+    *,
+    axis: str = "shards",
+    node_size: int = 32,
+    nodes_per_bucket: int = 16,
+    fill: float = 0.5,
+    extra_keys: int = 0,
+) -> ShardedFliX:
+    """Build then range-partition across ``mesh``'s ``axis``.
+
+    ``extra_keys`` over-provisions the bucket count (the distributed
+    analogue of ``restructure_grow``'s headroom argument) so a subsequent
+    batch of that many inserts cannot overflow a fresh structure.
+    """
     n_shards = int(mesh.shape[axis])
     p = max(1, int(node_size * fill))
-    n = int(jnp.sum(sorted_keys != EMPTY))
+    n = int(jnp.sum(sorted_keys != EMPTY)) + extra_keys
     per_shard_buckets = max(1, math.ceil(math.ceil(n / p) / n_shards))
     nb = per_shard_buckets * n_shards
     state = build_from_sorted(
-        sorted_keys, sorted_vals,
-        num_buckets=nb, nodes_per_bucket=nodes_per_bucket,
-        node_size=node_size, fill=fill,
+        sorted_keys,
+        sorted_vals,
+        num_buckets=nb,
+        nodes_per_bucket=nodes_per_bucket,
+        node_size=node_size,
+        fill=fill,
     )
     part_fences = state.mkba.reshape(n_shards, -1)[:, -1]
-    lower_fence = jnp.concatenate(
-        [jnp.array([MIN_KEY], KEY_DTYPE), part_fences[:-1]]
-    )
+    lower_fence = jnp.concatenate([jnp.array([MIN_KEY], KEY_DTYPE), part_fences[:-1]])
 
     shard3 = NamedSharding(mesh, P(axis, None, None))
     shard2 = NamedSharding(mesh, P(axis, None))
@@ -92,6 +152,70 @@ def shard_build(
     )
 
 
+def shard_restructure(
+    idx: ShardedFliX,
+    mesh,
+    *,
+    extra_keys: int = 0,
+    fill: float = 0.5,
+) -> ShardedFliX:
+    """Rebalance partition fences from the live-key distribution.
+
+    The cluster analogue of the paper's §3.5 relaunch: the host pulls the
+    live contents, re-plans a uniform geometry for ``live + extra_keys``
+    keys, and re-partitions so every shard owns an equal bucket count of an
+    evenly-filled structure — skew accumulated since the last build (every
+    new tenant hashing into one shard's fence range, say) is erased.
+
+    Host-driven by design, exactly like single-device ``restructure``: the
+    new static geometry (bucket count, possibly a widened chain) cannot be
+    chosen on device.  Functional — the input index is untouched.
+    """
+    state = idx.state
+    flat_k = np.asarray(jax.device_get(state.keys)).reshape(-1)
+    flat_v = np.asarray(jax.device_get(state.vals)).reshape(-1)
+    order = np.argsort(flat_k, kind="stable")  # EMPTY sentinels sort last
+    sorted_k, sorted_v = flat_k[order], flat_v[order]
+
+    live = int((flat_k != EMPTY).sum())
+    p = max(1, int(state.node_size * fill))
+    cap = state.nodes_per_bucket * state.node_size
+    if p + extra_keys > cap:
+        # pathological skew: widen the chain so one bucket can absorb the
+        # whole pending batch (mirrors restructure_grow)
+        npb = math.ceil((p + extra_keys) / state.node_size)
+    else:
+        npb = state.nodes_per_bucket
+    return shard_build(
+        jnp.asarray(sorted_k),
+        jnp.asarray(sorted_v),
+        mesh,
+        axis=idx.axis,
+        node_size=state.node_size,
+        nodes_per_bucket=npb,
+        fill=fill,
+        extra_keys=extra_keys,
+    )
+
+
+def shard_live_counts(idx: ShardedFliX, mesh) -> jax.Array:
+    """Per-shard live-key counts ``[n_shards]`` (balance diagnostics)."""
+    axis = idx.axis
+
+    def body(node_count):
+        return jax.lax.all_gather(jnp.sum(node_count).reshape(1), axis).reshape(-1)
+
+    return jax.jit(
+        _shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(axis, None),),
+            out_specs=P(),
+            check_vma=False,
+        )
+    )(idx.state.node_count)
+
+
 def _state_specs(axis: str) -> FliXState:
     return FliXState(
         keys=P(axis, None, None),
@@ -104,153 +228,504 @@ def _state_specs(axis: str) -> FliXState:
     )
 
 
-def _mask_to_range(sorted_keys, lower, upper):
-    """Keep keys in (lower, upper]; push the rest to an EMPTY tail."""
-    in_range = (sorted_keys > lower) & (sorted_keys <= upper)
-    masked = jnp.where(in_range, sorted_keys, EMPTY)
-    return jnp.sort(masked), in_range
+def replicate_batch(ops: OpBatch, mesh) -> OpBatch:
+    """Place an :class:`OpBatch` fully replicated on ``mesh``."""
+    rep = NamedSharding(mesh, P())
+    return OpBatch(
+        tag=jax.device_put(ops.tag, rep),
+        key=jax.device_put(ops.key, rep),
+        val=jax.device_put(ops.val, rep),
+    )
 
 
-def point_query(idx: ShardedFliX, sorted_queries: jax.Array, mesh) -> jax.Array:
-    """Replicated-batch distributed point query (one pmax combine)."""
-    axis = idx.axis
+def shard_batch(ops: OpBatch, mesh, *, axis: str = "shards") -> OpBatch:
+    """Position-shard an :class:`OpBatch` over ``axis`` (a2a-mode input).
 
-    def body(state, lf, queries):
+    Each shard's chunk must be key-sorted locally (a globally sorted batch
+    split into contiguous chunks qualifies); chunks from different shards
+    need no mutual order.
+    """
+    sh = NamedSharding(mesh, P(axis))
+    return OpBatch(
+        tag=jax.device_put(ops.tag, sh),
+        key=jax.device_put(ops.key, sh),
+        val=jax.device_put(ops.val, sh),
+    )
+
+
+def _inverse_permutation(order: jax.Array) -> jax.Array:
+    return jnp.zeros_like(order).at[order].set(
+        jnp.arange(order.shape[0], dtype=order.dtype)
+    )
+
+
+def _pmax_bool(flag: jax.Array, axis: str) -> jax.Array:
+    return jax.lax.pmax(flag.astype(jnp.int32), axis).astype(bool)
+
+
+def _post_update_shard_min(state: FliXState):
+    """Smallest present key in this shard (EMPTY if none) and its value."""
+    bucket_min = jnp.where(state.num_nodes > 0, state.keys[:, 0, 0], EMPTY)
+    b = jnp.argmin(bucket_min).astype(jnp.int32)
+    m = bucket_min[b]
+    v = jnp.where(m != EMPTY, state.vals[b, 0, 0], NOT_FOUND)
+    return m, v
+
+
+def _cross_shard_range(
+    state: FliXState,
+    is_range: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    axis: str,
+    max_results: int,
+):
+    """Answer RANGE ops against the union of all shards' post-update states.
+
+    The §10 dense exclusive-scan contract with *global* offsets: local
+    in-range counts are gathered across shards, an exclusive scan over the
+    shard axis gives this shard its slot window inside every op's segment,
+    and each emitted slot is filled by exactly one shard — so a ``psum``
+    recombines the dense arrays.  ``is_range``/``lo``/``hi`` must be
+    replicated and in global sorted-batch order; every return value is
+    replicated and byte-identical to single-device ``dense_range_scan``.
+    """
+    n = lo.shape[0]
+    flat_k, flat_v = flatten_bucket_sorted(state)
+    nb = flat_k.shape[0]
+    live = jnp.sum(flat_k != EMPTY, axis=1).astype(jnp.int32)
+    pref = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(live).astype(jnp.int32)]
+    )
+    rank_lo = flat_rank(flat_k, pref, state.mkba, lo)
+    rank_hi = flat_rank(flat_k, pref, state.mkba, hi)
+    local_full = jnp.maximum(rank_hi - rank_lo, 0)
+    local_full = jnp.where(is_range, local_full, 0).astype(jnp.int32)
+
+    counts_all = jax.lax.all_gather(local_full, axis)          # [S, N]
+    me = jax.lax.axis_index(axis)
+    global_full = jnp.sum(counts_all, axis=0)
+    prefix_lt = (jnp.cumsum(counts_all, axis=0) - counts_all)[me]
+
+    start, emit, total_emit, truncated = range_offsets(
+        global_full, is_range, max_results
+    )
+
+    # slot ownership: the shared §10 owner rule, then "is slot p's in-op
+    # offset inside MY shard's window [prefix_lt, prefix_lt + local_full)?"
+    p = jnp.arange(max_results, dtype=jnp.int32)
+    owner = jnp.clip(
+        jnp.searchsorted(start, p, side="right").astype(jnp.int32) - 1, 0, n - 1
+    )
+    j = p - start[owner]
+    valid = p < total_emit
+    mine = valid & (j >= prefix_lt[owner]) & (j < prefix_lt[owner] + local_full[owner])
+    g = rank_lo[owner] + (j - prefix_lt[owner])                # local key rank
+    g_c = jnp.where(mine, g, 0)
+    src_b = jnp.clip(
+        jnp.searchsorted(pref, g_c, side="right").astype(jnp.int32) - 1, 0, nb - 1
+    )
+    src_p = g_c - pref[src_b]
+    rk = jax.lax.psum(jnp.where(mine, flat_k[src_b, src_p], 0), axis)
+    rv = jax.lax.psum(jnp.where(mine, flat_v[src_b, src_p], 0), axis)
+    rk = jnp.where(valid, rk, EMPTY)
+    rv = jnp.where(valid, rv, NOT_FOUND)
+    return (
+        rk,
+        rv,
+        jnp.where(is_range, start, 0),
+        jnp.where(is_range, emit, 0),
+        truncated,
+    )
+
+
+def _empty_range_outputs(n: int, max_results: int):
+    return (
+        jnp.full((max_results,), EMPTY, KEY_DTYPE),
+        jnp.full((max_results,), NOT_FOUND, VAL_DTYPE),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.int32(0),
+    )
+
+
+def _combine_stats(ins_stats, axis: str, truncated, a2a_overflow):
+    return {
+        "inserted": jax.lax.psum(ins_stats["inserted"], axis),
+        "deleted": jax.lax.psum(ins_stats["deleted"], axis),
+        "overflowed_buckets": jax.lax.psum(ins_stats["overflowed_buckets"], axis),
+        "range_truncated": truncated,
+        "a2a_overflow": a2a_overflow,
+    }
+
+
+@functools.lru_cache(maxsize=64)
+def _build_replicated(mesh, axis, impl, max_results, has_ranges, donate):
+    """jit(shard_map)-compiled replicated-routing executor (memoized)."""
+
+    def body(state, lf, tag, key, val):
         lf = lf[0]
-        res = local_point_query(state, queries)
         upper = state.mkba[-1]
-        mine = (queries > lf) & (queries <= upper)
-        res = jnp.where(mine, res, NOT_FOUND)
-        return jax.lax.pmax(res, axis)
-
-    return jax.jit(
-        _shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(_state_specs(axis), P(axis), P()),
-            out_specs=P(),
+        is_upd = (tag == OP_INSERT) | (tag == OP_DELETE)
+        is_rng = tag == OP_RANGE
+        # updates run on their owner shard only; POINT/SUCCESSOR run
+        # everywhere (a successor answer may live past the owner's fence);
+        # RANGE is lifted out entirely for the cross-shard phase
+        keep = (~is_upd | ((key > lf) & (key <= upper))) & ~is_rng
+        mtag = jnp.where(keep, tag, OP_NOP)
+        mkey = jnp.where(keep, key, EMPTY)
+        mval = jnp.where(keep, val, 0)
+        order = jnp.argsort(mkey, stable=True)
+        inv = _inverse_permutation(order)
+        new_state, res, st = apply_ops(
+            state,
+            OpBatch(tag=mtag[order], key=mkey[order], val=mval[order]),
+            impl=impl,
+            max_results=_INNER_MR,
         )
-    )(idx.state, idx.lower_fence, sorted_queries.astype(KEY_DTYPE))
+        value = res["value"][inv]
+        succ_key = res["succ_key"][inv]
 
+        # POINT: at most one shard holds the key, the rest answer NOT_FOUND
+        is_point = tag == OP_POINT
+        hit = is_point & (value != NOT_FOUND)
+        pv = jax.lax.psum(jnp.where(hit, value, 0), axis)
+        n_hit = jax.lax.psum(hit.astype(jnp.int32), axis)
+        point_val = jnp.where(n_hit > 0, pv, NOT_FOUND)
 
-def successor_query(idx: ShardedFliX, sorted_queries: jax.Array, mesh):
-    """Distributed successor: local candidate per shard, pmin combine."""
-    axis = idx.axis
+        # SUCCESSOR: shard-local candidates, global min; shard key ranges
+        # are disjoint so the min is attained by exactly one shard
+        is_succ = tag == OP_SUCCESSOR
+        cand = jnp.where(is_succ, succ_key, EMPTY)
+        kmin = jax.lax.pmin(cand, axis)
+        winner = is_succ & (cand == kmin) & (cand != EMPTY)
+        sv = jax.lax.psum(jnp.where(winner, value, 0), axis)
+        succ_val = jnp.where(kmin != EMPTY, sv, NOT_FOUND)
 
-    def body(state, lf, queries):
-        lf = lf[0]
-        # clamp each query into this shard's range so local successor search
-        # starts at the right place for queries from earlier shards
-        qc = jnp.clip(queries, lf + 1, EMPTY - 1)
-        k, v = local_successor(state, qc)
-        # candidates only count when ≥ the original query
-        ok = (k != EMPTY) & (k >= queries)
-        k = jnp.where(ok, k, EMPTY)
-        kmin = jax.lax.pmin(k, axis)
-        vsel = jnp.where((k == kmin) & ok, v, NOT_FOUND)
-        return kmin, jax.lax.pmax(vsel, axis)
+        if has_ranges:
+            rk, rv, rstart, rcnt, rtrunc = _cross_shard_range(
+                new_state, is_rng, key, val.astype(KEY_DTYPE), axis, max_results
+            )
+        else:
+            rk, rv, rstart, rcnt, rtrunc = _empty_range_outputs(
+                key.shape[0], max_results
+            )
 
-    return jax.jit(
-        _shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(_state_specs(axis), P(axis), P()),
-            out_specs=(P(), P()),
+        results = {
+            "value": jnp.where(
+                is_point, point_val, jnp.where(is_succ, succ_val, NOT_FOUND)
+            ),
+            "succ_key": jnp.where(is_succ, kmin, EMPTY),
+            "range_key": rk,
+            "range_val": rv,
+            "range_start": rstart,
+            "range_count": rcnt,
+        }
+        stats = _combine_stats(st, axis, rtrunc, jnp.int32(0))
+        new_state = dataclasses.replace(
+            new_state,
+            needs_restructure=_pmax_bool(new_state.needs_restructure, axis),
         )
-    )(idx.state, idx.lower_fence, sorted_queries.astype(KEY_DTYPE))
+        return new_state, results, stats
+
+    specs = _state_specs(axis)
+    rep_results = {
+        "value": P(),
+        "succ_key": P(),
+        "range_key": P(),
+        "range_val": P(),
+        "range_start": P(),
+        "range_count": P(),
+    }
+    rep_stats = {
+        "inserted": P(),
+        "deleted": P(),
+        "overflowed_buckets": P(),
+        "range_truncated": P(),
+        "a2a_overflow": P(),
+    }
+    fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(specs, P(axis), P(), P(), P()),
+        out_specs=(specs, rep_results, rep_stats),
+        check_vma=False,
+    )
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(fn, donate_argnums=donate_argnums)
 
 
-def insert(idx: ShardedFliX, sorted_keys, sorted_vals, mesh) -> ShardedFliX:
-    """Replicated-batch distributed insert: each shard takes its range."""
-    axis = idx.axis
-
-    def body(state, lf, keys, vals):
-        lf = lf[0]
-        upper = state.mkba[-1]
-        masked, in_range = _mask_to_range(keys, lf, upper)
-        order = jnp.argsort(jnp.where(in_range, keys, EMPTY), stable=True)
-        new_state, _ = local_insert(state, masked, vals[order])
-        flag = jax.lax.pmax(
-            new_state.needs_restructure.astype(jnp.int32), axis
-        ).astype(bool)
-        return dataclasses.replace(new_state, needs_restructure=flag)
-
-    new_state = jax.jit(
-        _shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(_state_specs(axis), P(axis), P(), P()),
-            out_specs=_state_specs(axis),
-        )
-    )(idx.state, idx.lower_fence, sorted_keys.astype(KEY_DTYPE), sorted_vals.astype(VAL_DTYPE))
-    return idx._replace(state=new_state)
-
-
-def delete(idx: ShardedFliX, sorted_keys, mesh) -> ShardedFliX:
-    axis = idx.axis
-
-    def body(state, lf, keys):
-        lf = lf[0]
-        masked, _ = _mask_to_range(keys, lf, state.mkba[-1])
-        new_state, _ = local_delete(state, masked)
-        flag = jax.lax.pmax(
-            new_state.needs_restructure.astype(jnp.int32), axis
-        ).astype(bool)
-        return dataclasses.replace(new_state, needs_restructure=flag)
-
-    new_state = jax.jit(
-        _shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(_state_specs(axis), P(axis), P()),
-            out_specs=_state_specs(axis),
-        )
-    )(idx.state, idx.lower_fence, sorted_keys.astype(KEY_DTYPE))
-    return idx._replace(state=new_state)
-
-
-# ---------------------------------------------------------------------------
-# all-to-all routing (sharded-ingest mode)
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("axis", "capacity", "n_shards"))
-def _route_kernel(batch_shard, vals_shard, fences, *, axis, capacity, n_shards):
-    """Inside shard_map: route my batch shard to owner shards (padded A2A)."""
-    # my keys' destinations via the global partition fences
-    ends = jnp.searchsorted(batch_shard, fences, side="right")
-    starts = jnp.concatenate([jnp.zeros((1,), ends.dtype), ends[:-1]])
-    counts = (ends - starts).astype(jnp.int32)
-    overflow = jnp.sum(jnp.maximum(counts - capacity, 0))
-
-    idx = starts[:, None] + jnp.arange(capacity, dtype=jnp.int32)[None]
-    valid = idx < ends[:, None]
-    idx_c = jnp.minimum(idx, batch_shard.shape[0] - 1)
-    send_k = jnp.where(valid, batch_shard[idx_c], EMPTY)        # [S, cap]
-    send_v = jnp.where(valid, vals_shard[idx_c], 0)
-
-    recv_k = jax.lax.all_to_all(send_k, axis, 0, 0, tiled=False)
-    recv_v = jax.lax.all_to_all(send_v, axis, 0, 0, tiled=False)
-    flat_k = recv_k.reshape(-1)
-    order = jnp.argsort(flat_k, stable=True)
-    return flat_k[order], recv_v.reshape(-1)[order], overflow.reshape(1)
-
-
-def route_a2a(idx: ShardedFliX, keys_shard, vals_shard, mesh, *, capacity: int):
-    """Route a *sharded* sorted batch to owner shards. Returns per-shard
-    sorted (keys, vals, overflow) ready for local insert/query."""
-    axis = idx.axis
+@functools.lru_cache(maxsize=64)
+def _build_a2a(mesh, axis, impl, max_results, has_ranges, capacity, donate):
+    """jit(shard_map)-compiled a2a-routing executor (memoized)."""
     n_shards = int(mesh.shape[axis])
 
-    def body(keys, vals, fences):
-        return _route_kernel(
-            keys, vals, fences, axis=axis, capacity=capacity, n_shards=n_shards
+    def body(state, part_fences, tag, key, val):
+        n_local = key.shape[0]
+        me = jax.lax.axis_index(axis)
+        is_rng = tag == OP_RANGE
+        # RANGE rows never ride the a2a (the cross-shard phase answers them
+        # from the gathered batch); masking them to the EMPTY tail keeps the
+        # local sort a valid routing order
+        rkey = jnp.where(is_rng, EMPTY, key)
+        order = jnp.argsort(rkey, stable=True)
+        inv = _inverse_permutation(order)
+        s_tag, s_key, s_val = tag[order], rkey[order], val[order]
+
+        # per-destination slices by one partition-fence searchsorted
+        ends = jnp.searchsorted(s_key, part_fences, side="right").astype(jnp.int32)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), ends[:-1]])
+        counts = ends - starts
+        overflow = jnp.sum(jnp.maximum(counts - capacity, 0))
+
+        idx = starts[:, None] + jnp.arange(capacity, dtype=jnp.int32)[None]
+        valid = idx < ends[:, None]
+        idx_c = jnp.minimum(idx, n_local - 1)
+        send_t = jnp.where(valid, s_tag[idx_c], OP_NOP)
+        send_k = jnp.where(valid, s_key[idx_c], EMPTY)
+        send_v = jnp.where(valid, s_val[idx_c], 0)
+
+        recv_t = jax.lax.all_to_all(send_t, axis, 0, 0).reshape(-1)
+        recv_k = jax.lax.all_to_all(send_k, axis, 0, 0).reshape(-1)
+        recv_v = jax.lax.all_to_all(send_v, axis, 0, 0).reshape(-1)
+        rord = jnp.argsort(recv_k, stable=True)
+        rinv = _inverse_permutation(rord)
+        new_state, res, st = apply_ops(
+            state,
+            OpBatch(tag=recv_t[rord], key=recv_k[rord], val=recv_v[rord]),
+            impl=impl,
+            max_results=_INNER_MR,
+        )
+        value_r = res["value"][rinv]
+        skey_r = res["succ_key"][rinv]
+
+        # successor fallback across shards: an owner whose local state has
+        # no key ≥ q answers with the first non-empty *later* shard's
+        # minimum — the §8 fence-row trick one level up the hierarchy
+        m, mv = _post_update_shard_min(new_state)
+        mins = jax.lax.all_gather(m.reshape(1), axis).reshape(-1)      # [S]
+        mvals = jax.lax.all_gather(mv.reshape(1), axis).reshape(-1)
+        sufk, sufi = _suffix_min_with_index(mins)
+        sufk_pad = jnp.concatenate([sufk, jnp.array([EMPTY], KEY_DTYPE)])
+        sufi_pad = jnp.concatenate([sufi, jnp.array([0], jnp.int32)])
+        fb_key = sufk_pad[me + 1]
+        fb_val = jnp.where(fb_key != EMPTY, mvals[sufi_pad[me + 1]], NOT_FOUND)
+        needs_fb = (recv_t == OP_SUCCESSOR) & (skey_r == EMPTY)
+        skey_r = jnp.where(needs_fb, fb_key, skey_r)
+        value_r = jnp.where(needs_fb, fb_val, value_r)
+
+        # inverse a2a: owner d's row s carries results for the rows source
+        # s sent to d, in their original slots
+        back_v = jax.lax.all_to_all(value_r.reshape(n_shards, capacity), axis, 0, 0)
+        back_sk = jax.lax.all_to_all(skey_r.reshape(n_shards, capacity), axis, 0, 0)
+        dest = jnp.where(valid, idx_c, n_local).reshape(-1)
+        out_v = (
+            jnp.full((n_local + 1,), NOT_FOUND, VAL_DTYPE)
+            .at[dest]
+            .set(back_v.reshape(-1))[:n_local][inv]
+        )
+        out_sk = (
+            jnp.full((n_local + 1,), EMPTY, KEY_DTYPE)
+            .at[dest]
+            .set(back_sk.reshape(-1))[:n_local][inv]
         )
 
-    return jax.jit(
-        _shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(P(axis), P(axis), P()),
-            out_specs=(P(axis), P(axis), P(axis)),
+        if has_ranges:
+            # gather every shard's RANGE rows (tagged with their global
+            # input position), order them as make_ops would, and run the
+            # global-offset range phase
+            g_tag = jax.lax.all_gather(tag, axis).reshape(-1)
+            g_lo = jax.lax.all_gather(key, axis).reshape(-1)
+            g_hi = jax.lax.all_gather(val, axis).reshape(-1)
+            g_isr = g_tag == OP_RANGE
+            gorder = jnp.argsort(jnp.where(g_isr, g_lo, EMPTY), stable=True)
+            isr_s = g_isr[gorder]
+            rk, rv, start_s, emit_s, rtrunc = _cross_shard_range(
+                new_state,
+                isr_s,
+                g_lo[gorder],
+                g_hi[gorder].astype(KEY_DTYPE),
+                axis,
+                max_results,
+            )
+            # scatter per-op offsets back to this shard's input rows
+            gid = gorder
+            mine = isr_s & (gid // n_local == me)
+            back = jnp.where(mine, gid - me * n_local, n_local)
+            zeros = jnp.zeros((n_local + 1,), jnp.int32)
+            rstart = zeros.at[back].set(start_s)[:n_local]
+            rcnt = zeros.at[back].set(emit_s)[:n_local]
+        else:
+            rk, rv, _, _, rtrunc = _empty_range_outputs(n_local, max_results)
+            rstart = jnp.zeros((n_local,), jnp.int32)
+            rcnt = jnp.zeros((n_local,), jnp.int32)
+
+        results = {
+            "value": out_v,
+            "succ_key": out_sk,
+            "range_key": rk,
+            "range_val": rv,
+            "range_start": rstart,
+            "range_count": rcnt,
+        }
+        stats = _combine_stats(
+            st, axis, rtrunc, jax.lax.psum(overflow, axis).astype(jnp.int32)
         )
-    )(keys_shard.astype(KEY_DTYPE), vals_shard.astype(VAL_DTYPE), idx.part_fences)
+        new_state = dataclasses.replace(
+            new_state,
+            needs_restructure=_pmax_bool(new_state.needs_restructure, axis),
+        )
+        return new_state, results, stats
+
+    specs = _state_specs(axis)
+    out_results = {
+        "value": P(axis),
+        "succ_key": P(axis),
+        "range_key": P(),
+        "range_val": P(),
+        "range_start": P(axis),
+        "range_count": P(axis),
+    }
+    rep_stats = {
+        "inserted": P(),
+        "deleted": P(),
+        "overflowed_buckets": P(),
+        "range_truncated": P(),
+        "a2a_overflow": P(),
+    }
+    fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(specs, P(), P(axis), P(axis), P(axis)),
+        out_specs=(specs, out_results, rep_stats),
+        check_vma=False,
+    )
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(fn, donate_argnums=donate_argnums)
+
+
+def shard_apply_ops(
+    idx: ShardedFliX,
+    ops: OpBatch,
+    mesh,
+    *,
+    routing: str = "replicated",
+    impl: str = "auto",
+    max_results: int = DEFAULT_MAX_RESULTS,
+    donate: bool = False,
+    capacity: int | None = None,
+    has_updates: bool | None = None,
+    has_ranges: bool | None = None,
+):
+    """Execute one mixed sorted batch across the mesh.
+
+    Returns ``(idx', results, stats)`` with the single-device ``apply_ops``
+    contract (DESIGN.md §11):
+
+    * ``routing="replicated"`` — ``ops`` is one global sorted batch (any
+      placement; it is broadcast).  ``results`` is replicated and aligned
+      with the sorted batch, byte-identical to ``apply_ops`` on the
+      union state.
+    * ``routing="a2a"`` — ``ops`` is position-sharded over the mesh axis
+      (:func:`shard_batch`), each shard's chunk key-sorted.  ``value`` /
+      ``succ_key`` / ``range_start`` / ``range_count`` come back sharded,
+      aligned with each shard's input rows; the dense ``range_key`` /
+      ``range_val`` arrays and ``stats`` are replicated.  ``capacity``
+      bounds rows per (source, destination) pair (default: chunk size,
+      which can never overflow); exceeding it is *not* an error — dropped
+      rows are counted in ``stats["a2a_overflow"]`` and the caller replays
+      the batch on the same (unmutated) ``idx`` with a larger capacity.
+
+    ``impl`` / ``donate`` / ``max_results`` are forwarded to the per-shard
+    ``apply_ops`` (``impl="auto"`` resolves host-side exactly as on a
+    single device; donation hands the sharded state's buffers to the step).
+    On bucket overflow the returned state carries ``needs_restructure`` —
+    hosts use :func:`shard_apply_ops_safe`, whose retry path regrows via
+    :func:`shard_restructure`.
+    """
+    if routing not in ("replicated", "a2a"):
+        raise ValueError(f"unknown routing: {routing!r}")
+    if impl == "auto":
+        if jax.default_backend() != "tpu":
+            impl = "reference"
+        else:
+            if has_updates is None:
+                has_updates = bool(
+                    jnp.any((ops.tag == OP_INSERT) | (ops.tag == OP_DELETE))
+                )
+            impl = "fused" if has_updates else "reference"
+    if has_ranges is None:
+        has_ranges = bool(jnp.any(ops.tag == OP_RANGE))
+    donate = donate and jax.default_backend() != "cpu"
+
+    if routing == "replicated":
+        fn = _build_replicated(mesh, idx.axis, impl, max_results, has_ranges, donate)
+        new_state, results, stats = fn(
+            idx.state, idx.lower_fence, ops.tag, ops.key, ops.val
+        )
+    else:
+        n_shards = int(mesh.shape[idx.axis])
+        if ops.size % n_shards:
+            raise ValueError(
+                f"a2a batch size {ops.size} not divisible by {n_shards} shards"
+            )
+        if capacity is None:
+            capacity = ops.size // n_shards
+        fn = _build_a2a(mesh, idx.axis, impl, max_results, has_ranges, capacity, donate)
+        new_state, results, stats = fn(
+            idx.state, idx.part_fences, ops.tag, ops.key, ops.val
+        )
+    return idx._replace(state=new_state), results, stats
+
+
+def shard_apply_ops_safe(
+    idx: ShardedFliX,
+    ops: OpBatch,
+    mesh,
+    *,
+    routing: str = "replicated",
+    impl: str = "auto",
+    max_results: int = DEFAULT_MAX_RESULTS,
+    capacity: int | None = None,
+    has_updates: bool | None = None,
+    has_ranges: bool | None = None,
+):
+    """Host-level driver: apply, restructure-and-retry on bucket overflow.
+
+    Mirrors ``apply_ops_safe`` one level up: the retry replays the *whole*
+    batch on a rebalanced (``shard_restructure``-grown) pre-batch index,
+    which is safe because :func:`shard_apply_ops` never mutates its input
+    (and is also why this driver never donates).  ``has_updates`` /
+    ``has_ranges`` let drivers that already know the batch composition
+    host-side skip the device syncs (``serve/kv_index.py`` does).
+    """
+    new_idx, results, stats = shard_apply_ops(
+        idx,
+        ops,
+        mesh,
+        routing=routing,
+        impl=impl,
+        max_results=max_results,
+        capacity=capacity,
+        has_updates=has_updates,
+        has_ranges=has_ranges,
+    )
+    overflowed = bool(new_idx.state.needs_restructure) and not bool(
+        idx.state.needs_restructure
+    )
+    if overflowed:
+        n_ins = int(jnp.sum(ops.tag == OP_INSERT))
+        grown = shard_restructure(idx, mesh, extra_keys=max(n_ins, 1))
+        new_idx, results, stats = shard_apply_ops(
+            grown,
+            ops,
+            mesh,
+            routing=routing,
+            impl=impl,
+            max_results=max_results,
+            capacity=capacity,
+            has_updates=has_updates,
+            has_ranges=has_ranges,
+        )
+        assert not bool(new_idx.state.needs_restructure), "post-restructure overflow"
+    return new_idx, results, stats

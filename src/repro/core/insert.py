@@ -30,7 +30,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.batch import bucket_slices, gather_kv_sublists
-from repro.core.state import EMPTY, KEY_DTYPE, VAL_DTYPE, FliXState, flatten_bucket_sorted
+from repro.core.state import (
+    EMPTY,
+    KEY_DTYPE,
+    VAL_DTYPE,
+    FliXState,
+    flatten_bucket_sorted,
+)
 
 
 def _merge_one_bucket(

@@ -371,7 +371,10 @@ def apply_ops_safe(
         n_ins = int(jnp.sum(ops.tag == OP_INSERT))
         grown = restructure_grow(state, extra_keys=max(n_ins, 1))
         new_state, results, stats = apply_ops(
-            grown, ops, impl=impl, max_results=max_results,
+            grown,
+            ops,
+            impl=impl,
+            max_results=max_results,
             has_updates=has_updates,
         )
         assert not bool(new_state.needs_restructure), "post-restructure overflow"

@@ -74,9 +74,7 @@ def _successor_fence_rows(state: FliXState):
     (EMPTY if none) and ``sidx_pad[b+1]`` the bucket attaining it — the
     successor fallback for queries past their bucket's largest present key.
     """
-    bucket_min = jnp.where(
-        state.num_nodes > 0, state.keys[:, 0, 0], EMPTY
-    )  # [nb]
+    bucket_min = jnp.where(state.num_nodes > 0, state.keys[:, 0, 0], EMPTY)  # [nb]
     smin, sidx = _suffix_min_with_index(bucket_min)
     smin_pad = jnp.concatenate([smin, jnp.array([EMPTY], KEY_DTYPE)])
     sidx_pad = jnp.concatenate([sidx, jnp.array([0], jnp.int32)])

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.build import build_from_sorted, plan_geometry
-from repro.core.state import EMPTY, FliXState
+from repro.core.state import FliXState
 
 
 @partial(
@@ -67,7 +67,9 @@ def restructure_auto(state: FliXState, *, fill: float = 0.5) -> FliXState:
     )
 
 
-def restructure_grow(state: FliXState, *, extra_keys: int, fill: float = 0.5) -> FliXState:
+def restructure_grow(
+    state: FliXState, *, extra_keys: int, fill: float = 0.5
+) -> FliXState:
     """Restructure sized for ``extra_keys`` more keys (overflow recovery).
 
     Geometry guarantee used by ``insert_safe``: with ``fill`` ≤ 1/2 the new

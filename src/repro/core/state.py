@@ -20,7 +20,6 @@ Invariants (checked by ``tests/test_invariants.py``):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -146,16 +146,12 @@ def _apply_kernel(
         keepA = validA & ~dupA                     # incoming value wins
 
         # merged ranks by compare-count (both sides sorted & unique)
-        lessA_A = jnp.sum(
-            (A[:, None, :] < A[:, :, None]) & keepA[:, None, :], axis=2
-        )
+        lessA_A = jnp.sum((A[:, None, :] < A[:, :, None]) & keepA[:, None, :], axis=2)
         lessB_A = jnp.sum(
             (B[:, None, :] < A[:, :, None]) & validB[:, None, :], axis=2
         )
         rankA = lessA_A + lessB_A                  # [BB, S]
-        lessA_B = jnp.sum(
-            (A[:, None, :] < B[:, :, None]) & keepA[:, None, :], axis=2
-        )
+        lessA_B = jnp.sum((A[:, None, :] < B[:, :, None]) & keepA[:, None, :], axis=2)
         lessB_B = jnp.sum(
             (B[:, None, :] < B[:, :, None]) & validB[:, None, :], axis=2
         )
@@ -166,9 +162,7 @@ def _apply_kernel(
         onn_c = jnp.maximum(onn0 - 1, 0)
 
         def region_of(z):
-            r = jnp.sum(
-                (nmax[:, None, :] < z[:, :, None]).astype(jnp.int32), axis=2
-            )
+            r = jnp.sum((nmax[:, None, :] < z[:, :, None]).astype(jnp.int32), axis=2)
             return jnp.minimum(r, onn_c[:, None])
 
         regA = region_of(A)
@@ -192,12 +186,8 @@ def _apply_kernel(
         def dest_of(rank, reg, keep):
             # balanced split within each region (same formulas as core/insert)
             oh = reg[:, :, None] == iota_r[:, None, :]
-            m_r = jnp.maximum(
-                jnp.sum(jnp.where(oh, m_j[:, None, :], 0), axis=2), 1
-            )
-            s_r = jnp.maximum(
-                jnp.sum(jnp.where(oh, s_j[:, None, :], 0), axis=2), 1
-            )
+            m_r = jnp.maximum(jnp.sum(jnp.where(oh, m_j[:, None, :], 0), axis=2), 1)
+            s_r = jnp.maximum(jnp.sum(jnp.where(oh, s_j[:, None, :], 0), axis=2), 1)
             f_r = jnp.sum(jnp.where(oh, f_j[:, None, :], 0), axis=2)
             b_r = jnp.sum(jnp.where(oh, base_j[:, None, :], 0), axis=2)
             rr = rank - f_r
@@ -410,9 +400,7 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpr
     true_counts = (ins_ends - ins_starts).astype(jnp.int32)
 
     # per-bucket INSERT tiles (keys + aligned vals)
-    ik, iv, _, _ = gather_kv_sublists(
-        ins_keys, ins_vals, ins_starts, ins_ends, cap
-    )
+    ik, iv, _, _ = gather_kv_sublists(ins_keys, ins_vals, ins_starts, ins_ends, cap)
 
     # per-bucket DELETE tiles, pre-filtered to PRESENT keys so each bucket's
     # sublist fits its capacity tile (same trick as flix_delete; filtering
@@ -429,9 +417,7 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpr
     flat_v = state.vals.reshape(nb, S)
     dpos = jnp.searchsorted(del_keys, flat_k.reshape(-1), side="left")
     dpos = jnp.minimum(dpos, jnp.maximum(del_keys.shape[0] - 1, 0))
-    dhit = (del_keys[dpos] == flat_k.reshape(-1)) & (
-        flat_k.reshape(-1) != EMPTY
-    )
+    dhit = (del_keys[dpos] == flat_k.reshape(-1)) & (flat_k.reshape(-1) != EMPTY)
     masked = jnp.where(dhit.reshape(nb, S), EMPTY, flat_k)
     surv_min = jnp.min(masked, axis=1)
     amin = jnp.argmin(masked, axis=1)
@@ -467,17 +453,12 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpr
         post_sorted = jnp.sort(post_rows, axis=1)
         live_post = jnp.sum(post_sorted != EMPTY, axis=1).astype(jnp.int32)
         pref_post = jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32),
-             jnp.cumsum(live_post).astype(jnp.int32)]
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(live_post).astype(jnp.int32)]
         )
         rank_lo = flat_rank(post_sorted, pref_post, state.mkba, key)
-        rank_hi = flat_rank(
-            post_sorted, pref_post, state.mkba, val.astype(KEY_DTYPE)
-        )
+        rank_hi = flat_rank(post_sorted, pref_post, state.mkba, val.astype(KEY_DTYPE))
         full = jnp.maximum(rank_hi - rank_lo, 0)
-        rstart, remit, total_emit, rtrunc = range_offsets(
-            full, is_range, max_results
-        )
+        rstart, remit, total_emit, rtrunc = range_offsets(full, is_range, max_results)
         g = range_slot_ranks(rank_lo, rstart, total_emit, max_results)
         return g, pref_post[:-1], pref_post[1:], rstart, remit, rtrunc
 
@@ -524,9 +505,7 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpr
         [jnp.array([jnp.iinfo(jnp.int32).min], KEY_DTYPE), mkba[:-1]]
     )
     mrp = pl.cdiv(max_results, 128) * 128
-    g_row = jnp.pad(g, (0, mrp - max_results), constant_values=-1).reshape(
-        1, mrp
-    )
+    g_row = jnp.pad(g, (0, mrp - max_results), constant_values=-1).reshape(1, mrp)
 
     # --- pad ops to a window multiple (NOP pads never match) --------------
     qp = pl.cdiv(max(n, 1), block_q) * block_q
@@ -699,8 +678,13 @@ def flix_apply_pallas(
 ):
     """Fused mixed-batch apply.  Same contract as ``core.ops.apply_ops``."""
     return _fused_apply(
-        state, tag, key, val,
-        block_q=block_q, block_b=block_b, max_results=max_results,
+        state,
+        tag,
+        key,
+        val,
+        block_q=block_q,
+        block_b=block_b,
+        max_results=max_results,
         interpret=interpret,
     )
 
@@ -727,7 +711,12 @@ def flix_apply_pallas_donated(
     retry driver (``apply_ops_safe``) must use the non-donating entry, since
     a retry replays the batch on the *pre-batch* state."""
     return _fused_apply(
-        state, tag, key, val,
-        block_q=block_q, block_b=block_b, max_results=max_results,
+        state,
+        tag,
+        key,
+        val,
+        block_q=block_q,
+        block_b=block_b,
+        max_results=max_results,
         interpret=interpret,
     )

@@ -22,7 +22,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
@@ -74,9 +73,7 @@ def _delete_kernel(
     keep = (~deleted) & (keys != _EMPTY)
     dest = jnp.cumsum(keep.astype(jnp.int32), axis=-1) - 1
     new_keys = _reposition(keys, dest, keep, ns)
-    new_vals = jnp.where(
-        new_keys == _EMPTY, 0, _reposition(vals, dest, keep, ns)
-    )
+    new_vals = jnp.where(new_keys == _EMPTY, 0, _reposition(vals, dest, keep, ns))
     cnt = jnp.sum(keep.astype(jnp.int32), axis=-1)            # [BB, npb]
 
     # 3. chain compaction: surviving nodes shift into the lowest slots
@@ -85,12 +82,8 @@ def _delete_kernel(
     slot_lane = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, npb), 2)
     oh = (slot_dest[:, :, None] == slot_lane) & nonempty[:, :, None]
     # move whole rows: [BB, src npb, dst npb] x [BB, src npb, ns]
-    moved_k = jnp.sum(
-        jnp.where(oh[..., None], new_keys[:, :, None, :], 0), axis=1
-    )
-    moved_v = jnp.sum(
-        jnp.where(oh[..., None], new_vals[:, :, None, :], 0), axis=1
-    )
+    moved_k = jnp.sum(jnp.where(oh[..., None], new_keys[:, :, None, :], 0), axis=1)
+    moved_v = jnp.sum(jnp.where(oh[..., None], new_vals[:, :, None, :], 0), axis=1)
     row_filled = jnp.any(oh, axis=1)                          # [BB, npb]
     okeys = jnp.where(row_filled[..., None], moved_k, _EMPTY)
     ovals = jnp.where(row_filled[..., None], moved_v, 0)
@@ -152,7 +145,13 @@ def flix_delete_pallas(
             bmap3,
             pl.BlockSpec((block_b, cap), lambda i: (i, 0)),
         ],
-        out_specs=[bmap3, bmap3, bmap2, bmap2, pl.BlockSpec((block_b, 1), lambda i: (i, 0))],
+        out_specs=[
+            bmap3,
+            bmap3,
+            bmap2,
+            bmap2,
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
         out_shape=[
             jax.ShapeDtypeStruct((nb_p, npb, ns), jnp.int32),
             jax.ShapeDtypeStruct((nb_p, npb, ns), jnp.int32),

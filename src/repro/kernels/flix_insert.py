@@ -27,12 +27,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
 from repro.core.batch import bucket_slices, gather_kv_sublists
-from repro.core.state import EMPTY, KEY_DTYPE, VAL_DTYPE, FliXState
+from repro.core.state import KEY_DTYPE, VAL_DTYPE, FliXState
 
 _EMPTY = int(jnp.iinfo(jnp.int32).max)
 
@@ -89,12 +88,8 @@ def _insert_kernel(
 
     # per-region sizes over kept elements
     iota_r = jax.lax.broadcasted_iota(jnp.int32, (1, npb), 1)[0]
-    mA = jnp.sum(
-        (regA[:, None] == iota_r[None, :]) & keepA[:, None], axis=0
-    )
-    mB = jnp.sum(
-        (regB[:, None] == iota_r[None, :]) & validB[:, None], axis=0
-    )
+    mA = jnp.sum((regA[:, None] == iota_r[None, :]) & keepA[:, None], axis=0)
+    mB = jnp.sum((regB[:, None] == iota_r[None, :]) & validB[:, None], axis=0)
     m_j = (mA + mB).astype(jnp.int32)                            # [npb]
     s_j = (m_j + ns - 1) // ns
     f_j = jnp.cumsum(m_j) - m_j
@@ -167,7 +162,10 @@ def flix_insert_pallas(
     ik, iv, _, true_counts = gather_kv_sublists(keys_in, vals_in, starts, ends, cap)
 
     grid = (nb,)
-    row = lambda i: (i, 0)
+
+    def row(i):
+        return (i, 0)
+
     okeys, ovals, ocnt, omax, onn, oflow = pl.pallas_call(
         functools.partial(_insert_kernel, npb=npb, ns=ns, cap=cap),
         grid=grid,

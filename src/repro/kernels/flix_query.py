@@ -32,7 +32,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
-from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND
+from repro.core.state import EMPTY, KEY_DTYPE
 
 DEFAULT_BLOCK_Q = 128   # queries per window
 DEFAULT_BLOCK_B = 8     # buckets per bucket block

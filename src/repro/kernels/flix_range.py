@@ -73,9 +73,9 @@ def _range_count_kernel(
     @pl.when(active)
     def _process():
         k = keys_ref[...].reshape(1, block_b * cap)       # [1, BB*cap]
-        l = l_ref[0, :][:, None]                          # [QB, 1]
+        lo = l_ref[0, :][:, None]                         # [QB, 1]
         h = h_ref[0, :][:, None]
-        hit = (k >= l) & (k < h) & (k != _EMPTY)          # [QB, BB*cap]
+        hit = (k >= lo) & (k < h) & (k != _EMPTY)         # [QB, BB*cap]
         cnt_ref[0, :] = cnt_ref[0, :] + jnp.sum(hit.astype(jnp.int32), axis=1)
 
 
@@ -187,9 +187,7 @@ def flix_range_pallas(
 
     # --- pass 1: full in-range counts ------------------------------------
     qp = pl.cdiv(max(qn, 1), block_q) * block_q
-    l_pad = jnp.pad(
-        sorted_lo.astype(KEY_DTYPE), (0, qp - qn), constant_values=EMPTY
-    )
+    l_pad = jnp.pad(sorted_lo.astype(KEY_DTYPE), (0, qp - qn), constant_values=EMPTY)
     # pad hi with 0, not EMPTY: padded ops are already dead (lo = EMPTY
     # matches no key), and an EMPTY hi would drag a partial last window's
     # max(h2) — and with it the window's block span — to the end of the
@@ -231,17 +229,13 @@ def flix_range_pallas(
 
     # --- host seam: shared offset/rank formulas --------------------------
     is_range = jnp.ones((qn,), bool)
-    start, emit, total_emit, truncated = range_offsets(
-        full, is_range, max_results
-    )
+    start, emit, total_emit, truncated = range_offsets(full, is_range, max_results)
     rank_lo = flat_rank(flat_k, pref, mkba, sorted_lo)
     g = range_slot_ranks(rank_lo, start, total_emit, max_results)
 
     # --- pass 2: scatter to exclusive-scan offsets -----------------------
     mrp = pl.cdiv(max_results, 128) * 128
-    g_row = jnp.pad(g, (0, mrp - max_results), constant_values=-1).reshape(
-        1, mrp
-    )
+    g_row = jnp.pad(g, (0, mrp - max_results), constant_values=-1).reshape(1, mrp)
     # overlapping ranges make per-slot ranks non-monotone — bound the block
     # sweep by the min/max rank over the *valid* slots
     g0 = jnp.min(jnp.where(g_row >= 0, g_row, jnp.iinfo(jnp.int32).max))

@@ -36,7 +36,7 @@ from repro.kernels.flix_query import (
     DEFAULT_BLOCK_Q,
     _exact_gather_i32,
 )
-from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND
+from repro.core.state import EMPTY, KEY_DTYPE
 
 _EMPTY = int(jnp.iinfo(jnp.int32).max)
 _MISS = -1

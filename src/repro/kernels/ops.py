@@ -13,7 +13,6 @@ On TPU the Pallas kernels run compiled; on CPU (this container) they run in
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.state import FliXState
 from repro.kernels import ref as _ref

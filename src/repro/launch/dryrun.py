@@ -23,7 +23,6 @@ import traceback
 from collections import defaultdict
 from pathlib import Path
 
-import jax
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -36,9 +35,23 @@ _COLLECTIVES = (
 )
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "f64": 8,
+    "f32": 4,
+    "bf16": 2,
+    "f16": 2,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "s64": 8,
+    "s32": 4,
+    "s16": 2,
+    "s8": 1,
+    "u64": 8,
+    "u32": 4,
+    "u16": 2,
+    "u8": 1,
+    "pred": 1,
+    "c64": 8,
+    "c128": 16,
 }
 
 
@@ -118,7 +131,6 @@ def run_cell(
     methodology in EXPERIMENTS.md §Dry-run)."""
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import build_cell, layer_period
-    from repro.models.model import get_config
 
     mesh_name = ("multi" if multi_pod else "single") + suffix
     t0 = time.time()
@@ -193,8 +205,12 @@ def main() -> None:
     ap.add_argument("--strategy", default="tp_sp", choices=["tp_sp", "fsdp"])
     ap.add_argument("--no-moe-token-shard", action="store_true")
     ap.add_argument("--moe-impl", default="gather", choices=["gather", "a2a", "auto"])
-    ap.add_argument("--override", action="append", default=[],
-                    help="cfg field override key=int (repeatable)")
+    ap.add_argument(
+        "--override",
+        action="append",
+        default=[],
+        help="cfg field override key=int (repeatable)",
+    )
     args = ap.parse_args()
     out_dir = Path(args.out)
     cell_kwargs = dict(
@@ -226,8 +242,12 @@ def main() -> None:
                 continue
             try:
                 r = run_cell(
-                    arch, shape, m == "multi", out_dir,
-                    suffix=args.suffix, **cell_kwargs,
+                    arch,
+                    shape,
+                    m == "multi",
+                    out_dir,
+                    suffix=args.suffix,
+                    **cell_kwargs,
                 )
                 print(
                     f"OK  {arch:18s} {shape:12s} {m:6s} "
@@ -242,8 +262,11 @@ def main() -> None:
                 path.write_text(
                     json.dumps(
                         {
-                            "arch": arch, "shape": shape, "mesh": m,
-                            "ok": False, "error": traceback.format_exc(),
+                            "arch": arch,
+                            "shape": shape,
+                            "mesh": m,
+                            "ok": False,
+                            "error": traceback.format_exc(),
                         },
                         indent=2,
                     )

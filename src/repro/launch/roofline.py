@@ -99,8 +99,9 @@ def analyze_cell(path: Path) -> dict | None:
     t_c = flops_pd / PEAK_FLOPS
     t_m = bytes_pd / HBM_BW
     t_n = coll_pd / LINK_BW
-    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
-                   key=lambda kv: kv[1])[0]
+    dominant = max(
+        ("compute", t_c), ("memory", t_m), ("collective", t_n), key=lambda kv: kv[1]
+    )[0]
     mf = model_flops(r["arch"], r["shape"])
     hlo_total = flops_pd * chips
     return {

@@ -36,6 +36,21 @@ def main() -> None:
         "compute-to-bucket kernel, the jnp reference engine, or auto "
         "(fused on TPU, reference elsewhere)",
     )
+    ap.add_argument(
+        "--shards",
+        type=int,
+        default=0,
+        help="range-partition the KV page index over this many local "
+        "devices and serve every engine step through shard_apply_ops "
+        "(0 = single-device index)",
+    )
+    ap.add_argument(
+        "--index-routing",
+        choices=("replicated", "a2a"),
+        default="replicated",
+        help="distributed batch routing mode for the sharded index "
+        "(DESIGN.md §11); ignored without --shards",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -44,7 +59,9 @@ def main() -> None:
     rng = jax.random.PRNGKey(args.seed)
     params = tf.init_params(rng, cfg)
     cache = tf.init_cache(cfg, args.batch, args.max_len, dtype=jnp.float32)
-    kv_index = KVPageIndex(impl=args.index_impl)
+    kv_index = KVPageIndex(
+        impl=args.index_impl, shards=args.shards, routing=args.index_routing
+    )
 
     step = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
     token = jax.random.randint(rng, (args.batch,), 0, cfg.vocab_size)
@@ -57,17 +74,23 @@ def main() -> None:
             # sequence's head page in the same sorted batch (core.apply_ops)
             seqs = np.arange(args.batch)
             slots, _, _ = kv_index.step(
-                allocs=(seqs, np.full(args.batch, i // PAGE_TOKENS),
-                        seqs * 1000 + i // PAGE_TOKENS),
+                allocs=(
+                    seqs,
+                    np.full(args.batch, i // PAGE_TOKENS),
+                    seqs * 1000 + i // PAGE_TOKENS,
+                ),
                 lookups=(seqs, np.zeros(args.batch, int)),
             )
             assert (np.asarray(slots) == seqs * 1000).all()
     jax.block_until_ready(token)
     dt = time.time() - t0
+    where = (
+        f"{args.shards} shards ({args.index_routing})" if args.shards else "1 device"
+    )
     print(
         f"decoded {args.steps} steps × batch {args.batch} "
         f"({args.steps*args.batch/dt:.1f} tok/s); "
-        f"kv index tracks {kv_index.live_pages()} pages"
+        f"kv index tracks {kv_index.live_pages()} pages on {where}"
     )
     # sanity: page lookups resolve
     got = np.asarray(kv_index.lookup(np.arange(args.batch), np.zeros(args.batch, int)))

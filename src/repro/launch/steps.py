@@ -123,9 +123,7 @@ def build_cell(
         if cfg.family == "moe" and moe_impl == "a2a":
             cfg = dataclasses.replace(cfg, moe_impl="a2a", moe_mesh=mesh)
         elif cfg.family == "moe" and moe_token_shard:
-            cfg = dataclasses.replace(
-                cfg, dispatch_spec=P("model", daxes, None)
-            )
+            cfg = dataclasses.replace(cfg, dispatch_spec=P("model", daxes, None))
 
     if kind == "train":
         state_abs = jax.eval_shape(
@@ -175,8 +173,12 @@ def build_cell(
 
         def prefill_step(params, batch):
             h = transformer.forward_hidden(
-                params, cfg, batch["tokens"], batch.get("prefix_embeds"),
-                layer_loop=layer_loop, act_spec=act_spec,
+                params,
+                cfg,
+                batch["tokens"],
+                batch.get("prefix_embeds"),
+                layer_loop=layer_loop,
+                act_spec=act_spec,
             )
             head = (
                 params["embed"].T if cfg.tie_embeddings else params["lm_head"]

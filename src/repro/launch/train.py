@@ -18,8 +18,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -60,12 +58,15 @@ def main() -> None:
     state_specs = TrainState(
         params=pspecs, opt=AdamWState(step=P(), m=pspecs, v=pspecs)
     )
-    ns = lambda t: jax.tree.map(
-        lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P)
-    )
+    def ns(t):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P)
+        )
     with mesh:
         state = jax.tree.map(
-            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), state, state_specs,
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            state,
+            state_specs,
             is_leaf=lambda x: not isinstance(x, (dict, TrainState, AdamWState)),
         )
 
@@ -82,11 +83,11 @@ def main() -> None:
             data_state.next_step = extra.get("data_step", step0)
             print(f"resumed from step {step0}")
 
-    it = make_batch_iterator(
-        cfg.vocab_size, args.seq, args.batch, state=data_state
-    )
+    it = make_batch_iterator(cfg.vocab_size, args.seq, args.batch, state=data_state)
     step_fn = make_train_step(
-        cfg, lr=args.lr, total_steps=args.steps,
+        cfg,
+        lr=args.lr,
+        total_steps=args.steps,
         loss_chunk=min(512, args.seq),
     )
     batch_sharding = {
@@ -109,12 +110,16 @@ def main() -> None:
                 print(f"step {step:5d} loss {loss:.4f} ({dt:.1f}s)", flush=True)
             if mgr and step and step % args.ckpt_every == 0:
                 mgr.save(
-                    step, state, specs=state_specs,
+                    step,
+                    state,
+                    specs=state_specs,
                     extra={"data_step": data_state.next_step},
                 )
         if mgr:
             mgr.save(
-                args.steps, state, specs=state_specs,
+                args.steps,
+                state,
+                specs=state_specs,
                 extra={"data_step": data_state.next_step},
             )
             mgr.wait()

@@ -19,9 +19,7 @@ def prefix_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct | None:
     """ShapeDtypeStruct of the stub prefix embeddings (dry-run input)."""
     if not cfg.frontend:
         return None
-    return jax.ShapeDtypeStruct(
-        (batch, cfg.frontend_len, cfg.d_model), jnp.bfloat16
-    )
+    return jax.ShapeDtypeStruct((batch, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
 
 
 def synthetic_prefix(rng, cfg: ModelConfig, batch: int) -> jax.Array | None:

@@ -24,9 +24,7 @@ def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
 def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
     """cos/sin tables for the given positions: [..., head_dim//2]."""
     half = head_dim // 2
-    freqs = 1.0 / (
-        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
-    )
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
     ang = positions.astype(jnp.float32)[..., None] * freqs
     return jnp.cos(ang), jnp.sin(ang)
 

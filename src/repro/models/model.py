@@ -6,8 +6,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer
-from repro.models.config import SHAPES, ModelConfig, cells_for
-from repro.models.frontends import prefix_spec, synthetic_prefix
+from repro.models.config import SHAPES, ModelConfig
+from repro.models.frontends import prefix_spec
 
 
 def get_config(name: str) -> ModelConfig:

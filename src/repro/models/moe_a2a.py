@@ -4,7 +4,7 @@ The pjit gather/scatter dispatch (models/moe.py) lets GSPMD lower the
 cross-shard token gather as per-layer all-gathers of the full activation
 tensor (~25 GB/chip/layer on deepseek train_4k).  This module routes tokens
 explicitly instead — the *distributed* FliX pattern (core/distributed.py
-``route_a2a``) applied to experts:
+``shard_apply_ops``'s a2a routing) applied to experts:
 
   * tokens are sharded over every mesh axis (data × model);
   * expert weights are EP-sharded over ``model`` and replicated over data,

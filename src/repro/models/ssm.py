@@ -8,7 +8,6 @@ inside length-``Q`` chunks, linear recurrent state passing between chunks
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -52,10 +51,10 @@ def ssd_chunked(
     Cc = Cm.reshape(B_, nc, Q, N).astype(f32)
 
     a = dtc * A.astype(f32)                     # [B, nc, Q, H] log-decay
-    l = jnp.cumsum(a, axis=2)
+    cum = jnp.cumsum(a, axis=2)
 
     # intra-chunk (the "attention-like" quadratic term)
-    seg = l[:, :, :, None, :] - l[:, :, None, :, :]      # [B,nc,t,s,H]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # [B,nc,t,s,H]
     tri = jnp.tril(jnp.ones((Q, Q), bool))
     dec = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
     cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)
@@ -63,8 +62,8 @@ def ssd_chunked(
     y = jnp.einsum("bctsh,bcshp->bcthp", scores, xc)
 
     # chunk-final states
-    last = l[:, :, -1:, :]                                # [B,nc,1,H]
-    sdec = jnp.exp(last - l) * dtc                        # [B,nc,Q,H]
+    last = cum[:, :, -1:, :]                              # [B,nc,1,H]
+    sdec = jnp.exp(last - cum) * dtc                      # [B,nc,Q,H]
     S_c = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, sdec, xc)
 
     # inter-chunk recurrence: associative scan over chunks
@@ -82,17 +81,11 @@ def ssd_chunked(
         if init_state is None
         else init_state.astype(f32)
     )
-    s_prev = jnp.concatenate(
-        [jnp.zeros_like(s_in[:, :1]), s_in[:, :-1]], axis=1
-    )
-    d_prev = jnp.concatenate(
-        [jnp.ones((B_, 1, H), f32), d_in[:, :-1]], axis=1
-    )
+    s_prev = jnp.concatenate([jnp.zeros_like(s_in[:, :1]), s_in[:, :-1]], axis=1)
+    d_prev = jnp.concatenate([jnp.ones((B_, 1, H), f32), d_in[:, :-1]], axis=1)
     s_enter = seed[:, None] * d_prev[..., None, None] + s_prev
 
-    y_inter = jnp.einsum("bctn,bchpn->bcthp", Cc, s_enter) * jnp.exp(l)[
-        ..., None
-    ]
+    y_inter = jnp.einsum("bctn,bchpn->bcthp", Cc, s_enter) * jnp.exp(cum)[..., None]
     out = (y + y_inter).reshape(B_, S, H, P)
     final_state = seed * d_in[:, -1][..., None, None] + s_in[:, -1]
     return out.astype(x.dtype), final_state
@@ -108,9 +101,7 @@ def ssd_decode_step(
 ):
     f32 = jnp.float32
     decay = jnp.exp(dt.astype(f32) * A.astype(f32))       # [B, H]
-    upd = jnp.einsum(
-        "bh,bhp,bn->bhpn", dt.astype(f32), x.astype(f32), Bm.astype(f32)
-    )
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(f32), x.astype(f32), Bm.astype(f32))
     new_state = state * decay[..., None, None] + upd
     y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(f32))
     return y.astype(x.dtype), new_state
@@ -156,7 +147,11 @@ def mamba2_decode_split(x: jax.Array, p: dict, cfg, conv_state, ssm_state):
 
     z = x @ p["in_z"]
     u = jnp.concatenate(
-        [jax.nn.silu(x @ p["in_x"]), jax.nn.silu(x @ p["in_B"]), jax.nn.silu(x @ p["in_C"])],
+        [
+            jax.nn.silu(x @ p["in_x"]),
+            jax.nn.silu(x @ p["in_B"]),
+            jax.nn.silu(x @ p["in_C"]),
+        ],
         axis=-1,
     )
     window = jnp.concatenate([conv_state, u[:, None]], axis=1)  # [B, K, C]
@@ -169,9 +164,7 @@ def mamba2_decode_split(x: jax.Array, p: dict, cfg, conv_state, ssm_state):
     xs, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
     dt = jax.nn.softplus((x @ p["in_dt"]).astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
-    y, new_ssm_state = ssd_decode_step(
-        ssm_state, xs.reshape(B_, H, P), dt, A, Bm, Cm
-    )
+    y, new_ssm_state = ssd_decode_step(ssm_state, xs.reshape(B_, H, P), dt, A, Bm, Cm)
     y = y + xs.reshape(B_, H, P) * p["D_skip"].astype(xs.dtype)[None, :, None]
     y = y.reshape(B_, di)
     y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
@@ -185,9 +178,7 @@ def mamba2_forward(x: jax.Array, p: dict, cfg, init=None):
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
 
     zxbcdt = x @ p["in_proj"]
-    z, xbc, dt_raw = jnp.split(
-        zxbcdt, [d_inner, d_inner + d_inner + 2 * N], axis=-1
-    )
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + d_inner + 2 * N], axis=-1)
     xbc = causal_conv1d(jax.nn.silu(xbc), p["conv_w"], p.get("conv_b"))
     xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
@@ -210,9 +201,7 @@ def mamba2_decode(x: jax.Array, p: dict, cfg, conv_state, ssm_state):
     K = cfg.conv_kernel
 
     zxbcdt = x @ p["in_proj"]
-    z, xbc, dt_raw = jnp.split(
-        zxbcdt, [d_inner, d_inner + d_inner + 2 * N], axis=-1
-    )
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + d_inner + 2 * N], axis=-1)
     xbc = jax.nn.silu(xbc)
     window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # [B, K, C]
     conv_out = jnp.einsum(
@@ -226,9 +215,7 @@ def mamba2_decode(x: jax.Array, p: dict, cfg, conv_state, ssm_state):
     xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
-    y, new_ssm_state = ssd_decode_step(
-        ssm_state, xs.reshape(B_, H, P), dt, A, Bm, Cm
-    )
+    y, new_ssm_state = ssd_decode_step(ssm_state, xs.reshape(B_, H, P), dt, A, Bm, Cm)
     y = y + xs.reshape(B_, H, P) * p["D_skip"][None, :, None]
     y = y.reshape(B_, d_inner)
     y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)

@@ -114,7 +114,9 @@ def init_params(rng, cfg: ModelConfig, param_dtype=jnp.float32) -> Params:
     if cfg.family in ("ssm", "hybrid"):
         layer_init = partial(_ssm_layer_init, cfg=cfg, scale_out=scale_out, dtype=dtype)
     else:
-        layer_init = partial(_dense_layer_init, cfg=cfg, scale_out=scale_out, dtype=dtype)
+        layer_init = partial(
+            _dense_layer_init, cfg=cfg, scale_out=scale_out, dtype=dtype
+        )
     keys = jax.random.split(k_layers, cfg.num_layers)
     params["layers"] = jax.vmap(lambda k: layer_init(k))(keys)
 
@@ -159,8 +161,15 @@ def _attn_block(x, lp, cfg: ModelConfig, positions, is_global, prefix_len, q_chu
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     out = attention(
-        q, k, v, positions, positions, is_global,
-        window=cfg.window, q_chunk=q_chunk, prefix_len=prefix_len,
+        q,
+        k,
+        v,
+        positions,
+        positions,
+        is_global,
+        window=cfg.window,
+        q_chunk=q_chunk,
+        prefix_len=prefix_len,
     )
     return x + out.reshape(B, S, hq * dh) @ lp["wo"]
 
@@ -227,7 +236,13 @@ def forward_hidden(
         else (lambda h: h)
     )
     x = constrain(x)
-    cast = lambda t: jax.tree.map(lambda a: a.astype(compute) if a.dtype in (jnp.float32, jnp.bfloat16) else a, t)
+    def cast(t):
+        return jax.tree.map(
+            lambda a: a.astype(compute)
+            if a.dtype in (jnp.float32, jnp.bfloat16)
+            else a,
+            t,
+        )
 
     if cfg.family in ("ssm", "hybrid"):
         def ssm_step(h, lp):
@@ -283,7 +298,10 @@ def forward_hidden(
             for i in range(cfg.num_layers):
                 x, _ = step(
                     x,
-                    (jax.tree.map(lambda a: a[i], params["layers"]), jnp.asarray(glob[i])),
+                    (
+                        jax.tree.map(lambda a: a[i], params["layers"]),
+                        jnp.asarray(glob[i]),
+                    ),
                 )
 
     return rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -378,13 +396,19 @@ def _decode_attn(x, lp, cfg: ModelConfig, kv, pos, is_global: bool):
     k = apply_rope(k, cos, sin)
 
     slot = pos % W
-    kc = jax.lax.dynamic_update_slice_in_dim(kv["k"], k.astype(kv["k"].dtype), slot, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(kv["v"], v.astype(kv["v"].dtype), slot, axis=1)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        kv["k"], k.astype(kv["k"].dtype), slot, axis=1
+    )
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        kv["v"], v.astype(kv["v"].dtype), slot, axis=1
+    )
     # true token position held by each ring slot
     j = jnp.arange(W)
     k_positions = pos - ((slot - j) % W)
     out = attention(
-        q, kc, vc,
+        q,
+        kc,
+        vc,
         q_positions=pos[None],
         k_positions=k_positions,
         is_global=jnp.array(is_global),
@@ -406,9 +430,13 @@ def decode_step(
     pos = cache["pos"]
     x = params["embed"][token][:, None].astype(compute)   # [B, 1, D]
     glob = layer_is_global(cfg)
-    cast = lambda t: jax.tree.map(
-        lambda a: a.astype(compute) if a.dtype in (jnp.float32, jnp.bfloat16) else a, t
-    )
+    def cast(t):
+        return jax.tree.map(
+            lambda a: a.astype(compute)
+            if a.dtype in (jnp.float32, jnp.bfloat16)
+            else a,
+            t,
+        )
 
     new_layers = []
     if cfg.family in ("ssm", "hybrid"):
@@ -425,8 +453,12 @@ def decode_step(
             if cfg.family == "hybrid" and (i + 1) % cfg.attn_every == 0:
                 gidx = (i + 1) // cfg.attn_every - 1
                 x, kv2 = _decode_attn(
-                    x, cast(params["shared_attn"]), cfg,
-                    cache["shared_kv"][gidx], pos, is_global=True,
+                    x,
+                    cast(params["shared_attn"]),
+                    cfg,
+                    cache["shared_kv"][gidx],
+                    pos,
+                    is_global=True,
                 )
                 x = _ffn_block(x, cast(params["shared_attn"]), cfg)
                 new_shared.append(kv2)

@@ -9,4 +9,9 @@ from repro.optim.adamw import (
     clip_by_global_norm,
     cosine_schedule,
 )
-from repro.optim.compress import CompressState, compress_init, decompress_add, quantize_grads
+from repro.optim.compress import (
+    CompressState,
+    compress_init,
+    decompress_add,
+    quantize_grads,
+)

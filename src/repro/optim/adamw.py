@@ -19,7 +19,9 @@ class AdamWState:
 
 def adamw_init(params) -> AdamWState:
     zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
-    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros)
+    )
 
 
 def clip_by_global_norm(grads, max_norm: float):
@@ -64,7 +66,9 @@ def adamw_update(
         return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
 
     out = jax.tree.map(upd, params, grads, state.m, state.v)
-    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(
+        lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple)
+    )
     new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
     new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
     return new_params, AdamWState(step=step, m=new_m, v=new_v)

@@ -42,9 +42,10 @@ def quantize_grads(grads, state: CompressState):
         return q8, scale, new_err
 
     out = jax.tree.map(q, grads, state.error)
-    tup = lambda i: jax.tree.map(
-        lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple)
-    )
+    def tup(i):
+        return jax.tree.map(
+            lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple)
+        )
     return tup(0), tup(1), CompressState(error=tup(2))
 
 

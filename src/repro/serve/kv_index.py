@@ -19,17 +19,20 @@ there is no engine bypass and an enumeration in an update step observes
 that step's allocations and frees (update-then-read).  Batches are padded
 to the next power of two so jit traces once per size class, not once per
 step.
+
+``shards=N`` range-partitions the index across the first N local devices
+and routes every engine step through ``core.distributed.shard_apply_ops``
+— same mixed batch, same contract, one ``shard_map`` step — so ``pages_of``
+and friends are served across the mesh with no separate distributed code
+path (DESIGN.md §11).
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    EMPTY,
-    NOT_FOUND,
     OP_DELETE,
     OP_INSERT,
     OP_POINT,
@@ -58,6 +61,11 @@ class KVPageIndex:
     ``impl`` selects the ``apply_ops`` executor for every engine step
     (``"auto"`` = the fused compute-to-bucket kernel on TPU, the jnp
     reference engine elsewhere — see ``core.ops.apply_ops``).
+
+    ``shards`` > 0 range-partitions the index over that many local devices
+    and serves every step through ``shard_apply_ops`` (``routing`` picks
+    the distributed batch mode; replicated is right for the control-plane
+    batch sizes this index sees).  All public methods behave identically.
     """
 
     def __init__(
@@ -66,18 +74,38 @@ class KVPageIndex:
         node_size: int = 16,
         nodes_per_bucket: int = 8,
         impl: str = "auto",
+        shards: int = 0,
+        routing: str = "replicated",
     ):
         # seed with one sentinel key (outside the (seq,page) space) so the
         # structure is never empty
         from repro.core import MAX_VALID
 
         self.impl = impl
-        self.state = build(
-            jnp.array([MAX_VALID], jnp.int32),
-            jnp.array([0], jnp.int32),
-            node_size=node_size,
-            nodes_per_bucket=nodes_per_bucket,
-        )
+        self.routing = routing
+        seed_keys = jnp.array([MAX_VALID], jnp.int32)
+        seed_vals = jnp.array([0], jnp.int32)
+        if shards:
+            from repro.core.distributed import make_shard_mesh, shard_build
+
+            self.mesh = make_shard_mesh(shards)
+            self.sharded = shard_build(
+                seed_keys,
+                seed_vals,
+                self.mesh,
+                node_size=node_size,
+                nodes_per_bucket=nodes_per_bucket,
+            )
+            self.state = None
+        else:
+            self.mesh = None
+            self.sharded = None
+            self.state = build(
+                seed_keys,
+                seed_vals,
+                node_size=node_size,
+                nodes_per_bucket=nodes_per_bucket,
+            )
 
     # ---- the engine step: one mixed batch ------------------------------
     def step(
@@ -174,32 +202,56 @@ class KVPageIndex:
         tag = jnp.concatenate(tags)
         key = jnp.concatenate(keys)
         val = jnp.concatenate(vals)
-        ops, perm = make_ops(tag, key, val, pad_to=_next_pow2(key.shape[0]))
+        pad_to = _next_pow2(key.shape[0])
+        if self.mesh is not None:
+            # a2a routing position-shards the batch: round the padded size
+            # up to a shard-count multiple so every chunk is equal
+            n_shards = int(self.mesh.shape["shards"])
+            pad_to = -(-pad_to // n_shards) * n_shards
+        ops, perm = make_ops(tag, key, val, pad_to=pad_to)
         read_only = n_alloc == 0 and free_seqs is None
+        has_ranges = n_range > 0
         if read_only:
             # pure-read step (lookups and/or ranges): the state is
-            # untouched, so keep self.state instead of swapping in the
-            # engine's pass-through copy.  Always the reference engine here
-            # — the fused kernel's update sweep rewrites the whole state,
-            # pure waste for an update-free batch (DESIGN.md §9/§10), while
-            # the reference lax.cond phases skip it.
-            _, results, stats = apply_ops(
-                self.state, ops, impl="reference", max_results=range_budget
+            # untouched, so keep the pre-batch state/index instead of
+            # swapping in the engine's pass-through copy.  Always the
+            # reference engine here — the fused kernel's update sweep
+            # rewrites the whole state, pure waste for an update-free batch
+            # (DESIGN.md §9/§10), while the reference lax.cond phases skip
+            # it.
+            _, results, stats = self._apply(
+                ops,
+                impl="reference",
+                max_results=range_budget,
+                has_ranges=has_ranges,
             )
         elif n_alloc == 0:
             # only inserts can overflow — free steps skip the restructure-
             # and-retry wrapper (and its host sync), and since no retry can
             # replay the batch, the old state's buffers are donated to the
             # step (fused path; a no-op on CPU)
-            self.state, results, stats = apply_ops(
-                self.state, ops, impl=self.impl, donate=True,
-                max_results=range_budget, has_updates=True,
-            )
-        else:
-            self.state, results, stats = apply_ops_safe(
-                self.state, ops, impl=self.impl, max_results=range_budget,
+            new, results, stats = self._apply(
+                ops,
+                impl=self.impl,
+                donate=True,
+                max_results=range_budget,
                 has_updates=True,
+                has_ranges=has_ranges,
             )
+            self._commit(new)
+        else:
+            # allocation steps go through the safe driver; its retry path
+            # regrows (sharded: rebalances fences via shard_restructure —
+            # the cluster analogue of §3.5 relaunch) and replays the batch
+            new, results, stats = self._apply(
+                ops,
+                safe=True,
+                impl=self.impl,
+                max_results=range_budget,
+                has_updates=True,
+                has_ranges=has_ranges,
+            )
+            self._commit(new)
         values = unsort(results["value"], perm[: key.shape[0]])
         range_out = None
         if n_range:
@@ -211,6 +263,46 @@ class KVPageIndex:
                 "count": unsort(results["range_count"], sub),
             }
         return values[n_alloc : n_alloc + n_lookup], range_out, stats
+
+    def _apply(self, ops, *, safe=False, donate=False, has_ranges=False, **kw):
+        """Dispatch one engine batch to the local or sharded executor.
+
+        Same step policy either way (one copy of it, in :meth:`step`); the
+        sharded path adds the routing mode and the host-known ``has_ranges``
+        hint (the local ``apply_ops`` needs no such hint — its range phase
+        is a traced ``lax.cond``).
+        """
+        if self.mesh is not None:
+            from repro.core.distributed import shard_apply_ops, shard_apply_ops_safe
+
+            if safe:
+                return shard_apply_ops_safe(
+                    self.sharded,
+                    ops,
+                    self.mesh,
+                    routing=self.routing,
+                    has_ranges=has_ranges,
+                    **kw,
+                )
+            return shard_apply_ops(
+                self.sharded,
+                ops,
+                self.mesh,
+                routing=self.routing,
+                donate=donate,
+                has_ranges=has_ranges,
+                **kw,
+            )
+        if safe:
+            return apply_ops_safe(self.state, ops, **kw)
+        return apply_ops(self.state, ops, donate=donate, **kw)
+
+    def _commit(self, new):
+        """Install an update step's result (local state or sharded index)."""
+        if self.mesh is not None:
+            self.sharded = new
+        else:
+            self.state = new
 
     # ---- per-type conveniences (each is still one engine step) ---------
     def allocate(self, seq_ids, page_nos, slots):
@@ -238,9 +330,7 @@ class KVPageIndex:
         """
         lo = seq_id << PAGE_BITS
         hi = (seq_id + 1) << PAGE_BITS
-        _, rng_out, _ = self.step(
-            ranges=([lo], [hi]), range_budget=max_pages
-        )
+        _, rng_out, _ = self.step(ranges=([lo], [hi]), range_budget=max_pages)
         return (
             rng_out["keys"] & ((1 << PAGE_BITS) - 1),
             rng_out["vals"],
@@ -248,4 +338,5 @@ class KVPageIndex:
         )
 
     def live_pages(self) -> int:
-        return int(self.state.live_keys()) - 1  # minus the seed key
+        state = self.sharded.state if self.mesh is not None else self.state
+        return int(state.live_keys()) - 1  # minus the seed key

@@ -14,7 +14,6 @@ Parallelism summary (DESIGN.md §6):
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import numpy as np
@@ -55,9 +54,15 @@ def _dense_layer_rules(cfg, tp: int, prefix_dims: int):
             {
                 "router": P(*n, None, None),
                 # EP when experts divide tp, else TP on the expert FFN dim
-                "w_gate": P(*n, "model", None, None) if ep else P(*n, None, None, "model"),
-                "w_up": P(*n, "model", None, None) if ep else P(*n, None, None, "model"),
-                "w_down": P(*n, "model", None, None) if ep else P(*n, None, "model", None),
+                "w_gate": P(*n, "model", None, None)
+                if ep
+                else P(*n, None, None, "model"),
+                "w_up": P(*n, "model", None, None)
+                if ep
+                else P(*n, None, None, "model"),
+                "w_down": P(*n, "model", None, None)
+                if ep
+                else P(*n, None, "model", None),
                 "shared_gate": P(*n, None, "model"),
                 "shared_up": P(*n, None, "model"),
                 "shared_down": P(*n, "model", None),

@@ -1,3 +1,8 @@
 """Training step factory (loss, remat, microbatching, sharded optimizer)."""
 
-from repro.train.step import TrainState, chunked_lm_loss, make_train_step, train_state_init
+from repro.train.step import (
+    TrainState,
+    chunked_lm_loss,
+    make_train_step,
+    train_state_init,
+)

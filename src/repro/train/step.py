@@ -12,7 +12,6 @@
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -63,16 +62,22 @@ def chunked_lm_loss(x, head, targets, mask, *, chunk: int = 512):
     if n:
         parts = jax.lax.map(
             lambda i: one(
-                (slice_c(x, i * chunk, chunk), slice_c(targets, i * chunk, chunk),
-                 slice_c(mask, i * chunk, chunk))
+                (
+                    slice_c(x, i * chunk, chunk),
+                    slice_c(targets, i * chunk, chunk),
+                    slice_c(mask, i * chunk, chunk),
+                )
             ),
             jnp.arange(n),
         )
         tot, cnt = jnp.sum(parts[0]), jnp.sum(parts[1])
     if rem:
         t2, c2 = one(
-            (slice_c(x, n * chunk, rem), slice_c(targets, n * chunk, rem),
-             slice_c(mask, n * chunk, rem))
+            (
+                slice_c(x, n * chunk, rem),
+                slice_c(targets, n * chunk, rem),
+                slice_c(mask, n * chunk, rem),
+            )
         )
         tot, cnt = tot + t2, cnt + c2
     return tot / jnp.maximum(cnt, 1.0)
@@ -89,8 +94,13 @@ def make_loss_fn(
     def loss_fn(params, batch):
         compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         hidden = transformer.forward_hidden(
-            params, cfg, batch["tokens"], batch.get("prefix_embeds"),
-            remat=remat, layer_loop=layer_loop, act_spec=act_spec,
+            params,
+            cfg,
+            batch["tokens"],
+            batch.get("prefix_embeds"),
+            remat=remat,
+            layer_loop=layer_loop,
+            act_spec=act_spec,
         )
         head = (
             params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -120,7 +130,10 @@ def make_train_step(
     act_spec=None,
 ):
     loss_fn = make_loss_fn(
-        cfg, remat=remat, loss_chunk=loss_chunk, layer_loop=layer_loop,
+        cfg,
+        remat=remat,
+        loss_chunk=loss_chunk,
+        layer_loop=layer_loop,
         act_spec=act_spec,
     )
     schedule = cosine_schedule(lr, warmup, total_steps)

@@ -4,7 +4,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import sort_batch
 from repro.core.baselines import btree, hash_table as ht, lsm, sorted_array as sa
 from repro.core.state import EMPTY, NOT_FOUND
 

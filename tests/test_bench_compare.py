@@ -1,0 +1,111 @@
+"""Guard tests for the perf-regression gate (``benchmarks.compare``).
+
+The CI contract: ``bench-smoke`` must demonstrably *fail* on an injected
+regression while a clean run stays green.  These tests pin the gate's
+decision logic host-side so a silent comparator bug cannot neuter the CI
+step that re-checks the same thing end-to-end.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import compare
+
+
+def _artifact(speedups, *, failed=(), field="sharded_speedup"):
+    return {
+        "schema": "flix-bench-v1",
+        "scale": "small",
+        "build_size": 1 << 14,
+        "suites": {},
+        "failed": list(failed),
+        "apply_ops_fused_speedup": {},
+        "range_fused_speedup": {},
+        field: dict(speedups),
+    }
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_clean_run_is_green(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _artifact({"rep_s4_upd50": 0.50}))
+    fresh = _write(tmp_path, "fresh.json", _artifact({"rep_s4_upd50": 0.48}))
+    assert compare.main([fresh, base]) == 0
+    assert "REGRESSED" not in capsys.readouterr().out
+
+
+def test_injected_regression_fails(tmp_path, capsys):
+    """A fresh ratio 10x below the snapshot must trip the gate."""
+    base = _write(tmp_path, "base.json", _artifact({"rep_s4_upd50": 0.50}))
+    fresh = _write(tmp_path, "fresh.json", _artifact({"rep_s4_upd50": 0.05}))
+    assert compare.main([fresh, base]) == 1
+    out = capsys.readouterr()
+    assert "REGRESSED" in out.out
+    assert "sharded_speedup/rep_s4_upd50" in out.err
+
+
+def test_tolerance_boundary_and_env(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json", _artifact({"k": 1.00}))
+    fresh = _write(tmp_path, "fresh.json", _artifact({"k": 0.75}))
+    # 25% drop: beyond the default 20% tolerance, inside a 30% one
+    assert compare.main([fresh, base]) == 1
+    assert compare.main([fresh, base, "--tolerance", "0.30"]) == 0
+    monkeypatch.setenv("REPRO_BENCH_TOL", "0.30")
+    assert compare.main([fresh, base]) == 0
+
+
+def test_tiny_baselines_are_reported_not_gated(tmp_path, capsys):
+    """Interpret-mode ratios below the floor never fail the gate."""
+    base = _write(tmp_path, "base.json", _artifact({"upd100": 0.035},
+                                                   field="apply_ops_fused_speedup"))
+    fresh = _write(tmp_path, "fresh.json", _artifact({"upd100": 0.001},
+                                                     field="apply_ops_fused_speedup"))
+    assert compare.main([fresh, base]) == 0
+    assert "ungated" in capsys.readouterr().out
+
+
+def test_missing_and_new_keys_do_not_fail(tmp_path):
+    base = _write(tmp_path, "base.json", _artifact({"only_old": 0.9}))
+    fresh = _write(tmp_path, "fresh.json", _artifact({"only_new": 0.9}))
+    assert compare.main([fresh, base]) == 0
+
+
+def test_later_baselines_override_earlier(tmp_path):
+    """Snapshots are passed oldest-first; the newest value gates."""
+    old = _write(tmp_path, "old.json", _artifact({"k": 2.0}))
+    new = _write(tmp_path, "new.json", _artifact({"k": 0.5}))
+    fresh = _write(tmp_path, "fresh.json", _artifact({"k": 0.5}))
+    assert compare.main([fresh, old, new]) == 0    # newest baseline wins
+    assert compare.main([fresh, new, old]) == 1    # stale ordering regresses
+
+
+def test_truncated_fresh_artifact_fails(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _artifact({"k": 0.5}))
+    fresh = _write(
+        tmp_path, "fresh.json", _artifact({"k": 0.5}, failed=["range_mix_engine"])
+    )
+    assert compare.main([fresh, base]) == 1
+    assert "truncated" in capsys.readouterr().err
+
+
+def test_step_summary_written(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json", _artifact({"k": 0.5}))
+    fresh = _write(tmp_path, "fresh.json", _artifact({"k": 0.5}))
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert compare.main([fresh, base]) == 0
+    text = summary.read_text()
+    assert "Bench speedup deltas" in text and "| sharded_speedup/k |" in text
+
+
+def test_schema_mismatch_rejected(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": "other"}))
+    good = _write(tmp_path, "good.json", _artifact({}))
+    with pytest.raises(SystemExit):
+        compare.main([str(bad), good])

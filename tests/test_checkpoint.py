@@ -1,10 +1,5 @@
 """Checkpoint manager: atomic commit, async, retention, resume, elastic."""
 
-import json
-import shutil
-import time
-from pathlib import Path
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -10,79 +10,113 @@ from tests.conftest import run_with_devices
 pytestmark = pytest.mark.slow  # subprocess multi-device runs
 
 
-def test_sharded_flix_end_to_end():
+def test_shard_apply_ops_end_to_end():
+    """Mixed batch through shard_apply_ops == dict model, both routings,
+    on a model-checked insert → delete → read sequence (8 shards)."""
     out = run_with_devices(
         """
         import numpy as np, jax, jax.numpy as jnp
+        from repro import core
         from repro.core import distributed as dist
 
-        from repro.launch.mesh import make_mesh_auto
-        mesh = make_mesh_auto((8,), ("shards",))
+        mesh = dist.make_shard_mesh(8)
         rng = np.random.default_rng(11)
         universe = rng.permutation(200000).astype(np.int32)
-        keys, extra = universe[:8000], universe[8000:12000]
-        vals = np.arange(8000, dtype=np.int32)
+        keys, extra = universe[:4000], universe[4000:6000]
+        vals = np.arange(4000, dtype=np.int32)
         sk = np.sort(keys); sv = vals[np.argsort(keys)]
         model = dict(zip(keys.tolist(), vals.tolist()))
 
         idx = dist.shard_build(jnp.asarray(sk), jnp.asarray(sv), mesh, node_size=16, nodes_per_bucket=8)
-        q = np.sort(np.concatenate([keys[:1000], rng.integers(0, 200000, 1000).astype(np.int32)]))
-        res = np.asarray(dist.point_query(idx, jnp.asarray(q), mesh))
-        assert all(res[i] == model.get(int(q[i]), -1) for i in range(len(q)))
 
-        ik = np.sort(extra); iv = (np.arange(4000) + 500000).astype(np.int32)[np.argsort(extra)]
-        idx = dist.insert(idx, jnp.asarray(ik), jnp.asarray(iv), mesh)
-        for k, v in zip(ik, iv): model[int(k)] = int(v)
-        res = np.asarray(dist.point_query(idx, jnp.asarray(ik), mesh))
-        assert all(res[i] == model[int(ik[i])] for i in range(len(ik)))
-
-        dels = np.sort(ik[::3])
-        idx = dist.delete(idx, jnp.asarray(dels), mesh)
-        res = np.asarray(dist.point_query(idx, jnp.asarray(dels), mesh))
-        assert (res == -1).all()
-
-        sq = np.sort(rng.integers(0, 200001, 500).astype(np.int32))
+        # one mixed batch: insert `extra`, delete a third of `keys`, and
+        # read points + successors in the same step (update-then-read)
+        dels = keys[::3]
+        n_pt, n_sc = 400, 200
+        pts = rng.integers(0, 200000, n_pt).astype(np.int32)
+        sq = rng.integers(0, 200001, n_sc).astype(np.int32)
+        tags = np.concatenate([
+            np.full(extra.shape, core.OP_INSERT), np.full(dels.shape, core.OP_DELETE),
+            np.full(n_pt, core.OP_POINT), np.full(n_sc, core.OP_SUCCESSOR)]).astype(np.int32)
+        bk = np.concatenate([extra, dels, pts, sq]).astype(np.int32)
+        bv = np.zeros(bk.shape, np.int32); bv[:extra.shape[0]] = np.arange(extra.shape[0]) + 500000
+        ops, perm = core.make_ops(tags, bk, bv, pad_to=4096)
+        for k, v in zip(extra, bv[:extra.shape[0]]): model[int(k)] = int(v)
         for k in dels: del model[int(k)]
         live = np.array(sorted(model))
-        skk, vv = dist.successor_query(idx, jnp.asarray(sq), mesh)
-        skk = np.asarray(skk); vv = np.asarray(vv)
         EMPTY = np.iinfo(np.int32).max
-        for i, qq in enumerate(sq):
-            j = np.searchsorted(live, qq)
-            want = live[j] if j < len(live) else EMPTY
-            assert skk[i] == want, (qq, skk[i], want)
-            if j < len(live): assert vv[i] == model[int(live[j])]
-        print("DIST_FLIX_OK")
+
+        for routing in ("replicated", "a2a"):
+            _, res, stats = dist.shard_apply_ops(idx, ops, mesh, routing=routing)
+            assert int(stats["inserted"]) == extra.shape[0]
+            assert int(stats["deleted"]) == dels.shape[0]
+            value = np.asarray(core.unsort(res["value"], perm[:bk.shape[0]]))
+            skk = np.asarray(core.unsort(res["succ_key"], perm[:bk.shape[0]]))
+            o = extra.shape[0] + dels.shape[0]
+            for i, q in enumerate(pts):
+                assert value[o + i] == model.get(int(q), -1), (q, value[o + i])
+            for i, q in enumerate(sq):
+                j = np.searchsorted(live, q)
+                want = live[j] if j < len(live) else EMPTY
+                assert skk[o + n_pt + i] == want, (q, skk[o + n_pt + i], want)
+                if j < len(live):
+                    assert value[o + n_pt + i] == model[int(live[j])]
+            print(f"{routing} ok")
+        print("DIST_ENGINE_OK")
         """
     )
-    assert "DIST_FLIX_OK" in out
+    assert "DIST_ENGINE_OK" in out
 
 
-def test_a2a_routing():
+def test_shard_apply_ops_a2a_overflow_surfaced():
+    """Skewed batch over a tight per-pair capacity reports overflow; the
+    re-route with a larger capacity matches replicated byte-for-byte."""
     out = run_with_devices(
         """
         import numpy as np, jax, jax.numpy as jnp
+        from repro import core
         from repro.core import distributed as dist
 
-        from repro.launch.mesh import make_mesh_auto
-        mesh = make_mesh_auto((8,), ("shards",))
+        mesh = dist.make_shard_mesh(8)
         rng = np.random.default_rng(13)
-        keys = np.sort(rng.permutation(100000)[:8000]).astype(np.int32)
+        keys = np.sort(rng.permutation(100000)[:4000]).astype(np.int32)
         idx = dist.shard_build(jnp.asarray(keys), jnp.asarray(keys), mesh, node_size=16, nodes_per_bucket=8)
 
-        raw = rng.permutation(100000)[:4096].astype(np.int32)
-        local_sorted = np.sort(raw.reshape(8, 512), axis=1)
-        rk, rv, ov = dist.route_a2a(
-            idx, jnp.asarray(local_sorted.reshape(-1)), jnp.asarray(local_sorted.reshape(-1)),
-            mesh, capacity=160)
-        assert int(np.asarray(ov).sum()) == 0
-        EMPTY = np.iinfo(np.int32).max
-        routed = sorted(x for x in np.asarray(rk).tolist() if x != EMPTY)
-        assert routed == sorted(raw.tolist())
-        print("A2A_OK")
+        hi = int(np.asarray(idx.part_fences)[0])  # everything -> shard 0
+        q = rng.integers(0, hi, 2048).astype(np.int32)
+        ops, perm = core.make_ops(np.full(2048, core.OP_POINT, np.int32), q)
+        _, _, stats = dist.shard_apply_ops(idx, ops, mesh, routing="a2a", capacity=64)
+        assert int(stats["a2a_overflow"]) == 2048 - 8 * 64, int(stats["a2a_overflow"])
+        _, res, stats = dist.shard_apply_ops(idx, ops, mesh, routing="a2a", capacity=256)
+        assert int(stats["a2a_overflow"]) == 0
+        _, want, _ = dist.shard_apply_ops(idx, ops, mesh, routing="replicated")
+        assert (np.asarray(res["value"]) == np.asarray(want["value"])).all()
+        print("A2A_OVERFLOW_OK")
         """
     )
-    assert "A2A_OK" in out
+    assert "A2A_OVERFLOW_OK" in out
+
+
+def test_sharded_kv_index_subprocess():
+    """KVPageIndex(shards=4): engine-served pages_of across the mesh."""
+    out = run_with_devices(
+        """
+        import numpy as np
+        from repro.serve.kv_index import KVPageIndex
+
+        kv = KVPageIndex(shards=4)
+        seqs = np.arange(6)
+        kv.allocate(seqs, np.zeros(6, int), seqs * 10)
+        kv.allocate(seqs, np.ones(6, int), seqs * 10 + 1)
+        assert (np.asarray(kv.lookup(seqs, np.ones(6, int))) == seqs * 10 + 1).all()
+        pg, sl, cnt = kv.pages_of(2)
+        assert int(cnt) == 2 and np.asarray(sl)[:2].tolist() == [20, 21]
+        kv.free_sequences([2])
+        assert kv.live_pages() == 10
+        print("KV_SHARDED_OK")
+        """
+    )
+    assert "KV_SHARDED_OK" in out
 
 
 def test_sharded_train_step_runs_and_matches_single_device():
@@ -155,7 +189,6 @@ def test_tiny_dryrun_cell_compiles():
 
 def test_gradient_compression_error_feedback():
     """int8 EF quantizer: accumulated quantized grads ≈ true sum over steps."""
-    import jax
     import jax.numpy as jnp
     import numpy as np
 

@@ -6,7 +6,7 @@ import pytest
 
 from repro import core
 from repro.core.invariants import check_invariants
-from repro.core.state import EMPTY, MAX_VALID, NOT_FOUND
+from repro.core.state import EMPTY, NOT_FOUND
 
 
 @pytest.fixture

@@ -1,0 +1,284 @@
+"""Sharded mixed-batch engine: ``shard_apply_ops`` parity + a2a overflow.
+
+In-process multi-device tests.  CI's *blocking* fast lane runs this file
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on a plain
+single-device host everything skips (the subprocess variants in
+``tests/test_distributed.py`` keep default tier-1 coverage).  The contract
+under test (DESIGN.md §11): ``shard_apply_ops`` is byte-identical to
+single-device ``apply_ops`` — slots, successor fallbacks, dense RANGE
+arrays, stats — for both routing modes on 2/4/8 host devices.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import distributed as dist
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 host devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+KEY_SPACE = 100_000
+RESULT_KEYS = (
+    "value",
+    "succ_key",
+    "range_key",
+    "range_val",
+    "range_start",
+    "range_count",
+)
+STAT_KEYS = ("inserted", "deleted", "overflowed_buckets", "range_truncated")
+
+
+def _build_pair(rng, n=2048, n_shards=4):
+    """(single-device state, sharded index, mesh) over the same contents."""
+    keys = np.sort(rng.permutation(KEY_SPACE)[:n]).astype(np.int32)
+    vals = np.arange(n, dtype=np.int32)
+    st = core.build_from_sorted(
+        jnp.asarray(keys),
+        jnp.asarray(vals),
+        num_buckets=max(1, n // 8),
+        nodes_per_bucket=8,
+        node_size=16,
+    )
+    mesh = dist.make_shard_mesh(n_shards)
+    idx = dist.shard_build(
+        jnp.asarray(keys), jnp.asarray(vals), mesh, node_size=16, nodes_per_bucket=8
+    )
+    return keys, st, idx, mesh
+
+
+def _mixed_batch(rng, keys, *, n_ins=128, n_del=128, n_pt=384, n_sc=384, n_rg=64,
+                 span=2_000, pad_to=2048):
+    """A full-mix sorted batch (RANGE spans drawn wide enough to cross
+    shard fences) plus one whole-keyspace range op."""
+    absent = np.setdiff1d(
+        rng.integers(0, KEY_SPACE + 20_000, 4096).astype(np.int32), keys
+    )
+    ins = absent[:n_ins]
+    dels = rng.choice(keys, n_del, replace=False).astype(np.int32)
+    pts = rng.integers(0, KEY_SPACE + 20_000, n_pt).astype(np.int32)
+    scs = rng.integers(0, KEY_SPACE + 20_000, n_sc).astype(np.int32)
+    los = rng.integers(0, KEY_SPACE, n_rg - 1).astype(np.int32)
+    his = (los + rng.integers(1, span, n_rg - 1)).astype(np.int32)
+    los = np.concatenate([los, [0]]).astype(np.int32)
+    his = np.concatenate([his, [KEY_SPACE + 20_000]]).astype(np.int32)
+    tags = np.concatenate([
+        np.full(n_ins, core.OP_INSERT),
+        np.full(n_del, core.OP_DELETE),
+        np.full(n_pt, core.OP_POINT),
+        np.full(n_sc, core.OP_SUCCESSOR),
+        np.full(n_rg, core.OP_RANGE),
+    ]).astype(np.int32)
+    bk = np.concatenate([ins, dels, pts, scs, los]).astype(np.int32)
+    bv = np.concatenate([
+        np.arange(n_ins, dtype=np.int32) + 7_000_000,
+        np.zeros(n_del, np.int32),
+        np.zeros(n_pt, np.int32),
+        np.zeros(n_sc, np.int32),
+        his,
+    ]).astype(np.int32)
+    ops, _ = core.make_ops(tags, bk, bv, pad_to=pad_to)
+    return ops
+
+
+def _assert_identical(res, stats, want_res, want_stats, label=""):
+    for k in RESULT_KEYS:
+        got, want = np.asarray(res[k]), np.asarray(want_res[k])
+        bad = np.nonzero(got != want)[0]
+        assert bad.size == 0, (label, k, bad[:10], got[bad][:5], want[bad][:5])
+    for k in STAT_KEYS:
+        assert int(stats[k]) == int(want_stats[k]), (label, k)
+
+
+def _post_state_parity(new_idx, mesh, single_state, probe_keys):
+    """The updated sharded index answers like the updated single state."""
+    q = np.sort(probe_keys)
+    qops, _ = core.make_ops(np.full(q.shape, core.OP_POINT, np.int32), q)
+    _, got, _ = dist.shard_apply_ops(new_idx, qops, mesh, max_results=8)
+    _, want, _ = core.apply_ops(single_state, qops, impl="reference", max_results=8)
+    assert (np.asarray(got["value"]) == np.asarray(want["value"])).all()
+
+
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+@pytest.mark.parametrize("routing", ["replicated", "a2a"])
+def test_matches_single_device(rng, n_shards, routing):
+    keys, st, idx, mesh = _build_pair(rng, n_shards=n_shards)
+    ops = _mixed_batch(rng, keys)
+    mr = 512
+    s2, want_res, want_stats = core.apply_ops(st, ops, impl="reference", max_results=mr)
+    new_idx, res, stats = dist.shard_apply_ops(
+        idx, ops, mesh, routing=routing, max_results=mr
+    )
+    _assert_identical(res, stats, want_res, want_stats, f"{routing}/s{n_shards}")
+    assert int(stats["a2a_overflow"]) == 0
+    probes = np.concatenate([keys[:512], np.asarray(ops.key)[:256]])
+    _post_state_parity(new_idx, mesh, s2, probes)
+
+
+@pytest.mark.parametrize("routing", ["replicated", "a2a"])
+def test_truncation_deterministic_under_global_budget(rng, routing):
+    """A tight global max_results budget truncates exactly like one device."""
+    keys, st, idx, mesh = _build_pair(rng)
+    ops = _mixed_batch(rng, keys, n_rg=96, span=8_000)
+    mr = 64  # far below the full result volume -> earlier-op-wins truncation
+    _, want_res, want_stats = core.apply_ops(st, ops, impl="reference", max_results=mr)
+    assert int(want_stats["range_truncated"]) > 0  # the case is exercised
+    _, res, stats = dist.shard_apply_ops(
+        idx, ops, mesh, routing=routing, max_results=mr
+    )
+    _assert_identical(res, stats, want_res, want_stats, routing)
+
+
+def test_read_only_and_nop_batches(rng):
+    keys, st, idx, mesh = _build_pair(rng)
+    ops = _mixed_batch(rng, keys, n_ins=0, n_del=0, n_pt=512, n_sc=512, n_rg=32)
+    _, want_res, want_stats = core.apply_ops(st, ops, impl="reference", max_results=256)
+    for routing in ("replicated", "a2a"):
+        _, res, stats = dist.shard_apply_ops(
+            idx, ops, mesh, routing=routing, max_results=256
+        )
+        _assert_identical(res, stats, want_res, want_stats, routing)
+    # all-NOP padding batch is legal and a no-op
+    nops, _ = core.make_ops(
+        np.zeros(0, np.int32), np.zeros(0, np.int32), pad_to=64
+    )
+    for routing in ("replicated", "a2a"):
+        new_idx, res, stats = dist.shard_apply_ops(idx, nops, mesh, routing=routing)
+        assert int(stats["inserted"]) == 0 and int(stats["deleted"]) == 0
+        assert (np.asarray(res["value"]) == int(core.NOT_FOUND)).all()
+
+
+# ---------------------------------------------------------------------------
+# a2a capacity / overflow semantics (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def _skewed_batch(rng, idx, n=1024):
+    """Every op lands inside shard 0's fence range (adversarial skew)."""
+    hi = int(np.asarray(idx.part_fences)[0])
+    skewed = rng.integers(0, hi, n).astype(np.int32)
+    tags = np.full(n, core.OP_POINT, np.int32)
+    tags[: n // 4] = core.OP_SUCCESSOR
+    ops, _ = core.make_ops(tags, skewed)
+    return ops
+
+
+def test_a2a_overflow_reported_and_reroute_succeeds(rng):
+    keys, st, idx, mesh = _build_pair(rng)
+    ops = _skewed_batch(rng, idx)
+    # capacity 64 per (src, dst) pair cannot carry 1024 rows to one shard
+    _, _, stats = dist.shard_apply_ops(idx, ops, mesh, routing="a2a", capacity=64)
+    assert int(stats["a2a_overflow"]) == 1024 - 4 * 64
+    # the documented recovery: replay the same batch on the same (unmutated)
+    # index with a larger capacity — results now match the replicated mode
+    _, res, stats = dist.shard_apply_ops(idx, ops, mesh, routing="a2a", capacity=256)
+    assert int(stats["a2a_overflow"]) == 0
+    _, want, _ = dist.shard_apply_ops(idx, ops, mesh, routing="replicated")
+    for k in ("value", "succ_key"):
+        assert (np.asarray(res[k]) == np.asarray(want[k])).all(), k
+
+
+def test_a2a_matches_replicated_on_skew(rng):
+    """Replicated vs a2a are byte-identical when all ops hit one shard."""
+    keys, st, idx, mesh = _build_pair(rng)
+    hi = int(np.asarray(idx.part_fences)[0])
+    absent = np.setdiff1d(rng.integers(0, hi, 4096).astype(np.int32), keys)
+    n = 256
+    tags = np.concatenate([
+        np.full(n, core.OP_INSERT),
+        np.full(n, core.OP_DELETE),
+        np.full(n, core.OP_POINT),
+        np.full(n, core.OP_SUCCESSOR),
+        np.full(32, core.OP_RANGE),
+    ]).astype(np.int32)
+    in_shard0 = keys[keys < hi]
+    bk = np.concatenate([
+        absent[:n],
+        rng.choice(in_shard0, n, replace=False),
+        rng.integers(0, hi, n),
+        rng.integers(0, hi, n),
+        rng.integers(0, hi, 32),
+    ]).astype(np.int32)
+    bv = np.zeros(bk.shape, np.int32)
+    bv[:n] = np.arange(n) + 5_000_000
+    bv[-32:] = bk[-32:] + 500
+    ops, _ = core.make_ops(tags, bk, bv, pad_to=1280)
+    _, want_res, want_stats = dist.shard_apply_ops(
+        idx, ops, mesh, routing="replicated", max_results=256
+    )
+    # default capacity (= chunk size) can never overflow, even at full skew
+    _, res, stats = dist.shard_apply_ops(
+        idx, ops, mesh, routing="a2a", max_results=256
+    )
+    assert int(stats["a2a_overflow"]) == 0
+    _assert_identical(res, stats, want_res, want_stats, "skew")
+
+
+# ---------------------------------------------------------------------------
+# shard_restructure (cluster analogue of §3.5 relaunch)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_restructure_rebalances_and_preserves_contents(rng):
+    keys, st, idx, mesh = _build_pair(rng)
+    hi = int(np.asarray(idx.part_fences)[0])
+    extra = np.setdiff1d(rng.integers(0, hi, 6000).astype(np.int32), keys)[:1024]
+    iops, _ = core.make_ops(
+        np.full(extra.shape, core.OP_INSERT, np.int32),
+        np.sort(extra),
+        np.arange(extra.shape[0], dtype=np.int32),
+    )
+    idx2, _, _ = dist.shard_apply_ops_safe(idx, iops, mesh)
+    before = np.asarray(dist.shard_live_counts(idx2, mesh))
+    idx3 = dist.shard_restructure(idx2, mesh)
+    after = np.asarray(dist.shard_live_counts(idx3, mesh))
+    assert before.sum() == after.sum() == keys.shape[0] + extra.shape[0]
+    assert before.max() > 2 * before.min()  # the skew was real
+    assert after.max() - after.min() <= after.mean() * 0.25 + 16  # rebalanced
+    # every key still resolves post-rebalance
+    probe = np.sort(np.concatenate([keys, extra]))
+    qops, _ = core.make_ops(np.full(probe.shape, core.OP_POINT, np.int32), probe)
+    _, res, _ = dist.shard_apply_ops(idx3, qops, mesh, max_results=8)
+    assert (np.asarray(res["value"]) != int(core.NOT_FOUND)).all()
+
+
+# ---------------------------------------------------------------------------
+# sharded serving (KVPageIndex across the mesh)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("routing", ["replicated", "a2a"])
+def test_sharded_kv_index_serves_like_local(routing):
+    from repro.serve.kv_index import KVPageIndex
+
+    kv = KVPageIndex(shards=4, routing=routing)
+    ref = KVPageIndex()
+    seqs = np.arange(8)
+    for idx_obj in (kv, ref):
+        idx_obj.allocate(seqs, np.zeros(8, int), seqs * 100)
+        idx_obj.allocate(seqs, np.ones(8, int), seqs * 100 + 1)
+    got = np.asarray(kv.lookup(seqs, np.ones(8, int)))
+    assert (got == np.asarray(ref.lookup(seqs, np.ones(8, int)))).all()
+    pg, sl, cnt = kv.pages_of(3)
+    assert int(cnt) == 2
+    assert np.asarray(pg)[:2].tolist() == [0, 1]
+    assert np.asarray(sl)[:2].tolist() == [300, 301]
+    kv.free_sequences([3])
+    ref.free_sequences([3])
+    assert kv.live_pages() == ref.live_pages() == 14
+    _, _, cnt = kv.pages_of(3)
+    assert int(cnt) == 0
+    # a burst large enough to overflow the seed geometry exercises the
+    # shard_restructure retry inside shard_apply_ops_safe
+    pages = np.arange(600)
+    kv.allocate(np.full(600, 50), pages, pages + 9000)
+    assert kv.live_pages() == 614
+    pg, sl, cnt = kv.pages_of(50, max_pages=1024)
+    assert int(cnt) == 600
+    assert (np.asarray(sl)[:600] == pages + 9000).all()
