@@ -1,0 +1,172 @@
+"""Durability engine costs: snapshot/replay throughput vs churn.
+
+The DESIGN.md §12 claims under measurement:
+
+  * a **delta** snapshot's write cost is proportional to churn (dirty
+    buckets), not index size — the ``durability_snap_*_churn{X}`` rows
+    record wall time, and the ``durability_snap_*_bytes_churn{X}`` rows
+    record payload volume.  ``benchmarks.run`` lifts the BYTES ratio into
+    the gated ``durability_delta_speedup`` map of the bench artifact:
+    write volume is a deterministic function of churn, so the regression
+    gate never flakes on container fsync jitter the way wall time does;
+  * the WAL append (frame + fsync) is a bounded per-batch tax
+    (``durability_wal_append``), and replay is much cheaper than the
+    original execution (``durability_wal_replay_scan`` measures the pure
+    log scan; ``durability_recover`` is the full end-to-end open:
+    snapshot load + rebuild + re-execution of the logged tail).
+
+Churn is emulated the way the serving path produces it: the dirty-bucket
+set is seeded directly (X% of buckets) between snapshots, so the suite
+measures the persistence layer, not ``apply_ops``.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import BUILD_SIZE, KEY_SPACE, emit, keyset
+from repro.checkpoint import DurableFliX, LocalEngine
+from repro.checkpoint import wal as wal_mod
+from repro.checkpoint.serialize import state_from_pairs
+from repro.checkpoint.wal import WriteAheadLog, encode_ops
+from repro.core.ops import OP_INSERT, OpBatch
+
+CHURN_PCTS = (1, 10, 50)
+WAL_BATCH = 512
+N_REPLAY = 64
+
+
+def _host_time(fn, *, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall microseconds of a host-side (I/O) callable."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def _mark_dirty(dur: DurableFliX, frac: float) -> None:
+    nb = dur.state.geometry[0]
+    n = max(1, int(nb * frac))
+    dur._dirty = set(range(0, nb, max(1, nb // n)))
+    dur._all_dirty = False
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    keys = np.sort(keyset(rng, BUILD_SIZE))
+    vals = np.arange(BUILD_SIZE, dtype=np.int32)
+
+    root = Path(tempfile.mkdtemp(prefix="flix_bench_dur_"))
+    try:
+        dur = DurableFliX.create(
+            root / "snap",
+            state_from_pairs(keys, vals),
+            engine=LocalEngine(),
+            snapshot_every=0,  # snapshots driven manually below
+        )
+        nb = dur.state.geometry[0]
+
+        for pct in CHURN_PCTS:
+            # snapshots are named by seq; advance it so each timed call
+            # commits a fresh directory instead of renaming onto the last
+            def snap_full():
+                dur._seq += 1
+                dur.snapshot(full=True)
+
+            def snap_delta():
+                dur._seq += 1
+                _mark_dirty(dur, pct / 100)
+                dur.snapshot(full=False)
+
+            full_us = _host_time(snap_full)
+            delta_us = _host_time(snap_delta)
+            # payload volume from one committed snapshot of each kind —
+            # deterministic, unlike the wall times above
+            dur._seq += 1
+            full_b = (dur.snapshot(full=True) / "payload.bin").stat().st_size
+            dur._seq += 1
+            _mark_dirty(dur, pct / 100)
+            delta_b = (dur.snapshot(full=False) / "payload.bin").stat().st_size
+            n_dirty = max(1, int(nb * pct / 100))
+            emit(
+                f"durability_snap_full_churn{pct}",
+                full_us,
+                f"n={BUILD_SIZE};nb={nb}",
+            )
+            emit(
+                f"durability_snap_delta_churn{pct}",
+                delta_us,
+                f"dirty={n_dirty}/{nb};x{full_us / max(delta_us, 1e-9):.1f}",
+            )
+            emit(f"durability_snap_full_bytes_churn{pct}", full_b, "bytes")
+            emit(
+                f"durability_snap_delta_bytes_churn{pct}",
+                delta_b,
+                f"bytes;x{full_b / max(delta_b, 1e-9):.1f}",
+            )
+        dur.close()
+
+        # WAL append: frame + write + fsync of one WAL_BATCH-op record
+        wal_dir = root / "wal_append"
+        wal = WriteAheadLog(wal_dir)
+        wal.open_segment(1)
+        tag = np.full(WAL_BATCH, OP_INSERT, np.int32)
+        wkeys = keyset(rng, WAL_BATCH)
+        payload = encode_ops(tag, wkeys, wkeys, 128)
+        seq_box = [0]
+
+        def append_one():
+            seq_box[0] += 1
+            wal.append(seq_box[0], payload)
+
+        emit(
+            "durability_wal_append",
+            _host_time(append_one, warmup=2, iters=9),
+            f"ops={WAL_BATCH};fsync",
+        )
+        wal.close()
+
+        # replay scan: N_REPLAY records decoded + checksummed, per record
+        scan_us = _host_time(lambda: wal_mod.replay(wal_dir), iters=5)
+        n_recs = len(wal_mod.replay(wal_dir))
+        emit(
+            "durability_wal_replay_scan",
+            scan_us / max(n_recs, 1),
+            f"records={n_recs};per_record",
+        )
+
+        # end-to-end recovery: snapshot chain load + rebuild + replay tail
+        rec_root = root / "recover"
+        rdur = DurableFliX.create(
+            rec_root,
+            state_from_pairs(keys, vals),
+            engine=LocalEngine(),
+            snapshot_every=0,
+        )
+        ins = np.sort(keyset(rng, WAL_BATCH, KEY_SPACE))
+        for t in range(1, N_REPLAY // 8 + 1):
+            batch = OpBatch.from_host(
+                np.full(WAL_BATCH, OP_INSERT, np.int32), ins, ins + t
+            )
+            rdur.apply(batch)
+        rdur.close()
+        t0 = time.perf_counter()
+        reopened = DurableFliX.open(rec_root, engine=LocalEngine(), snapshot_every=0)
+        rec_us = (time.perf_counter() - t0) * 1e6
+        emit(
+            "durability_recover",
+            rec_us,
+            f"replayed={reopened.replayed};n={BUILD_SIZE}",
+        )
+        reopened.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)

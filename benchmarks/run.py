@@ -4,12 +4,13 @@
   python -m benchmarks.run             # everything
   python -m benchmarks.run fig9 fig13  # substring filter
 
-Besides the CSV rows on stdout, every run writes ``BENCH_PR5.json`` — the
+Besides the CSV rows on stdout, every run writes ``BENCH_PR6.json`` — the
 repo's machine-readable perf-trajectory artifact (schema ``flix-bench-v1``,
 DESIGN.md §7): per-suite ``name → us_per_call`` maps plus the
 fused-vs-reference ``apply_ops`` speedups extracted from the
-``mixed_batch`` suite, the RANGE-op speedups from ``range_mix``, and the
-sharded-vs-single speedups from ``sharded_mix``.  (``BENCH_PR*.json`` in
+``mixed_batch`` suite, the RANGE-op speedups from ``range_mix``, the
+sharded-vs-single speedups from ``sharded_mix``, and the delta-vs-full
+snapshot write-volume ratios from ``durability``.  (``BENCH_PR*.json`` in
 the repo root are committed per-PR snapshots — ``benchmarks.compare``
 diffs against them; don't overwrite them outside a snapshot refresh.)
 """
@@ -27,6 +28,7 @@ from benchmarks import (
     common,
     delete_rounds,
     dist_shift,
+    durability,
     heatmap,
     insert_rounds,
     mixed_batch,
@@ -53,9 +55,10 @@ SUITES = {
     "range_mix_engine": range_mix,
     "sharded_mix_engine": sharded_mix,
     "table4_restructure": restructure_recovery,
+    "durability_engine": durability,
 }
 
-BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR5.json")
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR6.json")
 
 
 def _speedups(
@@ -107,6 +110,10 @@ def write_bench_json(
         name: row["us_per_call"]
         for name, row in suites.get("sharded_mix_engine", {}).items()
     }
+    durab = {
+        name: row["us_per_call"]
+        for name, row in suites.get("durability_engine", {}).items()
+    }
     payload = {
         "schema": "flix-bench-v1",
         "scale": common.SCALE,
@@ -123,6 +130,15 @@ def write_bench_json(
             ranges, "range_mix_fused_", "range_mix_ref_"
         ),
         "sharded_speedup": _sharded_speedups(sharded),
+        # payload-volume ratio (full bytes / delta bytes per churn level):
+        # deterministic by construction, so the compare gate never flakes
+        # on I/O timing jitter — the wall-time rows stay ungated records
+        "durability_delta_speedup": _speedups(
+            durab,
+            "durability_snap_delta_bytes_churn",
+            "durability_snap_full_bytes_churn",
+            key_prefix="churn",
+        ),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -1,3 +1,24 @@
-"""Fault-tolerant checkpointing (save/restore, async, elastic reshard)."""
+"""Fault-tolerant checkpointing: generic pytree save/restore plus the
+engine-aware durable FliX layer (deterministic snapshots + WAL)."""
 
-from repro.checkpoint.manager import CheckpointManager, restore_pytree, save_pytree
+from repro.checkpoint.durable import (
+    DurableFliX,
+    LocalEngine,
+    ShardEngine,
+    SnapshotCorruptionError,
+    load_snapshot_chain,
+)
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    restore_pytree,
+    save_pytree,
+    tmp_sibling,
+)
+from repro.checkpoint.serialize import (
+    SnapshotFormatError,
+    canonical_state_bytes,
+    parse_canonical,
+    state_digest,
+    state_from_pairs,
+)
+from repro.checkpoint.wal import WALCorruptionError, WriteAheadLog, replay

@@ -1,0 +1,680 @@
+"""Engine-aware durable persistence for a FliX index (DESIGN.md §12).
+
+Commit protocol, per engine batch (WAL-ahead):
+
+  1. frame + append the sorted ``OpBatch`` (with its ``max_results``) to
+     the write-ahead log and fsync — the batch is durable *before* the
+     engine runs it;
+  2. execute it (``apply_ops`` / ``shard_apply_ops`` behind an engine
+     adapter, restructure-and-retry included);
+  3. fold the batch's update keys into the dirty-bucket set (fences are
+     fixed between restructures, so host-side ``searchsorted`` routing is
+     exact); a restructure bumps the *fence epoch* and dirties everything;
+  4. every ``snapshot_every`` batches, write a snapshot — a dirty-bucket
+     delta within an epoch, a full canonical payload after an epoch bump
+     or every ``full_every``-th snapshot.
+
+Snapshots are atomic (unique tmp sibling dir, fsync, rename, dir fsync)
+and *canonical* (``checkpoint.serialize``): the same logical index always
+produces the same payload bytes, so restructures and shard rebalances are
+logical no-ops that never need WAL entries of their own.
+
+Recovery (resumable, idempotent):
+
+  1. load the newest crc-verified snapshot chain (full + deltas);
+  2. truncate the WAL's torn tail (a crash mid-append);
+  3. replay every logged batch after the snapshot through the engine;
+  4. reopen the WAL for append — the instance continues exactly where the
+     durable history ends.
+
+Crashing *during* recovery is safe: its only write is the idempotent
+tail truncation.  ``crash_hook`` is the fault-injection seam — the named
+events in ``WriteAheadLog.append`` / ``DurableFliX.snapshot`` are where
+``tests/fault_injection.py`` kills the process.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import wal as wal_mod
+from repro.checkpoint.manager import tmp_sibling
+from repro.checkpoint.serialize import (
+    SnapshotFormatError,
+    bucket_segments,
+    pack_delta,
+    pairs_to_bytes,
+    parse_canonical,
+    parse_delta,
+    segment_crcs,
+    state_from_pairs,
+)
+from repro.checkpoint.wal import WriteAheadLog, decode_ops, encode_ops
+from repro.core.ops import (
+    DEFAULT_MAX_RESULTS,
+    OP_DELETE,
+    OP_INSERT,
+    OpBatch,
+    apply_ops,
+)
+from repro.core.restructure import restructure_grow
+
+SNAP_FORMAT = "flix-durable-v1"
+_SNAP_PREFIX = "snap_"
+
+
+class SnapshotCorruptionError(RuntimeError):
+    """A snapshot failed structural or checksum validation at load."""
+
+
+def _noop_hook(event: str) -> None:
+    return None
+
+
+# ---------------------------------------------------------------------------
+# engine adapters: one batch in, (new handle, results, stats, restructured)
+# ---------------------------------------------------------------------------
+
+
+class LocalEngine:
+    """Single-device executor behind the durability layer."""
+
+    kind = "local"
+
+    def __init__(
+        self,
+        *,
+        impl: str = "auto",
+        node_size: int = 32,
+        nodes_per_bucket: int = 16,
+        fill: float = 0.5,
+    ):
+        self.impl = impl
+        self.node_size = node_size
+        self.nodes_per_bucket = nodes_per_bucket
+        self.fill = fill
+
+    def rebuild(self, keys, vals, geometry: dict | None = None):
+        g = geometry or {}
+        return state_from_pairs(
+            keys,
+            vals,
+            node_size=g.get("node_size", self.node_size),
+            nodes_per_bucket=g.get("nodes_per_bucket", self.nodes_per_bucket),
+            fill=g.get("fill", self.fill),
+        )
+
+    def flix(self, handle):
+        return handle
+
+    def apply(self, handle, ops: OpBatch, *, max_results: int):
+        """``apply_ops`` with the restructure-and-retry loop surfaced: the
+        durability layer must KNOW when the fence epoch changed, so it
+        drives the retry itself instead of calling ``apply_ops_safe``."""
+        new, results, stats = apply_ops(
+            handle, ops, impl=self.impl, max_results=max_results
+        )
+        restructured = False
+        if bool(new.needs_restructure) and not bool(handle.needs_restructure):
+            n_ins = int(jnp.sum(ops.tag == OP_INSERT))
+            grown = restructure_grow(handle, extra_keys=max(n_ins, 1))
+            new, results, stats = apply_ops(
+                grown, ops, impl=self.impl, max_results=max_results
+            )
+            assert not bool(new.needs_restructure), "post-restructure overflow"
+            restructured = True
+        return new, results, stats, restructured
+
+
+class ShardEngine:
+    """Sharded executor (``core.distributed``) behind the durability layer.
+
+    The handle is a ``ShardedFliX``; rebuilds go through ``shard_build``
+    (so recovery re-partitions fences from the recovered contents — the
+    durable analogue of ``shard_restructure``), and the retry loop mirrors
+    ``shard_apply_ops_safe`` while reporting the epoch bump.
+    """
+
+    kind = "sharded"
+
+    def __init__(
+        self,
+        mesh,
+        *,
+        routing: str = "replicated",
+        impl: str = "auto",
+        node_size: int = 32,
+        nodes_per_bucket: int = 16,
+        fill: float = 0.5,
+    ):
+        self.mesh = mesh
+        self.routing = routing
+        self.impl = impl
+        self.node_size = node_size
+        self.nodes_per_bucket = nodes_per_bucket
+        self.fill = fill
+
+    def rebuild(self, keys, vals, geometry: dict | None = None):
+        from repro.core.distributed import shard_build
+
+        g = geometry or {}
+        return shard_build(
+            jnp.asarray(np.asarray(keys, np.int32)),
+            jnp.asarray(np.asarray(vals, np.int32)),
+            self.mesh,
+            node_size=g.get("node_size", self.node_size),
+            nodes_per_bucket=g.get("nodes_per_bucket", self.nodes_per_bucket),
+            fill=g.get("fill", self.fill),
+        )
+
+    def flix(self, handle):
+        return handle.state
+
+    def apply(self, handle, ops: OpBatch, *, max_results: int):
+        from repro.core.distributed import shard_apply_ops, shard_restructure
+
+        new, results, stats = shard_apply_ops(
+            handle,
+            ops,
+            self.mesh,
+            routing=self.routing,
+            impl=self.impl,
+            max_results=max_results,
+        )
+        restructured = False
+        if bool(new.state.needs_restructure) and not bool(
+            handle.state.needs_restructure
+        ):
+            n_ins = int(jnp.sum(ops.tag == OP_INSERT))
+            grown = shard_restructure(handle, self.mesh, extra_keys=max(n_ins, 1))
+            new, results, stats = shard_apply_ops(
+                grown,
+                ops,
+                self.mesh,
+                routing=self.routing,
+                impl=self.impl,
+                max_results=max_results,
+            )
+            assert not bool(new.state.needs_restructure), "post-restructure overflow"
+            restructured = True
+        return new, results, stats, restructured
+
+
+# ---------------------------------------------------------------------------
+# snapshot store helpers
+# ---------------------------------------------------------------------------
+
+
+def _snap_name(seq: int) -> str:
+    return f"{_SNAP_PREFIX}{seq:012d}"
+
+
+def _snapshot_dirs(directory: Path) -> list[tuple[int, Path]]:
+    """(seq, path) for committed snapshots, ascending; scratch dirs with
+    ``.tmp`` in the name are crash leftovers and never listed."""
+    out = []
+    for p in Path(directory).glob(f"{_SNAP_PREFIX}*"):
+        if not p.is_dir() or ".tmp" in p.name:
+            continue
+        try:
+            seq = int(p.name[len(_SNAP_PREFIX) :])
+        except ValueError:
+            continue
+        out.append((seq, p))
+    return sorted(out)
+
+
+def _read_manifest(path: Path) -> dict:
+    try:
+        with open(path / "manifest.json") as f:
+            m = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SnapshotCorruptionError(f"{path.name}: unreadable manifest: {e}") from e
+    if m.get("format") != SNAP_FORMAT:
+        raise SnapshotCorruptionError(
+            f"{path.name}: format {m.get('format')!r} != {SNAP_FORMAT!r}"
+        )
+    return m
+
+
+def _read_payload(path: Path, manifest: dict) -> bytes:
+    try:
+        data = (path / "payload.bin").read_bytes()
+    except OSError as e:
+        raise SnapshotCorruptionError(f"{path.name}: unreadable payload: {e}") from e
+    if zlib.crc32(data) != manifest["payload_crc"]:
+        raise SnapshotCorruptionError(f"{path.name}: payload checksum mismatch")
+    return data
+
+
+def load_snapshot_chain(directory: Path, seq: int):
+    """Reconstruct the canonical pairs at snapshot ``seq``: follow the
+    delta chain back to its base full snapshot, then replay the diffs
+    forward, verifying every checksum on the way.  Returns
+    ``(keys, vals, manifest)`` for the requested snapshot."""
+    directory = Path(directory)
+    chain: list[tuple[Path, dict]] = []
+    name = _snap_name(seq)
+    while True:
+        path = directory / name
+        m = _read_manifest(path)
+        chain.append((path, m))
+        if m["kind"] == "full":
+            break
+        if m["kind"] != "delta" or not m.get("base"):
+            raise SnapshotCorruptionError(f"{path.name}: malformed chain entry")
+        name = m["base"]
+        if len(chain) > 10_000:
+            raise SnapshotCorruptionError("delta chain does not terminate")
+    chain.reverse()  # base full first
+
+    base_path, base_m = chain[0]
+    epoch = base_m["epoch"]
+    keys, vals = parse_canonical(_read_payload(base_path, base_m))
+    lens = np.asarray(base_m["seg_lens"], np.int64)
+    if int(lens.sum()) != keys.size:
+        raise SnapshotCorruptionError(f"{base_path.name}: seg_lens/payload mismatch")
+    bounds = np.concatenate([[0], np.cumsum(lens)])
+    seg_k = [keys[bounds[b] : bounds[b + 1]] for b in range(len(lens))]
+    seg_v = [vals[bounds[b] : bounds[b + 1]] for b in range(len(lens))]
+
+    for path, m in chain[1:]:
+        if m["epoch"] != epoch:
+            raise SnapshotCorruptionError(
+                f"{path.name}: epoch {m['epoch']} != chain epoch {epoch}"
+            )
+        bi, ln, ks, vs = parse_delta(_read_payload(path, m))
+        off = 0
+        for b, n in zip(bi, ln):
+            if not 0 <= b < len(seg_k):
+                raise SnapshotCorruptionError(f"{path.name}: bucket {b} out of range")
+            seg_k[b] = ks[off : off + n]
+            seg_v[b] = vs[off : off + n]
+            off += int(n)
+
+    final_m = chain[-1][1]
+    want_lens = np.asarray(final_m["seg_lens"], np.int64)
+    got_lens = np.array([len(s) for s in seg_k], np.int64)
+    if len(want_lens) != len(got_lens) or (want_lens != got_lens).any():
+        raise SnapshotCorruptionError(f"{_snap_name(seq)}: reconstructed lens differ")
+    flat_k = np.concatenate(seg_k) if seg_k else np.zeros(0, np.int32)
+    flat_v = np.concatenate(seg_v) if seg_v else np.zeros(0, np.int32)
+    crcs = segment_crcs(got_lens, flat_k.astype("<i4"), flat_v.astype("<i4"))
+    if crcs != list(final_m["bucket_crcs"]):
+        raise SnapshotCorruptionError(f"{_snap_name(seq)}: bucket checksum mismatch")
+    return flat_k.astype(np.int32), flat_v.astype(np.int32), final_m
+
+
+# ---------------------------------------------------------------------------
+# the durable index
+# ---------------------------------------------------------------------------
+
+
+class DurableFliX:
+    """WAL-ahead durable wrapper around a FliX engine (DESIGN.md §12).
+
+    Use :meth:`create` for a fresh directory and :meth:`open` to recover;
+    ``apply`` is the only mutation path.  ``seq`` counts applied batches
+    (0 = the initial snapshot), and every batch whose ``apply`` returned
+    is durable: it was fsynced into the WAL before execution.
+    """
+
+    def __init__(
+        self,
+        directory,
+        engine,
+        handle,
+        *,
+        seq: int,
+        epoch: int,
+        snapshot_every: int = 64,
+        full_every: int = 8,
+        keep_full: int = 2,
+        fsync: bool = True,
+        crash_hook=None,
+    ):
+        self.dir = Path(directory)
+        self.engine = engine
+        self.handle = handle
+        self.snapshot_every = snapshot_every
+        self.full_every = max(1, full_every)
+        self.keep_full = max(1, keep_full)
+        self._seq = seq
+        self._epoch = epoch
+        self._hook = crash_hook or _noop_hook
+        self._wal = WriteAheadLog(self.dir, fsync=fsync, crash_hook=self._hook)
+        self._dirty: set[int] = set()
+        self._all_dirty = True
+        self._mkba_host = np.asarray(self._flix_state().mkba)
+        self._bucket_lens: np.ndarray | None = None
+        self._bucket_crcs: list[int] | None = None
+        self._snaps_since_full = 0
+
+    # -- constructors -----------------------------------------------------
+    @staticmethod
+    def exists(directory) -> bool:
+        d = Path(directory)
+        return d.is_dir() and (
+            bool(_snapshot_dirs(d)) or bool(wal_mod.segment_files(d))
+        )
+
+    @classmethod
+    def create(
+        cls,
+        directory,
+        handle,
+        *,
+        engine=None,
+        snapshot_every: int = 64,
+        full_every: int = 8,
+        keep_full: int = 2,
+        fsync: bool = True,
+        crash_hook=None,
+    ) -> "DurableFliX":
+        """Start a durable history at ``seq=0`` from an existing state:
+        writes the initial full snapshot and opens the first WAL segment."""
+        directory = Path(directory)
+        directory.mkdir(parents=True, exist_ok=True)
+        if cls.exists(directory):
+            raise FileExistsError(
+                f"{directory} already holds a durable index — use open()"
+            )
+        self = cls(
+            directory,
+            engine or LocalEngine(),
+            handle,
+            seq=0,
+            epoch=0,
+            snapshot_every=snapshot_every,
+            full_every=full_every,
+            keep_full=keep_full,
+            fsync=fsync,
+            crash_hook=crash_hook,
+        )
+        self.snapshot(full=True)  # also opens WAL segment seq+1
+        return self
+
+    @classmethod
+    def open(
+        cls,
+        directory,
+        *,
+        engine=None,
+        snapshot_every: int = 64,
+        full_every: int = 8,
+        keep_full: int = 2,
+        fsync: bool = True,
+        crash_hook=None,
+        truncate_torn: bool = True,
+    ) -> "DurableFliX":
+        """Crash recovery: newest valid snapshot chain + WAL replay.
+
+        Every batch whose append was acknowledged is recovered; a torn
+        tail (crash mid-append) is truncated — or, with
+        ``truncate_torn=False``, surfaces as ``WALCorruptionError``.
+        Recovery itself is crash-safe and idempotent, and rebuilding from
+        canonical pairs is an epoch bump (fresh fences), so the first
+        snapshot afterwards is automatically full.
+        """
+        directory = Path(directory)
+        engine = engine or LocalEngine()
+        snaps = _snapshot_dirs(directory)
+        if not snaps:
+            raise FileNotFoundError(f"no snapshots under {directory}")
+        keys = vals = manifest = None
+        errors = []
+        for seq, _path in reversed(snaps):
+            try:
+                keys, vals, manifest = load_snapshot_chain(directory, seq)
+                break
+            except SnapshotCorruptionError as e:  # fall back to an older one
+                errors.append(str(e))
+        if manifest is None:
+            raise SnapshotCorruptionError(
+                f"no loadable snapshot under {directory}: {errors}"
+            )
+
+        handle = engine.rebuild(keys, vals, manifest.get("geometry"))
+        self = cls(
+            directory,
+            engine,
+            handle,
+            seq=manifest["seq"],
+            epoch=manifest["epoch"] + 1,  # rebuilt fences = new epoch
+            snapshot_every=snapshot_every,
+            full_every=full_every,
+            keep_full=keep_full,
+            fsync=fsync,
+            crash_hook=crash_hook,
+        )
+        records = wal_mod.replay(
+            directory, after_seq=manifest["seq"], truncate_torn=truncate_torn
+        )
+        for seq, payload in records:
+            tag, key, val, max_results = decode_ops(payload)
+            ops = OpBatch.from_host(tag, key, val)
+            new, _results, _stats, restructured = engine.apply(
+                self.handle, ops, max_results=max_results
+            )
+            self.handle = new
+            if restructured:
+                self._epoch += 1
+            self._seq = seq
+        self.replayed = len(records)
+
+        # resume appending where the durable history ends: the newest
+        # segment (tail-truncated above) stays the active one
+        segs = wal_mod.segment_files(directory)
+        if segs:
+            self._wal.open_segment(segs[-1][0], path=segs[-1][1])
+        else:
+            self._wal.open_segment(self._seq + 1)
+        if self.snapshot_every and self.replayed >= self.snapshot_every:
+            self.snapshot()  # bound the next recovery's replay cost
+        return self
+
+    # -- accessors --------------------------------------------------------
+    @property
+    def seq(self) -> int:
+        return self._seq
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    @property
+    def state(self):
+        """The engine's current FliXState view (single-device: the handle
+        itself; sharded: the global-view state)."""
+        return self._flix_state()
+
+    def _flix_state(self):
+        return self.engine.flix(self.handle)
+
+    # -- the commit path --------------------------------------------------
+    def apply(self, ops: OpBatch, *, max_results: int = DEFAULT_MAX_RESULTS):
+        """Durably execute one sorted batch; returns ``(results, stats)``.
+
+        The WAL append (fsynced) precedes execution, so a crash at ANY
+        later point replays this batch to the identical logical state —
+        the engine never sees an op the log does not already hold.
+        """
+        tag, key, val = ops.to_host()
+        seq = self._seq + 1
+        self._wal.append(seq, encode_ops(tag, key, val, max_results))
+        self._seq = seq
+
+        new, results, stats, restructured = self.engine.apply(
+            self.handle, ops, max_results=max_results
+        )
+        self.handle = new
+        if restructured:
+            self._bump_epoch()
+        else:
+            upd = (tag == OP_INSERT) | (tag == OP_DELETE)
+            if upd.any():
+                buckets = np.searchsorted(self._mkba_host, key[upd], side="left")
+                self._dirty.update(int(b) for b in np.unique(buckets))
+        self._hook("apply.done")
+
+        if self.snapshot_every and seq % self.snapshot_every == 0:
+            self.snapshot()
+        return results, stats
+
+    def _bump_epoch(self) -> None:
+        self._epoch += 1
+        self._all_dirty = True
+        self._dirty.clear()
+        self._mkba_host = np.asarray(self._flix_state().mkba)
+
+    # -- snapshots --------------------------------------------------------
+    def snapshot(self, *, full: bool | None = None) -> Path:
+        """Write one snapshot at the current seq (atomic commit).
+
+        ``full=None`` picks automatically: full on the first snapshot,
+        after an epoch bump (fences moved — the delta partition is void),
+        and every ``full_every``-th snapshot; otherwise a dirty-bucket
+        delta whose write cost is proportional to churn.
+        """
+        name = _snap_name(self._seq)
+        if (self.dir / name).is_dir():
+            # a snapshot at this seq is already committed, and seq determines
+            # the logical content — forcing another is an idempotent no-op
+            # (e.g. close-time snapshot right after an auto-snapshot)
+            return self.dir / name
+        state = self._flix_state()
+        if full is None:
+            full = (
+                self._all_dirty
+                or self._bucket_lens is None
+                or self._snaps_since_full >= self.full_every - 1
+            )
+        prev_full_name = None
+        if not full:
+            prev_full_name = self._latest_snap_name()
+
+        if full:
+            lens, seg_k, seg_v = bucket_segments(state)
+            payload = pairs_to_bytes(seg_k, seg_v)
+            all_lens = lens
+            all_crcs = segment_crcs(lens, seg_k, seg_v)
+            kind = "full"
+        else:
+            dirty = sorted(self._dirty)
+            lens, seg_k, seg_v = bucket_segments(state, dirty)
+            payload = pack_delta(dirty, lens, seg_k, seg_v)
+            all_lens = np.array(self._bucket_lens, np.int64)
+            all_crcs = list(self._bucket_crcs)
+            new_crcs = segment_crcs(lens, seg_k, seg_v)
+            for i, b in enumerate(dirty):
+                all_lens[b] = lens[i]
+                all_crcs[b] = new_crcs[i]
+            kind = "delta"
+
+        nb, npb, ns = state.geometry
+        manifest = {
+            "format": SNAP_FORMAT,
+            "kind": kind,
+            "seq": self._seq,
+            "epoch": self._epoch,
+            "base": prev_full_name,
+            "engine": self.engine.kind,
+            "geometry": {
+                "num_buckets": nb,
+                "nodes_per_bucket": npb,
+                "node_size": ns,
+                "fill": getattr(self.engine, "fill", 0.5),
+            },
+            "n_live": int(np.asarray(all_lens, np.int64).sum()),
+            "seg_lens": [int(x) for x in all_lens],
+            "bucket_crcs": [int(c) for c in all_crcs],
+            "payload_crc": zlib.crc32(payload),
+        }
+
+        tmp = tmp_sibling(self.dir / name)
+        tmp.mkdir(parents=True)
+        try:
+            self._write_file(tmp / "payload.bin", payload, split=True)
+            self._hook("snap.payload.written")
+            self._write_file(
+                tmp / "manifest.json",
+                json.dumps(manifest, sort_keys=True).encode(),
+            )
+            self._hook("snap.manifest.written")
+            self._hook("snap.before_rename")
+            os.rename(tmp, self.dir / name)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._fsync_dir()
+        self._hook("snap.committed")
+
+        self._bucket_lens = np.asarray(all_lens, np.int64)
+        self._bucket_crcs = list(all_crcs)
+        self._dirty.clear()
+        self._all_dirty = False
+        self._snaps_since_full = 0 if full else self._snaps_since_full + 1
+        self._wal.rotate(self._seq + 1)
+        self._gc()
+        self._hook("snap.gc")
+        return self.dir / name
+
+    def _latest_snap_name(self) -> str:
+        snaps = _snapshot_dirs(self.dir)
+        if not snaps:
+            raise RuntimeError("delta snapshot requires an existing base")
+        return snaps[-1][1].name
+
+    def _write_file(self, path: Path, data: bytes, *, split: bool = False) -> None:
+        fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_EXCL, 0o644)
+        try:
+            if split and len(data) > 1:
+                # two writes so the crash hook can land mid-payload
+                os.write(fd, data[: len(data) // 2])
+                self._hook("snap.payload.partial")
+                os.write(fd, data[len(data) // 2 :])
+            else:
+                os.write(fd, data)
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def _fsync_dir(self) -> None:
+        dfd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+
+    def _gc(self) -> None:
+        """Retention: keep the ``keep_full`` newest full snapshots, every
+        delta above the oldest kept full, and the WAL segments needed to
+        replay past the oldest kept snapshot.  Deltas below the cutoff are
+        unreachable (their chains end in deleted fulls) and fulls below it
+        are redundant history."""
+        snaps = [
+            (seq, p, _read_manifest(p)["kind"]) for seq, p in _snapshot_dirs(self.dir)
+        ]
+        fulls = [seq for seq, _p, kind in snaps if kind == "full"]
+        if len(fulls) <= self.keep_full:
+            return
+        cutoff = sorted(fulls)[-self.keep_full]
+        for seq, p, _kind in snaps:
+            if seq < cutoff:
+                shutil.rmtree(p, ignore_errors=True)
+        segs = wal_mod.segment_files(self.dir)
+        for (start, path), nxt in zip(segs, segs[1:]):
+            # a segment holds records [start, next_start); all ≤ cutoff are
+            # covered by the oldest kept snapshot
+            if nxt[0] <= cutoff + 1:
+                path.unlink(missing_ok=True)
+
+    def close(self) -> None:
+        self._wal.close()

@@ -17,6 +17,7 @@ Fault-tolerance contract (DESIGN.md §6):
 
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import queue
@@ -26,6 +27,22 @@ from pathlib import Path
 
 import jax
 import numpy as np
+
+_TMP_COUNTER = itertools.count()
+
+
+def tmp_sibling(path: Path) -> Path:
+    """A unique scratch sibling for atomic directory commits.
+
+    ``path.with_suffix(".tmp")`` mangles dotted names (``step_0.5k`` →
+    ``step_0.tmp``) and collides across concurrent savers; appending a
+    ``.tmp-<pid>-<counter>`` suffix to the *full* name does neither.  Names
+    containing ``.tmp`` are skipped by every directory listing here, so an
+    abandoned scratch dir from a crashed save is inert until its owner (or
+    a fresh save of the same target) cleans it up.
+    """
+    path = Path(path)
+    return path.parent / f"{path.name}.tmp-{os.getpid()}-{next(_TMP_COUNTER)}"
 
 
 def _flatten_with_names(tree):
@@ -40,30 +57,32 @@ def _flatten_with_names(tree):
 def save_pytree(path: Path, tree, *, specs=None, extra: dict | None = None):
     """Synchronous atomic save of a pytree (+ optional PartitionSpecs)."""
     path = Path(path)
-    tmp = path.with_suffix(".tmp")
-    if tmp.exists():
-        shutil.rmtree(tmp)
+    tmp = tmp_sibling(path)
     tmp.mkdir(parents=True)
-    names, leaves, _ = _flatten_with_names(tree)
-    arrays = {}
-    for i, leaf in enumerate(leaves):
-        arrays[f"a{i}"] = np.asarray(jax.device_get(leaf))
-    np.savez(tmp / "arrays.npz", **arrays)
-    manifest = {
-        "names": names,
-        "extra": extra or {},
-        "specs": None,
-    }
-    if specs is not None:
-        _, spec_leaves, _ = _flatten_with_names(specs)
-        manifest["specs"] = [repr(s) for s in spec_leaves]
-    with open(tmp / "manifest.json", "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
-    if path.exists():
-        shutil.rmtree(path)
-    os.rename(tmp, path)
+    try:
+        names, leaves, _ = _flatten_with_names(tree)
+        arrays = {}
+        for i, leaf in enumerate(leaves):
+            arrays[f"a{i}"] = np.asarray(jax.device_get(leaf))
+        np.savez(tmp / "arrays.npz", **arrays)
+        manifest = {
+            "names": names,
+            "extra": extra or {},
+            "specs": None,
+        }
+        if specs is not None:
+            _, spec_leaves, _ = _flatten_with_names(specs)
+            manifest["specs"] = [repr(s) for s in spec_leaves]
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if path.exists():
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
 
 
 def restore_pytree(path: Path, like, *, mesh=None, specs=None):
@@ -112,6 +131,10 @@ class CheckpointManager:
                 self._q.get_nowait()  # drop the stale pending save
             except queue.Empty:
                 pass
+            else:
+                # the dropped item still counts toward join(); without this
+                # a wait() after any superseded save deadlocks
+                self._q.task_done()
             self._q.put_nowait((step, host_tree, specs, extra))
 
     def wait(self):
@@ -137,7 +160,7 @@ class CheckpointManager:
         steps = sorted(
             int(p.name.split("_")[1])
             for p in self.dir.glob("step_*")
-            if p.is_dir() and not p.name.endswith(".tmp")
+            if p.is_dir() and ".tmp" not in p.name
         )
         return steps[-1] if steps else None
 
@@ -151,8 +174,6 @@ class CheckpointManager:
         return step, tree, extra
 
     def _gc(self):
-        steps = sorted(
-            p for p in self.dir.glob("step_*") if not p.name.endswith(".tmp")
-        )
+        steps = sorted(p for p in self.dir.glob("step_*") if ".tmp" not in p.name)
         for p in steps[: -self.keep]:
             shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,213 @@
+"""Deterministic, versioned serialization of ``FliXState`` (DESIGN.md §12).
+
+The durability contract's unit of truth is the **canonical payload**: a
+fixed little-endian header followed by the globally sorted live
+``(key, value)`` pairs.  Two states with the same *logical* content —
+regardless of physical chain layout, geometry, successor-cache presence,
+restructure history, or which ``apply_ops`` executor produced them —
+serialize to identical bytes (``tests/test_snapshot_determinism.py`` pins
+this down).  Everything physical is excluded on purpose:
+
+  * volatile fields (``succ_smin``/``succ_sidx``) are derived caches;
+  * ``needs_restructure`` is transient overflow pressure (a recovered
+    state is always restructure-clean by construction);
+  * geometry / chain fragmentation is a performance artifact — it travels
+    in the snapshot *manifest* as a rebuild hint, never in the payload.
+
+Per-bucket **segments** are the incremental unit: bucket ``b``'s segment
+is its live pairs in ascending key order.  Fence disjointness (invariant
+I3) makes the in-order concatenation of all segments exactly the global
+sorted pairs, so a full snapshot's payload *is* the canonical bytes and a
+delta snapshot can replace individual bucket segments (DESIGN.md §12).
+
+The header is versioned for schema evolution: readers reject unknown
+magic/version instead of misparsing, and a future layout bumps
+``FORMAT_VERSION`` while keeping old readers loud.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import build_from_sorted, plan_geometry
+from repro.core.state import EMPTY, FliXState
+
+MAGIC = b"FLIXSNP1"
+MAGIC_DELTA = b"FLIXDLT1"
+FORMAT_VERSION = 1
+_HEADER = struct.Struct("<8sII")  # magic, version, n_pairs (delta: n_buckets)
+HEADER_SIZE = _HEADER.size
+
+_LE32 = np.dtype("<i4")
+
+
+class SnapshotFormatError(RuntimeError):
+    """Raised when canonical bytes fail structural validation."""
+
+
+def bucket_segments(state: FliXState, buckets=None):
+    """Canonical per-bucket segments, host-side.
+
+    Returns ``(lens, seg_keys, seg_vals)``: ``lens[i]`` live pairs for the
+    ``i``-th requested bucket, with the segments concatenated in request
+    order in ``seg_keys``/``seg_vals`` (little-endian int32, each segment
+    ascending).  ``buckets=None`` selects every bucket in fence order —
+    the device transfer then is O(index); an explicit dirty list fetches
+    only those rows, so incremental snapshot cost is O(churn).
+    """
+    keys, vals = state.keys, state.vals
+    if buckets is not None:
+        sel = jnp.asarray(np.asarray(buckets, np.int32))
+        keys, vals = keys[sel], vals[sel]
+    k = np.asarray(jax.device_get(keys))
+    v = np.asarray(jax.device_get(vals))
+    d = k.shape[0]
+    k = k.reshape(d, -1)
+    v = v.reshape(d, -1)
+    # chain order (I1+I2) is ascending apart from interior EMPTY padding, so
+    # one stable per-row sort canonicalizes: EMPTY (int32 max) lands at the
+    # row tail and the live prefix is the bucket's sorted segment
+    order = np.argsort(k, axis=1, kind="stable")
+    ks = np.take_along_axis(k, order, axis=1)
+    vs = np.take_along_axis(v, order, axis=1)
+    mask = ks != EMPTY
+    lens = mask.sum(axis=1).astype(np.int32)
+    # row-major boolean selection preserves (bucket, ascending-key) order
+    return lens, ks[mask].astype(_LE32), vs[mask].astype(_LE32)
+
+
+def segment_crcs(lens, seg_keys, seg_vals) -> list[int]:
+    """crc32 per bucket segment (keys bytes ++ vals bytes) — the manifest's
+    per-bucket integrity words, updatable at dirty indices only."""
+    out = []
+    off = 0
+    kb, vb = np.ascontiguousarray(seg_keys), np.ascontiguousarray(seg_vals)
+    for n in np.asarray(lens, np.int64):
+        chunk = kb[off : off + n].tobytes() + vb[off : off + n].tobytes()
+        out.append(zlib.crc32(chunk))
+        off += int(n)
+    return out
+
+
+def pairs_to_bytes(seg_keys, seg_vals) -> bytes:
+    """Frame sorted live pairs as the canonical payload."""
+    ks = np.ascontiguousarray(np.asarray(seg_keys, _LE32))
+    vs = np.ascontiguousarray(np.asarray(seg_vals, _LE32))
+    if ks.shape != vs.shape or ks.ndim != 1:
+        raise SnapshotFormatError("keys/vals must be aligned 1-D arrays")
+    return _HEADER.pack(MAGIC, FORMAT_VERSION, ks.size) + ks.tobytes() + vs.tobytes()
+
+
+def canonical_state_bytes(state: FliXState) -> bytes:
+    """THE deterministic serialization: header + sorted live pairs."""
+    _, seg_keys, seg_vals = bucket_segments(state)
+    return pairs_to_bytes(seg_keys, seg_vals)
+
+
+def state_digest(state: FliXState) -> str:
+    """crc32 (hex) of the canonical payload — a cheap logical-state id."""
+    return f"{zlib.crc32(canonical_state_bytes(state)):08x}"
+
+
+def parse_canonical(data: bytes):
+    """Decode a canonical payload back to ``(keys, vals)`` numpy arrays,
+    validating the header and framing (strict: trailing bytes reject)."""
+    if len(data) < HEADER_SIZE:
+        raise SnapshotFormatError("payload shorter than header")
+    magic, version, n = _HEADER.unpack_from(data)
+    if magic != MAGIC:
+        raise SnapshotFormatError(f"bad magic {magic!r}")
+    if version != FORMAT_VERSION:
+        raise SnapshotFormatError(f"unsupported format version {version}")
+    need = HEADER_SIZE + 2 * 4 * n
+    if len(data) != need:
+        raise SnapshotFormatError(f"payload length {len(data)} != {need}")
+    keys = np.frombuffer(data, dtype=_LE32, count=n, offset=HEADER_SIZE)
+    vals = np.frombuffer(data, dtype=_LE32, count=n, offset=HEADER_SIZE + 4 * n)
+    if n and not (np.diff(keys.astype(np.int64)) > 0).all():
+        raise SnapshotFormatError("canonical keys must be strictly ascending")
+    return keys.copy(), vals.copy()
+
+
+def pack_delta(bucket_idx, lens, seg_keys, seg_vals) -> bytes:
+    """Frame a dirty-bucket diff: which buckets changed, their new segment
+    lengths, and the replacement segments (concatenated in ``bucket_idx``
+    order).  Same header discipline as the full payload."""
+    bi = np.ascontiguousarray(np.asarray(bucket_idx, _LE32))
+    ln = np.ascontiguousarray(np.asarray(lens, _LE32))
+    ks = np.ascontiguousarray(np.asarray(seg_keys, _LE32))
+    vs = np.ascontiguousarray(np.asarray(seg_vals, _LE32))
+    if bi.shape != ln.shape or bi.ndim != 1 or ks.shape != vs.shape:
+        raise SnapshotFormatError("malformed delta arrays")
+    if int(ln.sum()) != ks.size:
+        raise SnapshotFormatError("delta lens do not cover the segments")
+    return (
+        _HEADER.pack(MAGIC_DELTA, FORMAT_VERSION, bi.size)
+        + bi.tobytes()
+        + ln.tobytes()
+        + ks.tobytes()
+        + vs.tobytes()
+    )
+
+
+def parse_delta(data: bytes):
+    """Inverse of :func:`pack_delta` → ``(bucket_idx, lens, keys, vals)``."""
+    if len(data) < HEADER_SIZE:
+        raise SnapshotFormatError("delta payload shorter than header")
+    magic, version, d = _HEADER.unpack_from(data)
+    if magic != MAGIC_DELTA:
+        raise SnapshotFormatError(f"bad delta magic {magic!r}")
+    if version != FORMAT_VERSION:
+        raise SnapshotFormatError(f"unsupported format version {version}")
+    if len(data) < HEADER_SIZE + 8 * d:
+        raise SnapshotFormatError("delta payload truncated")
+    bi = np.frombuffer(data, _LE32, d, HEADER_SIZE)
+    ln = np.frombuffer(data, _LE32, d, HEADER_SIZE + 4 * d)
+    n = int(ln.sum())
+    need = HEADER_SIZE + 8 * d + 8 * n
+    if len(data) != need:
+        raise SnapshotFormatError(f"delta payload length {len(data)} != {need}")
+    ks = np.frombuffer(data, _LE32, n, HEADER_SIZE + 8 * d)
+    vs = np.frombuffer(data, _LE32, n, HEADER_SIZE + 8 * d + 4 * n)
+    return bi.copy(), ln.copy(), ks.copy(), vs.copy()
+
+
+def state_from_pairs(
+    keys,
+    vals,
+    *,
+    node_size: int = 32,
+    nodes_per_bucket: int = 16,
+    fill: float = 0.5,
+) -> FliXState:
+    """Deterministically rebuild a half-full state from sorted live pairs.
+
+    The geometry hint (node_size/nodes_per_bucket/fill) comes from the
+    snapshot manifest; the bucket count is re-planned from the live count
+    (never taken from the manifest — the snapshotted structure may have
+    been fuller than ``fill``, and ``build_from_sorted`` requires the
+    planned headroom).
+    """
+    keys = np.asarray(keys, np.int32)
+    vals = np.asarray(vals, np.int32)
+    nb, npb, ns = plan_geometry(
+        len(keys), node_size=node_size, nodes_per_bucket=nodes_per_bucket, fill=fill
+    )
+    # quantize the bucket count (next multiple of 8, only ever more
+    # headroom) so nearby live counts rebuild into the SAME static shapes
+    # — recovery after similar-sized crashes reuses the jit cache instead
+    # of recompiling per replanned geometry
+    nb = -(-nb // 8) * 8
+    return build_from_sorted(
+        jnp.asarray(keys),
+        jnp.asarray(vals),
+        num_buckets=nb,
+        nodes_per_bucket=npb,
+        node_size=ns,
+        fill=fill,
+    )

@@ -1,0 +1,230 @@
+"""Write-ahead op log: checksummed record framing + torn-tail recovery.
+
+Each engine batch is framed and appended *before* ``apply_ops`` runs
+(DESIGN.md §12).  Record layout, all little-endian:
+
+    u32 magic  u64 seq  u32 payload_len  u32 crc32(payload)  payload
+
+The payload is the host-encoded sorted ``OpBatch`` plus its impl-relevant
+parameters (``max_results``), so replay re-executes byte-for-byte the
+batch that was logged.  Appends go through raw ``os.write`` (no userspace
+buffering) and are fsynced before the engine sees the batch — the fsync
+return is the durability boundary: an acknowledged op survives any
+subsequent crash.
+
+``fsync=False`` deliberately REMOVES that boundary: frames accumulate in
+a userspace buffer and reach the filesystem only on rotate/close.  On a
+real power failure the un-fsynced page cache is what gets lost; the
+userspace buffer reproduces exactly that loss under a plain process
+kill, which is how the negative crash-injection tests demonstrate the
+suite catches a WAL without a durability boundary.
+
+The log is segmented (``wal_<startseq>.log``, rotated at snapshots) so
+retention can drop whole files once a full snapshot covers them.  Replay
+tolerates exactly one torn region — an incomplete or checksum-failing
+record at the physical tail of the newest segment (a crash mid-append) —
+and truncates it; corruption anywhere else is never silently skipped.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+REC_MAGIC = 0x464C5857  # "FLXW"
+_REC_HEADER = struct.Struct("<IQII")  # magic, seq, payload_len, crc32(payload)
+REC_HEADER_SIZE = _REC_HEADER.size
+
+_OPS_HEADER = struct.Struct("<II")  # n_ops, max_results
+_LE32 = np.dtype("<i4")
+
+_SEG_PREFIX = "wal_"
+_SEG_SUFFIX = ".log"
+
+
+class WALCorruptionError(RuntimeError):
+    """Unrecoverable log damage (non-tail corruption, or a torn tail with
+    truncation disabled)."""
+
+
+def _noop_hook(event: str) -> None:
+    return None
+
+
+def encode_ops(tag, key, val, max_results: int) -> bytes:
+    """Frame one sorted batch (host arrays) as a WAL record payload."""
+    t = np.ascontiguousarray(np.asarray(tag, _LE32))
+    k = np.ascontiguousarray(np.asarray(key, _LE32))
+    v = np.ascontiguousarray(np.asarray(val, _LE32))
+    if not (t.shape == k.shape == v.shape) or t.ndim != 1:
+        raise ValueError("tag/key/val must be aligned 1-D arrays")
+    return (
+        _OPS_HEADER.pack(t.size, max_results)
+        + t.tobytes()
+        + k.tobytes()
+        + v.tobytes()
+    )
+
+
+def decode_ops(payload: bytes):
+    """Inverse of :func:`encode_ops` → ``(tag, key, val, max_results)``."""
+    if len(payload) < _OPS_HEADER.size:
+        raise WALCorruptionError("op record shorter than its header")
+    n, max_results = _OPS_HEADER.unpack_from(payload)
+    need = _OPS_HEADER.size + 3 * 4 * n
+    if len(payload) != need:
+        raise WALCorruptionError(f"op record length {len(payload)} != {need}")
+    off = _OPS_HEADER.size
+    tag = np.frombuffer(payload, _LE32, n, off).copy()
+    key = np.frombuffer(payload, _LE32, n, off + 4 * n).copy()
+    val = np.frombuffer(payload, _LE32, n, off + 8 * n).copy()
+    return tag, key, val, int(max_results)
+
+
+def segment_files(directory) -> list[tuple[int, Path]]:
+    """(start_seq, path) for every segment, ascending by start seq."""
+    out = []
+    for p in Path(directory).glob(f"{_SEG_PREFIX}*{_SEG_SUFFIX}"):
+        try:
+            start = int(p.name[len(_SEG_PREFIX) : -len(_SEG_SUFFIX)])
+        except ValueError:
+            continue
+        out.append((start, p))
+    return sorted(out)
+
+
+class WriteAheadLog:
+    """Appender for the segmented op log (one per durable instance)."""
+
+    def __init__(self, directory, *, fsync: bool = True, crash_hook=None):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.fsync = fsync
+        self._hook = crash_hook or _noop_hook
+        self._fd: int | None = None
+        self._buffer = bytearray()
+
+    # -- segment lifecycle ------------------------------------------------
+    def open_segment(self, start_seq: int, *, path: Path | None = None) -> None:
+        """Start appending to ``wal_<start_seq>.log`` (or reopen ``path``,
+        e.g. the recovered newest segment after tail truncation)."""
+        self.close()
+        target = path or self.dir / f"{_SEG_PREFIX}{start_seq:012d}{_SEG_SUFFIX}"
+        self._fd = os.open(target, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        self._fsync_dir()
+
+    def rotate(self, start_seq: int) -> None:
+        """Flush + close the current segment and start a fresh one."""
+        self.open_segment(start_seq)
+
+    def close(self) -> None:
+        if self._fd is None:
+            return
+        if self._buffer:
+            os.write(self._fd, bytes(self._buffer))
+            self._buffer.clear()
+        os.fsync(self._fd)
+        os.close(self._fd)
+        self._fd = None
+
+    # -- the append path --------------------------------------------------
+    def append(self, seq: int, payload: bytes) -> None:
+        """Frame and durably append one record; returns only after the
+        record is fsynced (``fsync=True``) — the ack/durability boundary."""
+        if self._fd is None:
+            raise RuntimeError("no open WAL segment (call open_segment first)")
+        frame = (
+            _REC_HEADER.pack(REC_MAGIC, seq, len(payload), zlib.crc32(payload))
+            + payload
+        )
+        if not self.fsync:
+            # negative-test mode: no durability boundary — a crash loses the
+            # whole buffered run of acked records (see module docstring)
+            self._buffer += frame
+            self._hook("wal.append.buffered")
+            return
+        # two writes on purpose: the crash hook between them lets the fault
+        # harness materialize a genuinely torn (half-written) record
+        split = REC_HEADER_SIZE + len(payload) // 2
+        os.write(self._fd, frame[:split])
+        self._hook("wal.append.partial")
+        os.write(self._fd, frame[split:])
+        self._hook("wal.append.written")
+        os.fsync(self._fd)
+        self._hook("wal.append.durable")
+
+    def _fsync_dir(self) -> None:
+        dfd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+
+
+def replay(directory, *, after_seq: int = 0, truncate_torn: bool = True):
+    """Scan every segment in order → list of ``(seq, payload)`` records
+    with ``seq > after_seq``.
+
+    A torn tail — an incomplete frame or checksum-failing record at the
+    physical end of the NEWEST segment — is the signature of a crash
+    mid-append; it is truncated in place (and fsynced) so recovery is
+    idempotent, or raises :class:`WALCorruptionError` when
+    ``truncate_torn=False``.  Damage anywhere else (a bad record followed
+    by readable ones, or in an older segment) always raises: that is
+    storage corruption, not a crash artifact, and silently skipping it
+    would replay a wrong history.
+    """
+    segs = segment_files(directory)
+    records: list[tuple[int, bytes]] = []
+    last_seq = None
+    for si, (start, path) in enumerate(segs):
+        data = path.read_bytes()
+        off = 0
+        while off < len(data):
+            # a crash mid-append leaves a PREFIX of one valid frame reaching
+            # the physical EOF of the newest segment — that, and only that,
+            # is a tear.  A damaged record with readable bytes after it (or
+            # in an older segment) is storage corruption.
+            reason, is_tear, seq = None, False, None
+            if off + REC_HEADER_SIZE > len(data):
+                reason, is_tear = "incomplete record header", True
+            else:
+                magic, seq, plen, crc = _REC_HEADER.unpack_from(data, off)
+                frame_end = off + REC_HEADER_SIZE + plen
+                if magic != REC_MAGIC:
+                    reason = f"bad record magic 0x{magic:08x}"
+                elif frame_end > len(data):
+                    reason, is_tear = "incomplete record payload", True
+                else:
+                    payload = data[off + REC_HEADER_SIZE : frame_end]
+                    if zlib.crc32(payload) != crc:
+                        reason = "record checksum mismatch"
+                        is_tear = frame_end == len(data)
+            if reason is not None:
+                is_tear = is_tear and si == len(segs) - 1
+                if is_tear and truncate_torn:
+                    fd = os.open(path, os.O_WRONLY)
+                    try:
+                        os.ftruncate(fd, off)
+                        os.fsync(fd)
+                    finally:
+                        os.close(fd)
+                    break
+                raise WALCorruptionError(
+                    f"{path.name} @ {off}: {reason}"
+                    + (" (torn tail; truncation disabled)" if is_tear else "")
+                )
+            if last_seq is not None and seq <= last_seq:
+                raise WALCorruptionError(
+                    f"{path.name} @ {off}: seq {seq} not increasing "
+                    f"(previous {last_seq})"
+                )
+            last_seq = seq
+            if seq > after_seq:
+                records.append((seq, payload))
+            off += REC_HEADER_SIZE + len(payload)
+    return records

@@ -85,6 +85,29 @@ class OpBatch:
     def size(self) -> int:
         return self.key.shape[0]
 
+    def to_host(self):
+        """The batch as host numpy arrays ``(tag, key, val)`` — the form the
+        write-ahead log frames (``checkpoint.wal``) and the dirty-bucket
+        tracker consume (one device transfer, shared by both)."""
+        import numpy as np
+
+        return (
+            np.asarray(jax.device_get(self.tag)),
+            np.asarray(jax.device_get(self.key)),
+            np.asarray(jax.device_get(self.val)),
+        )
+
+    @classmethod
+    def from_host(cls, tag, key, val) -> "OpBatch":
+        """Rehydrate a batch from host arrays *without re-sorting*: WAL
+        records store already-sorted batches, and replay must apply exactly
+        the bytes that were logged."""
+        return cls(
+            tag=jnp.asarray(tag, OP_DTYPE),
+            key=jnp.asarray(key, KEY_DTYPE),
+            val=jnp.asarray(val, VAL_DTYPE),
+        )
+
 
 def make_ops(tags, keys, vals=None, *, pad_to: int | None = None):
     """Sort a raw operation list by key into an :class:`OpBatch`.
@@ -162,8 +185,7 @@ def _apply_ops_reference(
 
     # drop any successor cache up front: the update phases construct cache-
     # free states, and lax.cond branches must agree on the pytree structure
-    if state.succ_smin is not None:
-        state = dataclasses.replace(state, succ_smin=None, succ_sidx=None)
+    state = state.drop_volatile()
 
     tag, key, val = ops.tag, ops.key, ops.val
     n = key.shape[0]

@@ -61,6 +61,27 @@ class FliXState:
         return self.keys.shape[0]
 
     @property
+    def geometry(self) -> tuple[int, int, int]:
+        """(num_buckets, nodes_per_bucket, node_size) — the static shape the
+        host plans at build/restructure time.  Two states with the same
+        geometry and mkba belong to the same *fence epoch*: insert/delete
+        never move fences (paper §3.2), so the durability layer's
+        dirty-bucket tracking is valid between restructures."""
+        return self.keys.shape[0], self.keys.shape[1], self.keys.shape[2]
+
+    def drop_volatile(self) -> "FliXState":
+        """This state without its volatile successor-cache fields.
+
+        The cache is derived data (``with_successor_cache`` rebuilds it from
+        the resident arrays), so it is excluded from the durable logical
+        state: serialization and the reference engine's lax.cond phases both
+        need the cache-free pytree structure.
+        """
+        if self.succ_smin is None and self.succ_sidx is None:
+            return self
+        return dataclasses.replace(self, succ_smin=None, succ_sidx=None)
+
+    @property
     def nodes_per_bucket(self) -> int:
         return self.keys.shape[1]
 

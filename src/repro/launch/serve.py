@@ -51,6 +51,21 @@ def main() -> None:
         help="distributed batch routing mode for the sharded index "
         "(DESIGN.md §11); ignored without --shards",
     )
+    ap.add_argument(
+        "--wal-dir",
+        default=None,
+        help="durability directory for the KV page index: every update "
+        "step is write-ahead logged (fsynced) before execution and the "
+        "index recovers from this directory on restart (DESIGN.md §12); "
+        "default off",
+    )
+    ap.add_argument(
+        "--snapshot-every",
+        type=int,
+        default=64,
+        help="with --wal-dir, snapshot the index every N update steps "
+        "(bounds replay-on-restart to at most N batches)",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -60,8 +75,17 @@ def main() -> None:
     params = tf.init_params(rng, cfg)
     cache = tf.init_cache(cfg, args.batch, args.max_len, dtype=jnp.float32)
     kv_index = KVPageIndex(
-        impl=args.index_impl, shards=args.shards, routing=args.index_routing
+        impl=args.index_impl,
+        shards=args.shards,
+        routing=args.index_routing,
+        durability_dir=args.wal_dir,
+        snapshot_every=args.snapshot_every,
     )
+    if args.wal_dir and kv_index.durable_seq:
+        print(
+            f"recovered KV index from {args.wal_dir} "
+            f"(seq {kv_index.durable_seq}, {kv_index.live_pages()} pages)"
+        )
 
     step = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
     token = jax.random.randint(rng, (args.batch,), 0, cfg.vocab_size)
@@ -103,6 +127,10 @@ def main() -> None:
     assert np.asarray(pages)[:n_pages].tolist() == list(range(n_pages))
     assert np.asarray(slots)[:n_pages].tolist() == list(range(n_pages))
     print(f"page enumeration in order ✓ ({n_pages} pages for seq 0)")
+    if args.wal_dir:
+        kv_index.snapshot()
+        kv_index.close()
+        print(f"index durable at seq {kv_index.durable_seq} in {args.wal_dir}")
 
 
 if __name__ == "__main__":

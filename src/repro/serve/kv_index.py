@@ -66,6 +66,14 @@ class KVPageIndex:
     and serves every step through ``shard_apply_ops`` (``routing`` picks
     the distributed batch mode; replicated is right for the control-plane
     batch sizes this index sees).  All public methods behave identically.
+
+    ``durability_dir`` switches on the DESIGN.md §12 persistence layer:
+    every update step is WAL-logged (fsynced) before execution and
+    snapshotted every ``snapshot_every`` steps, and constructing against a
+    directory that already holds a durable history *recovers* it (latest
+    snapshot + replay) instead of starting empty.  Pure-read steps never
+    touch the log.  ``wal_fsync=False`` removes the durability boundary —
+    it exists for the negative crash tests, never for serving.
     """
 
     def __init__(
@@ -76,6 +84,9 @@ class KVPageIndex:
         impl: str = "auto",
         shards: int = 0,
         routing: str = "replicated",
+        durability_dir=None,
+        snapshot_every: int = 64,
+        wal_fsync: bool = True,
     ):
         # seed with one sentinel key (outside the (seq,page) space) so the
         # structure is never empty
@@ -83,6 +94,7 @@ class KVPageIndex:
 
         self.impl = impl
         self.routing = routing
+        self._durable = None
         seed_keys = jnp.array([MAX_VALID], jnp.int32)
         seed_vals = jnp.array([0], jnp.int32)
         if shards:
@@ -106,6 +118,40 @@ class KVPageIndex:
                 node_size=node_size,
                 nodes_per_bucket=nodes_per_bucket,
             )
+        if durability_dir is not None:
+            from repro.checkpoint import DurableFliX, LocalEngine, ShardEngine
+
+            if self.mesh is not None:
+                engine = ShardEngine(
+                    self.mesh,
+                    routing=routing,
+                    impl=impl,
+                    node_size=node_size,
+                    nodes_per_bucket=nodes_per_bucket,
+                )
+            else:
+                engine = LocalEngine(
+                    impl=impl,
+                    node_size=node_size,
+                    nodes_per_bucket=nodes_per_bucket,
+                )
+            if DurableFliX.exists(durability_dir):
+                self._durable = DurableFliX.open(
+                    durability_dir,
+                    engine=engine,
+                    snapshot_every=snapshot_every,
+                    fsync=wal_fsync,
+                )
+            else:
+                handle = self.sharded if self.mesh is not None else self.state
+                self._durable = DurableFliX.create(
+                    durability_dir,
+                    handle,
+                    engine=engine,
+                    snapshot_every=snapshot_every,
+                    fsync=wal_fsync,
+                )
+            self._commit(self._durable.handle)
 
     # ---- the engine step: one mixed batch ------------------------------
     def step(
@@ -271,7 +317,20 @@ class KVPageIndex:
         sharded path adds the routing mode and the host-known ``has_ranges``
         hint (the local ``apply_ops`` needs no such hint — its range phase
         is a traced ``lax.cond``).
+
+        With durability on, every update batch commits through
+        ``DurableFliX.apply`` — WAL-ahead, restructure-and-retry inside —
+        so it forfeits donation; pure reads bypass the log entirely.
         """
+        if self._durable is not None and (safe or kw.get("has_updates")):
+            from repro.core.ops import DEFAULT_MAX_RESULTS
+
+            kw.pop("has_updates", None)
+            kw.pop("impl", None)
+            results, stats = self._durable.apply(
+                ops, max_results=kw.pop("max_results", DEFAULT_MAX_RESULTS)
+            )
+            return self._durable.handle, results, stats
         if self.mesh is not None:
             from repro.core.distributed import shard_apply_ops, shard_apply_ops_safe
 
@@ -340,3 +399,20 @@ class KVPageIndex:
     def live_pages(self) -> int:
         state = self.sharded.state if self.mesh is not None else self.state
         return int(state.live_keys()) - 1  # minus the seed key
+
+    # ---- durability ----------------------------------------------------
+    @property
+    def durable_seq(self) -> int | None:
+        """Last durably committed batch seq (None with durability off)."""
+        return self._durable.seq if self._durable is not None else None
+
+    def snapshot(self):
+        """Force a snapshot now (durability on); returns its directory."""
+        if self._durable is None:
+            raise RuntimeError("durability is off (no durability_dir)")
+        return self._durable.snapshot()
+
+    def close(self):
+        """Flush and close the WAL (no-op with durability off)."""
+        if self._durable is not None:
+            self._durable.close()

@@ -13,7 +13,15 @@ REPO = Path(__file__).resolve().parents[1]
 
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
-    """Run a python snippet in a subprocess with fake host devices."""
+    """Run a python snippet in a subprocess with fake host devices.
+
+    The device-count flag only applies to the CPU platform, so the child
+    is pinned to it (inheriting the parent's JAX_PLATFORMS when set) —
+    otherwise a host with an installed accelerator plugin but no device
+    spends minutes in backend probing before every one of these tests.
+    """
+    import os
+
     prelude = (
         "import os\n"
         f'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"\n'
@@ -23,7 +31,11 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
         capture_output=True,
         text=True,
         timeout=timeout,
-        env={"PYTHONPATH": f"{REPO}/src", "PATH": "/usr/bin:/bin"},
+        env={
+            "PYTHONPATH": f"{REPO}/src",
+            "PATH": "/usr/bin:/bin",
+            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+        },
         cwd=str(REPO),
     )
     assert proc.returncode == 0, f"subprocess failed:\n{proc.stdout}\n{proc.stderr}"

@@ -1,11 +1,19 @@
 """Checkpoint manager: atomic commit, async, retention, resume, elastic."""
 
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+from repro.checkpoint import (
+    CheckpointManager,
+    restore_pytree,
+    save_pytree,
+    tmp_sibling,
+)
+from repro.checkpoint import manager as manager_mod
 
 
 @pytest.fixture
@@ -58,6 +66,105 @@ def test_manager_async_save_retention_resume(tmp_path, tree):
     np.testing.assert_array_equal(
         np.asarray(restored["a"]), np.asarray(tree["a"]) + 40
     )
+
+
+def test_dotted_path_save_roundtrip(tmp_path, tree):
+    """Targets with dots in the name commit correctly.  The old scratch
+    naming (``with_suffix(".tmp")``) mangled ``step_0.5k`` to ``step_0.tmp``
+    — the commit rename then restored the wrong directory name."""
+    for name in ("step_0.5k", "step_1.5k", "ck.v2.final"):
+        save_pytree(tmp_path / name, tree, extra={"name": name})
+        _, extra = restore_pytree(tmp_path / name, tree)
+        assert extra["name"] == name
+    # nothing left behind but the committed dirs
+    leftovers = [p.name for p in tmp_path.iterdir() if ".tmp" in p.name]
+    assert leftovers == []
+
+
+def test_tmp_sibling_unique_and_name_preserving(tmp_path):
+    """Scratch names keep the FULL target name (dots included) and never
+    collide — concurrent savers of dotted siblings used to race on the
+    same ``with_suffix`` scratch path."""
+    a = tmp_sibling(tmp_path / "step_0.5k")
+    b = tmp_sibling(tmp_path / "step_0.5k")
+    c = tmp_sibling(tmp_path / "step_0.9k")
+    assert a != b  # unique per call, even for the same target
+    assert len({a, b, c}) == 3
+    for t in (a, b, c):
+        assert t.parent == tmp_path
+        assert t.name.startswith("step_0.") and ".tmp-" in t.name
+    # distinct dotted targets can no longer alias each other's scratch dir
+    assert not c.name.startswith("step_0.5k") or "step_0.9k" in c.name
+
+
+def test_retention_keeps_exactly_newest(tmp_path, tree):
+    mgr = CheckpointManager(tmp_path / "run", keep=3)
+    for step in range(1, 8):
+        mgr.save(step, tree)
+        mgr.wait()
+    kept = sorted(p.name for p in (tmp_path / "run").glob("step_*"))
+    assert kept == [f"step_{s:08d}" for s in (5, 6, 7)]
+    assert mgr.latest_step() == 7
+
+
+class _GatedSave:
+    """A save_pytree stand-in the worker thread blocks on — makes the
+    async queue's interleavings deterministic without sleeps."""
+
+    def __init__(self):
+        self.started = threading.Event()  # worker entered a save
+        self.release = threading.Event()  # allow it to finish
+        self.saved = []
+
+    def __call__(self, path, tree, *, specs=None, extra=None):
+        self.started.set()
+        assert self.release.wait(timeout=30)
+        save_pytree(path, tree, specs=specs, extra=extra)
+        self.saved.append(path.name)
+
+
+def test_async_queue_newest_wins(tmp_path, tree, monkeypatch):
+    """While the writer is busy, queued saves are superseded: only the
+    newest pending request is ever written."""
+    gate = _GatedSave()
+    monkeypatch.setattr(manager_mod, "save_pytree", gate)
+    mgr = CheckpointManager(tmp_path / "run", keep=10)
+    mgr.save(1, tree)
+    assert gate.started.wait(timeout=30)  # worker is inside save(1)
+    mgr.save(2, tree)  # pending
+    mgr.save(3, tree)  # supersedes 2
+    mgr.save(4, tree)  # supersedes 3
+    gate.release.set()
+    mgr.wait()
+    assert gate.saved == ["step_00000001", "step_00000004"]
+    assert mgr.latest_step() == 4
+
+
+def test_wait_drains_before_restore(tmp_path, tree, monkeypatch):
+    """restore_latest after wait() must see the save that was in flight —
+    and before wait() the commit genuinely hasn't happened."""
+    gate = _GatedSave()
+    monkeypatch.setattr(manager_mod, "save_pytree", gate)
+    mgr = CheckpointManager(tmp_path / "run")
+    mgr.save(5, tree, extra={"data_step": 5})
+    assert gate.started.wait(timeout=30)
+    assert mgr.latest_step() is None  # still uncommitted
+    gate.release.set()
+    mgr.wait()
+    step, _restored, extra = mgr.restore_latest(tree)
+    assert step == 5 and extra["data_step"] == 5
+
+
+def test_failed_save_leaves_no_scratch(tmp_path, tree):
+    """An exception mid-save cleans up its scratch dir and never commits."""
+
+    class Boom:
+        def __array__(self, *a, **k):
+            raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError, match="boom"):
+        save_pytree(tmp_path / "ck", {"a": Boom()})
+    assert list(tmp_path.iterdir()) == []  # no ck, no .tmp-* leftovers
 
 
 @pytest.mark.slow

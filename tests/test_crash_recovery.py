@@ -1,0 +1,464 @@
+"""Crash-injection proof of the durability contract (DESIGN.md §12).
+
+THE property, for every kill point: after recovery, (1) no acknowledged
+batch is lost, and (2) the recovered index is **byte-identical** (canonical
+payload) to an uninterrupted run at the recovered seq.  Kill points cover
+mid-log-append (half a record on disk), post-fsync/pre-apply,
+mid-snapshot-payload, pre-rename, post-commit/pre-GC — and land before,
+during, and after the workload's mid-run restructure (batch 9 regrows the
+geometry, so recovery replays across an epoch bump).
+
+Three escalating harnesses share ``tests/fault_injection.py``:
+
+* a deterministic kill-point **matrix** (every instrumented event × two
+  occurrence counts) using in-process ``CrashError`` — raw ``os.write``
+  framing means the bytes on disk equal a process death at that point;
+* **byte-offset** torn-tail properties straight against the WAL file;
+* a bounded **subprocess SIGKILL** matrix — genuine uncatchable process
+  death, acked batches read back from flushed ``ACK`` lines.
+
+Negative controls prove the suite has teeth: with ``fsync=False`` the
+property *demonstrably fails* (acked batches vanish), and with tail
+truncation disabled recovery refuses a torn log outright.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import fault_injection as fi
+from repro.checkpoint import DurableFliX, WALCorruptionError
+from repro.checkpoint.serialize import canonical_state_bytes
+from repro.checkpoint.wal import REC_HEADER_SIZE, WriteAheadLog, replay
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+    COMMON = dict(deadline=None, suppress_health_check=[HealthCheck.too_slow])
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    HAVE_HYPOTHESIS = False
+
+N_BATCHES = 10  # restructure fires at batch 9 (see fault_injection)
+
+KILL_EVENTS = (
+    "wal.append.partial",  # half a record on disk, no fsync → torn tail
+    "wal.append.written",  # full record on disk, fsync not yet returned
+    "wal.append.durable",  # fsynced but never applied → replay must run it
+    "apply.done",  # applied, possibly pre-snapshot
+    "snap.payload.partial",  # half-written snapshot payload in the tmp dir
+    "snap.payload.written",
+    "snap.manifest.written",
+    "snap.before_rename",  # complete tmp dir, never committed
+    "snap.committed",  # renamed, WAL not yet rotated / GC'd
+    "snap.gc",
+)
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=1)
+def _cached_oracle():
+    return fi.oracle_canonical(N_BATCHES)
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    """Canonical payload after each seq of the uninterrupted workload."""
+    return _cached_oracle()
+
+
+def _crash_run(tmp, event, count, *, n=N_BATCHES, fsync=True):
+    """Run the workload until the hook fires (or completion); returns
+    ``(crashed, acked)``."""
+    acked = [0]
+    try:
+        fi.run_workload(
+            tmp,
+            n,
+            fsync=fsync,
+            crash_hook=fi.CrashAt(event, count),
+            ack=lambda s: acked.__setitem__(0, s),
+        )
+        return False, acked[0]
+    except fi.CrashError:
+        return True, acked[0]
+
+
+def _check_recovery(tmp, oracle, acked):
+    if not DurableFliX.exists(tmp):
+        # killed before the very first snapshot committed: nothing was
+        # ever acknowledged, so an empty directory is a correct outcome
+        assert acked == 0
+        return 0
+    return fi.recover_and_check(tmp, oracle, acked=acked)
+
+
+# ---------------------------------------------------------------------------
+# the deterministic kill-point matrix (fast lane, blocking in CI)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("event", KILL_EVENTS)
+@pytest.mark.parametrize("count", [1, 3])
+def test_kill_matrix_recovers_byte_identical(tmp_path, oracle, event, count):
+    d = tmp_path / "wal"
+    crashed, acked = _crash_run(d, event, count)
+    seq = _check_recovery(d, oracle, acked)
+    if not crashed:  # hook never fired that often — full run must match
+        assert seq == N_BATCHES
+
+
+def test_kill_during_restructure_window(tmp_path, oracle):
+    """Kill right after the batch that regrows the geometry: recovery
+    replays across the restructure (an epoch bump) and must still land on
+    the oracle bytes — restructures are logical no-ops."""
+    d = tmp_path / "wal"
+    crashed, acked = _crash_run(d, "apply.done", 9)
+    assert crashed and acked >= 8
+    seq = _check_recovery(d, oracle, acked)
+    assert seq >= 9
+
+
+def test_double_crash_and_resume_to_completion(tmp_path, oracle):
+    """Crash → resume → crash again (mid-snapshot) → resume → finish: the
+    final state matches the uninterrupted oracle exactly."""
+    d = tmp_path / "wal"
+    crashed, acked = _crash_run(d, "wal.append.partial", 4)
+    assert crashed
+    fi.recover_and_check(d, oracle, acked=acked)
+    crashed2, acked2 = _crash_run(d, "snap.payload.partial", 1)
+    fi.recover_and_check(d, oracle, acked=acked2)
+    # third run completes the workload
+    final = fi.run_workload(d, N_BATCHES)
+    assert final == N_BATCHES
+    assert fi.recover_and_check(d, oracle, acked=N_BATCHES) == N_BATCHES
+
+
+def test_crash_during_recovery_snapshot(tmp_path, oracle):
+    """open() snapshots when the replayed tail is long; a crash *inside
+    recovery* must leave the directory recoverable (recovery's only write
+    is idempotent tail truncation + an atomic snapshot)."""
+    d = tmp_path / "wal"
+    # die right after batch 5's apply: snapshot at 3, WAL holds 4..5;
+    # lower snapshot_every below the replay length so open() snapshots
+    crashed, acked = _crash_run(d, "apply.done", 5)
+    assert crashed and acked == 4  # batch 5 applied but ack never ran
+    with pytest.raises(fi.CrashError):
+        DurableFliX.open(
+            d,
+            engine=fi.make_engine(),
+            snapshot_every=2,
+            full_every=fi.FULL_EVERY,
+            crash_hook=fi.CrashAt("snap.payload.partial", 1),
+        )
+    seq = fi.recover_and_check(d, oracle, acked=acked)
+    assert seq == 5
+
+
+def test_forced_snapshot_at_committed_seq_is_noop(tmp_path, oracle):
+    """A close-time snapshot right after an auto-snapshot (or right after
+    create) lands on a seq that already has a committed snapshot dir —
+    that must be an idempotent no-op, not a rename onto a non-empty dir."""
+    d = tmp_path / "wal"
+    dur = fi.run_workload(d, 0, ret="instance")
+    p0 = dur.snapshot()  # seq 0: create() already snapshotted
+    assert p0.name.endswith("0" * 12) and dur.seq == 0
+    dur.close()
+    final = fi.run_workload(d, fi.SNAPSHOT_EVERY, ret="instance")
+    before = sorted(x.name for x in d.iterdir())
+    p = final.snapshot()  # auto-snapshot just fired at this seq
+    assert p.is_dir()
+    assert sorted(x.name for x in d.iterdir()) == before
+    final.close()
+    fi.recover_and_check(d, oracle, acked=fi.SNAPSHOT_EVERY)
+
+
+# ---------------------------------------------------------------------------
+# generative sweep (hypothesis when available, seeded fallback otherwise)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @settings(max_examples=30, **COMMON)
+    @given(
+        event=st.sampled_from(KILL_EVENTS),
+        count=st.integers(min_value=1, max_value=8),
+    )
+    def test_property_any_kill_point_recovers(tmp_path_factory, event, count):
+        oracle = _cached_oracle()
+        d = tmp_path_factory.mktemp("sweep") / "wal"
+        _, acked = _crash_run(d, event, count)
+        _check_recovery(d, oracle, acked)
+
+else:  # pragma: no cover - minimal containers
+
+    @pytest.mark.slow
+    def test_property_any_kill_point_recovers_fallback(tmp_path, oracle):
+        rng = np.random.default_rng(7)
+        for i in range(12):
+            event = KILL_EVENTS[int(rng.integers(len(KILL_EVENTS)))]
+            count = int(rng.integers(1, 9))
+            d = tmp_path / f"wal{i}"
+            _, acked = _crash_run(d, event, count)
+            _check_recovery(d, oracle, acked)
+
+
+# ---------------------------------------------------------------------------
+# byte-offset torn-tail properties (file-level, no engine in the loop)
+# ---------------------------------------------------------------------------
+
+
+def _fill_wal(d, n=6):
+    """A single-segment WAL of ``n`` records; returns frame end offsets."""
+    wal = WriteAheadLog(d)
+    wal.open_segment(1)
+    ends, off = [], 0
+    for s in range(1, n + 1):
+        payload = bytes([s]) * (20 + 7 * s)
+        wal.append(s, payload)
+        off += REC_HEADER_SIZE + len(payload)
+        ends.append(off)
+    wal.close()
+    return ends
+
+
+def _seg_path(d):
+    return d / "wal_000000000001.log"
+
+
+@pytest.mark.parametrize("cut", [1, 7, 15, 16, 17, 40, 99, 150, -1, -17])
+def test_truncation_at_any_byte_keeps_valid_prefix(tmp_path, cut):
+    """Chopping the segment at ANY byte offset (a torn tail) must recover
+    exactly the records whose frames lie fully below the cut."""
+    ends = _fill_wal(tmp_path)
+    data = _seg_path(tmp_path).read_bytes()
+    cut = cut % len(data)
+    _seg_path(tmp_path).write_bytes(data[:cut])
+    recs = replay(tmp_path)
+    want = sum(1 for e in ends if e <= cut)
+    assert [s for s, _ in recs] == list(range(1, want + 1))
+    # idempotent: the tear was truncated away, a second scan is clean
+    assert len(replay(tmp_path)) == want
+
+
+def test_corruption_mid_log_raises(tmp_path):
+    """A damaged record with valid records AFTER it is storage corruption,
+    not a crash artifact — replay must refuse, never silently skip."""
+    _fill_wal(tmp_path)
+    p = _seg_path(tmp_path)
+    data = bytearray(p.read_bytes())
+    data[REC_HEADER_SIZE + 3] ^= 0xFF  # inside record 1's payload
+    p.write_bytes(bytes(data))
+    with pytest.raises(WALCorruptionError):
+        replay(tmp_path)
+
+
+def test_corruption_at_tail_is_a_tear(tmp_path):
+    """The same bit flip in the FINAL record reaches EOF → torn tail →
+    truncated, keeping every earlier record."""
+    ends = _fill_wal(tmp_path)
+    p = _seg_path(tmp_path)
+    data = bytearray(p.read_bytes())
+    data[ends[-2] + REC_HEADER_SIZE + 1] ^= 0xFF
+    p.write_bytes(bytes(data))
+    assert [s for s, _ in replay(tmp_path)] == [1, 2, 3, 4, 5]
+
+
+def test_corruption_in_old_segment_never_truncates(tmp_path):
+    """Tail damage in a NON-newest segment is not a tear (no crash writes
+    there) — replay refuses instead of dropping records."""
+    wal = WriteAheadLog(tmp_path)
+    wal.open_segment(1)
+    wal.append(1, b"a" * 30)
+    wal.rotate(2)
+    wal.append(2, b"b" * 30)
+    wal.close()
+    p = _seg_path(tmp_path)
+    data = p.read_bytes()
+    p.write_bytes(data[:-5])  # tear in the OLD segment
+    with pytest.raises(WALCorruptionError):
+        replay(tmp_path)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, **COMMON)
+    @given(cut=st.integers(min_value=0, max_value=10_000))
+    def test_property_truncation_any_offset(tmp_path_factory, cut):
+        d = tmp_path_factory.mktemp("torn")
+        ends = _fill_wal(d)
+        p = _seg_path(d)
+        data = p.read_bytes()
+        cut = cut % (len(data) + 1)
+        p.write_bytes(data[:cut])
+        want = sum(1 for e in ends if e <= cut)
+        assert [s for s, _ in replay(d)] == list(range(1, want + 1))
+
+
+# ---------------------------------------------------------------------------
+# negative controls: the suite must CATCH a broken durability boundary
+# ---------------------------------------------------------------------------
+
+
+def test_negative_no_fsync_loses_acked_batches(tmp_path, oracle):
+    """With the WAL's fsync disabled, a crash after several acknowledged
+    batches loses them — recovery lands BELOW the acked seq, i.e. the
+    byte-identity property would fail.  This is the proof the positive
+    tests are actually sensitive to the fsync."""
+    d = tmp_path / "wal"
+    crashed, acked = _crash_run(d, "apply.done", 5, fsync=False)
+    assert crashed and acked >= 4
+    dur = DurableFliX.open(
+        d,
+        engine=fi.make_engine(),
+        snapshot_every=fi.SNAPSHOT_EVERY,
+        full_every=fi.FULL_EVERY,
+    )
+    try:
+        # batches 4..5 were acked but only buffered: gone
+        assert dur.seq < acked, "un-fsynced WAL unexpectedly durable"
+        assert canonical_state_bytes(dur.state) != oracle[acked]
+        assert canonical_state_bytes(dur.state) == oracle[dur.seq]
+    finally:
+        dur.close()
+
+
+def test_negative_truncation_disabled_refuses_torn_tail(tmp_path, oracle):
+    """With tail truncation off, recovery must raise on a mid-append crash
+    instead of silently dropping the torn record."""
+    d = tmp_path / "wal"
+    crashed, acked = _crash_run(d, "wal.append.partial", 5)
+    assert crashed
+    with pytest.raises(WALCorruptionError):
+        DurableFliX.open(d, engine=fi.make_engine(), truncate_torn=False)
+    # ...and the default policy recovers the same directory fine
+    fi.recover_and_check(d, oracle, acked=acked)
+
+
+# ---------------------------------------------------------------------------
+# subprocess SIGKILL matrix: genuine process death
+# ---------------------------------------------------------------------------
+
+REPO = Path(__file__).resolve().parents[1]
+
+SIGKILL_POINTS = [
+    ("wal.append.partial", 4),
+    ("wal.append.durable", 6),
+    ("snap.payload.partial", 2),
+    ("snap.before_rename", 2),
+]
+
+# children stop short of the restructure batch: the in-process matrix
+# covers that window, and skipping it keeps each cold-jit subprocess cheap
+CHILD_BATCHES = 6
+
+
+def _spawn_child(d, *extra):
+    proc = subprocess.run(
+        [
+            sys.executable,
+            str(REPO / "tests" / "fault_injection.py"),
+            "--dir",
+            str(d),
+            "--batches",
+            str(CHILD_BATCHES),
+            *extra,
+        ],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": f"{REPO}/src"},
+        cwd=str(REPO),
+    )
+    acks = [
+        int(line.split()[1])
+        for line in proc.stdout.splitlines()
+        if line.startswith("ACK ")
+    ]
+    return proc, max(acks, default=0)
+
+
+@pytest.mark.parametrize("event,count", SIGKILL_POINTS)
+def test_sigkill_subprocess_recovers(tmp_path, oracle, event, count):
+    d = tmp_path / "wal"
+    proc, acked = _spawn_child(d, "--kill-event", event, "--kill-count", str(count))
+    assert proc.returncode == -9, f"child not SIGKILLed:\n{proc.stderr}"
+    seq = _check_recovery(d, oracle, acked)
+    assert seq >= acked
+
+
+def test_sigkill_no_fsync_negative(tmp_path):
+    """SIGKILL + fsync disabled: the userspace-buffered records die with
+    the process — acked batches are genuinely lost."""
+    d = tmp_path / "wal"
+    proc, acked = _spawn_child(
+        d, "--kill-event", "apply.done", "--kill-count", "5", "--no-fsync"
+    )
+    assert proc.returncode == -9
+    assert acked >= 4
+    dur = DurableFliX.open(d, engine=fi.make_engine())
+    try:
+        assert dur.seq < acked
+    finally:
+        dur.close()
+
+
+# ---------------------------------------------------------------------------
+# sharded recovery: same WAL, ShardEngine rebuild + replay across the mesh
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_recovery_matches_local_oracle(tmp_path, oracle):
+    """Crash a SHARDED durable index and recover it: canonical bytes must
+    match the single-device oracle (the durability layer is engine-blind —
+    logical content is all that persists).  The kill lands right after the
+    clustered heavy batch overflows a shard and ``shard_restructure``
+    rebalances fences, so recovery replays across that rebalance.  Runs in
+    a subprocess with fake host devices, kept minimal (2 shards, 4
+    batches) because every shard_map geometry is a cold compile there."""
+    from conftest import run_with_devices
+
+    d = tmp_path / "wal"
+    out = run_with_devices(
+        f"""
+        import sys
+        sys.path.insert(0, r"{REPO}/tests")
+        import fault_injection as fi
+        from repro.checkpoint import DurableFliX, ShardEngine
+        from repro.checkpoint.serialize import canonical_state_bytes
+        from repro.core.distributed import make_shard_mesh
+
+        mesh = make_shard_mesh(2)
+        eng = ShardEngine(mesh, **fi.GEOMETRY)
+        acked = [0]
+        try:
+            fi.run_workload(r"{d}", 4, engine=eng,
+                            crash_hook=fi.CrashAt("apply.done", 4),
+                            ack=lambda s: acked.__setitem__(0, s))
+        except fi.CrashError:
+            pass
+        dur = DurableFliX.open(r"{d}", engine=ShardEngine(mesh, **fi.GEOMETRY))
+        print("SEQ", dur.seq, "ACKED", acked[0], flush=True)
+        print("DIGEST", canonical_state_bytes(dur.state).hex(), flush=True)
+        dur.close()
+        """,
+        n_devices=2,
+    )
+    seq = acked = digest = None
+    for line in out.splitlines():
+        if line.startswith("SEQ "):
+            _, seq, _, acked = line.split()
+        elif line.startswith("DIGEST "):
+            digest = line.split()[1]
+    assert seq is not None and digest is not None, f"child output:\n{out}"
+    seq, acked = int(seq), int(acked)
+    assert seq >= acked
+    assert bytes.fromhex(digest) == oracle[seq]

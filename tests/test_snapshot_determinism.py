@@ -1,0 +1,269 @@
+"""Serialization determinism: identical logical state → identical bytes.
+
+The durability contract (DESIGN.md §12) hangs off one invariant: the
+canonical payload is a function of *logical content only*.  These tests
+drive equal logical states down every physically-different path the
+engine has and require byte-for-byte equal serializations:
+
+* fused vs reference ``apply_ops`` executor;
+* with vs without the successor cache (volatile fields);
+* pre- vs post-restructure (grow AND shrink) at equal logical state;
+* insertion-order / batch-split independence (same final content via
+  different op histories);
+* a state freshly rebuilt from its own canonical bytes (round trip).
+
+Plus the format discipline: versioned header, strict parsing, corrupt or
+trailing bytes rejected.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.checkpoint.serialize import (
+    MAGIC,
+    SnapshotFormatError,
+    bucket_segments,
+    canonical_state_bytes,
+    pairs_to_bytes,
+    parse_canonical,
+    segment_crcs,
+    state_from_pairs,
+)
+from repro.core.query import with_successor_cache
+from repro.core.restructure import restructure_auto, restructure_grow
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+    COMMON = dict(deadline=None, suppress_health_check=[HealthCheck.too_slow])
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    HAVE_HYPOTHESIS = False
+
+KEY_SPACE = 4096
+
+
+def _state(rng, n=300, **geom):
+    keys = np.sort(rng.choice(KEY_SPACE, n, replace=False)).astype(np.int32)
+    vals = (keys * 3 + 1).astype(np.int32)
+    return state_from_pairs(
+        keys, vals, **{**dict(node_size=8, nodes_per_bucket=4), **geom}
+    )
+
+
+def _mixed_ops(rng, n=64):
+    keys = rng.choice(KEY_SPACE, n, replace=False).astype(np.int32)
+    tag = rng.choice(
+        np.array([core.OP_INSERT, core.OP_DELETE, core.OP_POINT], np.int32),
+        n,
+        p=[0.45, 0.3, 0.25],
+    )
+    vals = (keys * 11 + 5).astype(np.int32)
+    order = np.argsort(keys, kind="stable")
+    ops, _ = core.make_ops(
+        jnp.asarray(tag[order]), jnp.asarray(keys[order]), jnp.asarray(vals[order])
+    )
+    return ops
+
+
+def test_fused_and_reference_serialize_identically(rng):
+    st0 = _state(rng)
+    ops = _mixed_ops(rng)
+    ref, _, _ = core.apply_ops(st0, ops, impl="reference")
+    fus, _, _ = core.apply_ops(st0, ops, impl="fused")
+    assert canonical_state_bytes(ref) == canonical_state_bytes(fus)
+
+
+def test_successor_cache_is_invisible(rng):
+    st0 = _state(rng)
+    cached = with_successor_cache(st0)
+    assert cached.succ_smin is not None
+    assert canonical_state_bytes(cached) == canonical_state_bytes(st0)
+    # and after an update batch on the cached state (cache dropped/rebuilt)
+    ops = _mixed_ops(rng)
+    a, _, _ = core.apply_ops(st0, ops, impl="reference")
+    b, _, _ = core.apply_ops(cached, ops, impl="reference")
+    assert canonical_state_bytes(a) == canonical_state_bytes(b)
+
+
+def test_restructure_is_a_logical_noop(rng):
+    st0 = _state(rng)
+    base = canonical_state_bytes(st0)
+    grown = restructure_grow(st0, extra_keys=500)
+    assert grown.keys.shape != st0.keys.shape  # physically different
+    assert canonical_state_bytes(grown) == base
+    shrunk = restructure_auto(grown)  # re-plan for live count: shrink back
+    assert shrunk.keys.shape[0] < grown.keys.shape[0]
+    assert canonical_state_bytes(shrunk) == base
+    # ...and the same batch applied pre- vs post-restructure converges
+    ops = _mixed_ops(rng)
+    a, _, _ = core.apply_ops(st0, ops, impl="reference")
+    b, _, _ = core.apply_ops(grown, ops, impl="reference")
+    assert canonical_state_bytes(a) == canonical_state_bytes(b)
+
+
+def test_batch_split_independence(rng):
+    """One 64-op batch vs the same ops as two 32-op batches (split at the
+    key median, preserving per-batch sortedness) — same bytes."""
+    st0 = _state(rng)
+    keys = rng.choice(KEY_SPACE, 64, replace=False).astype(np.int32)
+    keys.sort()
+    tag = rng.choice(np.array([core.OP_INSERT, core.OP_DELETE], np.int32), 64)
+    vals = (keys * 5 + 2).astype(np.int32)
+
+    def run(*chunks):
+        s = st0
+        for lo, hi in chunks:
+            ops, _ = core.make_ops(
+                jnp.asarray(tag[lo:hi]),
+                jnp.asarray(keys[lo:hi]),
+                jnp.asarray(vals[lo:hi]),
+            )
+            s, _, _ = core.apply_ops(s, ops, impl="reference")
+        return canonical_state_bytes(s)
+
+    assert run((0, 64)) == run((0, 32), (32, 64))
+
+
+def test_roundtrip_through_canonical_bytes(rng):
+    st0 = _state(rng)
+    ops = _mixed_ops(rng)
+    s1, _, _ = core.apply_ops(st0, ops, impl="reference")
+    data = canonical_state_bytes(s1)
+    keys, vals = parse_canonical(data)
+    rebuilt = state_from_pairs(keys, vals)
+    assert canonical_state_bytes(rebuilt) == data
+
+
+def test_geometry_does_not_leak_into_bytes(rng):
+    """The same pairs built under three different geometries serialize
+    identically — the payload really is logical-content-only."""
+    r = np.random.default_rng(5)
+    keys = np.sort(r.choice(KEY_SPACE, 200, replace=False)).astype(np.int32)
+    vals = keys + 9
+    variants = [
+        state_from_pairs(keys, vals, node_size=8, nodes_per_bucket=4),
+        state_from_pairs(keys, vals, node_size=16, nodes_per_bucket=8),
+        state_from_pairs(keys, vals, node_size=32, nodes_per_bucket=2),
+    ]
+    payloads = {canonical_state_bytes(v) for v in variants}
+    assert len(payloads) == 1
+
+
+# ---------------------------------------------------------------------------
+# format discipline
+# ---------------------------------------------------------------------------
+
+
+def test_header_versioned_and_strict(rng):
+    st0 = _state(rng, n=50)
+    data = canonical_state_bytes(st0)
+    assert data[:8] == MAGIC
+    k, v = parse_canonical(data)
+    assert len(k) == 50 and (np.diff(k.astype(np.int64)) > 0).all()
+    with pytest.raises(SnapshotFormatError):
+        parse_canonical(data + b"\x00")  # trailing bytes
+    with pytest.raises(SnapshotFormatError):
+        parse_canonical(b"NOTMAGIC" + data[8:])
+    bad_version = data[:8] + b"\x63\x00\x00\x00" + data[12:]
+    with pytest.raises(SnapshotFormatError):
+        parse_canonical(bad_version)
+    with pytest.raises(SnapshotFormatError):
+        parse_canonical(data[: len(data) - 4])  # truncated payload
+
+
+def test_unsorted_payload_rejected():
+    with pytest.raises(SnapshotFormatError):
+        parse_canonical(
+            pairs_to_bytes(np.array([5, 3], "<i4"), np.array([1, 2], "<i4"))
+        )
+
+
+def test_segment_concat_is_canonical_payload(rng):
+    """Fence disjointness: per-bucket segments concatenated in order ARE
+    the canonical payload, and per-bucket crcs match a direct recompute —
+    the identity delta snapshots rely on."""
+    st0 = _state(rng)
+    lens, seg_k, seg_v = bucket_segments(st0)
+    assert pairs_to_bytes(seg_k, seg_v) == canonical_state_bytes(st0)
+    crcs = segment_crcs(lens, seg_k, seg_v)
+    assert len(crcs) == st0.keys.shape[0]
+    # a partial fetch of a few buckets matches the full fetch's slices
+    sel = [0, 2, len(lens) - 1]
+    plens, pk, pv = bucket_segments(st0, sel)
+    bounds = np.concatenate([[0], np.cumsum(lens)])
+    off = 0
+    for i, b in enumerate(sel):
+        assert plens[i] == lens[b]
+        np.testing.assert_array_equal(
+            pk[off : off + plens[i]], seg_k[bounds[b] : bounds[b + 1]]
+        )
+        off += int(plens[i])
+
+
+# ---------------------------------------------------------------------------
+# generative sweep: arbitrary op histories, every path pair
+# ---------------------------------------------------------------------------
+
+
+def _apply_seq(st0, seqs, impl, cache_every=0):
+    s = st0
+    for i, (tag, keys, vals) in enumerate(seqs):
+        if cache_every and i % cache_every == 0:
+            s = with_successor_cache(s)
+        ops, _ = core.make_ops(
+            jnp.asarray(tag), jnp.asarray(keys), jnp.asarray(vals)
+        )
+        s, _, _ = core.apply_ops(s, ops, impl=impl)
+    return s
+
+
+def _gen_history(seed, n_batches=3, n=48):
+    r = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        keys = r.choice(KEY_SPACE, n, replace=False).astype(np.int32)
+        keys.sort()
+        tag = r.choice(
+            np.array([core.OP_INSERT, core.OP_DELETE, core.OP_POINT], np.int32), n
+        )
+        out.append((tag, keys, (keys * 7 + 3).astype(np.int32)))
+    return out
+
+
+def _determinism_case(seed):
+    r = np.random.default_rng(seed)
+    st0 = _state(r)
+    hist = _gen_history(seed)
+    a = _apply_seq(st0, hist, "reference")
+    b = _apply_seq(st0, hist, "fused")
+    c = _apply_seq(restructure_grow(st0, extra_keys=300), hist, "reference")
+    d = _apply_seq(st0, hist, "reference", cache_every=2)
+    payloads = {canonical_state_bytes(s) for s in (a, b, c, d)}
+    assert len(payloads) == 1, f"paths diverged for seed {seed}"
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @settings(max_examples=15, **COMMON)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_property_path_independent_bytes(seed):
+        _determinism_case(seed)
+
+else:  # pragma: no cover - minimal containers
+
+    @pytest.mark.slow
+    def test_property_path_independent_bytes_fallback():
+        for seed in np.random.default_rng(11).integers(0, 2**31 - 1, 6):
+            _determinism_case(int(seed))
+
+
+def test_path_independent_bytes_smoke():
+    """One deterministic instance of the property in the fast lane."""
+    _determinism_case(12345)
