@@ -356,6 +356,7 @@ class DurableFliX:
         self._bucket_lens: np.ndarray | None = None
         self._bucket_crcs: list[int] | None = None
         self._snaps_since_full = 0
+        self._poisoned: str | None = None
 
     # -- constructors -----------------------------------------------------
     @staticmethod
@@ -465,7 +466,10 @@ class DurableFliX:
             )
             self.handle = new
             if restructured:
-                self._epoch += 1
+                # full _bump_epoch, not a bare counter: a replayed
+                # restructure moves the fences, and apply()'s dirty-bucket
+                # routing reads the refreshed _mkba_host ever after
+                self._bump_epoch()
             self._seq = seq
         self.replayed = len(records)
 
@@ -505,15 +509,36 @@ class DurableFliX:
         The WAL append (fsynced) precedes execution, so a crash at ANY
         later point replays this batch to the identical logical state —
         the engine never sees an op the log does not already hold.
+
+        If the ENGINE fails (overflow assertion, OOM) the handle is
+        unchanged — the engine is functional — so the just-appended record
+        is rolled back before re-raising: the durable history must hold
+        exactly the batches the live instance executed.  Should that
+        rollback itself fail, the instance is poisoned (further apply /
+        snapshot refused) because live and durable state have diverged —
+        reopening from disk is the only consistent continuation.
         """
+        self._check_poisoned()
         tag, key, val = ops.to_host()
         seq = self._seq + 1
+        wal_pos = self._wal.tell()
         self._wal.append(seq, encode_ops(tag, key, val, max_results))
         self._seq = seq
 
-        new, results, stats, restructured = self.engine.apply(
-            self.handle, ops, max_results=max_results
-        )
+        try:
+            new, results, stats, restructured = self.engine.apply(
+                self.handle, ops, max_results=max_results
+            )
+        except BaseException:
+            self._seq = seq - 1
+            try:
+                self._wal.truncate_to(wal_pos)
+            except BaseException:
+                self._poisoned = (
+                    f"batch seq={seq} was logged but neither executed nor "
+                    "rolled back; reopen from disk to resynchronize"
+                )
+            raise
         self.handle = new
         if restructured:
             self._bump_epoch()
@@ -534,6 +559,12 @@ class DurableFliX:
         self._dirty.clear()
         self._mkba_host = np.asarray(self._flix_state().mkba)
 
+    def _check_poisoned(self) -> None:
+        if self._poisoned:
+            raise RuntimeError(
+                f"durable history diverged from live state: {self._poisoned}"
+            )
+
     # -- snapshots --------------------------------------------------------
     def snapshot(self, *, full: bool | None = None) -> Path:
         """Write one snapshot at the current seq (atomic commit).
@@ -543,12 +574,20 @@ class DurableFliX:
         and every ``full_every``-th snapshot; otherwise a dirty-bucket
         delta whose write cost is proportional to churn.
         """
+        self._check_poisoned()
         name = _snap_name(self._seq)
         if (self.dir / name).is_dir():
             # a snapshot at this seq is already committed, and seq determines
             # the logical content — forcing another is an idempotent no-op
-            # (e.g. close-time snapshot right after an auto-snapshot)
-            return self.dir / name
+            # (e.g. close-time snapshot right after an auto-snapshot).  But
+            # only after it validates: open() may have fallen back PAST a
+            # corrupt snapshot at exactly this seq, and trusting it would
+            # leave every future recovery replaying the whole WAL tail.
+            try:
+                load_snapshot_chain(self.dir, self._seq)
+                return self.dir / name
+            except SnapshotCorruptionError:
+                shutil.rmtree(self.dir / name, ignore_errors=True)
         state = self._flix_state()
         if full is None:
             full = (
@@ -637,11 +676,11 @@ class DurableFliX:
         try:
             if split and len(data) > 1:
                 # two writes so the crash hook can land mid-payload
-                os.write(fd, data[: len(data) // 2])
+                wal_mod.write_all(fd, data[: len(data) // 2])
                 self._hook("snap.payload.partial")
-                os.write(fd, data[len(data) // 2 :])
+                wal_mod.write_all(fd, data[len(data) // 2 :])
             else:
-                os.write(fd, data)
+                wal_mod.write_all(fd, data)
             os.fsync(fd)
         finally:
             os.close(fd)

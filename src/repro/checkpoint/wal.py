@@ -55,6 +55,15 @@ def _noop_hook(event: str) -> None:
     return None
 
 
+def write_all(fd: int, data) -> None:
+    """``os.write`` until every byte lands: a short write that got fsynced
+    and acknowledged would become non-tail corruption on the next append,
+    which replay refuses wholesale."""
+    view = memoryview(data)
+    while len(view):
+        view = view[os.write(fd, view) :]
+
+
 def encode_ops(tag, key, val, max_results: int) -> bytes:
     """Frame one sorted batch (host arrays) as a WAL record payload."""
     t = np.ascontiguousarray(np.asarray(tag, _LE32))
@@ -125,7 +134,7 @@ class WriteAheadLog:
         if self._fd is None:
             return
         if self._buffer:
-            os.write(self._fd, bytes(self._buffer))
+            write_all(self._fd, bytes(self._buffer))
             self._buffer.clear()
         os.fsync(self._fd)
         os.close(self._fd)
@@ -150,12 +159,34 @@ class WriteAheadLog:
         # two writes on purpose: the crash hook between them lets the fault
         # harness materialize a genuinely torn (half-written) record
         split = REC_HEADER_SIZE + len(payload) // 2
-        os.write(self._fd, frame[:split])
+        write_all(self._fd, frame[:split])
         self._hook("wal.append.partial")
-        os.write(self._fd, frame[split:])
+        write_all(self._fd, frame[split:])
         self._hook("wal.append.written")
         os.fsync(self._fd)
         self._hook("wal.append.durable")
+
+    def tell(self) -> int:
+        """End offset of the active segment, buffered frames included —
+        the rollback point for :meth:`truncate_to`."""
+        if self._fd is None:
+            raise RuntimeError("no open WAL segment (call open_segment first)")
+        return os.fstat(self._fd).st_size + len(self._buffer)
+
+    def truncate_to(self, offset: int) -> None:
+        """Roll the active segment back to ``offset``, undoing appends made
+        after it.  The one legitimate caller is ``DurableFliX.apply`` when
+        the engine fails AFTER the WAL ack: the logged-but-never-executed
+        record must not survive into the durable history."""
+        if self._fd is None:
+            raise RuntimeError("no open WAL segment (call open_segment first)")
+        size = os.fstat(self._fd).st_size
+        if offset >= size:
+            del self._buffer[offset - size :]
+            return
+        self._buffer.clear()
+        os.ftruncate(self._fd, offset)
+        os.fsync(self._fd)
 
     def _fsync_dir(self) -> None:
         dfd = os.open(self.dir, os.O_RDONLY)

@@ -31,9 +31,15 @@ import numpy as np
 import pytest
 
 import fault_injection as fi
-from repro.checkpoint import DurableFliX, WALCorruptionError
+from repro.checkpoint import (
+    DurableFliX,
+    SnapshotCorruptionError,
+    WALCorruptionError,
+    load_snapshot_chain,
+)
 from repro.checkpoint.serialize import canonical_state_bytes
 from repro.checkpoint.wal import REC_HEADER_SIZE, WriteAheadLog, replay
+from repro.core.ops import OpBatch
 
 try:
     from hypothesis import HealthCheck, given, settings
@@ -45,6 +51,7 @@ except ImportError:  # pragma: no cover - exercised on minimal containers
     HAVE_HYPOTHESIS = False
 
 N_BATCHES = 10  # restructure fires at batch 9 (see fault_injection)
+RESUME_BATCHES = 12  # resume tests run past N_BATCHES; oracle covers both
 
 KILL_EVENTS = (
     "wal.append.partial",  # half a record on disk, no fsync → torn tail
@@ -65,7 +72,7 @@ import functools
 
 @functools.lru_cache(maxsize=1)
 def _cached_oracle():
-    return fi.oracle_canonical(N_BATCHES)
+    return fi.oracle_canonical(RESUME_BATCHES)
 
 
 @pytest.fixture(scope="module")
@@ -180,6 +187,108 @@ def test_forced_snapshot_at_committed_seq_is_noop(tmp_path, oracle):
     fi.recover_and_check(d, oracle, acked=fi.SNAPSHOT_EVERY)
 
 
+def test_replayed_restructure_refreshes_fences_for_deltas(tmp_path, oracle):
+    """Recovery that REPLAYS the restructure batch must refresh the host
+    fence cache, because the SAME instance keeps running and takes a
+    dirty-bucket delta snapshot: a stale cache routes updates to
+    pre-restructure bucket ids, so the delta misses truly-dirty buckets
+    yet passes every checksum — recovery from it is silently wrong."""
+    d = tmp_path / "wal"
+    acked = [0]
+    with pytest.raises(fi.CrashError):
+        fi.run_workload(
+            d,
+            9,
+            snapshot_every=100,  # the only snapshot on disk stays seq 0
+            crash_hook=fi.CrashAt("apply.done", 9),
+            ack=lambda s: acked.__setitem__(0, s),
+        )
+    assert acked[0] == 8
+    # open() replays 1..9 including the batch-9 restructure and snapshots
+    # (full) at 9; the same instance then applies 10..12, auto-snapshotting
+    # a dirty-bucket delta at 12 — recovery from that delta is the proof
+    final = fi.run_workload(d, RESUME_BATCHES)
+    assert final == RESUME_BATCHES
+    assert fi.recover_and_check(d, oracle, acked=RESUME_BATCHES) == RESUME_BATCHES
+
+
+def test_engine_failure_rolls_back_the_wal_record(tmp_path, oracle):
+    """apply() logs the batch BEFORE the engine runs it; if the engine
+    then fails, the logged-but-never-executed record must be rolled back —
+    otherwise recovery replays a batch the live instance never applied and
+    the next append reuses its seq."""
+    d = tmp_path / "wal"
+    dur = fi.run_workload(d, 4, ret="instance")
+    try:
+        tag, key, val, mr = fi.make_batch_host(5)
+        real_apply = dur.engine.apply
+
+        def boom(*a, **k):
+            raise RuntimeError("engine OOM")
+
+        dur.engine.apply = boom
+        with pytest.raises(RuntimeError, match="engine OOM"):
+            dur.apply(OpBatch.from_host(tag, key, val), max_results=mr)
+        dur.engine.apply = real_apply
+        assert dur.seq == 4  # rolled back: the instance stays usable
+        dur.apply(OpBatch.from_host(tag, key, val), max_results=mr)
+        assert dur.seq == 5
+    finally:
+        dur.close()
+    # a surviving phantom record would make replay see seq 5 twice
+    assert fi.recover_and_check(d, oracle, acked=5) == 5
+
+
+def test_engine_failure_with_failed_rollback_poisons(tmp_path, oracle):
+    """If the rollback itself fails, live and durable state have diverged:
+    the instance must refuse further apply/snapshot, and reopening from
+    disk resynchronizes by replaying the logged batch."""
+    d = tmp_path / "wal"
+    dur = fi.run_workload(d, 2, ret="instance")
+    try:
+
+        def boom(*a, **k):
+            raise RuntimeError("engine OOM")
+
+        def no_rollback(offset):
+            raise OSError("disk gone")
+
+        dur.engine.apply = boom
+        dur._wal.truncate_to = no_rollback
+        tag, key, val, mr = fi.make_batch_host(3)
+        with pytest.raises(RuntimeError, match="engine OOM"):
+            dur.apply(OpBatch.from_host(tag, key, val), max_results=mr)
+        with pytest.raises(RuntimeError, match="diverged"):
+            dur.apply(OpBatch.from_host(tag, key, val), max_results=mr)
+        with pytest.raises(RuntimeError, match="diverged"):
+            dur.snapshot()
+    finally:
+        dur.close()
+    # the durable history is still self-consistent: batch 3 was logged, so
+    # recovery replays it and lands on the oracle at seq 3
+    assert fi.recover_and_check(d, oracle, acked=2) == 3
+
+
+def test_recovery_snapshot_replaces_corrupt_dir_at_its_seq(tmp_path, oracle):
+    """open() falls back past a corrupt newest snapshot and replays the
+    WAL to exactly that seq; its recovery-time snapshot must REWRITE the
+    corrupt dir instead of early-returning it as already committed —
+    otherwise every later recovery pays the whole replay again."""
+    d = tmp_path / "wal"
+    fi.run_workload(d, 6)  # auto-snapshots at 3 and 6
+    snap = d / "snap_000000000006"
+    blob = bytearray((snap / "payload.bin").read_bytes())
+    blob[0] ^= 0xFF
+    (snap / "payload.bin").write_bytes(bytes(blob))
+    with pytest.raises(SnapshotCorruptionError):
+        load_snapshot_chain(d, 6)
+    # recovery falls back to seq 3, replays 4..6 (>= snapshot_every) and
+    # snapshots at 6 — over the corrupt dir
+    assert fi.recover_and_check(d, oracle, acked=6) == 6
+    _keys, _vals, m = load_snapshot_chain(d, 6)  # validates cleanly now
+    assert m["seq"] == 6
+
+
 # ---------------------------------------------------------------------------
 # generative sweep (hypothesis when available, seeded fallback otherwise)
 # ---------------------------------------------------------------------------
@@ -247,6 +356,20 @@ def test_truncation_at_any_byte_keeps_valid_prefix(tmp_path, cut):
     assert [s for s, _ in recs] == list(range(1, want + 1))
     # idempotent: the tear was truncated away, a second scan is clean
     assert len(replay(tmp_path)) == want
+
+
+def test_short_os_writes_still_frame_whole_records(tmp_path, monkeypatch):
+    """``os.write`` may land fewer bytes than asked; the append path must
+    loop until the frame is complete — a short write that got fsynced and
+    acked would later read as non-tail corruption."""
+    from repro.checkpoint import wal as wal_mod
+
+    real_write = os.write
+    with monkeypatch.context() as mp:
+        mp.setattr(wal_mod.os, "write", lambda fd, b: real_write(fd, bytes(b)[:7]))
+        ends = _fill_wal(tmp_path, n=4)
+    assert _seg_path(tmp_path).stat().st_size == ends[-1]
+    assert [s for s, _ in replay(tmp_path)] == [1, 2, 3, 4]
 
 
 def test_corruption_mid_log_raises(tmp_path):
