@@ -6,9 +6,10 @@ Both sides are ``flix-bench-v1`` artifacts (``benchmarks.run`` output /
 the committed ``BENCH_PR*.json`` snapshots).  Raw ``us_per_call`` numbers
 are host-dependent, so the *gate* only looks at the same-host speedup
 ratio maps (``apply_ops_fused_speedup``, ``range_fused_speedup``,
-``sharded_speedup``, ``durability_delta_speedup`` — the last is a
-payload-volume ratio, deterministic by construction): a key regresses
-when
+``sharded_speedup``, ``durability_delta_speedup``,
+``gateway_goodput_ratio`` — the last two are payload-volume and
+virtual-clock request-count ratios, deterministic by construction): a
+key regresses when
 
     fresh < baseline * (1 - tolerance)
 
@@ -39,6 +40,7 @@ SPEEDUP_FIELDS = (
     "range_fused_speedup",
     "sharded_speedup",
     "durability_delta_speedup",
+    "gateway_goodput_ratio",
 )
 SCHEMA = "flix-bench-v1"
 

@@ -1,0 +1,117 @@
+"""Gateway serving benchmarks: goodput under overload + tail latency.
+
+The DESIGN.md §13 claim under measurement: admission control turns
+overload into TYPED rejections, not congestion collapse — as offered
+load grows past engine capacity the gateway keeps forming full batches,
+so **goodput** (committed client requests per virtual tick) holds.  The
+gated artifact field is the ratio
+
+    gateway_goodput_ratio[point] = goodput(overload) / goodput(base)
+
+lifted by ``benchmarks.run`` from the ``gateway_goodput_base_<point>`` /
+``gateway_goodput_overload_<point>`` row pairs; the acceptance bar is
+ratio ≥ 0.8 (in practice ≥ 1: fuller batches).  Everything here runs on
+the harness's VIRTUAL clock (``tests/traffic_replay.py``) — the measured
+quantities are deterministic request counts and virtual-tick latencies,
+so the regression gate never flakes on wall-time jitter; the wall-time
+``gateway_wall_us_*`` rows stay ungated records.
+
+The ungated curve rows record the shape: ``gateway_goodput_curve_x{M}``
+(goodput at offered-load multiplier M), per-profile shed counts, and
+queued-latency percentiles in virtual ticks.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tests"))
+
+import traffic_replay as tr  # noqa: E402
+
+TICKS = 16
+SEED = 7
+BASE_MULT = 1.0
+OVERLOAD_MULT = 4.0
+CURVE_MULTS = (2.0, 4.0, 8.0)
+
+
+def _population(mult: float):
+    """The default hostile population with offered load scaled ×mult."""
+    return [
+        replace(
+            spec,
+            rate=spec.rate * mult,
+            burst_size=int(spec.burst_size * mult),
+        )
+        for spec in tr.default_population(SEED)
+    ]
+
+
+def _run_profile(mult: float):
+    idx = tr.make_index()
+    gw = tr.make_gateway(idx)
+    gw.register_tenant("tenant-hot", rate=24 * mult, burst=48 * mult, weight=3.0)
+    gw.register_tenant("tenant-mid", rate=16 * mult, burst=32 * mult)
+    t0 = time.perf_counter()
+    res = tr.run_traffic(gw, _population(mult), ticks=TICKS, seed=SEED)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    # the bench reuses the test harness's correctness teeth: a goodput
+    # number from a run that double-applied would be meaningless
+    tr.assert_exactly_once(res.requests, res.commit_log)
+    m = gw.metrics
+    shed = sum(
+        m["rejected"].get(c, 0) for c in ("RATE_LIMITED", "QUEUE_FULL")
+    )
+    lat = np.asarray(res.latencies) if res.latencies else np.zeros(1)
+    return {
+        "goodput": m["committed_requests"] / TICKS,
+        "shed": shed,
+        "expired": m["expired"],
+        "p50": float(np.percentile(lat, 50)),
+        "p99": float(np.percentile(lat, 99)),
+        "depth_bound": gw.max_queue_ops,
+        "wall_us": wall_us,
+    }
+
+
+def run() -> None:
+    base = _run_profile(BASE_MULT)
+    emit(
+        "gateway_goodput_base_mix",
+        base["goodput"],
+        f"req/tick shed={base['shed']} expired={base['expired']}",
+    )
+    emit("gateway_latency_p50_base_mix", base["p50"], "virtual ticks")
+    emit("gateway_latency_p99_base_mix", base["p99"], "virtual ticks")
+    emit("gateway_wall_us_base_mix", base["wall_us"], "ungated wall time")
+    for mult in CURVE_MULTS:
+        prof = _run_profile(mult)
+        point = f"x{mult:g}"
+        emit(
+            f"gateway_goodput_curve_{point}",
+            prof["goodput"],
+            f"req/tick shed={prof['shed']} expired={prof['expired']}",
+        )
+        emit(f"gateway_latency_p99_curve_{point}", prof["p99"], "virtual ticks")
+        if mult == OVERLOAD_MULT:
+            # the gated pair: same point name as the base row
+            emit(
+                "gateway_goodput_overload_mix",
+                prof["goodput"],
+                f"x{OVERLOAD_MULT:g} offered load, shed={prof['shed']}",
+            )
+            emit("gateway_shed_overload_mix", float(prof["shed"]), "requests")
+            emit(
+                "gateway_latency_p50_overload_mix", prof["p50"], "virtual ticks"
+            )
+            emit(
+                "gateway_latency_p99_overload_mix", prof["p99"], "virtual ticks"
+            )

@@ -4,13 +4,14 @@
   python -m benchmarks.run             # everything
   python -m benchmarks.run fig9 fig13  # substring filter
 
-Besides the CSV rows on stdout, every run writes ``BENCH_PR6.json`` — the
+Besides the CSV rows on stdout, every run writes ``BENCH_PR7.json`` — the
 repo's machine-readable perf-trajectory artifact (schema ``flix-bench-v1``,
 DESIGN.md §7): per-suite ``name → us_per_call`` maps plus the
 fused-vs-reference ``apply_ops`` speedups extracted from the
 ``mixed_batch`` suite, the RANGE-op speedups from ``range_mix``, the
-sharded-vs-single speedups from ``sharded_mix``, and the delta-vs-full
-snapshot write-volume ratios from ``durability``.  (``BENCH_PR*.json`` in
+sharded-vs-single speedups from ``sharded_mix``, the delta-vs-full
+snapshot write-volume ratios from ``durability``, and the
+goodput-under-overload ratios from ``gateway``.  (``BENCH_PR*.json`` in
 the repo root are committed per-PR snapshots — ``benchmarks.compare``
 diffs against them; don't overwrite them outside a snapshot refresh.)
 """
@@ -29,6 +30,7 @@ from benchmarks import (
     delete_rounds,
     dist_shift,
     durability,
+    gateway,
     heatmap,
     insert_rounds,
     mixed_batch,
@@ -56,9 +58,10 @@ SUITES = {
     "sharded_mix_engine": sharded_mix,
     "table4_restructure": restructure_recovery,
     "durability_engine": durability,
+    "gateway_engine": gateway,
 }
 
-BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR6.json")
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR7.json")
 
 
 def _speedups(
@@ -114,6 +117,10 @@ def write_bench_json(
         name: row["us_per_call"]
         for name, row in suites.get("durability_engine", {}).items()
     }
+    gw = {
+        name: row["us_per_call"]
+        for name, row in suites.get("gateway_engine", {}).items()
+    }
     payload = {
         "schema": "flix-bench-v1",
         "scale": common.SCALE,
@@ -138,6 +145,12 @@ def write_bench_json(
             "durability_snap_delta_bytes_churn",
             "durability_snap_full_bytes_churn",
             key_prefix="churn",
+        ),
+        # goodput(overload)/goodput(base) per traffic point — deterministic
+        # request counts on the harness's virtual clock (never wall time),
+        # so overload collapsing useful throughput trips the compare gate
+        "gateway_goodput_ratio": _speedups(
+            gw, "gateway_goodput_base_", "gateway_goodput_overload_"
         ),
     }
     with open(path, "w") as f:

@@ -130,6 +130,8 @@ class LocalEngine:
             )
             assert not bool(new.needs_restructure), "post-restructure overflow"
             restructured = True
+        stats = dict(stats)
+        stats["restructure_retries"] = int(restructured)
         return new, results, stats, restructured
 
 
@@ -204,6 +206,8 @@ class ShardEngine:
             )
             assert not bool(new.state.needs_restructure), "post-restructure overflow"
             restructured = True
+        stats = dict(stats)
+        stats["restructure_retries"] = int(restructured)
         return new, results, stats, restructured
 
 
@@ -339,6 +343,7 @@ class DurableFliX:
         keep_full: int = 2,
         fsync: bool = True,
         crash_hook=None,
+        meta_window: int = 256,
     ):
         self.dir = Path(directory)
         self.engine = engine
@@ -346,6 +351,7 @@ class DurableFliX:
         self.snapshot_every = snapshot_every
         self.full_every = max(1, full_every)
         self.keep_full = max(1, keep_full)
+        self.meta_window = max(0, meta_window)
         self._seq = seq
         self._epoch = epoch
         self._hook = crash_hook or _noop_hook
@@ -357,6 +363,11 @@ class DurableFliX:
         self._bucket_crcs: list[int] | None = None
         self._snaps_since_full = 0
         self._poisoned: str | None = None
+        self._closed = False
+        # bounded (seq, meta) trail of recent commits: logged in each WAL
+        # record, carried across snapshots via the manifest, rebuilt on
+        # open() — the gateway's durable dedup window (DESIGN.md §13)
+        self._meta: list[tuple[int, object]] = []
 
     # -- constructors -----------------------------------------------------
     @staticmethod
@@ -378,6 +389,7 @@ class DurableFliX:
         keep_full: int = 2,
         fsync: bool = True,
         crash_hook=None,
+        meta_window: int = 256,
     ) -> "DurableFliX":
         """Start a durable history at ``seq=0`` from an existing state:
         writes the initial full snapshot and opens the first WAL segment."""
@@ -398,6 +410,7 @@ class DurableFliX:
             keep_full=keep_full,
             fsync=fsync,
             crash_hook=crash_hook,
+            meta_window=meta_window,
         )
         self.snapshot(full=True)  # also opens WAL segment seq+1
         return self
@@ -414,6 +427,7 @@ class DurableFliX:
         fsync: bool = True,
         crash_hook=None,
         truncate_torn: bool = True,
+        meta_window: int = 256,
     ) -> "DurableFliX":
         """Crash recovery: newest valid snapshot chain + WAL replay.
 
@@ -454,12 +468,17 @@ class DurableFliX:
             keep_full=keep_full,
             fsync=fsync,
             crash_hook=crash_hook,
+            meta_window=meta_window,
         )
+        # the dedup/meta trail up to the snapshot rides in its manifest;
+        # the replayed tail below extends it exactly as live applies did
+        for mseq, mobj in manifest.get("meta_window") or []:
+            self._record_meta(int(mseq), mobj)
         records = wal_mod.replay(
             directory, after_seq=manifest["seq"], truncate_torn=truncate_torn
         )
         for seq, payload in records:
-            tag, key, val, max_results = decode_ops(payload)
+            tag, key, val, max_results, meta_bytes = decode_ops(payload)
             ops = OpBatch.from_host(tag, key, val)
             new, _results, _stats, restructured = engine.apply(
                 self.handle, ops, max_results=max_results
@@ -471,6 +490,8 @@ class DurableFliX:
                 # routing reads the refreshed _mkba_host ever after
                 self._bump_epoch()
             self._seq = seq
+            if meta_bytes:
+                self._record_meta(seq, json.loads(meta_bytes.decode()))
         self.replayed = len(records)
 
         # resume appending where the durable history ends: the newest
@@ -499,12 +520,48 @@ class DurableFliX:
         itself; sharded: the global-view state)."""
         return self._flix_state()
 
+    @property
+    def healthy(self) -> bool:
+        """False once live and durable state have diverged (failed WAL
+        rollback) — ``apply``/``snapshot`` are refused; reads of the live
+        handle remain valid, and reopening from disk resynchronizes."""
+        return self._poisoned is None and not self._closed
+
+    @property
+    def poisoned_reason(self) -> str | None:
+        return self._poisoned
+
+    def meta_trail(self) -> list[tuple[int, object]]:
+        """The bounded ``(seq, meta)`` trail of recent durable commits,
+        ascending — everything the last ``meta_window`` metadata-carrying
+        batches logged, surviving snapshots and crash recovery."""
+        return list(self._meta)
+
+    def _record_meta(self, seq: int, meta: object) -> None:
+        if meta is None or self.meta_window == 0:
+            return
+        self._meta.append((seq, meta))
+        if len(self._meta) > self.meta_window:
+            del self._meta[: len(self._meta) - self.meta_window]
+
     def _flix_state(self):
         return self.engine.flix(self.handle)
 
     # -- the commit path --------------------------------------------------
-    def apply(self, ops: OpBatch, *, max_results: int = DEFAULT_MAX_RESULTS):
+    def apply(
+        self,
+        ops: OpBatch,
+        *,
+        max_results: int = DEFAULT_MAX_RESULTS,
+        meta=None,
+    ):
         """Durably execute one sorted batch; returns ``(results, stats)``.
+
+        ``meta`` (any JSON-serializable object, e.g. the gateway's
+        idempotency keys) is logged inside the batch's WAL record and kept
+        in the bounded :meth:`meta_trail` — it becomes durable in the SAME
+        fsync as the ops, so a recovered history always agrees with itself
+        about which annotated batches it contains.
 
         The WAL append (fsynced) precedes execution, so a crash at ANY
         later point replays this batch to the identical logical state —
@@ -521,8 +578,9 @@ class DurableFliX:
         self._check_poisoned()
         tag, key, val = ops.to_host()
         seq = self._seq + 1
+        meta_bytes = b"" if meta is None else json.dumps(meta).encode()
         wal_pos = self._wal.tell()
-        self._wal.append(seq, encode_ops(tag, key, val, max_results))
+        self._wal.append(seq, encode_ops(tag, key, val, max_results, meta_bytes))
         self._seq = seq
 
         try:
@@ -547,6 +605,7 @@ class DurableFliX:
             if upd.any():
                 buckets = np.searchsorted(self._mkba_host, key[upd], side="left")
                 self._dirty.update(int(b) for b in np.unique(buckets))
+        self._record_meta(seq, meta)
         self._hook("apply.done")
 
         if self.snapshot_every and seq % self.snapshot_every == 0:
@@ -564,6 +623,8 @@ class DurableFliX:
             raise RuntimeError(
                 f"durable history diverged from live state: {self._poisoned}"
             )
+        if self._closed:
+            raise RuntimeError("durable index is closed")
 
     # -- snapshots --------------------------------------------------------
     def snapshot(self, *, full: bool | None = None) -> Path:
@@ -635,6 +696,10 @@ class DurableFliX:
             "seg_lens": [int(x) for x in all_lens],
             "bucket_crcs": [int(c) for c in all_crcs],
             "payload_crc": zlib.crc32(payload),
+            # carry the dedup/meta trail across the WAL segments this
+            # snapshot retires — open() reseeds from here, then extends
+            # with the replayed tail (DESIGN.md §13)
+            "meta_window": [[s, m] for s, m in self._meta],
         }
 
         tmp = tmp_sibling(self.dir / name)
@@ -716,4 +781,15 @@ class DurableFliX:
                 path.unlink(missing_ok=True)
 
     def close(self) -> None:
-        self._wal.close()
+        """Flush and close the WAL.  Idempotent, and safe on a poisoned
+        instance: teardown of a diverged index must not raise on top of
+        the failure that poisoned it — the durable history on disk is
+        already self-consistent, and reopening resynchronizes."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._wal.close()
+        except OSError:
+            if self._poisoned is None:
+                raise

@@ -40,6 +40,7 @@ _REC_HEADER = struct.Struct("<IQII")  # magic, seq, payload_len, crc32(payload)
 REC_HEADER_SIZE = _REC_HEADER.size
 
 _OPS_HEADER = struct.Struct("<II")  # n_ops, max_results
+_META_LEN = struct.Struct("<I")  # optional trailing metadata blob length
 _LE32 = np.dtype("<i4")
 
 _SEG_PREFIX = "wal_"
@@ -64,34 +65,54 @@ def write_all(fd: int, data) -> None:
         view = view[os.write(fd, view) :]
 
 
-def encode_ops(tag, key, val, max_results: int) -> bytes:
-    """Frame one sorted batch (host arrays) as a WAL record payload."""
+def encode_ops(tag, key, val, max_results: int, meta: bytes = b"") -> bytes:
+    """Frame one sorted batch (host arrays) as a WAL record payload.
+
+    ``meta`` is an opaque caller blob logged WITH the batch — same fsync,
+    same crc — so replay hands it back alongside the ops.  The serving
+    gateway stores the batch's idempotency keys here: a request is durably
+    deduplicable exactly iff its batch is durably replayable (DESIGN.md
+    §13).  A record without the trailing length word (pre-§13 history)
+    decodes with ``meta = b""``.
+    """
     t = np.ascontiguousarray(np.asarray(tag, _LE32))
     k = np.ascontiguousarray(np.asarray(key, _LE32))
     v = np.ascontiguousarray(np.asarray(val, _LE32))
     if not (t.shape == k.shape == v.shape) or t.ndim != 1:
         raise ValueError("tag/key/val must be aligned 1-D arrays")
-    return (
+    out = (
         _OPS_HEADER.pack(t.size, max_results)
         + t.tobytes()
         + k.tobytes()
         + v.tobytes()
     )
+    if meta:
+        out += _META_LEN.pack(len(meta)) + meta
+    return out
 
 
 def decode_ops(payload: bytes):
-    """Inverse of :func:`encode_ops` → ``(tag, key, val, max_results)``."""
+    """Inverse of :func:`encode_ops` → ``(tag, key, val, max_results, meta)``."""
     if len(payload) < _OPS_HEADER.size:
         raise WALCorruptionError("op record shorter than its header")
     n, max_results = _OPS_HEADER.unpack_from(payload)
     need = _OPS_HEADER.size + 3 * 4 * n
-    if len(payload) != need:
+    if len(payload) == need:
+        meta = b""
+    elif len(payload) >= need + _META_LEN.size:
+        (mlen,) = _META_LEN.unpack_from(payload, need)
+        if len(payload) != need + _META_LEN.size + mlen:
+            raise WALCorruptionError(
+                f"op record metadata length {len(payload) - need} != {mlen}"
+            )
+        meta = payload[need + _META_LEN.size :]
+    else:
         raise WALCorruptionError(f"op record length {len(payload)} != {need}")
     off = _OPS_HEADER.size
     tag = np.frombuffer(payload, _LE32, n, off).copy()
     key = np.frombuffer(payload, _LE32, n, off + 4 * n).copy()
     val = np.frombuffer(payload, _LE32, n, off + 8 * n).copy()
-    return tag, key, val, int(max_results)
+    return tag, key, val, int(max_results), meta
 
 
 def segment_files(directory) -> list[tuple[int, Path]]:

@@ -698,18 +698,45 @@ def shard_apply_ops_safe(
     (and is also why this driver never donates).  ``has_updates`` /
     ``has_ranges`` let drivers that already know the batch composition
     host-side skip the device syncs (``serve/kv_index.py`` does).
+
+    Under ``routing="a2a"`` with an explicit ``capacity``, per-pair
+    overflow (``stats["a2a_overflow"] > 0``) is ALSO retried here — the
+    documented re-route-with-larger-capacity replay, safe for the same
+    no-input-mutation reason — doubling the capacity each round up to the
+    chunk size, which can never overflow.
+
+    The returned ``stats`` surfaces the whole driver run (host ints, so
+    the gateway and bench artifact can report them without device syncs):
+
+    * ``restructure_retries``   — bucket-overflow replays on a regrown index;
+    * ``a2a_retries``           — capacity re-route replays;
+    * ``a2a_overflow_dropped``  — total rows dropped across the retried
+      attempts (the final attempt's own ``a2a_overflow`` stays 0 on
+      success — this counter is how the retries remain visible).
     """
-    new_idx, results, stats = shard_apply_ops(
-        idx,
-        ops,
-        mesh,
-        routing=routing,
-        impl=impl,
-        max_results=max_results,
-        capacity=capacity,
-        has_updates=has_updates,
-        has_ranges=has_ranges,
-    )
+    a2a_retries = 0
+    a2a_dropped = 0
+    while True:
+        new_idx, results, stats = shard_apply_ops(
+            idx,
+            ops,
+            mesh,
+            routing=routing,
+            impl=impl,
+            max_results=max_results,
+            capacity=capacity,
+            has_updates=has_updates,
+            has_ranges=has_ranges,
+        )
+        if routing != "a2a" or capacity is None:
+            break
+        chunk = ops.size // int(mesh.shape[idx.axis])
+        overflow = int(stats["a2a_overflow"])
+        if overflow == 0 or capacity >= chunk:
+            break
+        a2a_retries += 1
+        a2a_dropped += overflow
+        capacity = min(chunk, capacity * 2)
     overflowed = bool(new_idx.state.needs_restructure) and not bool(
         idx.state.needs_restructure
     )
@@ -728,4 +755,8 @@ def shard_apply_ops_safe(
             has_ranges=has_ranges,
         )
         assert not bool(new_idx.state.needs_restructure), "post-restructure overflow"
+    stats = dict(stats)
+    stats["restructure_retries"] = int(overflowed)
+    stats["a2a_retries"] = a2a_retries
+    stats["a2a_overflow_dropped"] = a2a_dropped
     return new_idx, results, stats

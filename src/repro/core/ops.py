@@ -383,9 +383,15 @@ def apply_ops_safe(
     checker (``core.invariants.check_range_results``: segments sorted,
     in-bounds, duplicate-free, consecutively packed) on the final results —
     a host-side debugging/testing aid, off on the hot path.
+
+    The returned ``stats`` gains ``restructure_retries`` (host int): how
+    many times the batch was replayed on a regrown state.  It reflects the
+    whole driver run, not just the final attempt — callers that account
+    for retry cost (the serving gateway does) read it after the fact.
     """
     from repro.core.restructure import restructure_grow
 
+    restructure_retries = 0
     new_state, results, stats = apply_ops(
         state, ops, impl=impl, max_results=max_results, has_updates=has_updates
     )
@@ -400,6 +406,9 @@ def apply_ops_safe(
             has_updates=has_updates,
         )
         assert not bool(new_state.needs_restructure), "post-restructure overflow"
+        restructure_retries = 1
+    stats = dict(stats)
+    stats["restructure_retries"] = restructure_retries
     if validate_ranges:
         from repro.core.invariants import check_range_results
 

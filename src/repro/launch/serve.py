@@ -66,6 +66,14 @@ def main() -> None:
         help="with --wal-dir, snapshot the index every N update steps "
         "(bounds replay-on-restart to at most N batches)",
     )
+    ap.add_argument(
+        "--gateway",
+        action="store_true",
+        help="route index traffic through the multi-tenant batching "
+        "gateway (DESIGN.md §13): each sequence submits per-step "
+        "micro-requests with idempotency keys; the gateway coalesces "
+        "them into the same mixed engine batches, exactly once",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -87,6 +95,12 @@ def main() -> None:
             f"(seq {kv_index.durable_seq}, {kv_index.live_pages()} pages)"
         )
 
+    gateway = None
+    if args.gateway:
+        from repro.serve.gateway import Gateway, Request
+
+        gateway = Gateway(kv_index, default_rate=1e6, default_burst=1e6)
+
     step = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
     token = jax.random.randint(rng, (args.batch,), 0, cfg.vocab_size)
     t0 = time.time()
@@ -94,18 +108,48 @@ def main() -> None:
         logits, cache = step(params, cache, token)
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if i % PAGE_TOKENS == 0:  # new KV page per sequence
-            # one mixed engine step: register the new pages AND resolve each
-            # sequence's head page in the same sorted batch (core.apply_ops)
+            page = i // PAGE_TOKENS
             seqs = np.arange(args.batch)
-            slots, _, _ = kv_index.step(
-                allocs=(
-                    seqs,
-                    np.full(args.batch, i // PAGE_TOKENS),
-                    seqs * 1000 + i // PAGE_TOKENS,
-                ),
-                lookups=(seqs, np.zeros(args.batch, int)),
-            )
-            assert (np.asarray(slots) == seqs * 1000).all()
+            if gateway is not None:
+                # each sequence is its own tenant submitting micro-requests;
+                # the gateway coalesces them into ONE mixed engine batch —
+                # same sorted-batch execution, now with idempotency keys
+                lookups = []
+                for b in range(args.batch):
+                    gateway.submit(
+                        Request(
+                            f"seq{b}",
+                            f"alloc:{b}:{page}",
+                            "alloc",
+                            seqs=(b,),
+                            pages=(page,),
+                            slots=(b * 1000 + page,),
+                        ),
+                        now=float(i),
+                    )
+                    lookups.append(
+                        gateway.submit(
+                            Request(
+                                f"seq{b}",
+                                f"lookup:{b}:{i}",
+                                "lookup",
+                                seqs=(b,),
+                                pages=(0,),
+                            ),
+                            now=float(i),
+                        )
+                    )
+                gateway.pump(now=float(i))
+                got = np.array([int(np.asarray(t.result())[0]) for t in lookups])
+                assert (got == seqs * 1000).all()
+            else:
+                # one mixed engine step: register the new pages AND resolve
+                # each sequence's head page in the same sorted batch
+                slots, _, _ = kv_index.step(
+                    allocs=(seqs, np.full(args.batch, page), seqs * 1000 + page),
+                    lookups=(seqs, np.zeros(args.batch, int)),
+                )
+                assert (np.asarray(slots) == seqs * 1000).all()
     jax.block_until_ready(token)
     dt = time.time() - t0
     where = (
@@ -127,9 +171,24 @@ def main() -> None:
     assert np.asarray(pages)[:n_pages].tolist() == list(range(n_pages))
     assert np.asarray(slots)[:n_pages].tolist() == list(range(n_pages))
     print(f"page enumeration in order ✓ ({n_pages} pages for seq 0)")
+    if gateway is not None:
+        # retrying a committed key resolves from the dedup window, no re-apply
+        dup = gateway.submit(
+            Request("seq0", "alloc:0:0", "alloc", seqs=(0,), pages=(0,), slots=(0,)),
+            now=float(args.steps),
+        )
+        assert dup.ok and dup.duplicate
+        m = gateway.metrics
+        print(
+            f"gateway exactly-once ✓ ({m['committed_requests']} requests in "
+            f"{m['batches']} batches, {m['duplicates']} duplicates deduped)"
+        )
     if args.wal_dir:
         kv_index.snapshot()
-        kv_index.close()
+        if gateway is not None:
+            gateway.close(now=float(args.steps))
+        else:
+            kv_index.close()
         print(f"index durable at seq {kv_index.durable_seq} in {args.wal_dir}")
 
 

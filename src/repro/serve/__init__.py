@@ -1,3 +1,18 @@
-"""Serving layer: decode loop + FliX-backed KV request index."""
+"""Serving layer: decode loop + FliX-backed KV request index + the
+multi-tenant exactly-once batching gateway (DESIGN.md §13)."""
 
+from repro.serve.gateway import (
+    DEADLINE_EXCEEDED,
+    ENGINE_FAILURE,
+    INVALID,
+    QUEUE_FULL,
+    RATE_LIMITED,
+    UNAVAILABLE,
+    UNKNOWN_COMMIT,
+    Gateway,
+    GatewayError,
+    PumpReport,
+    Request,
+    Ticket,
+)
 from repro.serve.kv_index import KVPageIndex

@@ -87,6 +87,7 @@ class KVPageIndex:
         durability_dir=None,
         snapshot_every: int = 64,
         wal_fsync: bool = True,
+        crash_hook=None,
     ):
         # seed with one sentinel key (outside the (seq,page) space) so the
         # structure is never empty
@@ -95,6 +96,7 @@ class KVPageIndex:
         self.impl = impl
         self.routing = routing
         self._durable = None
+        self._closed = False
         seed_keys = jnp.array([MAX_VALID], jnp.int32)
         seed_vals = jnp.array([0], jnp.int32)
         if shards:
@@ -141,6 +143,7 @@ class KVPageIndex:
                     engine=engine,
                     snapshot_every=snapshot_every,
                     fsync=wal_fsync,
+                    crash_hook=crash_hook,
                 )
             else:
                 handle = self.sharded if self.mesh is not None else self.state
@@ -150,6 +153,7 @@ class KVPageIndex:
                     engine=engine,
                     snapshot_every=snapshot_every,
                     fsync=wal_fsync,
+                    crash_hook=crash_hook,
                 )
             self._commit(self._durable.handle)
 
@@ -163,6 +167,7 @@ class KVPageIndex:
         ranges=None,
         max_pages: int = 256,
         range_budget: int = 256,
+        meta=None,
     ):
         """Submit one engine step's mixed work as a single sorted batch.
 
@@ -174,6 +179,11 @@ class KVPageIndex:
                         post-update state under the batch's static
                         ``range_budget`` (see ``apply_ops``' truncation
                         contract).
+
+        ``meta`` (JSON-serializable, e.g. the gateway's idempotency keys)
+        is logged inside the update batch's WAL record when durability is
+        on and ignored otherwise — pure-read steps never log, so meta on a
+        read-only step is dropped.
 
         ``allocs`` and ``free_seqs`` must not share a sequence id: that
         would put the same key in the batch as both INSERT and DELETE,
@@ -283,6 +293,7 @@ class KVPageIndex:
                 max_results=range_budget,
                 has_updates=True,
                 has_ranges=has_ranges,
+                meta=meta,
             )
             self._commit(new)
         else:
@@ -296,6 +307,7 @@ class KVPageIndex:
                 max_results=range_budget,
                 has_updates=True,
                 has_ranges=has_ranges,
+                meta=meta,
             )
             self._commit(new)
         values = unsort(results["value"], perm[: key.shape[0]])
@@ -310,7 +322,9 @@ class KVPageIndex:
             }
         return values[n_alloc : n_alloc + n_lookup], range_out, stats
 
-    def _apply(self, ops, *, safe=False, donate=False, has_ranges=False, **kw):
+    def _apply(
+        self, ops, *, safe=False, donate=False, has_ranges=False, meta=None, **kw
+    ):
         """Dispatch one engine batch to the local or sharded executor.
 
         Same step policy either way (one copy of it, in :meth:`step`); the
@@ -328,7 +342,9 @@ class KVPageIndex:
             kw.pop("has_updates", None)
             kw.pop("impl", None)
             results, stats = self._durable.apply(
-                ops, max_results=kw.pop("max_results", DEFAULT_MAX_RESULTS)
+                ops,
+                max_results=kw.pop("max_results", DEFAULT_MAX_RESULTS),
+                meta=meta,
             )
             return self._durable.handle, results, stats
         if self.mesh is not None:
@@ -400,19 +416,55 @@ class KVPageIndex:
         state = self.sharded.state if self.mesh is not None else self.state
         return int(state.live_keys()) - 1  # minus the seed key
 
-    # ---- durability ----------------------------------------------------
+    # ---- durability / health -------------------------------------------
     @property
     def durable_seq(self) -> int | None:
         """Last durably committed batch seq (None with durability off)."""
         return self._durable.seq if self._durable is not None else None
 
+    @property
+    def healthy(self) -> bool:
+        """True while the UPDATE path is trustworthy.
+
+        Goes False when the durable layer is poisoned (live and durable
+        state diverged after a failed WAL rollback) or the index is
+        closed.  Reads against the live state remain valid either way —
+        the serving gateway uses exactly this split for degraded
+        read-only routing (DESIGN.md §13).
+        """
+        if self._closed:
+            return False
+        return self._durable is None or self._durable.healthy
+
+    def dedup_seed(self) -> list[tuple[int, object]]:
+        """The durable ``(seq, meta)`` trail of recent update commits
+        (empty with durability off) — what the gateway reseeds its
+        idempotency dedup window from after crash recovery."""
+        return self._durable.meta_trail() if self._durable is not None else []
+
     def snapshot(self):
-        """Force a snapshot now (durability on); returns its directory."""
+        """Force a snapshot now (durability on); returns its directory.
+
+        Idempotent — a snapshot at the current seq already on disk is
+        revalidated, not rewritten — and safe on an unhealthy instance:
+        a poisoned durable layer has nothing trustworthy to persist
+        beyond the WAL it already holds, so this returns None instead of
+        raising from a teardown path (reopening resynchronizes).
+        """
         if self._durable is None:
             raise RuntimeError("durability is off (no durability_dir)")
+        if not self._durable.healthy:
+            return None
         return self._durable.snapshot()
 
     def close(self):
-        """Flush and close the WAL (no-op with durability off)."""
+        """Flush and close the WAL (no-op with durability off).
+
+        Idempotent and safe on a poisoned durable layer: teardown never
+        raises on top of the failure that poisoned the instance.
+        """
+        if self._closed:
+            return
+        self._closed = True
         if self._durable is not None:
             self._durable.close()

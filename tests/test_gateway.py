@@ -1,0 +1,432 @@
+"""Hostile-traffic proof of the gateway contract (DESIGN.md §13).
+
+THE property: however the traffic misbehaves — duplicate floods, retry
+storms, expired deadlines, overload, a poisoned update path, process
+death between WAL fsync and client ack — the served state is
+**byte-identical** to a single well-behaved client applying each
+committed update exactly once (``tests/traffic_replay.py``'s oracle),
+and everything not served is rejected with a TYPED reason.
+
+Lanes:
+
+* a deterministic **soak** (virtual clock, no sleeps — CI-blocking);
+* targeted duplicate-submission semantics at every point of the request
+  lifecycle: before ack, after ack, after crash recovery;
+* admission control: rate limits, bounded queue depth, deadlines,
+  weighted fairness shares;
+* degraded modes: poisoned durable layer (reads flow, updates typed
+  UNAVAILABLE), engine failure mapping (ENGINE_FAILURE vs UNKNOWN_COMMIT);
+* the crash matrix: in-process ``CrashAt`` at the gateway commit-path
+  hooks × the WAL seam, plus a subprocess SIGKILL run.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import fault_injection as fi
+import traffic_replay as tr
+from repro.checkpoint.serialize import canonical_state_bytes
+from repro.serve.gateway import (
+    DEADLINE_EXCEEDED,
+    ENGINE_FAILURE,
+    INVALID,
+    QUEUE_FULL,
+    RATE_LIMITED,
+    UNAVAILABLE,
+    UNKNOWN_COMMIT,
+    Request,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _alloc(key, seq, pages=(0,), tenant="t0", deadline=None):
+    return Request(
+        tenant,
+        key,
+        "alloc",
+        seqs=(seq,) * len(pages),
+        pages=tuple(pages),
+        slots=tuple(seq * 100 + p for p in pages),
+        deadline=deadline,
+    )
+
+
+def _state_bytes(index):
+    return canonical_state_bytes(index.state)
+
+
+# ---------------------------------------------------------------------------
+# the soak: hostile population vs single-client oracle (CI-blocking)
+# ---------------------------------------------------------------------------
+
+
+def test_soak_differential_vs_oracle():
+    idx = tr.make_index()
+    gw = tr.make_gateway(idx)
+    gw.register_tenant("tenant-hot", rate=24, burst=48, weight=3.0)
+    gw.register_tenant("tenant-mid", rate=16, burst=32)
+    res = tr.run_traffic(gw, tr.default_population(0), ticks=20, seed=0)
+    upd = tr.assert_exactly_once(res.requests, res.commit_log)
+    assert len(upd) > 50  # the soak actually exercised the update path
+    assert tr.oracle_state_bytes(res.requests, upd) == _state_bytes(idx)
+    m = gw.metrics
+    # the population's misbehavior was really seen and really typed
+    assert m["duplicates"] > 0  # dup-flood client
+    assert m["rejected"].get(RATE_LIMITED, 0) > 0  # hot client over budget
+    assert m["rejected"].get(DEADLINE_EXCEEDED, 0) > 0  # straggler
+    assert m["engine_failures"] == 0
+    # admission-control invariant held throughout (bounded queue)
+    assert gw.queue_depth <= gw.max_queue_ops
+    # tiny geometry under sustained allocs: the safe path regrew at least
+    # once and the retry count SURVIVED into gateway metrics (satellite:
+    # restructure_retries through kv_index.step stats)
+    assert m["restructure_retries"] >= 1
+
+
+def test_soak_read_results_are_request_scoped():
+    """Each client's ticket resolves with ITS slice: lookups get aligned
+    slot arrays, pages get per-seq dicts — spot-checked against direct
+    index queries after quiescence."""
+    idx = tr.make_index()
+    gw = tr.make_gateway(idx)
+    gw.submit(_alloc("a", seq=5, pages=(0, 1, 2)), now=0.0)
+    gw.pump(now=0.0)
+    t_lu = gw.submit(
+        Request("t0", "lu", "lookup", seqs=(5, 5, 9), pages=(1, 2, 0)), now=1.0
+    )
+    t_pg = gw.submit(Request("t1", "pg", "pages", seqs=(5,)), now=1.0)
+    gw.pump(now=1.0)
+    assert list(np.asarray(t_lu.result())) == [501, 502, -1]
+    (pages,) = t_pg.result()
+    assert pages["count"] == 3
+    assert list(np.asarray(pages["pages"])) == [0, 1, 2]
+    assert list(np.asarray(pages["slots"])) == [500, 501, 502]
+
+
+# ---------------------------------------------------------------------------
+# duplicate-submission semantics through the request lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_before_ack_returns_same_ticket():
+    gw = tr.make_gateway(tr.make_index())
+    t1 = gw.submit(_alloc("k1", 3), now=0.0)
+    t2 = gw.submit(_alloc("k1", 3), now=0.0)
+    assert t2 is t1  # one commit, many holders
+    assert gw.metrics["duplicates"] == 1
+    gw.pump(now=0.0)
+    assert t1.ok and not t1.duplicate
+    assert gw.metrics["committed_requests"] == 1
+
+
+def test_duplicate_after_ack_resolves_without_recommit():
+    idx = tr.make_index()
+    gw = tr.make_gateway(idx)
+    t1 = gw.submit(_alloc("k1", 3), now=0.0)
+    gw.pump(now=0.0)
+    before = _state_bytes(idx)
+    t2 = gw.submit(_alloc("k1", 3), now=1.0)
+    assert t2.ok and t2.duplicate and t2.commit_seq == t1.commit_seq
+    assert gw.pump(now=1.0).n_ops == 0  # nothing re-enqueued
+    assert _state_bytes(idx) == before
+    assert gw.metrics["committed_requests"] == 1
+
+
+def test_duplicate_across_crash_recovery(tmp_path):
+    """The key of a batch committed right before the crash — acked or not
+    — must resolve as a duplicate on the REOPENED gateway: the dedup
+    window rides inside the WAL records (same fsync as the ops)."""
+    d = tmp_path / "wal"
+    idx = tr.make_index(durability_dir=d)
+    gw = tr.make_gateway(idx)
+    gw.submit(_alloc("k1", 3, pages=(0, 1)), now=0.0)
+    gw.pump(now=0.0)
+    before = _state_bytes(idx)
+    # no clean close: simulate process death after the ack
+    idx2 = tr.make_index(durability_dir=d)
+    gw2 = tr.make_gateway(idx2)
+    t = gw2.submit(_alloc("k1", 3, pages=(0, 1)), now=0.0)
+    assert t.ok and t.duplicate
+    assert gw2.pump(now=0.0).n_ops == 0
+    assert _state_bytes(idx2) == before
+    # a genuinely new key still applies
+    gw2.submit(_alloc("k2", 4), now=1.0)
+    assert gw2.pump(now=1.0).committed_keys == ["k2"]
+    gw2.close(now=2.0)
+
+
+def test_dedup_window_is_bounded():
+    gw = tr.make_gateway(tr.make_index(), dedup_window=4)
+    for i in range(8):
+        gw.submit(_alloc(f"k{i}", i), now=float(i))
+        gw.pump(now=float(i))
+    # only the last 4 keys are remembered; an ancient retry re-applies
+    # (documented: clients must not retry past the window)
+    assert len(gw._committed) == 4
+    assert not gw.submit(_alloc("k0", 0), now=9.0).done  # re-admitted
+    assert gw.submit(_alloc("k7", 7), now=9.0).duplicate
+
+
+# ---------------------------------------------------------------------------
+# admission control: deadlines, rate limits, shedding, fairness
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_rejected_at_admission_and_expired_at_formation():
+    gw = tr.make_gateway(tr.make_index())
+    t1 = gw.submit(_alloc("k1", 1, deadline=5.0), now=5.0)
+    assert t1.error.code == DEADLINE_EXCEEDED and not t1.error.retryable
+    t2 = gw.submit(_alloc("k2", 2, deadline=3.0), now=0.0)  # queued
+    report = gw.pump(now=4.0)  # pumped only after the deadline passed
+    assert t2.error.code == DEADLINE_EXCEEDED
+    assert report.expired == 1 and report.committed_keys == []
+    assert gw.metrics["expired"] == 1
+    assert gw.queue_depth == 0  # expired work released its queue budget
+
+
+def test_rate_limit_typed_with_retry_after_then_refills():
+    gw = tr.make_gateway(tr.make_index())
+    gw.register_tenant("t0", rate=1.0, burst=2.0, now=0.0)
+    assert not gw.submit(_alloc("a", 1), now=0.0).done
+    assert not gw.submit(_alloc("b", 2), now=0.0).done
+    t3 = gw.submit(_alloc("c", 3), now=0.0)  # bucket empty
+    assert t3.error.code == RATE_LIMITED and t3.error.retryable
+    assert t3.error.retry_after == pytest.approx(1.0)
+    # the client obeys the hint: same key, admitted after the refill
+    assert not gw.submit(_alloc("c", 3), now=1.0).done
+
+
+def test_queue_full_sheds_with_bounded_depth_and_burns_no_tokens():
+    gw = tr.make_gateway(tr.make_index(), max_batch_ops=4, max_queue_ops=8)
+    for i in range(8):
+        assert not gw.submit(_alloc(f"k{i}", i, tenant=f"t{i}"), now=0.0).done
+    t = gw.submit(_alloc("k8", 8, tenant="t8"), now=0.0)
+    assert t.error.code == QUEUE_FULL and t.error.retryable
+    assert t.error.retry_after >= 1.0
+    assert gw.queue_depth == 8 <= gw.max_queue_ops
+    # the shed did NOT debit t8's bucket: admitted as soon as space exists
+    gw.pump(now=0.0)
+    assert not gw.submit(_alloc("k8", 8, tenant="t8"), now=0.0).done
+
+
+def test_oversized_request_is_invalid_not_queued():
+    gw = tr.make_gateway(tr.make_index(), max_batch_ops=4, max_pages=8)
+    t = gw.submit(Request("t0", "f", "free", seqs=(1,)), now=0.0)  # cost 8
+    assert t.error.code == INVALID and not t.error.retryable
+
+
+def test_weighted_fairness_shares_and_no_starvation():
+    """Two saturated tenants at weights 3:1 split a capacity-bound batch
+    ~3:1 — and the light tenant is never starved."""
+    gw = tr.make_gateway(tr.make_index(), max_batch_ops=8, max_queue_ops=2048)
+    gw.register_tenant("heavy", rate=1e9, burst=1e9, weight=3.0, now=0.0)
+    gw.register_tenant("light", rate=1e9, burst=1e9, weight=1.0, now=0.0)
+    for i in range(40):
+        gw.submit(
+            Request("heavy", f"h{i}", "lookup", seqs=(i,), pages=(0,)), now=0.0
+        )
+        gw.submit(
+            Request("light", f"l{i}", "lookup", seqs=(i,), pages=(0,)), now=0.0
+        )
+    report = gw.pump(now=0.0)
+    assert len(report.committed_keys) == 8
+    heavy = sum(k.startswith("h") for k in report.committed_keys)
+    assert heavy == 6  # 3:1 split of 8 slots, exactly (stride is exact)
+    for _ in range(3):
+        report = gw.pump(now=0.0)
+        assert any(k.startswith("l") for k in report.committed_keys)
+
+
+# ---------------------------------------------------------------------------
+# degraded modes and typed failure mapping
+# ---------------------------------------------------------------------------
+
+
+def _poison(idx):
+    """Drive the real poisoning path: engine failure + failed rollback."""
+
+    def boom(*a, **k):
+        raise RuntimeError("engine OOM")
+
+    def no_rollback(offset):
+        raise OSError("disk gone")
+
+    idx._durable.engine.apply = boom
+    idx._durable._wal.truncate_to = no_rollback
+
+
+def test_poisoned_update_path_degrades_to_read_only(tmp_path):
+    idx = tr.make_index(durability_dir=tmp_path / "wal")
+    gw = tr.make_gateway(idx)
+    gw.submit(_alloc("a", 5, pages=(0, 1)), now=0.0)
+    gw.pump(now=0.0)
+    _poison(idx)
+    t = gw.submit(_alloc("b", 6), now=1.0)
+    rep = gw.pump(now=1.0)
+    # rollback failed mid-commit: the batch MAY be durable → UNKNOWN_COMMIT
+    assert t.error.code == UNKNOWN_COMMIT and t.error.retryable
+    assert rep.failed_code == UNKNOWN_COMMIT
+    assert not idx.healthy
+    # updates now shed at ADMISSION, typed and retryable-after-reopen...
+    t2 = gw.submit(_alloc("c", 7), now=2.0)
+    assert t2.error.code == UNAVAILABLE and "degraded" in t2.error.detail
+    # ...while reads keep flowing against the live state (never touch WAL)
+    t3 = gw.submit(
+        Request("t0", "r", "lookup", seqs=(5, 5), pages=(0, 1)), now=2.0
+    )
+    gw.pump(now=2.0)
+    assert list(np.asarray(t3.result())) == [500, 501]
+    # satellite: teardown on a poisoned instance is safe + idempotent
+    assert idx.snapshot() is None
+    gw.close(now=3.0)
+    gw.close(now=3.0)
+    idx.close()
+    assert not idx.healthy
+
+
+def test_engine_failure_without_durability_is_typed_and_recoverable():
+    idx = tr.make_index()
+    gw = tr.make_gateway(idx)
+    real_step = idx.step
+    idx.step = lambda **k: (_ for _ in ()).throw(RuntimeError("engine OOM"))
+    t = gw.submit(_alloc("a", 1), now=0.0)
+    rep = gw.pump(now=0.0)
+    # no durable layer involved: the step never applied → ENGINE_FAILURE
+    assert t.status == "failed" and t.error.code == ENGINE_FAILURE
+    assert rep.failed_code == ENGINE_FAILURE
+    assert gw.metrics["engine_failures"] == 1
+    assert gw.queue_depth == 0  # failed batch released its queue budget
+    idx.step = real_step  # transient failure: the SAME key retries fine
+    gw.submit(_alloc("a", 1), now=1.0)
+    assert gw.pump(now=1.0).committed_keys == ["a"]
+
+
+def test_close_rejects_queued_and_is_idempotent(tmp_path):
+    idx = tr.make_index(durability_dir=tmp_path / "wal")
+    gw = tr.make_gateway(idx)
+    t = gw.submit(_alloc("a", 1), now=0.0)
+    gw.close(now=1.0)
+    assert t.error.code == UNAVAILABLE and t.error.retryable
+    gw.close(now=1.0)  # idempotent, including index.close underneath
+    t2 = gw.submit(_alloc("b", 2), now=2.0)
+    assert t2.error.code == UNAVAILABLE and "closed" in t2.error.detail
+
+
+# ---------------------------------------------------------------------------
+# the crash matrix: CrashAt across the gateway commit path × the WAL seam
+# ---------------------------------------------------------------------------
+
+CRASH_POINTS = [(e, 2) for e in fi.GATEWAY_EVENTS] + [
+    ("wal.append.partial", 3),
+    ("wal.append.durable", 3),
+    ("apply.done", 4),
+]
+
+
+def _crash_traffic(d, event, count, *, seed=1, ticks=10):
+    """Run the population against a durable gateway until the hook fires;
+    the CrashError propagates like process death (BaseException)."""
+    hook = fi.CrashAt(event, count)
+    idx = tr.make_index(durability_dir=d, crash_hook=hook)
+    gw = tr.make_gateway(idx, crash_hook=hook)
+    try:
+        tr.run_traffic(gw, tr.default_population(seed), ticks=ticks, seed=seed)
+        return False
+    except fi.CrashError:
+        return True
+
+
+def _recover_and_check(d, *, seed=1, ticks=10):
+    """Reopen, resubmit EVERYTHING (clients retry all), prove exactly-once
+    + byte-identical state vs the oracle over the full commit order."""
+    requests = tr.regen_all_requests(tr.default_population(seed), ticks, seed)
+    idx = tr.make_index(durability_dir=d)
+    gw = tr.make_gateway(idx)
+    surviving = tr.surviving_update_commits(idx, requests)
+    res = tr.run_traffic(gw, tr.default_population(seed), ticks=ticks, seed=seed)
+    full_log = surviving + tr.committed_update_keys(requests, res.commit_log)
+    assert len(set(full_log)) == len(full_log), "a key committed twice"
+    assert tr.oracle_state_bytes(requests, full_log) == _state_bytes(idx)
+    gw.close(now=float(res.end_tick))
+    return len(surviving)
+
+
+@pytest.mark.parametrize("event,count", CRASH_POINTS)
+def test_crash_matrix_gateway_commit_path(tmp_path, event, count):
+    d = tmp_path / "wal"
+    crashed = _crash_traffic(d, event, count)
+    assert crashed, f"hook {event}#{count} never fired"
+    _recover_and_check(d)
+
+
+def test_crash_between_commit_and_ack_resolves_as_duplicate(tmp_path):
+    """The nastiest window: WAL fsynced (durable) but the client never saw
+    the ack.  Its retry on the reopened gateway MUST dedup, not re-apply."""
+    d = tmp_path / "wal"
+    hook = fi.CrashAt("gateway.step.done", 1)
+    idx = tr.make_index(durability_dir=d, crash_hook=hook)
+    gw = tr.make_gateway(idx, crash_hook=hook)
+    t = gw.submit(_alloc("k1", 3, pages=(0, 1)), now=0.0)
+    with pytest.raises(fi.CrashError):
+        gw.pump(now=0.0)
+    assert not t.done  # committed, never acked
+    idx2 = tr.make_index(durability_dir=d)
+    before = _state_bytes(idx2)
+    gw2 = tr.make_gateway(idx2)
+    t2 = gw2.submit(_alloc("k1", 3, pages=(0, 1)), now=0.0)
+    assert t2.ok and t2.duplicate
+    assert _state_bytes(idx2) == before
+    gw2.close(now=1.0)
+
+
+# genuine process death: one WAL-seam point and one post-commit/pre-ack
+# gateway point (the in-process matrix covers the rest cheaply)
+SIGKILL_POINTS = [("wal.append.partial", 6), ("gateway.step.done", 8)]
+
+
+@pytest.mark.parametrize("event,count", SIGKILL_POINTS)
+def test_sigkill_subprocess_gateway(tmp_path, event, count):
+    d = tmp_path / "wal"
+    seed, ticks = 3, 12
+    proc = subprocess.run(
+        [
+            sys.executable,
+            str(REPO / "tests" / "traffic_replay.py"),
+            "--dir",
+            str(d),
+            "--ticks",
+            str(ticks),
+            "--seed",
+            str(seed),
+            "--kill-event",
+            event,
+            "--kill-count",
+            str(count),
+        ],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": f"{REPO}/src"},
+        cwd=str(REPO),
+    )
+    assert proc.returncode == -9, f"child not SIGKILLed:\n{proc.stderr}"
+    requests = tr.regen_all_requests(tr.default_population(seed), ticks, seed)
+    acked = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("COMMIT "):
+            acked.extend(
+                k for k in line.split()[1].split(",") if requests[k].is_update
+            )
+    idx = tr.make_index(durability_dir=d)
+    surviving = tr.surviving_update_commits(idx, requests)
+    idx.close()
+    # every update the child ACKED before dying survived recovery
+    missing = [k for k in acked if k not in surviving]
+    assert not missing, f"acked updates lost: {missing[:5]}"
+    assert _recover_and_check(d, seed=seed, ticks=ticks) == len(surviving)

@@ -119,6 +119,20 @@ def test_apply_ops_safe_replay_full_mix(impl):
     assert (gone == int(NOT_FOUND)).all()
     assert int(stats["inserted"]) == len(flood)
     assert int(stats["deleted"]) == len(dels)
+    # the retry is VISIBLE: the replay must not reset the surfaced counter
+    # (the gateway metrics and bench rows report it — DESIGN.md §13)
+    assert int(stats["restructure_retries"]) == 1
+
+
+def test_apply_ops_safe_counter_zero_without_overflow():
+    """The surfaced retry counter exists (as 0) on the no-retry path too,
+    so downstream accumulation never KeyErrors."""
+    st, keys = _tiny_state()
+    ops, _ = core.make_ops(
+        np.full(4, core.OP_POINT, np.int32), keys[:4].astype(np.int32)
+    )
+    _, _, stats = core.apply_ops_safe(st, ops)
+    assert int(stats["restructure_retries"]) == 0
 
 
 def test_apply_ops_safe_replay_reference_fused_identical():

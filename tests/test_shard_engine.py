@@ -184,6 +184,27 @@ def test_a2a_overflow_reported_and_reroute_succeeds(rng):
         assert (np.asarray(res[k]) == np.asarray(want[k])).all(), k
 
 
+def test_safe_driver_surfaces_a2a_retry_stats(rng):
+    """The capacity re-route replay is visible in the safe driver's stats:
+    ``a2a_retries`` counts replays, ``a2a_overflow_dropped`` the rows the
+    failed attempts shed, and the FINAL attempt's own overflow is 0 —
+    regression for the counters surviving the retry path (the gateway and
+    bench artifact report them; a retry that silently resets them would
+    hide every capacity misconfiguration)."""
+    keys, st, idx, mesh = _build_pair(rng)
+    ops = _skewed_batch(rng, idx)
+    new_idx, res, stats = dist.shard_apply_ops_safe(
+        idx, ops, mesh, routing="a2a", capacity=64
+    )
+    assert int(stats["a2a_retries"]) >= 1
+    assert int(stats["a2a_overflow_dropped"]) >= 1024 - 4 * 64
+    assert int(stats["a2a_overflow"]) == 0  # final attempt carried everything
+    assert int(stats["restructure_retries"]) == 0  # read batch: no regrow
+    _, want, _ = dist.shard_apply_ops(idx, ops, mesh, routing="replicated")
+    for k in ("value", "succ_key"):
+        assert (np.asarray(res[k]) == np.asarray(want[k])).all(), k
+
+
 def test_a2a_matches_replicated_on_skew(rng):
     """Replicated vs a2a are byte-identical when all ops hit one shard."""
     keys, st, idx, mesh = _build_pair(rng)
