@@ -38,6 +38,7 @@ import sys
 SPEEDUP_FIELDS = (
     "apply_ops_fused_speedup",
     "range_fused_speedup",
+    "ttl_fused_speedup",
     "sharded_speedup",
     "durability_delta_speedup",
     "gateway_goodput_ratio",

@@ -4,14 +4,14 @@
   python -m benchmarks.run             # everything
   python -m benchmarks.run fig9 fig13  # substring filter
 
-Besides the CSV rows on stdout, every run writes ``BENCH_PR7.json`` — the
+Besides the CSV rows on stdout, every run writes ``BENCH_PR8.json`` — the
 repo's machine-readable perf-trajectory artifact (schema ``flix-bench-v1``,
 DESIGN.md §7): per-suite ``name → us_per_call`` maps plus the
 fused-vs-reference ``apply_ops`` speedups extracted from the
 ``mixed_batch`` suite, the RANGE-op speedups from ``range_mix``, the
-sharded-vs-single speedups from ``sharded_mix``, the delta-vs-full
-snapshot write-volume ratios from ``durability``, and the
-goodput-under-overload ratios from ``gateway``.  (``BENCH_PR*.json`` in
+TTL-mix speedups from ``ttl_mix``, the sharded-vs-single speedups from
+``sharded_mix``, the delta-vs-full snapshot write-volume ratios from
+``durability``, and the goodput-under-overload ratios from ``gateway``.  (``BENCH_PR*.json`` in
 the repo root are committed per-PR snapshots — ``benchmarks.compare``
 diffs against them; don't overwrite them outside a snapshot refresh.)
 """
@@ -40,6 +40,7 @@ from benchmarks import (
     sharded_mix,
     sort_cost,
     successor,
+    ttl_mix,
     unsorted_queries,
 )
 
@@ -56,12 +57,13 @@ SUITES = {
     "mixed_batch_engine": mixed_batch,
     "range_mix_engine": range_mix,
     "sharded_mix_engine": sharded_mix,
+    "ttl_mix_engine": ttl_mix,
     "table4_restructure": restructure_recovery,
     "durability_engine": durability,
     "gateway_engine": gateway,
 }
 
-BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR7.json")
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR8.json")
 
 
 def _speedups(
@@ -121,6 +123,10 @@ def write_bench_json(
         name: row["us_per_call"]
         for name, row in suites.get("gateway_engine", {}).items()
     }
+    ttl = {
+        name: row["us_per_call"]
+        for name, row in suites.get("ttl_mix_engine", {}).items()
+    }
     payload = {
         "schema": "flix-bench-v1",
         "scale": common.SCALE,
@@ -135,6 +141,9 @@ def write_bench_json(
         ),
         "range_fused_speedup": _speedups(
             ranges, "range_mix_fused_", "range_mix_ref_"
+        ),
+        "ttl_fused_speedup": _speedups(
+            ttl, "ttl_mix_fused_", "ttl_mix_ref_"
         ),
         "sharded_speedup": _sharded_speedups(sharded),
         # payload-volume ratio (full bytes / delta bytes per churn level):

@@ -47,7 +47,6 @@ import numpy as np
 from repro.checkpoint import wal as wal_mod
 from repro.checkpoint.manager import tmp_sibling
 from repro.checkpoint.serialize import (
-    SnapshotFormatError,
     bucket_segments,
     pack_delta,
     pairs_to_bytes,
@@ -57,14 +56,17 @@ from repro.checkpoint.serialize import (
     state_from_pairs,
 )
 from repro.checkpoint.wal import WriteAheadLog, decode_ops, encode_ops
+from repro.core.expiry import NO_EXPIRY
 from repro.core.ops import (
     DEFAULT_MAX_RESULTS,
     OP_DELETE,
+    OP_EXPIRE,
     OP_INSERT,
     OpBatch,
     apply_ops,
 )
 from repro.core.restructure import restructure_grow
+from repro.core.state import EMPTY
 
 SNAP_FORMAT = "flix-durable-v1"
 _SNAP_PREFIX = "snap_"
@@ -101,11 +103,12 @@ class LocalEngine:
         self.nodes_per_bucket = nodes_per_bucket
         self.fill = fill
 
-    def rebuild(self, keys, vals, geometry: dict | None = None):
+    def rebuild(self, keys, vals, exps=None, geometry: dict | None = None):
         g = geometry or {}
         return state_from_pairs(
             keys,
             vals,
+            exps,
             node_size=g.get("node_size", self.node_size),
             nodes_per_bucket=g.get("nodes_per_bucket", self.nodes_per_bucket),
             fill=g.get("fill", self.fill),
@@ -114,19 +117,19 @@ class LocalEngine:
     def flix(self, handle):
         return handle
 
-    def apply(self, handle, ops: OpBatch, *, max_results: int):
+    def apply(self, handle, ops: OpBatch, *, max_results: int, now=None):
         """``apply_ops`` with the restructure-and-retry loop surfaced: the
         durability layer must KNOW when the fence epoch changed, so it
         drives the retry itself instead of calling ``apply_ops_safe``."""
         new, results, stats = apply_ops(
-            handle, ops, impl=self.impl, max_results=max_results
+            handle, ops, impl=self.impl, max_results=max_results, now=now
         )
         restructured = False
         if bool(new.needs_restructure) and not bool(handle.needs_restructure):
-            n_ins = int(jnp.sum(ops.tag == OP_INSERT))
+            n_ins = int(jnp.sum((ops.tag == OP_INSERT) | (ops.tag == OP_EXPIRE)))
             grown = restructure_grow(handle, extra_keys=max(n_ins, 1))
             new, results, stats = apply_ops(
-                grown, ops, impl=self.impl, max_results=max_results
+                grown, ops, impl=self.impl, max_results=max_results, now=now
             )
             assert not bool(new.needs_restructure), "post-restructure overflow"
             restructured = True
@@ -163,10 +166,14 @@ class ShardEngine:
         self.nodes_per_bucket = nodes_per_bucket
         self.fill = fill
 
-    def rebuild(self, keys, vals, geometry: dict | None = None):
+    def rebuild(self, keys, vals, exps=None, geometry: dict | None = None):
         from repro.core.distributed import shard_build
 
         g = geometry or {}
+        if exps is not None:
+            exps = np.asarray(exps, np.int32)
+            if not (exps != int(NO_EXPIRY)).any():
+                exps = None  # all-sentinel column ⇒ TTL-free rebuild
         return shard_build(
             jnp.asarray(np.asarray(keys, np.int32)),
             jnp.asarray(np.asarray(vals, np.int32)),
@@ -174,12 +181,13 @@ class ShardEngine:
             node_size=g.get("node_size", self.node_size),
             nodes_per_bucket=g.get("nodes_per_bucket", self.nodes_per_bucket),
             fill=g.get("fill", self.fill),
+            sorted_exps=None if exps is None else jnp.asarray(exps),
         )
 
     def flix(self, handle):
         return handle.state
 
-    def apply(self, handle, ops: OpBatch, *, max_results: int):
+    def apply(self, handle, ops: OpBatch, *, max_results: int, now=None):
         from repro.core.distributed import shard_apply_ops, shard_restructure
 
         new, results, stats = shard_apply_ops(
@@ -189,12 +197,13 @@ class ShardEngine:
             routing=self.routing,
             impl=self.impl,
             max_results=max_results,
+            now=now,
         )
         restructured = False
         if bool(new.state.needs_restructure) and not bool(
             handle.state.needs_restructure
         ):
-            n_ins = int(jnp.sum(ops.tag == OP_INSERT))
+            n_ins = int(jnp.sum((ops.tag == OP_INSERT) | (ops.tag == OP_EXPIRE)))
             grown = shard_restructure(handle, self.mesh, extra_keys=max(n_ins, 1))
             new, results, stats = shard_apply_ops(
                 grown,
@@ -203,6 +212,7 @@ class ShardEngine:
                 routing=self.routing,
                 impl=self.impl,
                 max_results=max_results,
+                now=now,
             )
             assert not bool(new.state.needs_restructure), "post-restructure overflow"
             restructured = True
@@ -262,7 +272,7 @@ def load_snapshot_chain(directory: Path, seq: int):
     """Reconstruct the canonical pairs at snapshot ``seq``: follow the
     delta chain back to its base full snapshot, then replay the diffs
     forward, verifying every checksum on the way.  Returns
-    ``(keys, vals, manifest)`` for the requested snapshot."""
+    ``(keys, vals, exps, manifest)`` for the requested snapshot."""
     directory = Path(directory)
     chain: list[tuple[Path, dict]] = []
     name = _snap_name(seq)
@@ -281,26 +291,28 @@ def load_snapshot_chain(directory: Path, seq: int):
 
     base_path, base_m = chain[0]
     epoch = base_m["epoch"]
-    keys, vals = parse_canonical(_read_payload(base_path, base_m))
+    keys, vals, exps = parse_canonical(_read_payload(base_path, base_m))
     lens = np.asarray(base_m["seg_lens"], np.int64)
     if int(lens.sum()) != keys.size:
         raise SnapshotCorruptionError(f"{base_path.name}: seg_lens/payload mismatch")
     bounds = np.concatenate([[0], np.cumsum(lens)])
     seg_k = [keys[bounds[b] : bounds[b + 1]] for b in range(len(lens))]
     seg_v = [vals[bounds[b] : bounds[b + 1]] for b in range(len(lens))]
+    seg_e = [exps[bounds[b] : bounds[b + 1]] for b in range(len(lens))]
 
     for path, m in chain[1:]:
         if m["epoch"] != epoch:
             raise SnapshotCorruptionError(
                 f"{path.name}: epoch {m['epoch']} != chain epoch {epoch}"
             )
-        bi, ln, ks, vs = parse_delta(_read_payload(path, m))
+        bi, ln, ks, vs, es = parse_delta(_read_payload(path, m))
         off = 0
         for b, n in zip(bi, ln):
             if not 0 <= b < len(seg_k):
                 raise SnapshotCorruptionError(f"{path.name}: bucket {b} out of range")
             seg_k[b] = ks[off : off + n]
             seg_v[b] = vs[off : off + n]
+            seg_e[b] = es[off : off + n]
             off += int(n)
 
     final_m = chain[-1][1]
@@ -310,10 +322,18 @@ def load_snapshot_chain(directory: Path, seq: int):
         raise SnapshotCorruptionError(f"{_snap_name(seq)}: reconstructed lens differ")
     flat_k = np.concatenate(seg_k) if seg_k else np.zeros(0, np.int32)
     flat_v = np.concatenate(seg_v) if seg_v else np.zeros(0, np.int32)
-    crcs = segment_crcs(got_lens, flat_k.astype("<i4"), flat_v.astype("<i4"))
+    flat_e = np.concatenate(seg_e) if seg_e else np.zeros(0, np.int32)
+    crcs = segment_crcs(
+        got_lens, flat_k.astype("<i4"), flat_v.astype("<i4"), flat_e.astype("<i4")
+    )
     if crcs != list(final_m["bucket_crcs"]):
         raise SnapshotCorruptionError(f"{_snap_name(seq)}: bucket checksum mismatch")
-    return flat_k.astype(np.int32), flat_v.astype(np.int32), final_m
+    return (
+        flat_k.astype(np.int32),
+        flat_v.astype(np.int32),
+        flat_e.astype(np.int32),
+        final_m,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -443,11 +463,11 @@ class DurableFliX:
         snaps = _snapshot_dirs(directory)
         if not snaps:
             raise FileNotFoundError(f"no snapshots under {directory}")
-        keys = vals = manifest = None
+        keys = vals = exps = manifest = None
         errors = []
         for seq, _path in reversed(snaps):
             try:
-                keys, vals, manifest = load_snapshot_chain(directory, seq)
+                keys, vals, exps, manifest = load_snapshot_chain(directory, seq)
                 break
             except SnapshotCorruptionError as e:  # fall back to an older one
                 errors.append(str(e))
@@ -456,7 +476,7 @@ class DurableFliX:
                 f"no loadable snapshot under {directory}: {errors}"
             )
 
-        handle = engine.rebuild(keys, vals, manifest.get("geometry"))
+        handle = engine.rebuild(keys, vals, exps, manifest.get("geometry"))
         self = cls(
             directory,
             engine,
@@ -478,10 +498,13 @@ class DurableFliX:
             directory, after_seq=manifest["seq"], truncate_torn=truncate_torn
         )
         for seq, payload in records:
-            tag, key, val, max_results, meta_bytes = decode_ops(payload)
-            ops = OpBatch.from_host(tag, key, val)
+            tag, key, val, max_results, meta_bytes, exp, wnow = decode_ops(payload)
+            ops = OpBatch.from_host(tag, key, val, exp)
+            # replay at the LOGGED virtual clock — time-deterministic: the
+            # recovered expiry state is what the live engine computed, no
+            # matter when (in wall time) recovery runs
             new, _results, _stats, restructured = engine.apply(
-                self.handle, ops, max_results=max_results
+                self.handle, ops, max_results=max_results, now=wnow
             )
             self.handle = new
             if restructured:
@@ -554,8 +577,14 @@ class DurableFliX:
         *,
         max_results: int = DEFAULT_MAX_RESULTS,
         meta=None,
+        now: int | None = None,
     ):
         """Durably execute one sorted batch; returns ``(results, stats)``.
+
+        ``now`` is the batch's virtual clock (DESIGN.md §14): it is logged
+        in the WAL record alongside any per-op expiry column, so replay
+        re-runs the batch at the identical time and recovers the identical
+        expiry state — durability never consults the wall clock.
 
         ``meta`` (any JSON-serializable object, e.g. the gateway's
         idempotency keys) is logged inside the batch's WAL record and kept
@@ -576,16 +605,33 @@ class DurableFliX:
         reopening from disk is the only consistent continuation.
         """
         self._check_poisoned()
-        tag, key, val = ops.to_host()
+        tag, key, val, exp = ops.to_host()
+        if exp is None and now is not None:
+            # the record form needs an expiry column to carry the clock;
+            # an all-sentinel one is logically "no per-op deadlines"
+            exp = np.full(tag.shape, int(NO_EXPIRY), np.int32)
         seq = self._seq + 1
         meta_bytes = b"" if meta is None else json.dumps(meta).encode()
         wal_pos = self._wal.tell()
-        self._wal.append(seq, encode_ops(tag, key, val, max_results, meta_bytes))
+        self._wal.append(
+            seq, encode_ops(tag, key, val, max_results, meta_bytes, exp=exp, now=now)
+        )
         self._seq = seq
+
+        # buckets holding rows the expire pass is about to reclaim change
+        # WITHOUT appearing among the batch's update keys — mark them dirty
+        # from the pre-apply state so delta snapshots cover the reclamation
+        expired_buckets: np.ndarray | None = None
+        pre = self._flix_state()
+        if now is not None and pre.exps is not None:
+            hit = jnp.any(
+                (pre.exps <= jnp.int32(now)) & (pre.keys != EMPTY), axis=(1, 2)
+            )
+            expired_buckets = np.nonzero(np.asarray(hit))[0]
 
         try:
             new, results, stats, restructured = self.engine.apply(
-                self.handle, ops, max_results=max_results
+                self.handle, ops, max_results=max_results, now=now
             )
         except BaseException:
             self._seq = seq - 1
@@ -601,10 +647,12 @@ class DurableFliX:
         if restructured:
             self._bump_epoch()
         else:
-            upd = (tag == OP_INSERT) | (tag == OP_DELETE)
+            upd = (tag == OP_INSERT) | (tag == OP_DELETE) | (tag == OP_EXPIRE)
             if upd.any():
                 buckets = np.searchsorted(self._mkba_host, key[upd], side="left")
                 self._dirty.update(int(b) for b in np.unique(buckets))
+            if expired_buckets is not None:
+                self._dirty.update(int(b) for b in expired_buckets)
         self._record_meta(seq, meta)
         self._hook("apply.done")
 
@@ -661,18 +709,18 @@ class DurableFliX:
             prev_full_name = self._latest_snap_name()
 
         if full:
-            lens, seg_k, seg_v = bucket_segments(state)
-            payload = pairs_to_bytes(seg_k, seg_v)
+            lens, seg_k, seg_v, seg_e = bucket_segments(state)
+            payload = pairs_to_bytes(seg_k, seg_v, seg_e)
             all_lens = lens
-            all_crcs = segment_crcs(lens, seg_k, seg_v)
+            all_crcs = segment_crcs(lens, seg_k, seg_v, seg_e)
             kind = "full"
         else:
             dirty = sorted(self._dirty)
-            lens, seg_k, seg_v = bucket_segments(state, dirty)
-            payload = pack_delta(dirty, lens, seg_k, seg_v)
+            lens, seg_k, seg_v, seg_e = bucket_segments(state, dirty)
+            payload = pack_delta(dirty, lens, seg_k, seg_v, seg_e)
             all_lens = np.array(self._bucket_lens, np.int64)
             all_crcs = list(self._bucket_crcs)
-            new_crcs = segment_crcs(lens, seg_k, seg_v)
+            new_crcs = segment_crcs(lens, seg_k, seg_v, seg_e)
             for i, b in enumerate(dirty):
                 all_lens[b] = lens[i]
                 all_crcs[b] = new_crcs[i]

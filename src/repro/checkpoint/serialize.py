@@ -35,11 +35,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.build import build_from_sorted, plan_geometry
+from repro.core.expiry import NO_EXPIRY
 from repro.core.state import EMPTY, FliXState
 
 MAGIC = b"FLIXSNP1"
 MAGIC_DELTA = b"FLIXDLT1"
-FORMAT_VERSION = 1
+# v2 (DESIGN.md §14): the payload carries (key, value, expiry) TRIPLES — the
+# expiry column is durable logical state (an all-NO_EXPIRY column for states
+# without TTLs, so TTL-free payloads stay deterministic too).  v1 payloads
+# (pairs) are rejected loudly: no v1 data is retained anywhere.
+FORMAT_VERSION = 2
 _HEADER = struct.Struct("<8sII")  # magic, version, n_pairs (delta: n_buckets)
 HEADER_SIZE = _HEADER.size
 
@@ -53,60 +58,88 @@ class SnapshotFormatError(RuntimeError):
 def bucket_segments(state: FliXState, buckets=None):
     """Canonical per-bucket segments, host-side.
 
-    Returns ``(lens, seg_keys, seg_vals)``: ``lens[i]`` live pairs for the
-    ``i``-th requested bucket, with the segments concatenated in request
-    order in ``seg_keys``/``seg_vals`` (little-endian int32, each segment
-    ascending).  ``buckets=None`` selects every bucket in fence order —
-    the device transfer then is O(index); an explicit dirty list fetches
-    only those rows, so incremental snapshot cost is O(churn).
+    Returns ``(lens, seg_keys, seg_vals, seg_exps)``: ``lens[i]`` live
+    triples for the ``i``-th requested bucket, with the segments
+    concatenated in request order (little-endian int32, each segment
+    ascending by key).  States without an expiry column yield an
+    all-``NO_EXPIRY`` ``seg_exps`` — logically identical, so the canonical
+    bytes do not depend on whether the column is materialized.
+    ``buckets=None`` selects every bucket in fence order — the device
+    transfer then is O(index); an explicit dirty list fetches only those
+    rows, so incremental snapshot cost is O(churn).
     """
-    keys, vals = state.keys, state.vals
+    keys, vals, exps = state.keys, state.vals, state.exps
     if buckets is not None:
         sel = jnp.asarray(np.asarray(buckets, np.int32))
         keys, vals = keys[sel], vals[sel]
+        exps = None if exps is None else exps[sel]
     k = np.asarray(jax.device_get(keys))
     v = np.asarray(jax.device_get(vals))
+    e = (
+        np.full_like(k, int(NO_EXPIRY))
+        if exps is None
+        else np.asarray(jax.device_get(exps))
+    )
     d = k.shape[0]
     k = k.reshape(d, -1)
     v = v.reshape(d, -1)
+    e = e.reshape(d, -1)
     # chain order (I1+I2) is ascending apart from interior EMPTY padding, so
     # one stable per-row sort canonicalizes: EMPTY (int32 max) lands at the
     # row tail and the live prefix is the bucket's sorted segment
     order = np.argsort(k, axis=1, kind="stable")
     ks = np.take_along_axis(k, order, axis=1)
     vs = np.take_along_axis(v, order, axis=1)
+    es = np.take_along_axis(e, order, axis=1)
     mask = ks != EMPTY
     lens = mask.sum(axis=1).astype(np.int32)
     # row-major boolean selection preserves (bucket, ascending-key) order
-    return lens, ks[mask].astype(_LE32), vs[mask].astype(_LE32)
+    return lens, ks[mask].astype(_LE32), vs[mask].astype(_LE32), es[mask].astype(_LE32)
 
 
-def segment_crcs(lens, seg_keys, seg_vals) -> list[int]:
-    """crc32 per bucket segment (keys bytes ++ vals bytes) — the manifest's
-    per-bucket integrity words, updatable at dirty indices only."""
+def segment_crcs(lens, seg_keys, seg_vals, seg_exps) -> list[int]:
+    """crc32 per bucket segment (keys ++ vals ++ exps bytes) — the
+    manifest's per-bucket integrity words, updatable at dirty indices only."""
     out = []
     off = 0
-    kb, vb = np.ascontiguousarray(seg_keys), np.ascontiguousarray(seg_vals)
+    kb = np.ascontiguousarray(seg_keys)
+    vb = np.ascontiguousarray(seg_vals)
+    eb = np.ascontiguousarray(seg_exps)
     for n in np.asarray(lens, np.int64):
-        chunk = kb[off : off + n].tobytes() + vb[off : off + n].tobytes()
+        chunk = (
+            kb[off : off + n].tobytes()
+            + vb[off : off + n].tobytes()
+            + eb[off : off + n].tobytes()
+        )
         out.append(zlib.crc32(chunk))
         off += int(n)
     return out
 
 
-def pairs_to_bytes(seg_keys, seg_vals) -> bytes:
-    """Frame sorted live pairs as the canonical payload."""
+def pairs_to_bytes(seg_keys, seg_vals, seg_exps=None) -> bytes:
+    """Frame sorted live triples as the canonical payload (``seg_exps=None``
+    writes the all-NO_EXPIRY column)."""
     ks = np.ascontiguousarray(np.asarray(seg_keys, _LE32))
     vs = np.ascontiguousarray(np.asarray(seg_vals, _LE32))
-    if ks.shape != vs.shape or ks.ndim != 1:
-        raise SnapshotFormatError("keys/vals must be aligned 1-D arrays")
-    return _HEADER.pack(MAGIC, FORMAT_VERSION, ks.size) + ks.tobytes() + vs.tobytes()
+    es = (
+        np.full_like(ks, int(NO_EXPIRY))
+        if seg_exps is None
+        else np.ascontiguousarray(np.asarray(seg_exps, _LE32))
+    )
+    if ks.shape != vs.shape or ks.shape != es.shape or ks.ndim != 1:
+        raise SnapshotFormatError("keys/vals/exps must be aligned 1-D arrays")
+    return (
+        _HEADER.pack(MAGIC, FORMAT_VERSION, ks.size)
+        + ks.tobytes()
+        + vs.tobytes()
+        + es.tobytes()
+    )
 
 
 def canonical_state_bytes(state: FliXState) -> bytes:
-    """THE deterministic serialization: header + sorted live pairs."""
-    _, seg_keys, seg_vals = bucket_segments(state)
-    return pairs_to_bytes(seg_keys, seg_vals)
+    """THE deterministic serialization: header + sorted live triples."""
+    _, seg_keys, seg_vals, seg_exps = bucket_segments(state)
+    return pairs_to_bytes(seg_keys, seg_vals, seg_exps)
 
 
 def state_digest(state: FliXState) -> str:
@@ -115,8 +148,9 @@ def state_digest(state: FliXState) -> str:
 
 
 def parse_canonical(data: bytes):
-    """Decode a canonical payload back to ``(keys, vals)`` numpy arrays,
-    validating the header and framing (strict: trailing bytes reject)."""
+    """Decode a canonical payload back to ``(keys, vals, exps)`` numpy
+    arrays, validating the header and framing (strict: trailing bytes
+    reject)."""
     if len(data) < HEADER_SIZE:
         raise SnapshotFormatError("payload shorter than header")
     magic, version, n = _HEADER.unpack_from(data)
@@ -124,17 +158,18 @@ def parse_canonical(data: bytes):
         raise SnapshotFormatError(f"bad magic {magic!r}")
     if version != FORMAT_VERSION:
         raise SnapshotFormatError(f"unsupported format version {version}")
-    need = HEADER_SIZE + 2 * 4 * n
+    need = HEADER_SIZE + 3 * 4 * n
     if len(data) != need:
         raise SnapshotFormatError(f"payload length {len(data)} != {need}")
     keys = np.frombuffer(data, dtype=_LE32, count=n, offset=HEADER_SIZE)
     vals = np.frombuffer(data, dtype=_LE32, count=n, offset=HEADER_SIZE + 4 * n)
+    exps = np.frombuffer(data, dtype=_LE32, count=n, offset=HEADER_SIZE + 8 * n)
     if n and not (np.diff(keys.astype(np.int64)) > 0).all():
         raise SnapshotFormatError("canonical keys must be strictly ascending")
-    return keys.copy(), vals.copy()
+    return keys.copy(), vals.copy(), exps.copy()
 
 
-def pack_delta(bucket_idx, lens, seg_keys, seg_vals) -> bytes:
+def pack_delta(bucket_idx, lens, seg_keys, seg_vals, seg_exps=None) -> bytes:
     """Frame a dirty-bucket diff: which buckets changed, their new segment
     lengths, and the replacement segments (concatenated in ``bucket_idx``
     order).  Same header discipline as the full payload."""
@@ -142,8 +177,15 @@ def pack_delta(bucket_idx, lens, seg_keys, seg_vals) -> bytes:
     ln = np.ascontiguousarray(np.asarray(lens, _LE32))
     ks = np.ascontiguousarray(np.asarray(seg_keys, _LE32))
     vs = np.ascontiguousarray(np.asarray(seg_vals, _LE32))
+    es = (
+        np.full_like(ks, int(NO_EXPIRY))
+        if seg_exps is None
+        else np.ascontiguousarray(np.asarray(seg_exps, _LE32))
+    )
     if bi.shape != ln.shape or bi.ndim != 1 or ks.shape != vs.shape:
         raise SnapshotFormatError("malformed delta arrays")
+    if ks.shape != es.shape:
+        raise SnapshotFormatError("malformed delta expiry column")
     if int(ln.sum()) != ks.size:
         raise SnapshotFormatError("delta lens do not cover the segments")
     return (
@@ -152,11 +194,13 @@ def pack_delta(bucket_idx, lens, seg_keys, seg_vals) -> bytes:
         + ln.tobytes()
         + ks.tobytes()
         + vs.tobytes()
+        + es.tobytes()
     )
 
 
 def parse_delta(data: bytes):
-    """Inverse of :func:`pack_delta` → ``(bucket_idx, lens, keys, vals)``."""
+    """Inverse of :func:`pack_delta` → ``(bucket_idx, lens, keys, vals,
+    exps)``."""
     if len(data) < HEADER_SIZE:
         raise SnapshotFormatError("delta payload shorter than header")
     magic, version, d = _HEADER.unpack_from(data)
@@ -169,32 +213,43 @@ def parse_delta(data: bytes):
     bi = np.frombuffer(data, _LE32, d, HEADER_SIZE)
     ln = np.frombuffer(data, _LE32, d, HEADER_SIZE + 4 * d)
     n = int(ln.sum())
-    need = HEADER_SIZE + 8 * d + 8 * n
+    need = HEADER_SIZE + 8 * d + 12 * n
     if len(data) != need:
         raise SnapshotFormatError(f"delta payload length {len(data)} != {need}")
     ks = np.frombuffer(data, _LE32, n, HEADER_SIZE + 8 * d)
     vs = np.frombuffer(data, _LE32, n, HEADER_SIZE + 8 * d + 4 * n)
-    return bi.copy(), ln.copy(), ks.copy(), vs.copy()
+    es = np.frombuffer(data, _LE32, n, HEADER_SIZE + 8 * d + 8 * n)
+    return bi.copy(), ln.copy(), ks.copy(), vs.copy(), es.copy()
 
 
 def state_from_pairs(
     keys,
     vals,
+    exps=None,
     *,
     node_size: int = 32,
     nodes_per_bucket: int = 16,
     fill: float = 0.5,
 ) -> FliXState:
-    """Deterministically rebuild a half-full state from sorted live pairs.
+    """Deterministically rebuild a half-full state from sorted live triples.
 
     The geometry hint (node_size/nodes_per_bucket/fill) comes from the
     snapshot manifest; the bucket count is re-planned from the live count
     (never taken from the manifest — the snapshotted structure may have
     been fuller than ``fill``, and ``build_from_sorted`` requires the
     planned headroom).
+
+    An ``exps`` column that is entirely ``NO_EXPIRY`` (or ``None``)
+    rebuilds a state with no materialized expiry column — logically
+    identical (the canonical bytes do not distinguish the two), and keeps
+    TTL-free recovery on the legacy zero-overhead engine path.
     """
     keys = np.asarray(keys, np.int32)
     vals = np.asarray(vals, np.int32)
+    if exps is not None:
+        exps = np.asarray(exps, np.int32)
+        if not (exps != int(NO_EXPIRY)).any():
+            exps = None
     nb, npb, ns = plan_geometry(
         len(keys), node_size=node_size, nodes_per_bucket=nodes_per_bucket, fill=fill
     )
@@ -203,7 +258,7 @@ def state_from_pairs(
     # — recovery after similar-sized crashes reuses the jit cache instead
     # of recompiling per replanned geometry
     nb = -(-nb // 8) * 8
-    return build_from_sorted(
+    built = build_from_sorted(
         jnp.asarray(keys),
         jnp.asarray(vals),
         num_buckets=nb,
@@ -211,3 +266,17 @@ def state_from_pairs(
         node_size=ns,
         fill=fill,
     )
+    if exps is None:
+        return built
+    import dataclasses
+
+    built_e = build_from_sorted(
+        jnp.asarray(keys),
+        jnp.asarray(exps),
+        num_buckets=nb,
+        nodes_per_bucket=npb,
+        node_size=ns,
+        fill=fill,
+    )
+    col = jnp.where(built.keys == EMPTY, NO_EXPIRY, built_e.vals)
+    return dataclasses.replace(built, exps=col)

@@ -43,6 +43,15 @@ _OPS_HEADER = struct.Struct("<II")  # n_ops, max_results
 _META_LEN = struct.Struct("<I")  # optional trailing metadata blob length
 _LE32 = np.dtype("<i4")
 
+# High bit of the n_ops header word flags the TTL record form: the payload
+# additionally carries the batch's virtual clock (one i64 word, sentinel
+# ``_NO_NOW`` when the batch ran without an expire pass) and a fourth
+# per-op array of expiry deadlines.  Records written without TTL state are
+# byte-identical to the pre-§14 framing, so old logs replay unchanged.
+_TTL_BIT = 0x80000000
+_NOW_WORD = struct.Struct("<q")
+_NO_NOW = 2**63 - 1
+
 _SEG_PREFIX = "wal_"
 _SEG_SUFFIX = ".log"
 
@@ -65,7 +74,9 @@ def write_all(fd: int, data) -> None:
         view = view[os.write(fd, view) :]
 
 
-def encode_ops(tag, key, val, max_results: int, meta: bytes = b"") -> bytes:
+def encode_ops(
+    tag, key, val, max_results: int, meta: bytes = b"", *, exp=None, now=None
+) -> bytes:
     """Frame one sorted batch (host arrays) as a WAL record payload.
 
     ``meta`` is an opaque caller blob logged WITH the batch — same fsync,
@@ -74,29 +85,67 @@ def encode_ops(tag, key, val, max_results: int, meta: bytes = b"") -> bytes:
     deduplicable exactly iff its batch is durably replayable (DESIGN.md
     §13).  A record without the trailing length word (pre-§13 history)
     decodes with ``meta = b""``.
+
+    ``exp``/``now`` select the TTL record form (``_TTL_BIT``): the batch's
+    per-op expiry deadlines and the virtual clock it executed under are
+    logged so replay is time-deterministic — it re-runs each batch at the
+    exact ``now`` the live engine used, never the replayer's wall clock.
+    With both ``None`` the encoding is byte-identical to the legacy form.
     """
     t = np.ascontiguousarray(np.asarray(tag, _LE32))
     k = np.ascontiguousarray(np.asarray(key, _LE32))
     v = np.ascontiguousarray(np.asarray(val, _LE32))
     if not (t.shape == k.shape == v.shape) or t.ndim != 1:
         raise ValueError("tag/key/val must be aligned 1-D arrays")
-    out = (
-        _OPS_HEADER.pack(t.size, max_results)
-        + t.tobytes()
-        + k.tobytes()
-        + v.tobytes()
-    )
+    if exp is None and now is None:
+        out = (
+            _OPS_HEADER.pack(t.size, max_results)
+            + t.tobytes()
+            + k.tobytes()
+            + v.tobytes()
+        )
+    else:
+        if exp is None:
+            raise ValueError("TTL record form requires an exp column")
+        e = np.ascontiguousarray(np.asarray(exp, _LE32))
+        if e.shape != t.shape:
+            raise ValueError("exp must align with tag/key/val")
+        out = (
+            _OPS_HEADER.pack(t.size | _TTL_BIT, max_results)
+            + _NOW_WORD.pack(_NO_NOW if now is None else int(now))
+            + t.tobytes()
+            + k.tobytes()
+            + v.tobytes()
+            + e.tobytes()
+        )
     if meta:
         out += _META_LEN.pack(len(meta)) + meta
     return out
 
 
 def decode_ops(payload: bytes):
-    """Inverse of :func:`encode_ops` → ``(tag, key, val, max_results, meta)``."""
+    """Inverse of :func:`encode_ops` →
+    ``(tag, key, val, max_results, meta, exp, now)``.
+
+    Legacy (non-TTL) records decode with ``exp is None`` and ``now is
+    None``; TTL records yield the logged expiry column and the virtual
+    clock (``None`` if the batch ran without an expire pass).
+    """
     if len(payload) < _OPS_HEADER.size:
         raise WALCorruptionError("op record shorter than its header")
-    n, max_results = _OPS_HEADER.unpack_from(payload)
-    need = _OPS_HEADER.size + 3 * 4 * n
+    raw_n, max_results = _OPS_HEADER.unpack_from(payload)
+    has_ttl = bool(raw_n & _TTL_BIT)
+    n = raw_n & ~_TTL_BIT
+    off = _OPS_HEADER.size
+    now = None
+    if has_ttl:
+        if len(payload) < off + _NOW_WORD.size:
+            raise WALCorruptionError("TTL op record missing its clock word")
+        (now_raw,) = _NOW_WORD.unpack_from(payload, off)
+        now = None if now_raw == _NO_NOW else int(now_raw)
+        off += _NOW_WORD.size
+    cols = 4 if has_ttl else 3
+    need = off + cols * 4 * n
     if len(payload) == need:
         meta = b""
     elif len(payload) >= need + _META_LEN.size:
@@ -108,11 +157,11 @@ def decode_ops(payload: bytes):
         meta = payload[need + _META_LEN.size :]
     else:
         raise WALCorruptionError(f"op record length {len(payload)} != {need}")
-    off = _OPS_HEADER.size
     tag = np.frombuffer(payload, _LE32, n, off).copy()
     key = np.frombuffer(payload, _LE32, n, off + 4 * n).copy()
     val = np.frombuffer(payload, _LE32, n, off + 8 * n).copy()
-    return tag, key, val, int(max_results), meta
+    exp = np.frombuffer(payload, _LE32, n, off + 12 * n).copy() if has_ttl else None
+    return tag, key, val, int(max_results), meta, exp, now
 
 
 def segment_files(directory) -> list[tuple[int, Path]]:

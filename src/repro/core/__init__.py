@@ -28,9 +28,11 @@ from repro.core.query import (
 )
 from repro.core.insert import insert, insert_safe, insert_with_slices
 from repro.core.delete import delete, merge_underfull
+from repro.core.expiry import NO_EXPIRY, attach_expiry, expire_state
 from repro.core.ops import (
     DEFAULT_MAX_RESULTS,
     OP_DELETE,
+    OP_EXPIRE,
     OP_INSERT,
     OP_NOP,
     OP_POINT,

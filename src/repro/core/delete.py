@@ -83,10 +83,14 @@ def merge_underfull(state: FliXState):
 
     Equivalent to a bucket-local restructure; O(bucket) like delete itself.
     """
-    from repro.core.state import flatten_bucket_sorted
+    from repro.core.state import flatten_bucket_sorted, sort_bucket_rows
 
     nb, npb, ns = state.num_buckets, state.nodes_per_bucket, state.node_size
     ck, cv = flatten_bucket_sorted(state)          # [nb, cap] sorted, EMPTY tail
+    ce = None
+    if state.exps is not None:
+        # same stable key argsort → same row order as (ck, cv)
+        _, ce = sort_bucket_rows(state.keys.reshape(nb, -1), state.exps.reshape(nb, -1))
     live = jnp.sum(ck != EMPTY, axis=1).astype(jnp.int32)     # [nb]
     # repack into ceil(live/ns) balanced pieces (≥ half full except the last)
     i = jnp.arange(ck.shape[1], dtype=jnp.int32)[None, :]
@@ -105,6 +109,11 @@ def merge_underfull(state: FliXState):
     nv = nv.at[jnp.arange(nb)[:, None], dest].set(cv)
     new_keys = nk[:, :-1].reshape(nb, npb, ns)
     new_vals = nv[:, :-1].reshape(nb, npb, ns)
+    new_exps = None
+    if ce is not None:
+        ne = jnp.full((nb, npb * ns + 1), EMPTY, KEY_DTYPE)  # EMPTY == NO_EXPIRY
+        ne = ne.at[jnp.arange(nb)[:, None], dest].set(ce)
+        new_exps = ne[:, :-1].reshape(nb, npb, ns)
 
     node_count = jnp.sum(new_keys != EMPTY, axis=2).astype(jnp.int32)
     node_max = jnp.where(
@@ -123,4 +132,5 @@ def merge_underfull(state: FliXState):
         num_nodes=num_nodes,
         mkba=state.mkba,
         needs_restructure=state.needs_restructure,
+        exps=new_exps,
     )

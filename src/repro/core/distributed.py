@@ -53,9 +53,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
 from repro.core.build import build_from_sorted
+from repro.core.expiry import NO_EXPIRY
 from repro.core.ops import (
     DEFAULT_MAX_RESULTS,
     OP_DELETE,
+    OP_EXPIRE,
     OP_INSERT,
     OP_NOP,
     OP_POINT,
@@ -108,12 +110,15 @@ def shard_build(
     nodes_per_bucket: int = 16,
     fill: float = 0.5,
     extra_keys: int = 0,
+    sorted_exps=None,
 ) -> ShardedFliX:
     """Build then range-partition across ``mesh``'s ``axis``.
 
     ``extra_keys`` over-provisions the bucket count (the distributed
     analogue of ``restructure_grow``'s headroom argument) so a subsequent
     batch of that many inserts cannot overflow a fresh structure.
+    ``sorted_exps`` carries the per-key expiry column (sorted alongside the
+    keys); the built state then serves the TTL path (DESIGN.md §14).
     """
     n_shards = int(mesh.shape[axis])
     p = max(1, int(node_size * fill))
@@ -128,6 +133,18 @@ def shard_build(
         node_size=node_size,
         fill=fill,
     )
+    exps = None
+    if sorted_exps is not None:
+        # expiry plane of the same build: identical layout, exps in vals
+        built_e = build_from_sorted(
+            sorted_keys,
+            jnp.asarray(sorted_exps, KEY_DTYPE),
+            num_buckets=nb,
+            nodes_per_bucket=nodes_per_bucket,
+            node_size=node_size,
+            fill=fill,
+        )
+        exps = jnp.where(state.keys == EMPTY, NO_EXPIRY, built_e.vals)
     part_fences = state.mkba.reshape(n_shards, -1)[:, -1]
     lower_fence = jnp.concatenate([jnp.array([MIN_KEY], KEY_DTYPE), part_fences[:-1]])
 
@@ -143,6 +160,7 @@ def shard_build(
         num_nodes=jax.device_put(state.num_nodes, shard1),
         mkba=jax.device_put(state.mkba, shard1),
         needs_restructure=jax.device_put(state.needs_restructure, rep),
+        exps=None if exps is None else jax.device_put(exps, shard3),
     )
     return ShardedFliX(
         state=state,
@@ -176,6 +194,9 @@ def shard_restructure(
     flat_v = np.asarray(jax.device_get(state.vals)).reshape(-1)
     order = np.argsort(flat_k, kind="stable")  # EMPTY sentinels sort last
     sorted_k, sorted_v = flat_k[order], flat_v[order]
+    sorted_e = None
+    if state.exps is not None:
+        sorted_e = np.asarray(jax.device_get(state.exps)).reshape(-1)[order]
 
     live = int((flat_k != EMPTY).sum())
     p = max(1, int(state.node_size * fill))
@@ -195,6 +216,7 @@ def shard_restructure(
         nodes_per_bucket=npb,
         fill=fill,
         extra_keys=extra_keys,
+        sorted_exps=None if sorted_e is None else jnp.asarray(sorted_e),
     )
 
 
@@ -216,7 +238,7 @@ def shard_live_counts(idx: ShardedFliX, mesh) -> jax.Array:
     )(idx.state.node_count)
 
 
-def _state_specs(axis: str) -> FliXState:
+def _state_specs(axis: str, has_ttl: bool = False) -> FliXState:
     return FliXState(
         keys=P(axis, None, None),
         vals=P(axis, None, None),
@@ -225,6 +247,7 @@ def _state_specs(axis: str) -> FliXState:
         num_nodes=P(axis),
         mkba=P(axis),
         needs_restructure=P(),
+        exps=P(axis, None, None) if has_ttl else None,
     )
 
 
@@ -235,6 +258,7 @@ def replicate_batch(ops: OpBatch, mesh) -> OpBatch:
         tag=jax.device_put(ops.tag, rep),
         key=jax.device_put(ops.key, rep),
         val=jax.device_put(ops.val, rep),
+        exp=None if ops.exp is None else jax.device_put(ops.exp, rep),
     )
 
 
@@ -250,6 +274,7 @@ def shard_batch(ops: OpBatch, mesh, *, axis: str = "shards") -> OpBatch:
         tag=jax.device_put(ops.tag, sh),
         key=jax.device_put(ops.key, sh),
         val=jax.device_put(ops.val, sh),
+        exp=None if ops.exp is None else jax.device_put(ops.exp, sh),
     )
 
 
@@ -350,23 +375,31 @@ def _empty_range_outputs(n: int, max_results: int):
 
 
 def _combine_stats(ins_stats, axis: str, truncated, a2a_overflow):
-    return {
+    out = {
         "inserted": jax.lax.psum(ins_stats["inserted"], axis),
         "deleted": jax.lax.psum(ins_stats["deleted"], axis),
         "overflowed_buckets": jax.lax.psum(ins_stats["overflowed_buckets"], axis),
         "range_truncated": truncated,
         "a2a_overflow": a2a_overflow,
     }
+    if "expired" in ins_stats:
+        out["expired"] = jax.lax.psum(ins_stats["expired"], axis)
+    return out
 
 
 @functools.lru_cache(maxsize=64)
-def _build_replicated(mesh, axis, impl, max_results, has_ranges, donate):
+def _build_replicated(
+    mesh, axis, impl, max_results, has_ranges, donate, has_ttl=False, has_now=False
+):
     """jit(shard_map)-compiled replicated-routing executor (memoized)."""
 
-    def body(state, lf, tag, key, val):
+    def body(state, lf, tag, key, val, *extra):
+        # extra = (exp,) / (exp, now) when the TTL lanes are enabled
+        exp = extra[0] if has_ttl else None
+        now = extra[1] if has_now else None
         lf = lf[0]
         upper = state.mkba[-1]
-        is_upd = (tag == OP_INSERT) | (tag == OP_DELETE)
+        is_upd = (tag == OP_INSERT) | (tag == OP_DELETE) | (tag == OP_EXPIRE)
         is_rng = tag == OP_RANGE
         # updates run on their owner shard only; POINT/SUCCESSOR run
         # everywhere (a successor answer may live past the owner's fence);
@@ -379,15 +412,25 @@ def _build_replicated(mesh, axis, impl, max_results, has_ranges, donate):
         inv = _inverse_permutation(order)
         new_state, res, st = apply_ops(
             state,
-            OpBatch(tag=mtag[order], key=mkey[order], val=mval[order]),
+            OpBatch(
+                tag=mtag[order],
+                key=mkey[order],
+                val=mval[order],
+                exp=None
+                if exp is None
+                else jnp.where(keep, exp, NO_EXPIRY)[order],
+            ),
             impl=impl,
             max_results=_INNER_MR,
+            now=now,
         )
         value = res["value"][inv]
         succ_key = res["succ_key"][inv]
 
-        # POINT: at most one shard holds the key, the rest answer NOT_FOUND
-        is_point = tag == OP_POINT
+        # POINT: at most one shard holds the key, the rest answer NOT_FOUND.
+        # EXPIRE recombines the same way: it is masked to its owner shard,
+        # whose get-or-set answer comes back through the value lane
+        is_point = (tag == OP_POINT) | (tag == OP_EXPIRE)
         hit = is_point & (value != NOT_FOUND)
         pv = jax.lax.psum(jnp.where(hit, value, 0), axis)
         n_hit = jax.lax.psum(hit.astype(jnp.int32), axis)
@@ -428,7 +471,7 @@ def _build_replicated(mesh, axis, impl, max_results, has_ranges, donate):
         )
         return new_state, results, stats
 
-    specs = _state_specs(axis)
+    specs = _state_specs(axis, has_ttl)
     rep_results = {
         "value": P(),
         "succ_key": P(),
@@ -444,10 +487,17 @@ def _build_replicated(mesh, axis, impl, max_results, has_ranges, donate):
         "range_truncated": P(),
         "a2a_overflow": P(),
     }
+    if has_ttl:
+        rep_stats["expired"] = P()
+    in_specs = (specs, P(axis), P(), P(), P())
+    if has_ttl:
+        in_specs += (P(),)
+    if has_now:
+        in_specs += (P(),)
     fn = _shard_map(
         body,
         mesh=mesh,
-        in_specs=(specs, P(axis), P(), P(), P()),
+        in_specs=in_specs,
         out_specs=(specs, rep_results, rep_stats),
         check_vma=False,
     )
@@ -456,11 +506,24 @@ def _build_replicated(mesh, axis, impl, max_results, has_ranges, donate):
 
 
 @functools.lru_cache(maxsize=64)
-def _build_a2a(mesh, axis, impl, max_results, has_ranges, capacity, donate):
+def _build_a2a(
+    mesh,
+    axis,
+    impl,
+    max_results,
+    has_ranges,
+    capacity,
+    donate,
+    has_ttl=False,
+    has_now=False,
+):
     """jit(shard_map)-compiled a2a-routing executor (memoized)."""
     n_shards = int(mesh.shape[axis])
 
-    def body(state, part_fences, tag, key, val):
+    def body(state, part_fences, tag, key, val, *extra):
+        # extra = (exp,) / (exp, now) when the TTL lanes are enabled
+        exp = extra[0] if has_ttl else None
+        now = extra[1] if has_now else None
         n_local = key.shape[0]
         me = jax.lax.axis_index(axis)
         is_rng = tag == OP_RANGE
@@ -471,6 +534,7 @@ def _build_a2a(mesh, axis, impl, max_results, has_ranges, capacity, donate):
         order = jnp.argsort(rkey, stable=True)
         inv = _inverse_permutation(order)
         s_tag, s_key, s_val = tag[order], rkey[order], val[order]
+        s_exp = None if exp is None else exp[order]
 
         # per-destination slices by one partition-fence searchsorted
         ends = jnp.searchsorted(s_key, part_fences, side="right").astype(jnp.int32)
@@ -488,13 +552,25 @@ def _build_a2a(mesh, axis, impl, max_results, has_ranges, capacity, donate):
         recv_t = jax.lax.all_to_all(send_t, axis, 0, 0).reshape(-1)
         recv_k = jax.lax.all_to_all(send_k, axis, 0, 0).reshape(-1)
         recv_v = jax.lax.all_to_all(send_v, axis, 0, 0).reshape(-1)
+        recv_e = None
+        if s_exp is not None:
+            # the expiry deadline rides as a fourth send lane; EXPIRE rows
+            # route to their owner by key exactly like other update ops
+            send_e = jnp.where(valid, s_exp[idx_c], NO_EXPIRY)
+            recv_e = jax.lax.all_to_all(send_e, axis, 0, 0).reshape(-1)
         rord = jnp.argsort(recv_k, stable=True)
         rinv = _inverse_permutation(rord)
         new_state, res, st = apply_ops(
             state,
-            OpBatch(tag=recv_t[rord], key=recv_k[rord], val=recv_v[rord]),
+            OpBatch(
+                tag=recv_t[rord],
+                key=recv_k[rord],
+                val=recv_v[rord],
+                exp=None if recv_e is None else recv_e[rord],
+            ),
             impl=impl,
             max_results=_INNER_MR,
+            now=now,
         )
         value_r = res["value"][rinv]
         skey_r = res["succ_key"][rinv]
@@ -577,7 +653,7 @@ def _build_a2a(mesh, axis, impl, max_results, has_ranges, capacity, donate):
         )
         return new_state, results, stats
 
-    specs = _state_specs(axis)
+    specs = _state_specs(axis, has_ttl)
     out_results = {
         "value": P(axis),
         "succ_key": P(axis),
@@ -593,10 +669,17 @@ def _build_a2a(mesh, axis, impl, max_results, has_ranges, capacity, donate):
         "range_truncated": P(),
         "a2a_overflow": P(),
     }
+    if has_ttl:
+        rep_stats["expired"] = P()
+    in_specs = (specs, P(), P(axis), P(axis), P(axis))
+    if has_ttl:
+        in_specs += (P(axis),)
+    if has_now:
+        in_specs += (P(),)
     fn = _shard_map(
         body,
         mesh=mesh,
-        in_specs=(specs, P(), P(axis), P(axis), P(axis)),
+        in_specs=in_specs,
         out_specs=(specs, out_results, rep_stats),
         check_vma=False,
     )
@@ -616,6 +699,7 @@ def shard_apply_ops(
     capacity: int | None = None,
     has_updates: bool | None = None,
     has_ranges: bool | None = None,
+    now=None,
 ):
     """Execute one mixed sorted batch across the mesh.
 
@@ -651,17 +735,45 @@ def shard_apply_ops(
         else:
             if has_updates is None:
                 has_updates = bool(
-                    jnp.any((ops.tag == OP_INSERT) | (ops.tag == OP_DELETE))
+                    jnp.any(
+                        (ops.tag == OP_INSERT)
+                        | (ops.tag == OP_DELETE)
+                        | (ops.tag == OP_EXPIRE)
+                    )
                 )
             impl = "fused" if has_updates else "reference"
     if has_ranges is None:
         has_ranges = bool(jnp.any(ops.tag == OP_RANGE))
     donate = donate and jax.default_backend() != "cpu"
 
+    # TTL activation is structural, exactly as in single-device apply_ops: a
+    # batch-side expiry column promotes the state (attaching an all-NO_EXPIRY
+    # sharded column) so the shard_map pytree matches the TTL specs
+    has_ttl = idx.state.exps is not None or ops.exp is not None
+    if has_ttl and idx.state.exps is None:
+        shard3 = NamedSharding(mesh, P(idx.axis, None, None))
+        exps = jax.device_put(
+            jnp.full(idx.state.keys.shape, NO_EXPIRY, KEY_DTYPE), shard3
+        )
+        idx = idx._replace(state=dataclasses.replace(idx.state, exps=exps))
+    has_now = has_ttl and now is not None
+    extra = ()
+    if has_ttl:
+        exp_col = (
+            ops.exp
+            if ops.exp is not None
+            else jnp.full((ops.size,), NO_EXPIRY, KEY_DTYPE)
+        )
+        extra = (exp_col,)
+        if has_now:
+            extra += (jnp.asarray(now, KEY_DTYPE),)
+
     if routing == "replicated":
-        fn = _build_replicated(mesh, idx.axis, impl, max_results, has_ranges, donate)
+        fn = _build_replicated(
+            mesh, idx.axis, impl, max_results, has_ranges, donate, has_ttl, has_now
+        )
         new_state, results, stats = fn(
-            idx.state, idx.lower_fence, ops.tag, ops.key, ops.val
+            idx.state, idx.lower_fence, ops.tag, ops.key, ops.val, *extra
         )
     else:
         n_shards = int(mesh.shape[idx.axis])
@@ -671,9 +783,19 @@ def shard_apply_ops(
             )
         if capacity is None:
             capacity = ops.size // n_shards
-        fn = _build_a2a(mesh, idx.axis, impl, max_results, has_ranges, capacity, donate)
+        fn = _build_a2a(
+            mesh,
+            idx.axis,
+            impl,
+            max_results,
+            has_ranges,
+            capacity,
+            donate,
+            has_ttl,
+            has_now,
+        )
         new_state, results, stats = fn(
-            idx.state, idx.part_fences, ops.tag, ops.key, ops.val
+            idx.state, idx.part_fences, ops.tag, ops.key, ops.val, *extra
         )
     return idx._replace(state=new_state), results, stats
 
@@ -689,6 +811,7 @@ def shard_apply_ops_safe(
     capacity: int | None = None,
     has_updates: bool | None = None,
     has_ranges: bool | None = None,
+    now=None,
 ):
     """Host-level driver: apply, restructure-and-retry on bucket overflow.
 
@@ -727,6 +850,7 @@ def shard_apply_ops_safe(
             capacity=capacity,
             has_updates=has_updates,
             has_ranges=has_ranges,
+            now=now,
         )
         if routing != "a2a" or capacity is None:
             break
@@ -741,7 +865,7 @@ def shard_apply_ops_safe(
         idx.state.needs_restructure
     )
     if overflowed:
-        n_ins = int(jnp.sum(ops.tag == OP_INSERT))
+        n_ins = int(jnp.sum((ops.tag == OP_INSERT) | (ops.tag == OP_EXPIRE)))
         grown = shard_restructure(idx, mesh, extra_keys=max(n_ins, 1))
         new_idx, results, stats = shard_apply_ops(
             grown,
@@ -753,6 +877,7 @@ def shard_apply_ops_safe(
             capacity=capacity,
             has_updates=has_updates,
             has_ranges=has_ranges,
+            now=now,
         )
         assert not bool(new_idx.state.needs_restructure), "post-restructure overflow"
     stats = dict(stats)

@@ -1,0 +1,101 @@
+"""Lazy TTL expiry (DESIGN.md §14).
+
+Per-key absolute expiry deadlines live in an optional third state column
+(``FliXState.exps``, same [nb, npb, ns] layout as the value column).  Time is
+*never* read from the wall clock: every engine entry point takes an explicit
+``now`` scalar and a row is expired iff ``exp <= now`` (a key expires exactly
+AT its deadline).  ``NO_EXPIRY`` (== EMPTY == int32 max) marks keys without a
+TTL — since ``now`` is a storable value (``now <= MAX_VALID < NO_EXPIRY``),
+such rows never expire.
+
+Expiry is *lazy*: ``expire_state`` runs as a pre-pass of the update phase of
+``apply_ops`` (before inserts/deletes/reads), physically reclaiming expired
+rows with exactly the same in-node + chain compaction as ``core.delete`` so
+every downstream executor — reference, fused, sharded — sees a plain FliX
+state with the expired rows already gone.  Buckets with no expired rows are
+passed through *byte-identical* (not merely value-identical), which keeps the
+durability layer's dirty-bucket delta tracking exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EMPTY, KEY_DTYPE, FliXState
+
+# Expiry sentinel: "never expires".  Equal to EMPTY so an all-EMPTY expiry
+# column is the identity under expiry, and a freshly reclaimed slot holds the
+# same sentinel as an empty one.
+NO_EXPIRY = EMPTY
+
+
+@jax.jit
+def expire_state(state: FliXState, now: jax.Array):
+    """Physically reclaim every row with ``exp <= now``.
+
+    Returns ``(state', n_expired)``.  Mirrors ``core.delete.delete``'s
+    compaction (in-node shift-left + chain slot compaction) with the expiry
+    column carried alongside keys/vals.  Buckets containing no expired row
+    keep their arrays byte-identical to the input.
+    """
+    assert state.exps is not None, "expire_state needs an expiry column"
+    now = jnp.asarray(now, dtype=KEY_DTYPE)
+
+    live = state.keys != EMPTY
+    expired = live & (state.exps <= now)  # [nb, npb, ns]
+
+    # in-node compaction: survivors shift left, EMPTY fills the tail.
+    masked = jnp.where(expired, EMPTY, state.keys)
+    masked_e = jnp.where(expired, NO_EXPIRY, state.exps)
+    order = jnp.argsort(masked, axis=2, stable=True)
+    new_keys = jnp.take_along_axis(masked, order, axis=2)
+    new_vals = jnp.take_along_axis(state.vals, order, axis=2)
+    new_exps = jnp.take_along_axis(masked_e, order, axis=2)
+
+    node_count = jnp.sum(new_keys != EMPTY, axis=2).astype(jnp.int32)
+
+    # chain compaction: drop empty nodes, keep chain order.
+    empty_slot = node_count == 0
+    slot_order = jnp.argsort(empty_slot, axis=1, stable=True)
+    new_keys = jnp.take_along_axis(new_keys, slot_order[..., None], axis=1)
+    new_vals = jnp.take_along_axis(new_vals, slot_order[..., None], axis=1)
+    new_exps = jnp.take_along_axis(new_exps, slot_order[..., None], axis=1)
+    node_count = jnp.take_along_axis(node_count, slot_order, axis=1)
+
+    node_max = jnp.where(
+        node_count > 0,
+        jnp.take_along_axis(
+            new_keys, jnp.maximum(node_count - 1, 0)[..., None], axis=2
+        )[..., 0],
+        EMPTY,
+    ).astype(KEY_DTYPE)
+    num_nodes = jnp.sum(node_count > 0, axis=1).astype(jnp.int32)
+
+    # untouched buckets stay byte-identical (delta-snapshot dirty tracking
+    # relies on this: an unchanged bucket must not change bytes).
+    changed = jnp.any(expired, axis=(1, 2))  # [nb]
+    c3 = changed[:, None, None]
+    c2 = changed[:, None]
+    new_state = FliXState(
+        keys=jnp.where(c3, new_keys, state.keys),
+        vals=jnp.where(c3, new_vals, state.vals),
+        node_count=jnp.where(c2, node_count, state.node_count),
+        node_max=jnp.where(c2, node_max, state.node_max),
+        num_nodes=jnp.where(changed, num_nodes, state.num_nodes),
+        mkba=state.mkba,
+        needs_restructure=state.needs_restructure,
+        exps=jnp.where(c3, new_exps, state.exps),
+    )
+    return new_state, jnp.sum(expired)
+
+
+def attach_expiry(state: FliXState, exps: jax.Array | None = None) -> FliXState:
+    """State with an expiry column attached (all-NO_EXPIRY when not given)."""
+    if state.exps is not None and exps is None:
+        return state
+    if exps is None:
+        exps = jnp.full(state.keys.shape, NO_EXPIRY, dtype=KEY_DTYPE)
+    return dataclasses.replace(state, exps=exps)

@@ -1,10 +1,17 @@
-"""Structural invariant checker for FliXState (I1–I5, see state.py).
+"""Structural invariant checker for FliXState (I1–I6, see state.py).
 
 Host-side (numpy) and O(total slots) — intended for tests and debugging,
 not the hot path.  ``check_invariants`` raises ``AssertionError`` with the
 first violated invariant; every mutating operation (build, insert, delete,
 merge_underfull, restructure, apply_ops) must preserve I1–I5 whenever its
 input satisfies them and no overflow was flagged.
+
+I6 (expiry liveness, DESIGN.md §14) applies when the state carries an
+expiry column: empty slots must hold ``NO_EXPIRY`` (reclaimed slots are
+zeroed to the sentinel, so stale deadlines cannot leak back in), and —
+when the caller supplies the engine-threaded ``now`` — no live row may
+hold ``exp <= now``: every expired row must have been physically
+reclaimed by the update pass, i.e. no read can ever observe one.
 """
 
 from __future__ import annotations
@@ -14,8 +21,13 @@ import numpy as np
 from repro.core.state import EMPTY, MAX_VALID, NOT_FOUND, FliXState
 
 
-def check_invariants(st: FliXState) -> None:
-    """Assert I1–I5 hold for ``st`` (see the state.py module docstring)."""
+def check_invariants(st: FliXState, now: int | None = None) -> None:
+    """Assert I1–I6 hold for ``st`` (see the state.py module docstring).
+
+    ``now`` enables the liveness half of I6: it must be the same explicit
+    virtual time the engine was last stepped with (the checker never reads
+    the wall clock).
+    """
     keys = np.asarray(st.keys)
     counts = np.asarray(st.node_count)
     nmax = np.asarray(st.node_max)
@@ -43,6 +55,22 @@ def check_invariants(st: FliXState) -> None:
             assert valid[0] > lf and valid[-1] <= mkba[b], f"I3 violated at {b}"
     assert (np.diff(mkba.astype(np.int64)) >= 0).all(), "I5 violated"
     assert mkba[-1] == int(MAX_VALID), "I5 violated: mkba[-1] != MAX_VALID"
+    if st.exps is not None:
+        from repro.core.expiry import NO_EXPIRY
+
+        exps = np.asarray(st.exps)
+        assert exps.shape == keys.shape, "I6 violated: expiry column shape"
+        empty = keys == E
+        assert (exps[empty] == int(NO_EXPIRY)).all(), (
+            "I6 violated: reclaimed/empty slot carries a stale expiry deadline"
+        )
+        if now is not None:
+            leaked = (~empty) & (exps <= int(now))
+            assert not leaked.any(), (
+                "I6 violated: live row(s) past their expiry deadline "
+                f"(keys {keys[leaked][:8].tolist()} expired at "
+                f"{exps[leaked][:8].tolist()} <= now={int(now)})"
+            )
 
 
 def check_range_results(ops, results, *, max_results: int) -> None:

@@ -65,6 +65,11 @@ OP_POINT = 2
 OP_SUCCESSOR = 3
 OP_NOP = 4  # padding slot; key must be EMPTY so it routes past every bucket
 OP_RANGE = 5  # key column = lo, val column = hi; answers [lo, hi)
+OP_EXPIRE = 6  # get-or-set with TTL: exp column = absolute deadline; returns
+#                the stored value (refreshing its TTL to the op's deadline)
+#                when the key is live, else inserts (key, val, exp) and
+#                returns NOT_FOUND.  Counts as an update op.  Requires the
+#                batch to carry an exp column (DESIGN.md §14).
 
 OP_DTYPE = jnp.int32
 
@@ -80,25 +85,31 @@ class OpBatch:
     key: jax.Array  # [N] KEY_DTYPE, ascending (EMPTY = NOP padding, at end;
     #                 RANGE ops sort by their lo, which lives here)
     val: jax.Array  # [N] VAL_DTYPE (INSERT: value; RANGE: exclusive hi)
+    # Optional per-op expiry column (KEY_DTYPE absolute deadlines;
+    # NO_EXPIRY for ops without one).  INSERT ops take it as the new key's
+    # TTL; EXPIRE ops require it.  ``None`` = legacy TTL-free batch.
+    exp: jax.Array | None = None
 
     @property
     def size(self) -> int:
         return self.key.shape[0]
 
     def to_host(self):
-        """The batch as host numpy arrays ``(tag, key, val)`` — the form the
-        write-ahead log frames (``checkpoint.wal``) and the dirty-bucket
-        tracker consume (one device transfer, shared by both)."""
+        """The batch as host numpy arrays ``(tag, key, val, exp)`` — the form
+        the write-ahead log frames (``checkpoint.wal``) and the dirty-bucket
+        tracker consume (one device transfer, shared by both).  ``exp`` is
+        ``None`` for TTL-free batches."""
         import numpy as np
 
         return (
             np.asarray(jax.device_get(self.tag)),
             np.asarray(jax.device_get(self.key)),
             np.asarray(jax.device_get(self.val)),
+            None if self.exp is None else np.asarray(jax.device_get(self.exp)),
         )
 
     @classmethod
-    def from_host(cls, tag, key, val) -> "OpBatch":
+    def from_host(cls, tag, key, val, exp=None) -> "OpBatch":
         """Rehydrate a batch from host arrays *without re-sorting*: WAL
         records store already-sorted batches, and replay must apply exactly
         the bytes that were logged."""
@@ -106,10 +117,11 @@ class OpBatch:
             tag=jnp.asarray(tag, OP_DTYPE),
             key=jnp.asarray(key, KEY_DTYPE),
             val=jnp.asarray(val, VAL_DTYPE),
+            exp=None if exp is None else jnp.asarray(exp, KEY_DTYPE),
         )
 
 
-def make_ops(tags, keys, vals=None, *, pad_to: int | None = None):
+def make_ops(tags, keys, vals=None, *, exps=None, pad_to: int | None = None):
     """Sort a raw operation list by key into an :class:`OpBatch`.
 
     This is the engine's one global sort.  Returns ``(ops, perm)`` where
@@ -117,23 +129,41 @@ def make_ops(tags, keys, vals=None, *, pad_to: int | None = None):
     ``sorted_result[perm]`` (= :func:`unsort`) maps per-op results back to
     submission order.
 
+    ``exps`` attaches a per-op expiry-deadline column (sorted and padded
+    with ``NO_EXPIRY`` alongside the keys); required for batches containing
+    ``OP_EXPIRE`` or TTL'd inserts.
+
     ``pad_to`` appends ``OP_NOP`` slots up to a fixed size so callers with
     variable-length steps trace one jit program per geometry.
     """
+    from repro.core.expiry import NO_EXPIRY
+
     tags = jnp.asarray(tags, OP_DTYPE)
     keys = jnp.asarray(keys, KEY_DTYPE)
     if vals is None:
         vals = jnp.zeros(keys.shape, VAL_DTYPE)
     vals = jnp.asarray(vals, VAL_DTYPE)
+    if exps is not None:
+        exps = jnp.asarray(exps, KEY_DTYPE)
     if pad_to is not None and pad_to > keys.shape[0]:
         extra = pad_to - keys.shape[0]
         tags = jnp.concatenate([tags, jnp.full((extra,), OP_NOP, OP_DTYPE)])
         keys = jnp.concatenate([keys, jnp.full((extra,), EMPTY, KEY_DTYPE)])
         vals = jnp.concatenate([vals, jnp.zeros((extra,), VAL_DTYPE)])
+        if exps is not None:
+            exps = jnp.concatenate([exps, jnp.full((extra,), NO_EXPIRY, KEY_DTYPE)])
     order = jnp.argsort(keys, stable=True)
     # inverse permutation (input position -> sorted position) by O(N) scatter
     perm = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
-    return OpBatch(tag=tags[order], key=keys[order], val=vals[order]), perm
+    return (
+        OpBatch(
+            tag=tags[order],
+            key=keys[order],
+            val=vals[order],
+            exp=None if exps is None else exps[order],
+        ),
+        perm,
+    )
 
 
 def unsort(sorted_result: jax.Array, perm: jax.Array) -> jax.Array:
@@ -273,6 +303,138 @@ def _apply_ops_reference(
     return s2, results, stats
 
 
+def _apply_ops_plain(
+    state: FliXState,
+    ops: OpBatch,
+    *,
+    impl: str,
+    donate: bool = False,
+    block_q: int | None = None,
+    block_b: int | None = None,
+    max_results: int = DEFAULT_MAX_RESULTS,
+):
+    """Dispatch one TTL-free batch to the chosen executor (impl resolved)."""
+    if impl == "reference":
+        return _apply_ops_reference(state, ops, max_results=max_results)
+    if impl != "fused":
+        raise ValueError(f"unknown apply_ops impl: {impl!r}")
+
+    from repro.kernels.flix_apply import (
+        DEFAULT_BLOCK_B,
+        flix_apply_pallas,
+        flix_apply_pallas_donated,
+    )
+    from repro.kernels.flix_query import DEFAULT_BLOCK_Q
+
+    backend = jax.default_backend()
+    fn = flix_apply_pallas_donated if donate and backend != "cpu" else flix_apply_pallas
+    return fn(
+        state,
+        ops.tag,
+        ops.key,
+        ops.val,
+        block_q=block_q or DEFAULT_BLOCK_Q,
+        block_b=block_b or DEFAULT_BLOCK_B,
+        max_results=max_results,
+        interpret=backend != "tpu",
+    )
+
+
+def _apply_ops_ttl(
+    state: FliXState,
+    ops: OpBatch,
+    *,
+    impl: str,
+    donate: bool = False,
+    block_q: int | None = None,
+    block_b: int | None = None,
+    max_results: int = DEFAULT_MAX_RESULTS,
+    now=None,
+):
+    """TTL-aware batch execution (DESIGN.md §14) over any plain executor.
+
+    Three steps, none of which the executors can see:
+
+      1. *Expire pass* — ``expire_state(state, now)`` physically reclaims
+         every row with ``exp <= now`` (skipped when ``now is None``).
+      2. *EXPIRE lowering* — OP_EXPIRE ops probe the post-expire pre-update
+         state (one ``successor_query``: present ⟺ successor key == op key,
+         which unlike POINT distinguishes a stored NOT_FOUND-valued key from
+         a miss) and are rewritten to OP_INSERT: on a hit the insert re-puts
+         the *stored* value (so the value is unchanged) while the expiry
+         plane takes the op's new deadline (TTL refresh); on a miss it
+         inserts the op's (val, exp).  Sound because update ops are unique
+         per key within a batch, so the probe state is the state the op
+         observes.
+      3. *Two-plane execution* — the chosen executor runs twice: once on the
+         value plane and once on a state whose ``vals`` column holds the
+         expiry deadlines.  Every layout decision (insert merge positions,
+         delete/expiry compaction orders, restructure flags) is a function
+         of keys and tags only, so both planes land byte-identical key
+         layouts and the expiry plane's ``vals`` *is* the new expiry column.
+
+    The expiry plane runs first and is never donated; the value plane gets
+    the caller's ``donate`` flag (its buffers are shared with the expiry
+    plane's inputs, which are dead by then).
+    """
+    from repro.core.expiry import NO_EXPIRY, attach_expiry, expire_state
+    from repro.core.query import successor_query
+
+    state = attach_expiry(state.drop_volatile())
+    tag, key, val = ops.tag, ops.key, ops.val
+    exp = (
+        ops.exp
+        if ops.exp is not None
+        else jnp.full(key.shape, NO_EXPIRY, KEY_DTYPE)
+    )
+
+    if now is not None:
+        state, n_expired = expire_state(state, now)
+    else:
+        n_expired = jnp.int32(0)
+
+    is_exp = tag == OP_EXPIRE
+    value_state = dataclasses.replace(state, exps=None)
+    exp_state = dataclasses.replace(state, vals=state.exps, exps=None)
+
+    def _probe():
+        sk, sv = successor_query(value_state, key)
+        return is_exp & (sk == key), sv
+
+    present, stored = jax.lax.cond(
+        jnp.any(is_exp),
+        _probe,
+        lambda: (
+            jnp.zeros(key.shape, bool),
+            jnp.full(key.shape, NOT_FOUND, VAL_DTYPE),
+        ),
+    )
+
+    tag2 = jnp.where(is_exp, OP_INSERT, tag)
+    val2 = jnp.where(is_exp & present, stored, val)
+    is_ins = tag2 == OP_INSERT
+    val_e = jnp.where(is_ins, exp, val)  # RANGE hi rides val in both planes
+
+    kw = dict(impl=impl, block_q=block_q, block_b=block_b, max_results=max_results)
+    s2e, _, _ = _apply_ops_plain(
+        exp_state, OpBatch(tag=tag2, key=key, val=val_e), donate=False, **kw
+    )
+    s2v, results, stats = _apply_ops_plain(
+        value_state, OpBatch(tag=tag2, key=key, val=val2), donate=donate, **kw
+    )
+
+    new_exps = jnp.where(s2v.keys == EMPTY, NO_EXPIRY, s2e.vals)
+    new_state = dataclasses.replace(s2v, exps=new_exps)
+
+    results = dict(results)
+    results["value"] = jnp.where(
+        is_exp, jnp.where(present, stored, NOT_FOUND), results["value"]
+    )
+    stats = dict(stats)
+    stats["expired"] = n_expired
+    return new_state, results, stats
+
+
 def apply_ops(
     state: FliXState,
     ops: OpBatch,
@@ -283,6 +445,7 @@ def apply_ops(
     block_b: int | None = None,
     max_results: int = DEFAULT_MAX_RESULTS,
     has_updates: bool | None = None,
+    now=None,
 ):
     """Execute one mixed sorted batch.  Returns ``(state', results, stats)``.
 
@@ -324,6 +487,13 @@ def apply_ops(
     restructure-and-retry may replay the batch (``apply_ops_safe`` never
     donates).  Ignored on CPU, where XLA does not implement donation.
 
+    ``now`` is the engine's only notion of time (DESIGN.md §14): when the
+    state or batch carries an expiry column, rows with ``exp <= now`` are
+    physically reclaimed before the update phase and OP_EXPIRE ops execute
+    get-or-set-with-TTL against the expired state.  ``now=None`` skips the
+    expire pass (expiry columns are still maintained).  The engine never
+    reads the wall clock — replay with the logged ``now`` is deterministic.
+
     On bucket overflow the returned state carries ``needs_restructure`` and
     the overflowing buckets are untrustworthy — same contract as ``insert``;
     hosts use :func:`apply_ops_safe`.
@@ -334,33 +504,25 @@ def apply_ops(
         else:
             if has_updates is None:
                 has_updates = bool(
-                    jnp.any((ops.tag == OP_INSERT) | (ops.tag == OP_DELETE))
+                    jnp.any(
+                        (ops.tag == OP_INSERT)
+                        | (ops.tag == OP_DELETE)
+                        | (ops.tag == OP_EXPIRE)
+                    )
                 )
             impl = "fused" if has_updates else "reference"
-    if impl == "reference":
-        return _apply_ops_reference(state, ops, max_results=max_results)
-    if impl != "fused":
-        raise ValueError(f"unknown apply_ops impl: {impl!r}")
-
-    from repro.kernels.flix_apply import (
-        DEFAULT_BLOCK_B,
-        flix_apply_pallas,
-        flix_apply_pallas_donated,
-    )
-    from repro.kernels.flix_query import DEFAULT_BLOCK_Q
-
-    backend = jax.default_backend()
-    fn = flix_apply_pallas_donated if donate and backend != "cpu" else flix_apply_pallas
-    return fn(
-        state,
-        ops.tag,
-        ops.key,
-        ops.val,
-        block_q=block_q or DEFAULT_BLOCK_Q,
-        block_b=block_b or DEFAULT_BLOCK_B,
+    kw = dict(
+        impl=impl,
+        donate=donate,
+        block_q=block_q,
+        block_b=block_b,
         max_results=max_results,
-        interpret=backend != "tpu",
     )
+    # TTL activation is structural (does an expiry column exist on the state
+    # or the batch?), so it is host-decidable even inside shard_map traces.
+    if state.exps is not None or ops.exp is not None:
+        return _apply_ops_ttl(state, ops, now=now, **kw)
+    return _apply_ops_plain(state, ops, **kw)
 
 
 def apply_ops_safe(
@@ -370,7 +532,9 @@ def apply_ops_safe(
     impl: str = "auto",
     max_results: int = DEFAULT_MAX_RESULTS,
     validate_ranges: bool = False,
+    validate: bool = False,
     has_updates: bool | None = None,
+    now=None,
 ):
     """Host-level driver: apply, restructure-and-retry on overflow.
 
@@ -383,6 +547,9 @@ def apply_ops_safe(
     checker (``core.invariants.check_range_results``: segments sorted,
     in-bounds, duplicate-free, consecutively packed) on the final results —
     a host-side debugging/testing aid, off on the hot path.
+    ``validate=True`` runs the full structural invariant checker
+    (``check_invariants``, incl. the I6 expiry-liveness check against the
+    threaded ``now``) on the result state — same caveat.
 
     The returned ``stats`` gains ``restructure_retries`` (host int): how
     many times the batch was replayed on a regrown state.  It reflects the
@@ -393,10 +560,10 @@ def apply_ops_safe(
 
     restructure_retries = 0
     new_state, results, stats = apply_ops(
-        state, ops, impl=impl, max_results=max_results, has_updates=has_updates
+        state, ops, impl=impl, max_results=max_results, has_updates=has_updates, now=now
     )
     if bool(new_state.needs_restructure) and not bool(state.needs_restructure):
-        n_ins = int(jnp.sum(ops.tag == OP_INSERT))
+        n_ins = int(jnp.sum((ops.tag == OP_INSERT) | (ops.tag == OP_EXPIRE)))
         grown = restructure_grow(state, extra_keys=max(n_ins, 1))
         new_state, results, stats = apply_ops(
             grown,
@@ -404,6 +571,7 @@ def apply_ops_safe(
             impl=impl,
             max_results=max_results,
             has_updates=has_updates,
+            now=now,
         )
         assert not bool(new_state.needs_restructure), "post-restructure overflow"
         restructure_retries = 1
@@ -413,4 +581,17 @@ def apply_ops_safe(
         from repro.core.invariants import check_range_results
 
         check_range_results(ops, results, max_results=max_results)
+    if validate:
+        from repro.core.invariants import check_invariants
+
+        check_now = now
+        if now is not None and ops.exp is not None:
+            # the §14 same-batch edge: a row THIS batch wrote with
+            # ``exp <= now`` is legitimately live until the next batch's
+            # expiry pre-pass, so liveness-at-now cannot be asserted on
+            # the post-state of a batch carrying dead-on-arrival writes
+            wrote = (ops.tag == OP_INSERT) | (ops.tag == OP_EXPIRE)
+            if bool(jnp.any(wrote & (ops.exp <= jnp.asarray(now, KEY_DTYPE)))):
+                check_now = None
+        check_invariants(new_state, now=check_now)
     return new_state, results, stats

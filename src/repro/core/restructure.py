@@ -10,6 +10,7 @@ paper's kernel relaunch with a new bucket count).
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
 
@@ -17,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.build import build_from_sorted, plan_geometry
-from repro.core.state import FliXState
+from repro.core.state import EMPTY, FliXState
 
 
 @partial(
@@ -38,7 +39,7 @@ def restructure(
     flat_k = state.keys.reshape(-1)
     flat_v = state.vals.reshape(-1)
     order = jnp.argsort(flat_k, stable=True)     # EMPTY sentinels sort last
-    return build_from_sorted(
+    built = build_from_sorted(
         flat_k[order],
         flat_v[order],
         num_buckets=num_buckets,
@@ -46,6 +47,23 @@ def restructure(
         node_size=ns,
         fill=fill,
     )
+    if state.exps is None:
+        return built
+    # expiry plane: the identical build with the expiry column in the value
+    # slot lands the identical layout (build positions depend on keys only).
+    from repro.core.expiry import NO_EXPIRY
+
+    flat_e = state.exps.reshape(-1)
+    built_e = build_from_sorted(
+        flat_k[order],
+        flat_e[order],
+        num_buckets=num_buckets,
+        nodes_per_bucket=npb,
+        node_size=ns,
+        fill=fill,
+    )
+    exps = jnp.where(built.keys == EMPTY, NO_EXPIRY, built_e.vals)
+    return dataclasses.replace(built, exps=exps)
 
 
 def plan(state: FliXState, *, extra_keys: int = 0, fill: float = 0.5):

@@ -55,6 +55,13 @@ class FliXState:
     succ_smin: jax.Array | None = None
     succ_sidx: jax.Array | None = None
 
+    # Optional per-key expiry column (``core.expiry``): absolute deadlines in
+    # the same virtual-time units as the ``now`` threaded through apply_ops,
+    # ``NO_EXPIRY`` (== EMPTY) at empty slots and for keys without a TTL.
+    # Unlike the successor cache this is *durable logical state* — it is part
+    # of the serialized payload and is NOT dropped by ``drop_volatile``.
+    exps: jax.Array | None = None  # [nb, npb, ns] VAL_DTYPE or None
+
     # ---- static geometry -------------------------------------------------
     @property
     def num_buckets(self) -> int:

@@ -67,6 +67,22 @@ def main() -> None:
         "(bounds replay-on-restart to at most N batches)",
     )
     ap.add_argument(
+        "--snapshot-window",
+        type=int,
+        default=0,
+        help="retain this many committed index versions for pinned "
+        "step(as_of=...) snapshot reads (DESIGN.md §14); 0 disables "
+        "versioned reads",
+    )
+    ap.add_argument(
+        "--page-ttl",
+        type=int,
+        default=0,
+        help="give each registered KV page an expiry deadline this many "
+        "decode steps after its allocation (virtual time = step number); "
+        "0 = pages never expire",
+    )
+    ap.add_argument(
         "--gateway",
         action="store_true",
         help="route index traffic through the multi-tenant batching "
@@ -88,6 +104,7 @@ def main() -> None:
         routing=args.index_routing,
         durability_dir=args.wal_dir,
         snapshot_every=args.snapshot_every,
+        snapshot_window=args.snapshot_window,
     )
     if args.wal_dir and kv_index.durable_seq:
         print(
@@ -145,11 +162,22 @@ def main() -> None:
             else:
                 # one mixed engine step: register the new pages AND resolve
                 # each sequence's head page in the same sorted batch
+                allocs = (seqs, np.full(args.batch, page), seqs * 1000 + page)
+                if args.page_ttl:
+                    allocs = (*allocs, np.full(args.batch, i + args.page_ttl))
                 slots, _, _ = kv_index.step(
-                    allocs=(seqs, np.full(args.batch, page), seqs * 1000 + page),
+                    allocs=allocs,
                     lookups=(seqs, np.zeros(args.batch, int)),
+                    now=i if args.page_ttl else None,
                 )
-                assert (np.asarray(slots) == seqs * 1000).all()
+                # head page (deadline = page_ttl) is visible until its
+                # deadline passes, then lazily expired
+                expect = (
+                    seqs * 1000
+                    if args.page_ttl == 0 or args.page_ttl > i
+                    else np.full(args.batch, -1)
+                )
+                assert (np.asarray(slots) == expect).all()
     jax.block_until_ready(token)
     dt = time.time() - t0
     where = (
@@ -160,17 +188,60 @@ def main() -> None:
         f"({args.steps*args.batch/dt:.1f} tok/s); "
         f"kv index tracks {kv_index.live_pages()} pages on {where}"
     )
-    # sanity: page lookups resolve
-    got = np.asarray(kv_index.lookup(np.arange(args.batch), np.zeros(args.batch, int)))
-    assert (got == np.arange(args.batch) * 1000).all()
-    print("page table lookups consistent ✓")
-    # sanity: in-order page enumeration through the engine's RANGE op
-    n_pages = (args.steps - 1) // PAGE_TOKENS + 1
-    pages, slots, count = kv_index.pages_of(0, max_pages=max(256, n_pages))
-    assert int(count) == n_pages, (int(count), n_pages)
-    assert np.asarray(pages)[:n_pages].tolist() == list(range(n_pages))
-    assert np.asarray(slots)[:n_pages].tolist() == list(range(n_pages))
-    print(f"page enumeration in order ✓ ({n_pages} pages for seq 0)")
+    if args.page_ttl == 0:
+        # sanity: page lookups resolve
+        got = np.asarray(
+            kv_index.lookup(np.arange(args.batch), np.zeros(args.batch, int))
+        )
+        assert (got == np.arange(args.batch) * 1000).all()
+        print("page table lookups consistent ✓")
+        # sanity: in-order page enumeration through the engine's RANGE op
+        n_pages = (args.steps - 1) // PAGE_TOKENS + 1
+        pages, slots, count = kv_index.pages_of(0, max_pages=max(256, n_pages))
+        assert int(count) == n_pages, (int(count), n_pages)
+        assert np.asarray(pages)[:n_pages].tolist() == list(range(n_pages))
+        assert np.asarray(slots)[:n_pages].tolist() == list(range(n_pages))
+        print(f"page enumeration in order ✓ ({n_pages} pages for seq 0)")
+    else:
+        # every registered page's deadline lies before this horizon, so a
+        # read at it sees nothing — TTL is governed by the explicit virtual
+        # clock, never by when this process happens to run
+        horizon = args.steps + args.page_ttl
+        gone, _, _ = kv_index.step(
+            lookups=(np.arange(args.batch), np.zeros(args.batch, int)),
+            now=horizon,
+        )
+        assert (np.asarray(gone) == -1).all()
+        print(f"page TTLs honored ✓ (head pages invisible at now={horizon})")
+    if args.snapshot_window:
+        from repro.serve.kv_index import SnapshotGone
+
+        v = kv_index.version
+        lo, hi = 0, args.batch << 12
+        pinned = kv_index.step(ranges=([lo], [hi]), as_of=v, range_budget=1024)[1]
+        base = (
+            np.asarray(pinned["keys"]).tobytes()
+            + np.asarray(pinned["vals"]).tobytes()
+        )
+        for extra in range(3):  # three later update batches
+            kv_index.step(allocs=([4000 + extra], [0], [extra]))
+        if args.snapshot_window > 3:
+            again = kv_index.step(ranges=([lo], [hi]), as_of=v, range_budget=1024)[1]
+            assert (
+                np.asarray(again["keys"]).tobytes()
+                + np.asarray(again["vals"]).tobytes()
+                == base
+            )
+            print(
+                f"pinned snapshot read byte-identical across 3 later "
+                f"batches ✓ (as_of={v})"
+            )
+        else:
+            try:
+                kv_index.step(ranges=([lo], [hi]), as_of=v, range_budget=1024)
+                raise AssertionError("expected SnapshotGone")
+            except SnapshotGone:
+                print(f"snapshot window slid past version {v} → SNAPSHOT_GONE ✓")
     if gateway is not None:
         # retrying a committed key resolves from the dedup window, no re-apply
         dup = gateway.submit(

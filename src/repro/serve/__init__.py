@@ -7,6 +7,7 @@ from repro.serve.gateway import (
     INVALID,
     QUEUE_FULL,
     RATE_LIMITED,
+    SNAPSHOT_GONE,
     UNAVAILABLE,
     UNKNOWN_COMMIT,
     Gateway,
@@ -15,4 +16,4 @@ from repro.serve.gateway import (
     Request,
     Ticket,
 )
-from repro.serve.kv_index import KVPageIndex
+from repro.serve.kv_index import KVPageIndex, SnapshotGone

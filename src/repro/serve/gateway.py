@@ -54,6 +54,8 @@ UNAVAILABLE = "UNAVAILABLE"  # update path degraded / gateway closed
 ENGINE_FAILURE = "ENGINE_FAILURE"  # engine raised; WAL rolled back: NOT applied
 UNKNOWN_COMMIT = "UNKNOWN_COMMIT"  # rollback failed: MAY be durable; retry
 INVALID = "INVALID"  # malformed request (e.g. larger than any batch)
+SNAPSHOT_GONE = "SNAPSHOT_GONE"  # pinned version reclaimed; NOT retryable —
+# the same as_of can never succeed again; re-issue against a live version
 
 UPDATE_KINDS = ("alloc", "free")
 READ_KINDS = ("lookup", "pages")
@@ -78,6 +80,13 @@ class Request:
     its payload (``alloc``: seqs/pages/slots, ``lookup``: seqs/pages,
     ``free``/``pages``: seqs).  ``key`` is the idempotency key — client
     retries MUST reuse it; distinct requests MUST NOT share it.
+
+    ``as_of`` pins a READ request to a committed index version
+    (``KVPageIndex`` snapshot reads): the result is a consistent cut of
+    that version no matter how many batches commit between submit and
+    pump.  Updates with ``as_of`` are rejected INVALID, and a pinned
+    version that left the retention window rejects SNAPSHOT_GONE
+    (non-retryable — re-issue unpinned or against a newer version).
     """
 
     tenant: str
@@ -87,6 +96,7 @@ class Request:
     pages: tuple = ()
     slots: tuple = ()
     deadline: float | None = None
+    as_of: int | None = None
 
     def __post_init__(self):
         if self.kind not in UPDATE_KINDS + READ_KINDS:
@@ -360,6 +370,10 @@ class Gateway:
             return self._rejected(
                 tk, INVALID, now, detail=f"request cost {cost} > max_batch_ops"
             )
+        if req.as_of is not None and req.is_update:
+            return self._rejected(
+                tk, INVALID, now, detail="as_of pins reads; updates cannot use it"
+            )
         if self._queued_ops + cost > self.max_queue_ops:
             # shed BEFORE the bucket so the rejected request's tokens are
             # not burned; retry_after ≈ pumps needed to drain the backlog
@@ -456,12 +470,24 @@ class Gateway:
         return False
 
     def _commit(self, batch: list[Ticket], expired: int, now: float) -> PumpReport:
+        # pinned reads run as separate read-only steps against their pinned
+        # version — they cannot share the main step, which serves the LIVE
+        # post-update state (update-then-read); grouping by as_of keeps one
+        # engine step per distinct pinned version
+        pinned: dict[int, list[Ticket]] = {}
+        main: list[Ticket] = []
+        for tk in batch:
+            if tk.request.as_of is not None:
+                pinned.setdefault(int(tk.request.as_of), []).append(tk)
+            else:
+                main.append(tk)
+
         al_seq, al_page, al_slot = [], [], []
         lu_seq, lu_page = [], []
         fr_seq = []
         rg_lo, rg_hi = [], []
         slices: list[tuple] = []  # per ticket: (kind, start, length)
-        for tk in batch:
+        for tk in main:
             req = tk.request
             if req.kind == "alloc":
                 slices.append(("alloc", 0, 0))
@@ -482,8 +508,23 @@ class Gateway:
                     rg_hi.append((int(s) + 1) << PAGE_BITS)
         is_update = bool(al_seq or fr_seq)
         n_ops = len(al_seq) + len(lu_seq) + len(fr_seq) + len(rg_lo)
-        meta = {"keys": [tk.request.key for tk in batch]} if is_update else None
+        meta = {"keys": [tk.request.key for tk in main]} if is_update else None
         self._hook("gateway.batch.formed")
+
+        # pinned groups first — each is its own read-only engine step, so a
+        # reclaimed version rejects ONLY its own tickets (SNAPSHOT_GONE)
+        pinned_keys: list = []
+        n_pinned = 0
+        for as_of in sorted(pinned):
+            n_pinned += self._pinned_step(pinned[as_of], as_of, now, pinned_keys)
+
+        if not main:
+            if pinned_keys:
+                self._commits += 1
+                self.metrics["batches"] += 1
+                self.metrics["committed_ops"] += n_pinned
+                self.metrics["committed_requests"] += len(pinned_keys)
+            return PumpReport(pinned_keys, n_pinned, expired, None, {}, None)
         try:
             slots, range_out, stats = self.index.step(
                 allocs=(al_seq, al_page, al_slot) if al_seq else None,
@@ -499,21 +540,21 @@ class Gateway:
             # through like the process death they simulate
             unknown = is_update and not self.index.healthy
             code = UNKNOWN_COMMIT if unknown else ENGINE_FAILURE
-            for tk in batch:
+            for tk in main:
                 self._pending.pop(tk.request.key, None)
                 tk._fail(code, now=now, detail=str(e))
             self.metrics["engine_failures"] += 1
             self.metrics["rejected"][code] = (
-                self.metrics["rejected"].get(code, 0) + len(batch)
+                self.metrics["rejected"].get(code, 0) + len(main)
             )
-            return PumpReport([], n_ops, expired, code, {}, None)
+            return PumpReport(pinned_keys, n_ops + n_pinned, expired, code, {}, None)
         self._hook("gateway.step.done")  # commit is durable; acks not yet out
         self._commits += 1
         seq = self.index.durable_seq if is_update else None
         if seq is None:
             seq = self._commits
         slots_np = np.asarray(slots) if len(lu_seq) else None
-        for tk, (kind, start, length) in zip(batch, slices):
+        for tk, (kind, start, length) in zip(main, slices):
             if kind == "lookup":
                 value = slots_np[start : start + length]
             elif kind == "pages":
@@ -525,15 +566,74 @@ class Gateway:
             tk._resolve(value, now=now, seq=seq)
         self._hook("gateway.acked")
         self.metrics["batches"] += 1
-        self.metrics["committed_ops"] += n_ops
-        self.metrics["committed_requests"] += len(batch)
+        self.metrics["committed_ops"] += n_ops + n_pinned
+        self.metrics["committed_requests"] += len(main) + len(pinned_keys)
         self.metrics["restructure_retries"] += int(
             stats.get("restructure_retries", 0)
         )
         self.metrics["a2a_retries"] += int(stats.get("a2a_retries", 0))
         return PumpReport(
-            [tk.request.key for tk in batch], n_ops, expired, None, stats, seq
+            [tk.request.key for tk in main] + pinned_keys,
+            n_ops + n_pinned,
+            expired,
+            None,
+            stats,
+            seq,
         )
+
+    def _pinned_step(
+        self, tks: list[Ticket], as_of: int, now: float, out_keys: list
+    ) -> int:
+        """Serve one pinned-version group as a read-only ``as_of`` engine
+        step; returns the ops served (0 when the whole group rejects)."""
+        from repro.serve.kv_index import SnapshotGone
+
+        lu_seq, lu_page = [], []
+        rg_lo, rg_hi = [], []
+        slices: list[tuple] = []
+        for tk in tks:
+            req = tk.request
+            if req.kind == "lookup":
+                slices.append(("lookup", len(lu_seq), len(req.seqs)))
+                lu_seq += list(req.seqs)
+                lu_page += list(req.pages)
+            else:  # pages
+                slices.append(("pages", len(rg_lo), len(req.seqs)))
+                for s in req.seqs:
+                    rg_lo.append(int(s) << PAGE_BITS)
+                    rg_hi.append((int(s) + 1) << PAGE_BITS)
+        try:
+            slots, range_out, _stats = self.index.step(
+                lookups=(lu_seq, lu_page) if lu_seq else None,
+                ranges=(rg_lo, rg_hi) if rg_lo else None,
+                max_pages=self.max_pages,
+                range_budget=self.range_budget,
+                as_of=as_of,
+            )
+        except SnapshotGone as e:
+            for tk in tks:
+                self._pending.pop(tk.request.key, None)
+                self._rejected(tk, SNAPSHOT_GONE, now, detail=str(e))
+            return 0
+        except ValueError as e:
+            # never-committed version / window off: a caller error, typed
+            # INVALID so it is visibly non-retryable
+            for tk in tks:
+                self._pending.pop(tk.request.key, None)
+                self._rejected(tk, INVALID, now, detail=str(e))
+            return 0
+        seq = self._commits + 1
+        slots_np = np.asarray(slots) if lu_seq else None
+        for tk, (kind, start, length) in zip(tks, slices):
+            if kind == "lookup":
+                value = slots_np[start : start + length]
+            else:
+                value = self._range_slices(range_out, start, length)
+            self._pending.pop(tk.request.key, None)
+            self._remember(tk.request.key, seq)
+            tk._resolve(value, now=now, seq=seq)
+            out_keys.append(tk.request.key)
+        return len(lu_seq) + len(rg_lo)
 
     @staticmethod
     def _range_slices(range_out, start: int, length: int):

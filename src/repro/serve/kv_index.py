@@ -25,6 +25,18 @@ and routes every engine step through ``core.distributed.shard_apply_ops``
 — same mixed batch, same contract, one ``shard_map`` step — so ``pages_of``
 and friends are served across the mesh with no separate distributed code
 path (DESIGN.md §11).
+
+Two first-class time features ride the same batch model (DESIGN.md §14):
+
+* **TTL** — ``step(now=...)`` threads the serving plane's virtual clock
+  into the engine (rows whose deadline has passed are invisible and
+  reclaimed lazily), and ``getsets`` submits get-or-set-with-TTL ops
+  (``OP_EXPIRE``) in the same mixed batch as everything else;
+* **snapshot reads** — with ``snapshot_window > 0`` every committed
+  update step pins a version of the (immutable, functional) state;
+  ``step(as_of=v)`` serves reads against that pinned version at its
+  pinned clock, byte-identical no matter how many later batches commit,
+  until the window slides past it (:class:`SnapshotGone`).
 """
 
 from __future__ import annotations
@@ -33,7 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    NO_EXPIRY,
     OP_DELETE,
+    OP_EXPIRE,
     OP_INSERT,
     OP_POINT,
     OP_RANGE,
@@ -45,6 +59,13 @@ from repro.core import (
 )
 
 PAGE_BITS = 12  # up to 4096 pages (≈ pages × page_size tokens) per sequence
+
+
+class SnapshotGone(LookupError):
+    """The requested pinned version slid out of the retention window (its
+    buffers were released for reclamation) — the read must be re-issued
+    against a live version.  Typed so the gateway can map it to a
+    non-retryable ``SNAPSHOT_GONE`` rejection."""
 
 
 def _key(seq_ids, page_nos):
@@ -74,6 +95,11 @@ class KVPageIndex:
     snapshot + replay) instead of starting empty.  Pure-read steps never
     touch the log.  ``wal_fsync=False`` removes the durability boundary —
     it exists for the negative crash tests, never for serving.
+
+    ``snapshot_window`` > 0 retains that many recent committed versions
+    for ``step(as_of=...)`` snapshot reads; it also disables buffer
+    donation on update steps (pinned versions alias the pre-update
+    buffers, which must stay intact).
     """
 
     def __init__(
@@ -88,6 +114,7 @@ class KVPageIndex:
         snapshot_every: int = 64,
         wal_fsync: bool = True,
         crash_hook=None,
+        snapshot_window: int = 0,
     ):
         # seed with one sentinel key (outside the (seq,page) space) so the
         # structure is never empty
@@ -97,6 +124,9 @@ class KVPageIndex:
         self.routing = routing
         self._durable = None
         self._closed = False
+        self.snapshot_window = int(snapshot_window)
+        self._version = 0
+        self._pins: dict[int, tuple[object, int | None]] = {}
         seed_keys = jnp.array([MAX_VALID], jnp.int32)
         seed_vals = jnp.array([0], jnp.int32)
         if shards:
@@ -156,6 +186,9 @@ class KVPageIndex:
                     crash_hook=crash_hook,
                 )
             self._commit(self._durable.handle)
+        if self.snapshot_window:
+            live = self.sharded if self.mesh is not None else self.state
+            self._pins[0] = (live, None)
 
     # ---- the engine step: one mixed batch ------------------------------
     def step(
@@ -163,16 +196,26 @@ class KVPageIndex:
         *,
         allocs=None,
         lookups=None,
+        getsets=None,
         free_seqs=None,
         ranges=None,
         max_pages: int = 256,
         range_budget: int = 256,
         meta=None,
+        now: int | None = None,
+        as_of: int | None = None,
     ):
         """Submit one engine step's mixed work as a single sorted batch.
 
-        ``allocs``    — (seq_ids, page_nos, slots): register pages.
+        ``allocs``    — (seq_ids, page_nos, slots[, deadlines]): register
+                        pages; the optional 4th tuple gives each page an
+                        absolute expiry deadline (virtual time).
         ``lookups``   — (seq_ids, page_nos): resolve pages → slots.
+        ``getsets``   — (seq_ids, page_nos, slots, deadlines): get-or-set
+                        with TTL (``OP_EXPIRE``): a mapped page returns its
+                        EXISTING slot and has its deadline refreshed; an
+                        unmapped one is registered with the given slot and
+                        deadline and returns NOT_FOUND.
         ``free_seqs`` — sequence ids whose pages are all physically freed.
         ``ranges``    — (lo_keys, hi_keys): half-open ``[lo, hi)`` RANGE ops
                         in raw key space, answered against this step's
@@ -180,22 +223,35 @@ class KVPageIndex:
                         ``range_budget`` (see ``apply_ops``' truncation
                         contract).
 
+        ``now`` is the step's virtual clock: rows whose deadline has
+        passed (``exp <= now``) are reclaimed before the batch's updates
+        and invisible to its reads.  On a read-only step the expiry view
+        is computed on a throwaway functional copy — nothing is committed
+        or logged (sound: expiry is monotone in ``now``).
+
+        ``as_of`` pins the step to a retained committed version
+        (``snapshot_window``): the batch must be read-only, runs against
+        that version's state at its OWN pinned clock (``now`` must be
+        None), and returns byte-identical results for as long as the
+        version is retained; a reclaimed version raises
+        :class:`SnapshotGone`.
+
         ``meta`` (JSON-serializable, e.g. the gateway's idempotency keys)
         is logged inside the update batch's WAL record when durability is
         on and ignored otherwise — pure-read steps never log, so meta on a
         read-only step is dropped.
 
-        ``allocs`` and ``free_seqs`` must not share a sequence id: that
-        would put the same key in the batch as both INSERT and DELETE,
-        violating ``apply_ops``' one-update-op-per-key precondition (the
-        delete would silently win).  Checked here because the ids are host
-        values anyway.
+        ``allocs``, ``getsets`` and ``free_seqs`` must not overlap in key
+        space within one step: that would put two update ops on one key,
+        violating ``apply_ops``' one-update-op-per-key precondition.
+        Checked here because the ids are host values anyway.
 
-        Returns ``(lookup_slots, range_out, stats)``; ``lookup_slots`` is
-        aligned with the ``lookups`` input order (NOT_FOUND = -1 for
-        unmapped pages), and ``range_out`` is None without ``ranges``, else
-        a dict of the dense ``keys``/``vals`` arrays plus per-op
-        ``start``/``count`` aligned with the ``ranges`` input order.
+        Returns ``(slots, range_out, stats)``; ``slots`` is aligned with
+        the ``lookups`` input order followed by the ``getsets`` input
+        order (NOT_FOUND = -1 for unmapped pages), and ``range_out`` is
+        None without ``ranges``, else a dict of the dense ``keys``/``vals``
+        arrays plus per-op ``start``/``count`` aligned with the ``ranges``
+        input order.
         """
         # empty op lists are the same as absent ones — callers naturally pass
         # this step's (often empty) completion list every step, and an empty
@@ -206,6 +262,8 @@ class KVPageIndex:
             free_seqs = None
         if lookups is not None and len(np.asarray(lookups[0])) == 0:
             lookups = None
+        if getsets is not None and len(np.asarray(getsets[0])) == 0:
+            getsets = None
         if ranges is not None and len(np.asarray(ranges[0])) == 0:
             ranges = None
         if allocs is not None and free_seqs is not None:
@@ -218,15 +276,68 @@ class KVPageIndex:
                     "free_seqs within one step; free them the step after "
                     "their last allocation"
                 )
-        tags, keys, vals = [], [], []
-        n_alloc = n_lookup = 0
+        if getsets is not None:
+            gs_keys = {
+                (int(s) << PAGE_BITS) | int(p)
+                for s, p in zip(np.asarray(getsets[0]), np.asarray(getsets[1]))
+            }
+            if free_seqs is not None:
+                overlap = set(np.asarray(getsets[0]).tolist()) & set(
+                    np.asarray(free_seqs).tolist()
+                )
+                if overlap:
+                    raise ValueError(
+                        f"sequences {sorted(overlap)} appear in both getsets "
+                        "and free_seqs within one step"
+                    )
+            if allocs is not None:
+                al_keys = {
+                    (int(s) << PAGE_BITS) | int(p)
+                    for s, p in zip(np.asarray(allocs[0]), np.asarray(allocs[1]))
+                }
+                if al_keys & gs_keys:
+                    raise ValueError(
+                        "the same page appears in both allocs and getsets "
+                        "within one step"
+                    )
+
+        pinned = None
+        if as_of is not None:
+            if allocs is not None or getsets is not None or free_seqs is not None:
+                raise ValueError("as_of pins a read-only step; it cannot update")
+            if now is not None:
+                raise ValueError(
+                    "as_of reads run at the pinned version's own clock; "
+                    "pass now=None"
+                )
+            if self.snapshot_window <= 0:
+                raise ValueError("snapshot reads require snapshot_window > 0")
+            if not (0 <= as_of <= self._version):
+                raise ValueError(
+                    f"as_of={as_of} was never committed (version={self._version})"
+                )
+            if as_of not in self._pins:
+                raise SnapshotGone(
+                    f"version {as_of} left the {self.snapshot_window}-deep "
+                    f"retention window (current version {self._version})"
+                )
+            pinned, now = self._pins[as_of]
+
+        tags, keys, vals, exps = [], [], [], []
+        has_ttl = getsets is not None or (allocs is not None and len(allocs) == 4)
+        n_alloc = n_lookup = n_getset = 0
         if allocs is not None:
-            seq, page, slot = allocs
+            seq, page, slot = allocs[:3]
             k = _key(jnp.asarray(seq), jnp.asarray(page))
             n_alloc = k.shape[0]
             tags.append(jnp.full((n_alloc,), OP_INSERT, jnp.int32))
             keys.append(k)
             vals.append(jnp.asarray(slot, jnp.int32))
+            exps.append(
+                jnp.asarray(allocs[3], jnp.int32)
+                if len(allocs) == 4
+                else jnp.full((n_alloc,), NO_EXPIRY, jnp.int32)
+            )
         if lookups is not None:
             seq, page = lookups
             k = _key(jnp.asarray(seq), jnp.asarray(page))
@@ -234,6 +345,15 @@ class KVPageIndex:
             tags.append(jnp.full((n_lookup,), OP_POINT, jnp.int32))
             keys.append(k)
             vals.append(jnp.zeros((n_lookup,), jnp.int32))
+            exps.append(jnp.full((n_lookup,), NO_EXPIRY, jnp.int32))
+        if getsets is not None:
+            seq, page, slot, deadline = getsets
+            k = _key(jnp.asarray(seq), jnp.asarray(page))
+            n_getset = k.shape[0]
+            tags.append(jnp.full((n_getset,), OP_EXPIRE, jnp.int32))
+            keys.append(k)
+            vals.append(jnp.asarray(slot, jnp.int32))
+            exps.append(jnp.asarray(deadline, jnp.int32))
         if free_seqs is not None:
             seq = jnp.asarray(free_seqs, jnp.int32)
             k = (
@@ -243,6 +363,7 @@ class KVPageIndex:
             tags.append(jnp.full(k.shape, OP_DELETE, jnp.int32))
             keys.append(k)
             vals.append(jnp.zeros(k.shape, jnp.int32))
+            exps.append(jnp.full(k.shape, NO_EXPIRY, jnp.int32))
         n_before_range = sum(int(k.shape[0]) for k in keys)
         n_range = 0
         if ranges is not None:
@@ -252,6 +373,7 @@ class KVPageIndex:
             tags.append(jnp.full((n_range,), OP_RANGE, jnp.int32))
             keys.append(lo)
             vals.append(jnp.asarray(hi, jnp.int32))
+            exps.append(jnp.full((n_range,), NO_EXPIRY, jnp.int32))
         if not keys:
             return jnp.zeros((0,), jnp.int32), None, {}
 
@@ -264,8 +386,14 @@ class KVPageIndex:
             # up to a shard-count multiple so every chunk is equal
             n_shards = int(self.mesh.shape["shards"])
             pad_to = -(-pad_to // n_shards) * n_shards
-        ops, perm = make_ops(tag, key, val, pad_to=pad_to)
-        read_only = n_alloc == 0 and free_seqs is None
+        ops, perm = make_ops(
+            tag,
+            key,
+            val,
+            exps=jnp.concatenate(exps) if has_ttl else None,
+            pad_to=pad_to,
+        )
+        read_only = n_alloc == 0 and n_getset == 0 and free_seqs is None
         has_ranges = n_range > 0
         if read_only:
             # pure-read step (lookups and/or ranges): the state is
@@ -280,22 +408,26 @@ class KVPageIndex:
                 impl="reference",
                 max_results=range_budget,
                 has_ranges=has_ranges,
+                now=now,
+                handle=pinned,
             )
-        elif n_alloc == 0:
+        elif n_alloc == 0 and n_getset == 0:
             # only inserts can overflow — free steps skip the restructure-
             # and-retry wrapper (and its host sync), and since no retry can
             # replay the batch, the old state's buffers are donated to the
-            # step (fused path; a no-op on CPU)
+            # step (fused path; a no-op on CPU) — unless pinned snapshot
+            # versions alias them (snapshot_window > 0)
             new, results, stats = self._apply(
                 ops,
                 impl=self.impl,
-                donate=True,
+                donate=self.snapshot_window == 0,
                 max_results=range_budget,
                 has_updates=True,
                 has_ranges=has_ranges,
                 meta=meta,
+                now=now,
             )
-            self._commit(new)
+            self._commit(new, bump=True, now=now)
         else:
             # allocation steps go through the safe driver; its retry path
             # regrows (sharded: rebalances fences via shard_restructure —
@@ -308,8 +440,9 @@ class KVPageIndex:
                 has_updates=True,
                 has_ranges=has_ranges,
                 meta=meta,
+                now=now,
             )
-            self._commit(new)
+            self._commit(new, bump=True, now=now)
         values = unsort(results["value"], perm[: key.shape[0]])
         range_out = None
         if n_range:
@@ -320,10 +453,19 @@ class KVPageIndex:
                 "start": unsort(results["range_start"], sub),
                 "count": unsort(results["range_count"], sub),
             }
-        return values[n_alloc : n_alloc + n_lookup], range_out, stats
+        return values[n_alloc : n_alloc + n_lookup + n_getset], range_out, stats
 
     def _apply(
-        self, ops, *, safe=False, donate=False, has_ranges=False, meta=None, **kw
+        self,
+        ops,
+        *,
+        safe=False,
+        donate=False,
+        has_ranges=False,
+        meta=None,
+        now=None,
+        handle=None,
+        **kw,
     ):
         """Dispatch one engine batch to the local or sharded executor.
 
@@ -331,6 +473,9 @@ class KVPageIndex:
         sharded path adds the routing mode and the host-known ``has_ranges``
         hint (the local ``apply_ops`` needs no such hint — its range phase
         is a traced ``lax.cond``).
+
+        ``handle`` overrides the state the batch runs against (pinned
+        snapshot reads — read-only by construction, never committed).
 
         With durability on, every update batch commits through
         ``DurableFliX.apply`` — WAL-ahead, restructure-and-retry inside —
@@ -345,39 +490,54 @@ class KVPageIndex:
                 ops,
                 max_results=kw.pop("max_results", DEFAULT_MAX_RESULTS),
                 meta=meta,
+                now=now,
             )
             return self._durable.handle, results, stats
         if self.mesh is not None:
             from repro.core.distributed import shard_apply_ops, shard_apply_ops_safe
 
+            sharded = self.sharded if handle is None else handle
             if safe:
                 return shard_apply_ops_safe(
-                    self.sharded,
+                    sharded,
                     ops,
                     self.mesh,
                     routing=self.routing,
                     has_ranges=has_ranges,
+                    now=now,
                     **kw,
                 )
             return shard_apply_ops(
-                self.sharded,
+                sharded,
                 ops,
                 self.mesh,
                 routing=self.routing,
                 donate=donate,
                 has_ranges=has_ranges,
+                now=now,
                 **kw,
             )
+        state = self.state if handle is None else handle
         if safe:
-            return apply_ops_safe(self.state, ops, **kw)
-        return apply_ops(self.state, ops, donate=donate, **kw)
+            return apply_ops_safe(state, ops, now=now, **kw)
+        return apply_ops(state, ops, donate=donate, now=now, **kw)
 
-    def _commit(self, new):
-        """Install an update step's result (local state or sharded index)."""
+    def _commit(self, new, *, bump: bool = False, now: int | None = None):
+        """Install an update step's result (local state or sharded index);
+        ``bump`` advances the version counter and, with a retention
+        window, pins the committed version (plus its clock) for
+        ``step(as_of=...)`` until the window slides past it."""
         if self.mesh is not None:
             self.sharded = new
         else:
             self.state = new
+        if bump:
+            self._version += 1
+            if self.snapshot_window:
+                self._pins[self._version] = (new, now)
+                low = self._version - self.snapshot_window
+                for v in [v for v in self._pins if v <= low]:
+                    del self._pins[v]
 
     # ---- per-type conveniences (each is still one engine step) ---------
     def allocate(self, seq_ids, page_nos, slots):
@@ -415,6 +575,26 @@ class KVPageIndex:
     def live_pages(self) -> int:
         state = self.sharded.state if self.mesh is not None else self.state
         return int(state.live_keys()) - 1  # minus the seed key
+
+    def getset(self, seq_ids, page_nos, slots, deadlines, *, now=None):
+        """Batch get-or-set with TTL (one ``OP_EXPIRE`` engine step):
+        returns the existing slot (deadline refreshed) for mapped pages,
+        NOT_FOUND for pages registered by this call."""
+        slots_out, _, _ = self.step(
+            getsets=(seq_ids, page_nos, slots, deadlines), now=now
+        )
+        return slots_out
+
+    # ---- snapshot versions ----------------------------------------------
+    @property
+    def version(self) -> int:
+        """Count of committed update steps — the newest ``as_of`` value."""
+        return self._version
+
+    @property
+    def retained_versions(self) -> list[int]:
+        """Versions currently answerable via ``step(as_of=...)``."""
+        return sorted(self._pins)
 
     # ---- durability / health -------------------------------------------
     @property

@@ -1,0 +1,201 @@
+"""Mocked-clock differential model for TTL/expiry (DESIGN.md §14).
+
+Three pieces, shared by ``test_ttl_property.py`` and ``test_system.py``:
+
+* ``VirtualClock`` — the only source of time in the whole TTL suite.  It
+  is a plain integer the tests advance by hand; nothing here (or in the
+  engine under test) may consult the wall clock.
+* ``TTLModel`` — a pure ``dict`` oracle for the engine's TTL semantics:
+  expiry is a pre-pass over the *pre-batch* state (a row is expired iff
+  ``exp <= now``, i.e. exactly AT its deadline), then one update pass
+  (INSERT sets ``(val, exp)``, DELETE removes, EXPIRE is get-or-set:
+  returns the stored value and refreshes the deadline on a hit, inserts
+  and returns NOT_FOUND on a miss), then reads against the post-update
+  state.  Rows written in the same batch are visible to that batch's
+  reads even when their deadline is already past — they fall to the
+  NEXT batch's expiry pre-pass.
+* ``forbid_wallclock`` — the negative control: while active, any
+  ``time.time``/``monotonic``/``perf_counter`` call issued *from a
+  ``repro.*`` module* raises.  Callers outside that namespace (JAX's own
+  tracing machinery stamps trace events) pass through untouched, so the
+  guard trips on exactly the bug it exists for: an engine that derives
+  expiry from the wall clock instead of the threaded ``now``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import sys
+import time
+
+import numpy as np
+
+from repro.core.expiry import NO_EXPIRY
+from repro.core.ops import (
+    OP_DELETE,
+    OP_EXPIRE,
+    OP_INSERT,
+    OP_POINT,
+    OP_RANGE,
+    OP_SUCCESSOR,
+)
+from repro.core.state import EMPTY, NOT_FOUND
+
+UPDATE_TAGS = (OP_INSERT, OP_DELETE, OP_EXPIRE)
+
+
+class VirtualClock:
+    """An explicit integer clock: the tests own time, not the OS."""
+
+    def __init__(self, start: int = 0):
+        self.now = int(start)
+
+    def advance(self, dt: int) -> int:
+        assert dt >= 0, "the virtual clock never runs backwards"
+        self.now += int(dt)
+        return self.now
+
+
+class TTLModel:
+    """Dict oracle: ``key -> (val, exp)`` under the §14 batch semantics."""
+
+    def __init__(self, pairs=None):
+        # pairs: iterable of (key, val) or (key, val, exp)
+        self.data: dict[int, tuple[int, int]] = {}
+        for p in pairs or ():
+            k, v, *rest = (int(x) for x in p)
+            self.data[k] = (v, rest[0] if rest else int(NO_EXPIRY))
+
+    def live(self) -> list[int]:
+        return sorted(self.data)
+
+    def expire(self, now: int) -> int:
+        """The expiry pre-pass: reclaim every row with ``exp <= now``."""
+        dead = [k for k, (_, e) in self.data.items() if e <= now]
+        for k in dead:
+            del self.data[k]
+        return len(dead)
+
+    def apply(self, tags, keys, vals, exps=None, *, now: int | None = None):
+        """One mixed batch.  Returns ``(values, n_expired)`` with
+        ``values`` in the ORIGINAL op order (compare against
+        ``core.unsort(results["value"], perm)``); mutates the model."""
+        tags = np.asarray(tags)
+        keys = np.asarray(keys)
+        vals = np.asarray(vals)
+        exps = (
+            np.full(keys.shape, int(NO_EXPIRY), np.int64)
+            if exps is None
+            else np.asarray(exps)
+        )
+        n_expired = 0 if now is None else self.expire(now)
+        values = np.full(len(tags), int(NOT_FOUND), np.int64)
+        for i, (t, k, v, e) in enumerate(zip(tags, keys, vals, exps)):
+            t, k, v, e = int(t), int(k), int(v), int(e)
+            if t == OP_INSERT:
+                self.data[k] = (v, e)
+            elif t == OP_DELETE:
+                self.data.pop(k, None)
+            elif t == OP_EXPIRE:
+                if k in self.data:  # hit: return stored, refresh deadline
+                    stored, _ = self.data[k]
+                    self.data[k] = (stored, e)
+                    values[i] = stored
+                else:  # miss: insert, report the miss
+                    self.data[k] = (v, e)
+        for i, (t, k) in enumerate(zip(tags, keys)):
+            t, k = int(t), int(k)
+            if t == OP_POINT:
+                values[i] = self.data[k][0] if k in self.data else int(NOT_FOUND)
+            elif t == OP_SUCCESSOR:
+                succ = [x for x in self.data if x >= k]
+                values[i] = self.data[min(succ)][0] if succ else int(NOT_FOUND)
+        return values, n_expired
+
+    def range_segments(self, tags, keys, vals, max_results: int):
+        """Expected dense RANGE output against the CURRENT (post-apply)
+        state, in sorted batch order — mirror of the engine's packing:
+        earlier sorted ops win the budget, each op keeps a prefix of its
+        smallest keys.  Returns (dense_keys, dense_vals, starts, counts,
+        truncated) with starts/counts keyed by original op index."""
+        live = np.array(self.live(), dtype=np.int64)
+        lv = {k: v for k, (v, _) in self.data.items()}
+        order = np.argsort(np.asarray(keys), kind="stable")
+        dense_k, dense_v, starts, counts = [], [], {}, {}
+        truncated = 0
+        cursor = 0
+        for i in order:
+            if int(tags[i]) != OP_RANGE:
+                continue
+            lo, hi = int(keys[i]), int(vals[i])
+            seg = live[(live >= lo) & (live < hi)]
+            n = min(len(seg), max_results - cursor)
+            if n < len(seg):
+                truncated += 1
+            starts[int(i)], counts[int(i)] = cursor, n
+            dense_k.extend(int(k) for k in seg[:n])
+            dense_v.extend(lv[int(k)] for k in seg[:n])
+            cursor += n
+        return dense_k, dense_v, starts, counts, truncated
+
+
+def check_one_update_op_per_key(tags, keys) -> bool:
+    """The engine precondition EXPIRE shares with INSERT/DELETE."""
+    upd = [int(k) for t, k in zip(tags, keys) if int(t) in UPDATE_TAGS]
+    return len(upd) == len(set(upd))
+
+
+_GUARDED = ("time", "monotonic", "perf_counter", "time_ns", "monotonic_ns")
+
+
+@contextlib.contextmanager
+def forbid_wallclock(namespace: str = "repro"):
+    """Fail the test on any wall-clock read from ``namespace`` modules."""
+    real = {n: getattr(time, n) for n in _GUARDED}
+
+    def make_guard(name, orig):
+        def guard(*args, **kwargs):
+            mod = sys._getframe(1).f_globals.get("__name__", "")
+            if mod == namespace or mod.startswith(namespace + "."):
+                raise AssertionError(
+                    f"wall-clock read: time.{name} called from {mod} — "
+                    f"TTL expiry must use the threaded virtual `now`"
+                )
+            return orig(*args, **kwargs)
+
+        return guard
+
+    for n, o in real.items():
+        setattr(time, n, make_guard(n, o))
+    try:
+        yield
+    finally:
+        for n, o in real.items():
+            setattr(time, n, o)
+
+
+@contextlib.contextmanager
+def huge_wallclock(at: int = 1 << 40):
+    """Pin ``time.time``/``time_ns`` absurdly far in the future.  If any
+    engine layer derived expiry from the wall clock, every TTL'd key
+    would vanish instantly; under the virtual clock nothing changes."""
+    real = {n: getattr(time, n) for n in ("time", "time_ns")}
+    time.time = lambda: float(at)
+    time.time_ns = lambda: int(at) * 1_000_000_000
+    try:
+        yield
+    finally:
+        for n, o in real.items():
+            setattr(time, n, o)
+
+
+__all__ = [
+    "EMPTY",
+    "NOT_FOUND",
+    "NO_EXPIRY",
+    "TTLModel",
+    "VirtualClock",
+    "check_one_update_op_per_key",
+    "forbid_wallclock",
+    "huge_wallclock",
+]

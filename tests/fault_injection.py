@@ -39,8 +39,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.checkpoint import DurableFliX, LocalEngine  # noqa: E402
 from repro.checkpoint.serialize import canonical_state_bytes  # noqa: E402
+from repro.core.expiry import NO_EXPIRY  # noqa: E402
 from repro.core.ops import (  # noqa: E402
     OP_DELETE,
+    OP_EXPIRE,
     OP_INSERT,
     OP_POINT,
     OP_RANGE,
@@ -116,6 +118,120 @@ def oracle_canonical(n_batches: int, seed: int = 0, engine=None) -> list[bytes]:
         )
         out.append(canonical_state_bytes(engine.flix(handle)))
     return out
+
+
+# ---------------------------------------------------------------------------
+# the TTL workload (DESIGN.md §14): same determinism contract, plus a
+# virtual clock that is itself a pure function of the batch seq — batch t
+# executes at now = t * TTL_TICK, the WAL logs that now, and recovery
+# replays each batch at its LOGGED clock (never the wall clock), so an
+# interrupted run, its resumption, and the oracle reach byte-identical
+# expiry state no matter when the processes actually ran.
+# ---------------------------------------------------------------------------
+
+TTL_TICK = 16  # virtual time elapsing between consecutive batches
+
+
+def initial_pairs_ttl(seed: int = 0):
+    """Initial pairs with a deadline column: ~40% carry TTLs spread over
+    the first half of the workload's clock, the rest never expire."""
+    keys, vals = initial_pairs(seed)
+    rng = np.random.default_rng((seed + 1) * 77_000)
+    exps = np.where(
+        rng.random(keys.shape) < 0.4,
+        rng.integers(1, 10 * TTL_TICK, keys.shape),
+        int(NO_EXPIRY),
+    ).astype(np.int32)
+    return keys, vals, exps
+
+
+def make_batch_host_ttl(t: int, seed: int = 0):
+    """TTL batch ``t``: ``(tag, key, val, exp, now, max_results)``, host
+    arrays sorted by key, ``now = t * TTL_TICK``.  Pure function of
+    ``(t, seed)`` — clock included."""
+    rng = np.random.default_rng((seed + 3) * 10_000 + t)
+    now = t * TTL_TICK
+    keys = rng.choice(KEY_SPACE, BATCH, replace=False).astype(np.int32)
+    tag = rng.choice(
+        np.array([OP_INSERT, OP_EXPIRE, OP_DELETE, OP_POINT, OP_SUCCESSOR], np.int32),
+        BATCH,
+        p=[0.3, 0.2, 0.15, 0.2, 0.15],
+    )
+    tag[: 2 + t % 3] = OP_RANGE  # a few ranges ride along
+    vals = (keys * 13 + t).astype(np.int32)
+    is_range = tag == OP_RANGE
+    vals[is_range] = np.minimum(keys[is_range] + 200, KEY_SPACE)  # hi bound
+    # deadlines cluster around now: some dead-on-arrival (§14 edge), most
+    # fall due within the next few batches, EXPIRE always refreshes forward
+    writes = (tag == OP_INSERT) | (tag == OP_EXPIRE)
+    exp = np.full(BATCH, int(NO_EXPIRY), np.int32)
+    exp[writes] = now + rng.integers(
+        -TTL_TICK // 2, 5 * TTL_TICK, int(writes.sum())
+    ).astype(np.int32)
+    order = np.argsort(keys, kind="stable")
+    max_results = 32 if t % 2 else 64
+    return tag[order], keys[order], vals[order], exp[order], now, max_results
+
+
+def oracle_canonical_ttl(n_batches: int, seed: int = 0, engine=None) -> list[bytes]:
+    """TTL analogue of ``oracle_canonical``: canonical payload (expiry
+    column included) after each seq of the uninterrupted TTL run."""
+    engine = engine or make_engine()
+    handle = engine.rebuild(*initial_pairs_ttl(seed))
+    out = [canonical_state_bytes(engine.flix(handle))]
+    for t in range(1, n_batches + 1):
+        tag, key, val, exp, now, mr = make_batch_host_ttl(t, seed)
+        handle, _res, _stats, _r = engine.apply(
+            handle, OpBatch.from_host(tag, key, val, exp), max_results=mr, now=now
+        )
+        out.append(canonical_state_bytes(engine.flix(handle)))
+    return out
+
+
+def run_workload_ttl(
+    directory,
+    n_batches: int,
+    *,
+    seed: int = 0,
+    snapshot_every: int = SNAPSHOT_EVERY,
+    full_every: int = FULL_EVERY,
+    fsync: bool = True,
+    crash_hook=None,
+    engine=None,
+    ack=None,
+):
+    """TTL analogue of ``run_workload``: create-or-recover in
+    ``directory`` and apply TTL batches (each at its own virtual ``now``)
+    until seq reaches ``n_batches``."""
+    engine = engine or make_engine()
+    if DurableFliX.exists(directory):
+        dur = DurableFliX.open(
+            directory,
+            engine=engine,
+            snapshot_every=snapshot_every,
+            full_every=full_every,
+            fsync=fsync,
+            crash_hook=crash_hook,
+        )
+    else:
+        dur = DurableFliX.create(
+            directory,
+            engine.rebuild(*initial_pairs_ttl(seed)),
+            engine=engine,
+            snapshot_every=snapshot_every,
+            full_every=full_every,
+            fsync=fsync,
+            crash_hook=crash_hook,
+        )
+    while dur.seq < n_batches:
+        tag, key, val, exp, now, mr = make_batch_host_ttl(dur.seq + 1, seed)
+        dur.apply(
+            OpBatch.from_host(tag, key, val, exp), max_results=mr, now=now
+        )
+        if ack is not None:
+            ack(dur.seq)
+    dur.close()
+    return dur.seq
 
 
 # ---------------------------------------------------------------------------

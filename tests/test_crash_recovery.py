@@ -285,7 +285,7 @@ def test_recovery_snapshot_replaces_corrupt_dir_at_its_seq(tmp_path, oracle):
     # recovery falls back to seq 3, replays 4..6 (>= snapshot_every) and
     # snapshots at 6 — over the corrupt dir
     assert fi.recover_and_check(d, oracle, acked=6) == 6
-    _keys, _vals, m = load_snapshot_chain(d, 6)  # validates cleanly now
+    _keys, _vals, _exps, m = load_snapshot_chain(d, 6)  # validates cleanly now
     assert m["seq"] == 6
 
 

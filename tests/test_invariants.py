@@ -1,11 +1,17 @@
-"""Structural invariants I1–I5 under randomized operation sequences.
+"""Structural invariants I1–I6 under randomized operation sequences.
 
-``state.py`` documents the five invariants and this file checks them: every
+``state.py`` documents the invariants and this file checks them: every
 mutating operation must map an invariant-satisfying state to an
 invariant-satisfying state (overflow-flagged states excepted — their
 contents are declared untrustworthy until restructuring).  The reusable
 checker lives in ``repro.core.invariants`` so kernels and drivers can
 assert it too.
+
+I6 (expiry liveness, DESIGN.md §14) gets its own positive + negative
+block at the bottom: the checker must accept every engine-produced TTL
+state and *reject* a hand-corrupted one — a leaked expired row (live key
+past its deadline at the threaded ``now``) and a stale deadline parked
+on an empty slot both raise.
 """
 
 import jax.numpy as jnp
@@ -129,6 +135,115 @@ def test_check_range_results_catches_violations(rng):
     bad2["range_count"][np.argmax(np.asarray(ops.tag) == core.OP_RANGE)] += 1
     with pytest.raises(AssertionError):
         core.check_range_results(ops, bad2, max_results=64)
+
+
+# ---------------------------------------------------------------------------
+# I6: expiry liveness (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def _ttl_state(rng, *, now=100):
+    """A TTL state the engine itself produced and already expired at
+    ``now`` — every surviving deadline is > now by construction."""
+    from repro.checkpoint.serialize import state_from_pairs
+
+    keys = np.sort(rng.choice(5000, 300, replace=False)).astype(np.int32)
+    vals = (keys * 3).astype(np.int32)
+    exps = np.where(
+        rng.random(300) < 0.5, now + rng.integers(1, 500, 300), core.NO_EXPIRY
+    ).astype(np.int32)
+    st = state_from_pairs(keys, vals, exps, node_size=8, nodes_per_bucket=4)
+    ops, _ = core.make_ops(
+        np.array([core.OP_POINT], np.int32),
+        np.array([0], np.int32),
+        np.array([0], np.int32),
+        pad_to=8,
+    )
+    st, _, _ = core.apply_ops(st, ops, impl="reference", now=now)
+    return st
+
+
+def test_i6_accepts_engine_produced_ttl_states(rng):
+    """Positive control: post-expiry states pass I6 at the stepped now
+    (and at any earlier now — expiry is monotone)."""
+    st = _ttl_state(rng, now=100)
+    check_invariants(st, now=100)
+    check_invariants(st, now=0)
+    check_invariants(st)  # structural half only
+
+
+def test_i6_rejects_leaked_expired_row(rng):
+    """A live row whose deadline is <= now must have been reclaimed —
+    planting one makes the checker raise."""
+    import dataclasses
+
+    import jax.numpy as jnp2
+
+    st = _ttl_state(rng, now=100)
+    keys = np.asarray(st.keys)
+    b, j, s = np.argwhere(keys != int(core.EMPTY))[0]
+    bad_exps = np.asarray(st.exps).copy()
+    bad_exps[b, j, s] = 100  # exp <= now: expired but still live
+    bad = dataclasses.replace(st, exps=jnp2.asarray(bad_exps))
+    with pytest.raises(AssertionError, match="past their expiry deadline"):
+        check_invariants(bad, now=100)
+    # without a clock the liveness half is (correctly) unjudgeable
+    check_invariants(bad, now=99)
+    check_invariants(bad)
+
+
+def test_i6_rejects_stale_deadline_on_empty_slot(rng):
+    """Reclaimed/empty slots must hold NO_EXPIRY so a stale deadline can
+    never leak onto a future occupant of the slot."""
+    import dataclasses
+
+    import jax.numpy as jnp2
+
+    st = _ttl_state(rng, now=100)
+    keys = np.asarray(st.keys)
+    b, j, s = np.argwhere(keys == int(core.EMPTY))[0]
+    bad_exps = np.asarray(st.exps).copy()
+    bad_exps[b, j, s] = 12345
+    bad = dataclasses.replace(st, exps=jnp2.asarray(bad_exps))
+    with pytest.raises(AssertionError, match="stale expiry deadline"):
+        check_invariants(bad)  # structural: fails even without a now
+
+
+def test_i6_wired_through_apply_ops_safe(rng):
+    """``apply_ops_safe(validate=True, now=...)`` runs the I6 check on
+    every validated step — including the §14 same-batch edge, where a
+    batch writing a dead-on-arrival row must NOT false-positive."""
+    from repro.checkpoint.serialize import state_from_pairs
+
+    st = state_from_pairs(
+        np.array([10, 20], np.int32),
+        np.array([1, 2], np.int32),
+        np.array([500, core.NO_EXPIRY], np.int32),
+        node_size=4,
+        nodes_per_bucket=4,
+    )
+    now = 50
+    tags = np.array([core.OP_INSERT, core.OP_POINT], np.int32)
+    keys = np.array([30, 30], np.int32)
+    vals = np.array([3, 0], np.int32)
+    exps = np.array([now, core.NO_EXPIRY], np.int32)  # deadline == now
+    ops, perm = core.make_ops(tags, keys, vals, exps=jnp.asarray(exps), pad_to=8)
+    st, res, _ = core.apply_ops_safe(
+        st, ops, impl="reference", now=now, validate=True
+    )
+    assert int(np.asarray(core.unsort(res["value"], perm))[1]) == 3
+    # next batch's pre-pass reclaims it; liveness IS asserted there
+    ops2, _ = core.make_ops(
+        np.array([core.OP_NOP], np.int32),
+        np.array([0], np.int32),
+        np.array([0], np.int32),
+        pad_to=8,
+    )
+    st, _, stats = core.apply_ops_safe(
+        st, ops2, impl="reference", now=now, validate=True
+    )
+    assert int(stats["expired"]) == 1
+    check_invariants(st, now=now)
 
 
 def test_overflowed_state_recovers_via_restructure(rng):

@@ -303,3 +303,99 @@ def test_sharded_kv_index_serves_like_local(routing):
     pg, sl, cnt = kv.pages_of(50, max_pages=1024)
     assert int(cnt) == 600
     assert (np.asarray(sl)[:600] == pages + 9000).all()
+
+
+# ---------------------------------------------------------------------------
+# TTL/expiry parity across the mesh (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("routing", ["replicated", "a2a"])
+def test_ttl_matches_single_device(rng, routing):
+    """The TTL path — expiry pre-pass at the batch's virtual ``now``,
+    TTL'd inserts (some dead-on-arrival), and EXPIRE get-or-set — is
+    result-identical between ``shard_apply_ops`` and the single-device
+    engine, including the psum'd ``expired`` stat."""
+    from repro.checkpoint.serialize import state_from_pairs
+
+    n, now = 2048, 1000
+    keys = np.sort(rng.permutation(KEY_SPACE)[:n]).astype(np.int32)
+    vals = np.arange(n, dtype=np.int32)
+    # a quarter carry deadlines straddling now: some already expired
+    exps = np.where(
+        rng.random(n) < 0.25, rng.integers(1, 2 * now, n), core.NO_EXPIRY
+    ).astype(np.int32)
+    st = state_from_pairs(keys, vals, exps, node_size=16, nodes_per_bucket=8)
+    mesh = dist.make_shard_mesh(4)
+    idx = dist.shard_build(
+        jnp.asarray(keys),
+        jnp.asarray(vals),
+        mesh,
+        node_size=16,
+        nodes_per_bucket=8,
+        sorted_exps=jnp.asarray(exps),
+    )
+
+    absent = np.setdiff1d(
+        rng.integers(0, KEY_SPACE + 20_000, 4096).astype(np.int32), keys
+    )
+    ins, gs_miss = absent[:96], absent[96:144]
+    gs_hit = rng.choice(keys, 48, replace=False).astype(np.int32)
+    dels = rng.choice(
+        np.setdiff1d(keys, gs_hit), 96, replace=False
+    ).astype(np.int32)
+    pts = rng.integers(0, KEY_SPACE, 256).astype(np.int32)
+    scs = rng.integers(0, KEY_SPACE, 128).astype(np.int32)
+    los = np.concatenate([rng.integers(0, KEY_SPACE, 15), [0]]).astype(np.int32)
+    his = np.concatenate(
+        [los[:15] + rng.integers(1, 2_000, 15), [KEY_SPACE + 20_000]]
+    ).astype(np.int32)
+    tags = np.concatenate([
+        np.full(96, core.OP_INSERT),
+        np.full(96, core.OP_EXPIRE),
+        np.full(96, core.OP_DELETE),
+        np.full(256, core.OP_POINT),
+        np.full(128, core.OP_SUCCESSOR),
+        np.full(16, core.OP_RANGE),
+    ]).astype(np.int32)
+    bk = np.concatenate(
+        [ins, gs_miss, gs_hit, dels, pts, scs, los]
+    ).astype(np.int32)
+    bv = np.concatenate([
+        np.arange(96, dtype=np.int32) + 7_000_000,
+        np.arange(96, dtype=np.int32) + 8_000_000,
+        np.zeros(96 + 256 + 128, np.int32),
+        his,
+    ]).astype(np.int32)
+    bexp = np.concatenate([
+        now + rng.integers(-5, 200, 96).astype(np.int32),  # incl. dead rows
+        now + rng.integers(1, 200, 96).astype(np.int32),
+        np.full(96 + 256 + 128 + 16, core.NO_EXPIRY, np.int32),
+    ]).astype(np.int32)
+    ops, _ = core.make_ops(tags, bk, bv, exps=jnp.asarray(bexp), pad_to=1024)
+
+    mr = 512
+    s2, want_res, want_stats = core.apply_ops(
+        st, ops, impl="reference", max_results=mr, now=now
+    )
+    new_idx, res, stats = dist.shard_apply_ops(
+        idx, ops, mesh, routing=routing, max_results=mr, now=now
+    )
+    _assert_identical(res, stats, want_res, want_stats, f"ttl/{routing}")
+    assert int(stats["expired"]) == int(want_stats["expired"]) > 0
+
+    # advance the clock: the NEXT batch's pre-pass must reclaim the same
+    # rows on both engines (covers deadlines written by this batch)
+    later = now + 100
+    probe = np.sort(np.concatenate([ins, gs_hit, keys[:256]]))
+    qops, _ = core.make_ops(
+        np.full(probe.shape, core.OP_POINT, np.int32), probe, pad_to=1024
+    )
+    _, want2, wstats2 = core.apply_ops(
+        s2, qops, impl="reference", max_results=8, now=later
+    )
+    _, got2, gstats2 = dist.shard_apply_ops(
+        new_idx, qops, mesh, routing=routing, max_results=8, now=later
+    )
+    assert (np.asarray(got2["value"]) == np.asarray(want2["value"])).all()
+    assert int(gstats2["expired"]) == int(wstats2["expired"]) > 0

@@ -135,8 +135,8 @@ def test_roundtrip_through_canonical_bytes(rng):
     ops = _mixed_ops(rng)
     s1, _, _ = core.apply_ops(st0, ops, impl="reference")
     data = canonical_state_bytes(s1)
-    keys, vals = parse_canonical(data)
-    rebuilt = state_from_pairs(keys, vals)
+    keys, vals, exps = parse_canonical(data)
+    rebuilt = state_from_pairs(keys, vals, exps)
     assert canonical_state_bytes(rebuilt) == data
 
 
@@ -164,7 +164,7 @@ def test_header_versioned_and_strict(rng):
     st0 = _state(rng, n=50)
     data = canonical_state_bytes(st0)
     assert data[:8] == MAGIC
-    k, v = parse_canonical(data)
+    k, v, _e = parse_canonical(data)
     assert len(k) == 50 and (np.diff(k.astype(np.int64)) > 0).all()
     with pytest.raises(SnapshotFormatError):
         parse_canonical(data + b"\x00")  # trailing bytes
@@ -189,13 +189,13 @@ def test_segment_concat_is_canonical_payload(rng):
     the canonical payload, and per-bucket crcs match a direct recompute —
     the identity delta snapshots rely on."""
     st0 = _state(rng)
-    lens, seg_k, seg_v = bucket_segments(st0)
-    assert pairs_to_bytes(seg_k, seg_v) == canonical_state_bytes(st0)
-    crcs = segment_crcs(lens, seg_k, seg_v)
+    lens, seg_k, seg_v, seg_e = bucket_segments(st0)
+    assert pairs_to_bytes(seg_k, seg_v, seg_e) == canonical_state_bytes(st0)
+    crcs = segment_crcs(lens, seg_k, seg_v, seg_e)
     assert len(crcs) == st0.keys.shape[0]
     # a partial fetch of a few buckets matches the full fetch's slices
     sel = [0, 2, len(lens) - 1]
-    plens, pk, pv = bucket_segments(st0, sel)
+    plens, pk, pv, _pe = bucket_segments(st0, sel)
     bounds = np.concatenate([[0], np.cumsum(lens)])
     off = 0
     for i, b in enumerate(sel):

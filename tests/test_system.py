@@ -163,3 +163,148 @@ def test_train_driver_resume_cli(tmp_path):
     )
     assert p2.returncode == 0, p2.stderr
     assert "resumed from step 12" in p2.stdout
+
+
+# ---------------------------------------------------------------------------
+# versioned snapshot reads (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def _range_bytes(idx, as_of=None, hi=1 << 20):
+    _, rr, _ = idx.step(ranges=([0], [hi]), as_of=as_of, range_budget=512)
+    return np.asarray(rr["keys"]).tobytes() + np.asarray(rr["vals"]).tobytes()
+
+
+def test_pinned_range_byte_identical_across_later_batches():
+    """THE snapshot-read property: a RANGE pinned to ``as_of=v`` returns
+    byte-identical output while ≥3 later update batches commit, and the
+    unpinned read sees every later batch."""
+    from repro.serve.kv_index import SnapshotGone
+
+    idx = KVPageIndex(snapshot_window=8)
+    seqs = np.arange(6)
+    idx.allocate(seqs, np.zeros(6, int), seqs * 100)
+    v = idx.version
+    base = _range_bytes(idx, as_of=v)
+    assert base == _range_bytes(idx)  # pin of the head == live view
+    for extra in range(4):  # four later update batches
+        idx.step(allocs=([50 + extra], [0], [9000 + extra]))
+        assert _range_bytes(idx, as_of=v) == base  # still the old cut
+        assert _range_bytes(idx) != base  # live view moved on
+    assert idx.version == v + 4
+    assert v in idx.retained_versions
+    # updates can never ride a pinned read
+    with pytest.raises(ValueError):
+        idx.step(allocs=([99], [0], [1]), as_of=v)
+    # a version that never existed is rejected loudly, not silently stale
+    with pytest.raises(ValueError):
+        idx.step(ranges=([0], [4]), as_of=idx.version + 1)
+    # slide the window past v: the pin is reclaimed, typed as such
+    for extra in range(8):
+        idx.step(allocs=([70 + extra], [0], [1]))
+    with pytest.raises(SnapshotGone):
+        idx.step(ranges=([0], [4]), as_of=v)
+    assert v not in idx.retained_versions
+
+
+def test_pinned_read_replays_at_pinned_clock():
+    """A pin captures its commit's virtual ``now``: pinned reads keep
+    seeing rows that expire in LATER batches (the snapshot is a
+    consistent cut in both key space and time)."""
+    idx = KVPageIndex(snapshot_window=8)
+    seqs = np.arange(4)
+    # pages with deadline 10, registered at now=0
+    idx.step(allocs=(seqs, np.zeros(4, int), seqs * 100, np.full(4, 10)), now=0)
+    v = idx.version
+    base = _range_bytes(idx, as_of=v)
+    # the clock passes the deadline in a later LIVE batch: live view
+    # expires the pages, the pinned cut still holds them
+    idx.step(allocs=([9], [0], [900], [999]), now=50)
+    assert _range_bytes(idx, as_of=v) == base
+    got, _, _ = idx.step(lookups=(seqs, np.zeros(4, int)), now=50)
+    assert (np.asarray(got) == -1).all()  # live view: all expired
+
+
+def test_gateway_snapshot_gone_is_typed_and_final():
+    """Per-request ``as_of`` through the gateway: pinned lookups resolve
+    against the pinned version; once the window slides past it the
+    rejection is SNAPSHOT_GONE and non-retryable (the same as_of can
+    never succeed again); updates with as_of are INVALID."""
+    from repro.serve import SNAPSHOT_GONE, INVALID, Gateway, Request
+
+    idx = KVPageIndex(snapshot_window=2)
+    gw = Gateway(idx, default_rate=1e6, default_burst=1e6)
+    gw.submit(
+        Request("a", "al0", "alloc", seqs=(1,), pages=(0,), slots=(10,)), now=0.0
+    )
+    gw.pump(now=0.0)
+    v = idx.version
+    # pinned lookup + live update coalesce into the same pump
+    t_pin = gw.submit(
+        Request("a", "r1", "lookup", seqs=(1,), pages=(0,), as_of=v), now=1.0
+    )
+    gw.submit(
+        Request("b", "al1", "alloc", seqs=(1,), pages=(1,), slots=(11,)), now=1.0
+    )
+    gw.pump(now=1.0)
+    assert t_pin.ok and int(np.asarray(t_pin.value)[0]) == 10
+    # updates cannot pin
+    t_bad = gw.submit(
+        Request("a", "al2", "alloc", seqs=(2,), pages=(0,), slots=(5,), as_of=v),
+        now=2.0,
+    )
+    assert t_bad.error.code == INVALID and not t_bad.error.retryable
+    # slide the window past v with more committed updates
+    for i in range(3):
+        gw.submit(
+            Request("b", f"al{3+i}", "alloc", seqs=(3 + i,), pages=(0,), slots=(i,)),
+            now=2.0 + i,
+        )
+        gw.pump(now=2.0 + i)
+    t_gone = gw.submit(
+        Request("a", "r2", "lookup", seqs=(1,), pages=(0,), as_of=v), now=9.0
+    )
+    gw.pump(now=9.0)
+    assert t_gone.error.code == SNAPSHOT_GONE and not t_gone.error.retryable
+
+
+# ---------------------------------------------------------------------------
+# TTL durability: crash recovery replays at the LOGGED clock (§14)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "event,count",
+    [
+        ("wal.append.partial", 2),
+        ("apply.done", 3),
+        # count 2: the first payload write is create()'s initial full
+        # snapshot — killing there leaves nothing to recover (a fresh
+        # create is the documented restart path, not recovery)
+        ("snap.payload.partial", 2),
+    ],
+)
+def test_ttl_crash_recovery_replays_at_logged_clock(tmp_path, event, count):
+    """Kill the TTL workload mid-flight: recovery must replay each WAL
+    batch at the ``now`` logged IN its record — never the wall clock, or
+    the recovered expiry state would depend on when recovery ran.  The
+    recovered canonical payload (expiry column included) must be
+    byte-identical to the uninterrupted oracle at the recovered seq, and
+    resuming to completion must land on the oracle's final bytes."""
+    import fault_injection as fi
+
+    n = 8
+    oracle = fi.oracle_canonical_ttl(n)
+    d = tmp_path / "ttl"
+    acked = []
+    try:
+        fi.run_workload_ttl(
+            d, n, crash_hook=fi.CrashAt(event, count), ack=acked.append
+        )
+        raise AssertionError(f"hook {event}#{count} never fired")
+    except fi.CrashError:
+        pass
+    seq = fi.recover_and_check(d, oracle, acked=max(acked, default=0))
+    assert seq <= n
+    fi.run_workload_ttl(d, n)
+    assert fi.recover_and_check(d, oracle, acked=n) == n
