@@ -7,9 +7,10 @@ the committed ``BENCH_PR*.json`` snapshots).  Raw ``us_per_call`` numbers
 are host-dependent, so the *gate* only looks at the same-host speedup
 ratio maps (``apply_ops_fused_speedup``, ``range_fused_speedup``,
 ``sharded_speedup``, ``durability_delta_speedup``,
-``gateway_goodput_ratio`` — the last two are payload-volume and
-virtual-clock request-count ratios, deterministic by construction): a
-key regresses when
+``gateway_goodput_ratio``, ``tiered_degradation_ratio`` — the middle two
+are payload-volume and virtual-clock request-count ratios, deterministic
+by construction; the tiered ratio divides two same-host wall-clock
+sweeps): a key regresses when
 
     fresh < baseline * (1 - tolerance)
 
@@ -42,6 +43,7 @@ SPEEDUP_FIELDS = (
     "sharded_speedup",
     "durability_delta_speedup",
     "gateway_goodput_ratio",
+    "tiered_degradation_ratio",
 )
 SCHEMA = "flix-bench-v1"
 

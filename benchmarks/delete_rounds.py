@@ -41,7 +41,11 @@ def run() -> None:
 
         us = time_call(lambda: core.delete(flix, dk))
         flix, _ = core.delete(flix, dk)
-        emit(f"fig8_delete_r{rnd}_flix_tlbulk", us, f"live={int(flix.live_keys())}")
+        emit(
+            f"fig8_delete_r{rnd}_flix_tlbulk",
+            us,
+            f"live={int(flix.live_keys())},mem={int(flix.memory_bytes())}",
+        )
 
         us = time_call(lambda: btree.delete(bt, dk))
         bt = btree.delete(bt, dk)
@@ -49,7 +53,13 @@ def run() -> None:
 
         us = time_call(lambda: lsm.delete(lsmu, dk))
         lsmu = lsm.delete(lsmu, dk)
-        emit(f"fig8_delete_r{rnd}_lsmu_tombstone", us)
+        # tombstones never shrink the level arrays: footprint is flat while
+        # live keys drain — the contrast row for FliX's restructure_shrink
+        emit(
+            f"fig8_delete_r{rnd}_lsmu_tombstone",
+            us,
+            f"mem={int(lsmu.memory_bytes())}",
+        )
 
         us = time_call(lambda: ht.delete(h, dk))
         h = ht.delete(h, dk)

@@ -75,4 +75,8 @@ def run() -> None:
             qtmf = (nq / (us_hit / 1e6)) / memfn()
             emit(f"fig9_q_r{rnd}_hit_{name}", us_hit)
             emit(f"fig9_q_r{rnd}_miss_{name}", us_miss)
-            emit(f"fig9b_qtmf_r{rnd}_{name}", 0, f"qtmf={qtmf:.3f}")
+            emit(
+                f"fig9b_qtmf_r{rnd}_{name}",
+                0,
+                f"qtmf={qtmf:.3f},mem={int(memfn())}",
+            )

@@ -11,7 +11,8 @@ fused-vs-reference ``apply_ops`` speedups extracted from the
 ``mixed_batch`` suite, the RANGE-op speedups from ``range_mix``, the
 TTL-mix speedups from ``ttl_mix``, the sharded-vs-single speedups from
 ``sharded_mix``, the delta-vs-full snapshot write-volume ratios from
-``durability``, and the goodput-under-overload ratios from ``gateway``.  (``BENCH_PR*.json`` in
+``durability``, the goodput-under-overload ratios from ``gateway``, and
+the oversubscription-degradation ratios from ``tiered_scale``.  (``BENCH_PR*.json`` in
 the repo root are committed per-PR snapshots — ``benchmarks.compare``
 diffs against them; don't overwrite them outside a snapshot refresh.)
 """
@@ -40,6 +41,7 @@ from benchmarks import (
     sharded_mix,
     sort_cost,
     successor,
+    tiered_scale,
     ttl_mix,
     unsorted_queries,
 )
@@ -61,9 +63,10 @@ SUITES = {
     "table4_restructure": restructure_recovery,
     "durability_engine": durability,
     "gateway_engine": gateway,
+    "tiered_scale_engine": tiered_scale,
 }
 
-BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR8.json")
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR9.json")
 
 
 def _speedups(
@@ -127,6 +130,10 @@ def write_bench_json(
         name: row["us_per_call"]
         for name, row in suites.get("ttl_mix_engine", {}).items()
     }
+    tiered = {
+        name: row["us_per_call"]
+        for name, row in suites.get("tiered_scale_engine", {}).items()
+    }
     payload = {
         "schema": "flix-bench-v1",
         "scale": common.SCALE,
@@ -160,6 +167,11 @@ def write_bench_json(
         # so overload collapsing useful throughput trips the compare gate
         "gateway_goodput_ratio": _speedups(
             gw, "gateway_goodput_base_", "gateway_goodput_overload_"
+        ),
+        # goodput(10× oversubscribed)/goodput(1×) per read-heavy point —
+        # same wall-clock sweep both sides, so the ratio is host-portable
+        "tiered_degradation_ratio": _speedups(
+            tiered, "tiered_goodput_base_", "tiered_goodput_over_"
         ),
     }
     with open(path, "w") as f:

@@ -3,9 +3,11 @@ engine-aware durable FliX layer (deterministic snapshots + WAL)."""
 
 from repro.checkpoint.durable import (
     DurableFliX,
+    EngineBase,
     LocalEngine,
     ShardEngine,
     SnapshotCorruptionError,
+    TieredEngine,
     load_snapshot_chain,
 )
 from repro.checkpoint.manager import (

@@ -85,7 +85,41 @@ def _noop_hook(event: str) -> None:
 # ---------------------------------------------------------------------------
 
 
-class LocalEngine:
+class EngineBase:
+    """Shared engine surface the durability layer talks to.
+
+    Beyond ``rebuild``/``flix``/``apply``, the durable wrapper needs four
+    read-only views of the handle.  The defaults go through ``flix()`` (a
+    full device state) — correct for the single-device and sharded engines,
+    whose handle IS device-resident.  The tiered engine overrides every one
+    with host-tier implementations so that durability never forces the full
+    index onto the device (DESIGN.md §15: snapshots and recovery are
+    tier-oblivious).
+    """
+
+    def mkba_host(self, handle) -> np.ndarray:
+        """The fence array as host numpy (dirty-bucket routing)."""
+        return np.asarray(self.flix(handle).mkba)
+
+    def geometry(self, handle) -> tuple[int, int, int]:
+        """(num_buckets, nodes_per_bucket, node_size) of the handle."""
+        return self.flix(handle).geometry
+
+    def segments(self, handle, buckets=None):
+        """Canonical per-bucket segments (``serialize.bucket_segments``)."""
+        return bucket_segments(self.flix(handle), buckets)
+
+    def expired_buckets(self, handle, now) -> np.ndarray | None:
+        """Bucket ids holding live rows with deadline ≤ now, or None when
+        the state carries no expiry column (pre-apply dirty marking)."""
+        pre = self.flix(handle)
+        if now is None or pre.exps is None:
+            return None
+        hit = jnp.any((pre.exps <= jnp.int32(now)) & (pre.keys != EMPTY), axis=(1, 2))
+        return np.nonzero(np.asarray(hit))[0]
+
+
+class LocalEngine(EngineBase):
     """Single-device executor behind the durability layer."""
 
     kind = "local"
@@ -138,7 +172,7 @@ class LocalEngine:
         return new, results, stats, restructured
 
 
-class ShardEngine:
+class ShardEngine(EngineBase):
     """Sharded executor (``core.distributed``) behind the durability layer.
 
     The handle is a ``ShardedFliX``; rebuilds go through ``shard_build``
@@ -219,6 +253,77 @@ class ShardEngine:
         stats = dict(stats)
         stats["restructure_retries"] = int(restructured)
         return new, results, stats, restructured
+
+
+class TieredEngine(EngineBase):
+    """Budget-bounded tiered executor (``core.residency``) behind the
+    durability layer.
+
+    The handle is a ``TieredFliX``.  Every hook runs against the host tier:
+    recovery rebuilds the mirror with the numpy twin of
+    ``state_from_pairs`` (byte-identical layout, zero device allocation),
+    snapshots canonicalize the synced mirror, and the pre-apply expired-
+    bucket scan reads the residency plane's per-bucket min-deadline
+    metadata — so a durable tiered index never needs the full structure to
+    fit on device (the restructure relaunch inside ``TieredFliX.apply`` is
+    the sole transient exception).
+    """
+
+    kind = "tiered"
+
+    def __init__(
+        self,
+        *,
+        budget_bytes: int | None = None,
+        impl: str = "auto",
+        node_size: int = 32,
+        nodes_per_bucket: int = 16,
+        fill: float = 0.5,
+    ):
+        self.budget_bytes = budget_bytes
+        self.impl = impl
+        self.node_size = node_size
+        self.nodes_per_bucket = nodes_per_bucket
+        self.fill = fill
+
+    def rebuild(self, keys, vals, exps=None, geometry: dict | None = None):
+        from repro.core.residency import TieredFliX
+
+        g = geometry or {}
+        return TieredFliX.from_pairs(
+            keys,
+            vals,
+            exps,
+            node_size=g.get("node_size", self.node_size),
+            nodes_per_bucket=g.get("nodes_per_bucket", self.nodes_per_bucket),
+            fill=g.get("fill", self.fill),
+            budget_bytes=self.budget_bytes,
+        )
+
+    def flix(self, handle):
+        # tests / inspection only: this materializes the full device state,
+        # exactly what the overridden hooks below exist to avoid
+        return handle.materialize()
+
+    def apply(self, handle, ops: OpBatch, *, max_results: int, now=None):
+        results, stats, restructured = handle.apply(
+            ops, max_results=max_results, now=now, impl=self.impl
+        )
+        return handle, results, stats, restructured
+
+    def mkba_host(self, handle) -> np.ndarray:
+        return handle.h_mkba
+
+    def geometry(self, handle) -> tuple[int, int, int]:
+        return handle.geometry
+
+    def segments(self, handle, buckets=None):
+        return bucket_segments(handle.host_view(), buckets)
+
+    def expired_buckets(self, handle, now) -> np.ndarray | None:
+        if now is None or handle.h_exps is None:
+            return None
+        return handle.expired_buckets(now)
 
 
 # ---------------------------------------------------------------------------
@@ -378,7 +483,7 @@ class DurableFliX:
         self._wal = WriteAheadLog(self.dir, fsync=fsync, crash_hook=self._hook)
         self._dirty: set[int] = set()
         self._all_dirty = True
-        self._mkba_host = np.asarray(self._flix_state().mkba)
+        self._mkba_host = np.asarray(self.engine.mkba_host(self.handle))
         self._bucket_lens: np.ndarray | None = None
         self._bucket_crcs: list[int] | None = None
         self._snaps_since_full = 0
@@ -621,13 +726,7 @@ class DurableFliX:
         # buckets holding rows the expire pass is about to reclaim change
         # WITHOUT appearing among the batch's update keys — mark them dirty
         # from the pre-apply state so delta snapshots cover the reclamation
-        expired_buckets: np.ndarray | None = None
-        pre = self._flix_state()
-        if now is not None and pre.exps is not None:
-            hit = jnp.any(
-                (pre.exps <= jnp.int32(now)) & (pre.keys != EMPTY), axis=(1, 2)
-            )
-            expired_buckets = np.nonzero(np.asarray(hit))[0]
+        expired_buckets = self.engine.expired_buckets(self.handle, now)
 
         try:
             new, results, stats, restructured = self.engine.apply(
@@ -664,7 +763,7 @@ class DurableFliX:
         self._epoch += 1
         self._all_dirty = True
         self._dirty.clear()
-        self._mkba_host = np.asarray(self._flix_state().mkba)
+        self._mkba_host = np.asarray(self.engine.mkba_host(self.handle))
 
     def _check_poisoned(self) -> None:
         if self._poisoned:
@@ -697,7 +796,6 @@ class DurableFliX:
                 return self.dir / name
             except SnapshotCorruptionError:
                 shutil.rmtree(self.dir / name, ignore_errors=True)
-        state = self._flix_state()
         if full is None:
             full = (
                 self._all_dirty
@@ -709,14 +807,14 @@ class DurableFliX:
             prev_full_name = self._latest_snap_name()
 
         if full:
-            lens, seg_k, seg_v, seg_e = bucket_segments(state)
+            lens, seg_k, seg_v, seg_e = self.engine.segments(self.handle)
             payload = pairs_to_bytes(seg_k, seg_v, seg_e)
             all_lens = lens
             all_crcs = segment_crcs(lens, seg_k, seg_v, seg_e)
             kind = "full"
         else:
             dirty = sorted(self._dirty)
-            lens, seg_k, seg_v, seg_e = bucket_segments(state, dirty)
+            lens, seg_k, seg_v, seg_e = self.engine.segments(self.handle, dirty)
             payload = pack_delta(dirty, lens, seg_k, seg_v, seg_e)
             all_lens = np.array(self._bucket_lens, np.int64)
             all_crcs = list(self._bucket_crcs)
@@ -726,7 +824,7 @@ class DurableFliX:
                 all_crcs[b] = new_crcs[i]
             kind = "delta"
 
-        nb, npb, ns = state.geometry
+        nb, npb, ns = self.engine.geometry(self.handle)
         manifest = {
             "format": SNAP_FORMAT,
             "kind": kind,

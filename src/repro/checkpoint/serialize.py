@@ -67,10 +67,18 @@ def bucket_segments(state: FliXState, buckets=None):
     ``buckets=None`` selects every bucket in fence order — the device
     transfer then is O(index); an explicit dirty list fetches only those
     rows, so incremental snapshot cost is O(churn).
+
+    ``state`` may also be a host-side view with numpy array attributes
+    (``core.residency.TieredFliX.host_view()``): the canonicalization is
+    identical and no device transfer happens at all — a tiered index
+    snapshots without ever materializing on device.
     """
     keys, vals, exps = state.keys, state.vals, state.exps
     if buckets is not None:
-        sel = jnp.asarray(np.asarray(buckets, np.int32))
+        if isinstance(keys, np.ndarray):
+            sel = np.asarray(buckets, np.int64)
+        else:
+            sel = jnp.asarray(np.asarray(buckets, np.int32))
         keys, vals = keys[sel], vals[sel]
         exps = None if exps is None else exps[sel]
     k = np.asarray(jax.device_get(keys))

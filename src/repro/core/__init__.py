@@ -28,7 +28,7 @@ from repro.core.query import (
 )
 from repro.core.insert import insert, insert_safe, insert_with_slices
 from repro.core.delete import delete, merge_underfull
-from repro.core.expiry import NO_EXPIRY, attach_expiry, expire_state
+from repro.core.expiry import NO_EXPIRY, attach_expiry, bucket_min_exp, expire_state
 from repro.core.ops import (
     DEFAULT_MAX_RESULTS,
     OP_DELETE,
@@ -42,11 +42,18 @@ from repro.core.ops import (
     apply_ops,
     apply_ops_safe,
     make_ops,
+    touched_buckets,
     unsort,
 )
-from repro.core.invariants import check_invariants, check_range_results
+from repro.core.invariants import (
+    check_invariants,
+    check_range_results,
+    check_tiered_invariants,
+)
+from repro.core.residency import TieredFliX, bucket_device_bytes
 from repro.core.restructure import (
     restructure,
     restructure_auto,
     restructure_grow,
+    restructure_shrink,
 )

@@ -89,6 +89,26 @@ class ShardedFliX(NamedTuple):
     axis: str
 
 
+def plan_shard_budget(total_budget: int | None, n_shards: int) -> int | None:
+    """Split a global device-memory budget across shards (DESIGN.md §15).
+
+    Buckets are range-partitioned evenly, so the per-shard residency bound
+    is simply an even split — each shard's residency plane enforces its
+    slice independently and I7 holds globally because shard bucket sets are
+    disjoint.  Returns a per-shard byte budget (``None`` = unbounded).
+    """
+    if total_budget is None:
+        return None
+    return max(1, int(total_budget) // max(1, n_shards))
+
+
+def shard_memory_bytes(idx: ShardedFliX) -> int:
+    """Total allocated footprint of a sharded index across the mesh —
+    the per-shard ``memory_bytes`` summed (every shard holds the same
+    static geometry, so this is shards × the per-shard footprint)."""
+    return idx.state.memory_bytes() + idx.lower_fence.size * 4 + idx.part_fences.size * 4
+
+
 def make_shard_mesh(n_shards: int, *, axis: str = "shards") -> jax.sharding.Mesh:
     """A 1-D mesh over the first ``n_shards`` local devices."""
     devs = jax.devices()

@@ -99,3 +99,20 @@ def attach_expiry(state: FliXState, exps: jax.Array | None = None) -> FliXState:
     if exps is None:
         exps = jnp.full(state.keys.shape, NO_EXPIRY, dtype=KEY_DTYPE)
     return dataclasses.replace(state, exps=exps)
+
+
+def bucket_min_exp(state: FliXState) -> jax.Array:
+    """Per-bucket minimum live expiry deadline ([nb], ``NO_EXPIRY`` for
+    buckets with no live deadline-carrying rows — and for every bucket when
+    no expiry column is materialized).
+
+    This is the residency plane's expiry metadata (DESIGN.md §15): the
+    tiered engine keeps it fresh for all buckets so its prefetch pre-pass
+    can promote exactly the buckets the expire sweep at ``now`` would
+    physically change (``min_exp <= now``) without scanning cold tiers.
+    """
+    if state.exps is None:
+        return jnp.full((state.num_buckets,), NO_EXPIRY, dtype=jnp.int32)
+    return jnp.min(
+        jnp.where(state.keys != EMPTY, state.exps, NO_EXPIRY), axis=(1, 2)
+    ).astype(jnp.int32)

@@ -73,6 +73,65 @@ def check_invariants(st: FliXState, now: int | None = None) -> None:
             )
 
 
+def check_tiered_invariants(tiered, now: int | None = None) -> None:
+    """Assert I7 for a ``core.residency.TieredFliX`` (DESIGN.md §15).
+
+    I7: every live row is reachable in **exactly one** tier — resident
+    buckets are authoritative on device, all others in the host mirror, and
+    the assembled full view satisfies I1–I6; the device-tier footprint is
+    within the budget after commit (one bucket is always allowed: a smaller
+    budget cannot execute any op).  Additionally pins the residency
+    bookkeeping the engine's correctness argument relies on: sorted/unique
+    resident ids, the packed fence array mirroring the full fences (except
+    the forced ``MAX_VALID`` terminator), and fresh per-bucket metadata.
+    """
+    nb = tiered.num_buckets
+    ids = np.asarray(tiered.resident_ids)
+    assert (np.diff(ids) > 0).all() if len(ids) > 1 else True, (
+        "I7: resident_ids not sorted/unique"
+    )
+    if len(ids):
+        assert ids[0] >= 0 and ids[-1] < nb, "I7: resident id out of range"
+    packed = tiered._packed
+    if packed is None:
+        assert len(ids) == 0, "I7: resident ids without a packed state"
+    else:
+        assert packed.num_buckets == len(ids), (
+            "I7: packed bucket count != resident id count"
+        )
+        pm = np.asarray(packed.mkba)
+        assert (pm[:-1] == np.asarray(tiered.h_mkba)[ids[:-1]]).all(), (
+            "I7: packed fences diverge from the full fence array"
+        )
+        assert pm[-1] == int(MAX_VALID), "I7: packed mkba not MAX_VALID-terminated"
+    if tiered.budget_bytes is not None:
+        cap = max(int(tiered.budget_bytes), tiered.bucket_bytes)
+        assert tiered.memory_bytes_resident() <= cap, (
+            f"I7: resident bytes {tiered.memory_bytes_resident()} > budget {cap}"
+        )
+    # exactly-one-tier: assemble the authoritative full view and check I1–I6
+    view = tiered.host_view()  # sync() makes the mirror authoritative
+    check_invariants(view, now=now)
+    # metadata freshness (the prefetch pre-pass trusts these unconditionally)
+    live = np.asarray(view.node_count).sum(axis=1)
+    assert (live == np.asarray(tiered.h_live)).all(), "I7: stale live metadata"
+    if view.exps is None:
+        from repro.core.expiry import NO_EXPIRY
+
+        assert (np.asarray(tiered.h_min_exp) == int(NO_EXPIRY)).all(), (
+            "I7: min-expiry metadata without an expiry column"
+        )
+    else:
+        from repro.core.expiry import NO_EXPIRY
+
+        me = np.where(
+            np.asarray(view.keys) != int(EMPTY), np.asarray(view.exps), int(NO_EXPIRY)
+        ).min(axis=(1, 2))
+        assert (me == np.asarray(tiered.h_min_exp)).all(), (
+            "I7: stale min-expiry metadata"
+        )
+
+
 def check_range_results(ops, results, *, max_results: int) -> None:
     """Structural checks on a batch's dense RANGE output (DESIGN.md §10).
 

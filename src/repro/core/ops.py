@@ -171,6 +171,113 @@ def unsort(sorted_result: jax.Array, perm: jax.Array) -> jax.Array:
     return sorted_result[perm]
 
 
+def touched_buckets(mkba_host, tag, key, val, *, live=None, min_exp=None, now=None):
+    """Host-side prefetch pre-pass: which buckets a sorted batch can touch.
+
+    The tiered engine (``core.residency``, DESIGN.md §15) promotes exactly
+    the buckets whose bytes the executors may consult, so that running the
+    *unchanged* executors against the packed resident subset is
+    bucket-for-bucket identical to running them against the full state.
+    The routing is the same one binary search per key the engine itself
+    performs (``bucket_slices`` transposed to the classical direction, with
+    the same ``min(b, nb-1)`` clamp the read paths apply).
+
+    Per op type:
+      * INSERT / DELETE / POINT / EXPIRE — the op's fence bucket.
+      * RANGE — every bucket from ``b(lo)`` through ``b(hi)`` *inclusive*:
+        the dense scan's rank arithmetic cancels the live counts of buckets
+        entirely outside ``[b(lo), b(hi)]`` but consults every bucket
+        inside it.
+      * SUCCESSOR — ``b(q)`` plus the forward fence walk up to (and
+        including) the first bucket *guaranteed* non-empty after the
+        batch's own updates and expiry pass (an insert routed to it, or
+        surviving pre-batch rows).  The out-of-bucket fallback reads the
+        first non-empty bucket after ``b(q)``; promoting the whole walk
+        makes the packed suffix-min agree with the full one.
+      * additionally, when ``now`` is given — every bucket whose minimum
+        live expiry deadline is ≤ ``now``: the expiry pre-pass physically
+        reclaims those rows, so the buckets must be resident to change.
+
+    ``live`` / ``min_exp`` are per-bucket host metadata ([nb] arrays: live
+    row count; minimum live expiry deadline, ``NO_EXPIRY`` without TTLs).
+    Both are optional, degrading conservatively: without ``live`` only
+    inserts can guarantee non-emptiness (longer successor walks); a TTL'd
+    caller must supply ``min_exp`` whenever it passes ``now``.
+
+    All inputs are host numpy arrays; returns an [nb] bool mask.
+    """
+    import numpy as np
+
+    mkba = np.asarray(mkba_host)
+    nb = mkba.shape[0]
+    tag = np.asarray(tag)
+    key = np.asarray(key)
+    val = np.asarray(val)
+    touched = np.zeros(nb, dtype=bool)
+
+    def b_of(q):
+        return np.minimum(np.searchsorted(mkba, q, side="left"), nb - 1)
+
+    simple = (
+        (tag == OP_INSERT) | (tag == OP_DELETE) | (tag == OP_POINT) | (tag == OP_EXPIRE)
+    )
+    if simple.any():
+        touched[b_of(key[simple])] = True
+
+    is_range = tag == OP_RANGE
+    if is_range.any():
+        lo_b = b_of(key[is_range])
+        hi_b = b_of(val[is_range])
+        touched[lo_b] = True
+        touched[hi_b] = True
+        ok = lo_b <= hi_b
+        if ok.any():
+            d = np.zeros(nb + 1, np.int64)
+            np.add.at(d, lo_b[ok], 1)
+            np.add.at(d, hi_b[ok] + 1, -1)
+            touched |= np.cumsum(d[:nb]) > 0
+
+    is_succ = tag == OP_SUCCESSOR
+    if is_succ.any():
+        n_ins = np.zeros(nb, np.int64)
+        upd_ins = ((tag == OP_INSERT) | (tag == OP_EXPIRE)) & (key != EMPTY)
+        if upd_ins.any():
+            np.add.at(n_ins, b_of(key[upd_ins]), 1)
+        guaranteed = n_ins > 0
+        if live is not None:
+            n_del = np.zeros(nb, np.int64)
+            upd_del = (tag == OP_DELETE) & (key != EMPTY)
+            if upd_del.any():
+                np.add.at(n_del, b_of(key[upd_del]), 1)
+            survives = np.asarray(live).astype(np.int64) - n_del > 0
+            if now is not None:
+                if min_exp is None:
+                    survives &= False  # no deadline metadata: nothing is safe
+                else:
+                    survives &= np.asarray(min_exp).astype(np.int64) > int(now)
+            guaranteed |= survives
+        b = b_of(key[is_succ])
+        touched[b] = True
+        # next_g[j] = first guaranteed bucket index ≥ j (nb if none)
+        gidx = np.where(guaranteed, np.arange(nb, dtype=np.int64), nb)
+        next_g = np.minimum.accumulate(gidx[::-1])[::-1]
+        next_g = np.append(next_g, nb)
+        starts = b + 1
+        inb = starts < nb
+        if inb.any():
+            s = starts[inb]
+            t = next_g[s]
+            e = np.where(t < nb, t, nb - 1)  # walk to the end if none
+            d = np.zeros(nb + 1, np.int64)
+            np.add.at(d, s, 1)
+            np.add.at(d, e + 1, -1)
+            touched |= np.cumsum(d[:nb]) > 0
+
+    if now is not None and min_exp is not None:
+        touched |= np.asarray(min_exp).astype(np.int64) <= int(now)
+    return touched
+
+
 def _compact_by_mask(keys: jax.Array, mask: jax.Array, vals: jax.Array | None = None):
     """Front-pack ``keys[mask]`` preserving order; EMPTY tail.  No sort:
     destinations are a prefix count, so ascending order is preserved."""

@@ -85,6 +85,45 @@ def restructure_auto(state: FliXState, *, fill: float = 0.5) -> FliXState:
     )
 
 
+def restructure_shrink(
+    state: FliXState,
+    *,
+    fill: float = 0.5,
+    nodes_per_bucket: int | None = None,
+) -> tuple[FliXState, int]:
+    """Compact to the smallest geometry for the current live set, reclaiming
+    pages (paper §3.5 "memory reclamation").
+
+    ``restructure_auto`` re-plans the bucket count but keeps the old
+    ``nodes_per_bucket``, so a structure that once grew wide never gives
+    chain capacity back.  Shrink narrows both axes: the bucket count is
+    sized for the live keys at ``fill`` and the chain depth drops to the
+    smallest count whose capacity is still ≥ 2× the per-bucket fill (the
+    same headroom ``restructure_grow`` relies on, so a shrink never makes
+    the very next insert batch overflow-prone).
+
+    Returns ``(new_state, reclaimed_bytes)`` where ``reclaimed_bytes`` is
+    the drop in allocated footprint (0 if the structure could not shrink).
+    """
+    live = int(state.live_keys())
+    p = max(1, int(state.node_size * fill))
+    nb = max(1, math.ceil(live / p))
+    if nodes_per_bucket is None:
+        # capacity npb*ns ≥ 2p: content can double before overflow.
+        npb = max(2, math.ceil(2 * p / state.node_size))
+    else:
+        npb = nodes_per_bucket
+    new = restructure(
+        state,
+        num_buckets=nb,
+        nodes_per_bucket=npb,
+        node_size=state.node_size,
+        fill=fill,
+    )
+    reclaimed = max(0, state.memory_bytes() - new.memory_bytes())
+    return new, reclaimed
+
+
 def restructure_grow(
     state: FliXState, *, extra_keys: int, fill: float = 0.5
 ) -> FliXState:

@@ -15,6 +15,11 @@ Invariants (checked by ``tests/test_invariants.py``):
   I4. ``node_max[b, j]`` equals the largest key of node ``j`` (``EMPTY`` when
       the slot is inactive), so each ``node_max[b]`` row is ascending.
   I5. ``mkba`` is strictly ascending with ``mkba[-1] == MAX_VALID``.
+
+Two further invariants live in other layers: I6 (expiry liveness,
+``core/expiry.py``) and I7 (tiered residency: every live row reachable in
+exactly one tier, resident bytes ≤ budget after commit —
+``core/residency.py`` / ``check_tiered_invariants``).
 """
 
 from __future__ import annotations
@@ -115,6 +120,17 @@ class FliXState:
             if arr is not None:
                 total += arr.size * arr.dtype.itemsize
         return total
+
+    def bucket_memory_bytes(self) -> int:
+        """Bytes one bucket contributes across every per-bucket array — the
+        page size of the tiered engine's residency accounting (I7): a device
+        budget of ``B`` bytes admits ``B // bucket_memory_bytes()`` resident
+        buckets."""
+        from repro.core.residency import bucket_device_bytes
+
+        return bucket_device_bytes(
+            self.nodes_per_bucket, self.node_size, self.exps is not None
+        )
 
     def bucket_lower_fence(self) -> jax.Array:
         """mkba shifted right: bucket b covers keys in (fence[b], mkba[b]]."""

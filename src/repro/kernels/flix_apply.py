@@ -51,6 +51,16 @@ bucket, prefix-sums the live counts into post-update rank fences
 BlockSpec.  The kernel then only has to map "rank within my bucket" to a
 (node, position) of the stripe it just rebuilt — values come from VMEM, not
 from a second state pass.
+
+Tiered residency (DESIGN.md §15): the kernel is *residency-oblivious*.  A
+``TieredFliX`` working set arrives here as an ordinary packed ``FliXState``
+whose buckets are the promoted subset, re-fenced so ``mkba[-1] ==
+MAX_VALID``; because every bucket an op can touch is promoted by the
+prefetch pre-pass (``core.ops.touched_buckets``), the searchsorted routing
+and the successor/range fence rows are self-contained in the packed view and
+nothing below this line knows tiers exist.  The only contract this file owes
+the residency plane is the one it already keeps: it never reads or writes a
+bucket outside the state it was handed.
 """
 
 from __future__ import annotations

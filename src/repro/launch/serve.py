@@ -75,6 +75,17 @@ def main() -> None:
         "versioned reads",
     )
     ap.add_argument(
+        "--device-budget",
+        type=int,
+        default=0,
+        help="bound the KV page index's device-resident footprint to this "
+        "many bytes (tiered residency, DESIGN.md §15): the index may grow "
+        "far beyond the budget, each engine step promotes exactly the "
+        "buckets its batch touches and demotes back under the budget "
+        "after commit; 0 = single-tier (whole index device-resident). "
+        "Incompatible with --shards and --snapshot-window",
+    )
+    ap.add_argument(
         "--page-ttl",
         type=int,
         default=0,
@@ -105,6 +116,7 @@ def main() -> None:
         durability_dir=args.wal_dir,
         snapshot_every=args.snapshot_every,
         snapshot_window=args.snapshot_window,
+        device_budget=args.device_budget or None,
     )
     if args.wal_dir and kv_index.durable_seq:
         print(
@@ -188,6 +200,16 @@ def main() -> None:
         f"({args.steps*args.batch/dt:.1f} tok/s); "
         f"kv index tracks {kv_index.live_pages()} pages on {where}"
     )
+    if args.device_budget:
+        rb = kv_index.resident_bytes
+        assert rb is not None, "tiered index must report a resident footprint"
+        # I7 after commit (one bucket always admitted for tiny budgets)
+        state = kv_index._durable.handle if args.wal_dir else kv_index.state
+        assert rb <= max(args.device_budget, state.bucket_bytes), (rb, args.device_budget)
+        print(
+            f"tiered residency ✓ ({rb} device-resident bytes, "
+            f"budget {args.device_budget})"
+        )
     if args.page_ttl == 0:
         # sanity: page lookups resolve
         got = np.asarray(

@@ -275,6 +275,13 @@ class Gateway:
             "engine_failures": 0,
             "restructure_retries": 0,
             "a2a_retries": 0,
+            # tiered residency (DESIGN.md §15): page-in/page-out totals and
+            # reclaimed bytes accumulate; resident_bytes is a gauge (the
+            # latest committed batch's device-tier footprint, 0 single-tier)
+            "promoted": 0,
+            "demoted": 0,
+            "reclaimed_bytes": 0,
+            "resident_bytes": 0,
             "rejected": {},
         }
         # recovery: reseed the dedup window from the durable meta trail so
@@ -572,6 +579,11 @@ class Gateway:
             stats.get("restructure_retries", 0)
         )
         self.metrics["a2a_retries"] += int(stats.get("a2a_retries", 0))
+        self.metrics["promoted"] += int(stats.get("promoted", 0))
+        self.metrics["demoted"] += int(stats.get("demoted", 0))
+        self.metrics["reclaimed_bytes"] += int(stats.get("reclaimed_bytes", 0))
+        if "resident_bytes" in stats:
+            self.metrics["resident_bytes"] = int(stats["resident_bytes"])
         return PumpReport(
             [tk.request.key for tk in main] + pinned_keys,
             n_ops + n_pinned,

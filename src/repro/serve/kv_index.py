@@ -100,6 +100,18 @@ class KVPageIndex:
     for ``step(as_of=...)`` snapshot reads; it also disables buffer
     donation on update steps (pinned versions alias the pre-update
     buffers, which must stay intact).
+
+    ``device_budget`` (bytes) switches the local engine to the tiered
+    residency state (``core.residency.TieredFliX``, DESIGN.md §15): the
+    index may grow far beyond the budget, with every step promoting the
+    buckets its batch touches and demoting back under the budget after
+    commit.  Results and durable bytes are identical to the unbounded
+    engine; ``step`` stats additionally carry the residency counters
+    (``resident_bytes`` / ``promoted`` / ``demoted`` / ``reclaimed_bytes``).
+    Incompatible with ``shards`` (per-shard budgets are planned host-side
+    via ``core.distributed.plan_shard_budget``) and with
+    ``snapshot_window`` (pinned versions require immutable functional
+    states; the tiered handle is mutating).
     """
 
     def __init__(
@@ -115,6 +127,7 @@ class KVPageIndex:
         wal_fsync: bool = True,
         crash_hook=None,
         snapshot_window: int = 0,
+        device_budget: int | None = None,
     ):
         # seed with one sentinel key (outside the (seq,page) space) so the
         # structure is never empty
@@ -125,8 +138,20 @@ class KVPageIndex:
         self._durable = None
         self._closed = False
         self.snapshot_window = int(snapshot_window)
+        self.device_budget = device_budget
         self._version = 0
         self._pins: dict[int, tuple[object, int | None]] = {}
+        if device_budget is not None:
+            if shards:
+                raise ValueError(
+                    "device_budget is a single-device residency bound; "
+                    "sharded indexes size each shard via plan_shard_budget"
+                )
+            if snapshot_window:
+                raise ValueError(
+                    "device_budget and snapshot_window are incompatible: "
+                    "pinned versions need immutable functional states"
+                )
         seed_keys = jnp.array([MAX_VALID], jnp.int32)
         seed_vals = jnp.array([0], jnp.int32)
         if shards:
@@ -150,13 +175,31 @@ class KVPageIndex:
                 node_size=node_size,
                 nodes_per_bucket=nodes_per_bucket,
             )
+            if device_budget is not None:
+                from repro.core.residency import TieredFliX
+
+                self.state = TieredFliX.from_state(
+                    self.state, budget_bytes=device_budget
+                )
         if durability_dir is not None:
-            from repro.checkpoint import DurableFliX, LocalEngine, ShardEngine
+            from repro.checkpoint import (
+                DurableFliX,
+                LocalEngine,
+                ShardEngine,
+                TieredEngine,
+            )
 
             if self.mesh is not None:
                 engine = ShardEngine(
                     self.mesh,
                     routing=routing,
+                    impl=impl,
+                    node_size=node_size,
+                    nodes_per_bucket=nodes_per_bucket,
+                )
+            elif device_budget is not None:
+                engine = TieredEngine(
+                    budget_bytes=device_budget,
                     impl=impl,
                     node_size=node_size,
                     nodes_per_bucket=nodes_per_bucket,
@@ -518,6 +561,22 @@ class KVPageIndex:
                 **kw,
             )
         state = self.state if handle is None else handle
+        from repro.core.residency import TieredFliX
+
+        if isinstance(state, TieredFliX):
+            from repro.core.ops import DEFAULT_MAX_RESULTS
+
+            # the tiered handle mutates in place and carries its own
+            # restructure-and-retry; commit=False keeps read-only steps
+            # (incl. throwaway expiry views) from changing logical content
+            results, stats, _ = state.apply(
+                ops,
+                max_results=kw.get("max_results", DEFAULT_MAX_RESULTS),
+                now=now,
+                impl=kw.get("impl", self.impl),
+                commit=bool(safe or kw.get("has_updates")),
+            )
+            return state, results, stats
         if safe:
             return apply_ops_safe(state, ops, now=now, **kw)
         return apply_ops(state, ops, donate=donate, now=now, **kw)
@@ -595,6 +654,18 @@ class KVPageIndex:
     def retained_versions(self) -> list[int]:
         """Versions currently answerable via ``step(as_of=...)``."""
         return sorted(self._pins)
+
+    # ---- residency -------------------------------------------------------
+    @property
+    def resident_bytes(self) -> int | None:
+        """Device-tier footprint of a tiered index (None when single-tier:
+        the whole index is device-resident by construction)."""
+        from repro.core.residency import TieredFliX
+
+        state = self._durable.handle if self._durable is not None else self.state
+        if isinstance(state, TieredFliX):
+            return state.memory_bytes_resident()
+        return None
 
     # ---- durability / health -------------------------------------------
     @property

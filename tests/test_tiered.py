@@ -1,0 +1,365 @@
+"""Tiered residency differential proofs (DESIGN.md §15).
+
+THE property: a budget-constrained ``TieredFliX`` — any budget, from
+unbounded down to a single resident bucket — is **byte-identical** to the
+unconstrained single-tier engine on every workload the repo already uses
+to attack the executors.  Identical per-op results, identical live state
+(canonical payload), identical shared stats.  Residency is performance
+policy, never semantics.
+
+Families of proofs:
+
+* **Budget sweep** — the adversarial mixed batches of
+  ``tests/test_differential.py`` (duplicates, all-miss, boundary keys,
+  emptied-bucket ranges) run at budgets {unbounded, ~1/10 of the index,
+  one bucket} and compare against ``core.apply_ops`` on the full state
+  after every batch, with ``check_tiered_invariants`` (I7) in between.
+* **Overflow** — clustered insert floods force the grow-and-replay path;
+  the tiered engine must land on the same grown geometry and bytes as
+  ``apply_ops_safe``.
+* **TTL** — expiry-carrying batches with a moving virtual clock; lazy
+  reclamation must promote the buckets the expiry pre-pass condemns.
+* **Reclamation** — ``restructure_shrink`` and ``TieredFliX.compact``
+  return real byte savings without touching the live payload
+  (satellite: the nbytes regression test).
+* **Cold-tier recovery** — a crashed durable tiered index reopens and
+  serves while ``TieredFliX.materialize`` is rigged to explode, proving
+  recovery never needs the full index on device.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.checkpoint.serialize import (
+    bucket_segments,
+    canonical_state_bytes,
+    pairs_to_bytes,
+    state_from_pairs,
+)
+from repro.core import (
+    EMPTY,
+    MAX_VALID,
+    NO_EXPIRY,
+    TieredFliX,
+    apply_ops,
+    apply_ops_safe,
+    check_invariants,
+    check_tiered_invariants,
+    make_ops,
+    restructure_shrink,
+)
+from repro.core.distributed import plan_shard_budget
+from repro.core.ops import (
+    OP_DELETE,
+    OP_EXPIRE,
+    OP_INSERT,
+    OP_POINT,
+    OP_RANGE,
+    OP_SUCCESSOR,
+)
+from test_differential import _adversarial_query_batches
+
+GEOM = dict(node_size=8, nodes_per_bucket=8)
+SHARED_STATS = ("inserted", "deleted", "overflowed_buckets", "range_truncated")
+
+
+# ---------------------------------------------------------------------------
+# comparison contract (the per-kernel proofs' masked-vals rule): keys,
+# counts, fences, exps exact; vals at live positions only — the jnp insert
+# zeroes padding vals across ALL buckets while the tiered engine never
+# touches unpromoted ones, and padding vals can never reach a result.
+# ---------------------------------------------------------------------------
+
+
+def _assert_tiered_matches(tiered: TieredFliX, oracle: core.FliXState, msg=""):
+    hv = tiered.host_view()
+    for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
+        np.testing.assert_array_equal(
+            getattr(hv, f), np.asarray(getattr(oracle, f)), err_msg=f"{msg}:{f}"
+        )
+    ok = np.asarray(oracle.keys)
+    live = ok != EMPTY
+    np.testing.assert_array_equal(
+        hv.vals[live], np.asarray(oracle.vals)[live], err_msg=f"{msg}:vals"
+    )
+    if oracle.exps is not None:
+        np.testing.assert_array_equal(
+            np.where(live, hv.exps, NO_EXPIRY),
+            np.where(live, np.asarray(oracle.exps), NO_EXPIRY),
+            err_msg=f"{msg}:exps",
+        )
+    # canonical payload — the durability layer's notion of equality
+    assert pairs_to_bytes(*bucket_segments(hv)[1:]) == canonical_state_bytes(
+        oracle
+    ), f"{msg}:canonical"
+    assert bool(hv.needs_restructure) == bool(oracle.needs_restructure), msg
+
+
+def _assert_results_match(got, want, stats_got, stats_want, msg=""):
+    assert set(got) == set(want), msg
+    for k in want:
+        np.testing.assert_array_equal(
+            np.asarray(got[k]), np.asarray(want[k]), err_msg=f"{msg}:{k}"
+        )
+    for k in SHARED_STATS:
+        if k in stats_want:
+            assert int(stats_got[k]) == int(stats_want[k]), f"{msg}:stats:{k}"
+
+
+def _budgets(state):
+    full = state.memory_bytes()
+    return {"unbounded": None, "tenth": max(1, full // 10), "one_bucket": 1}
+
+
+@pytest.fixture
+def seeded(rng):
+    """Adversarial base state: boundary keys, chains, emptied buckets."""
+    keys = rng.choice(120000, size=2500, replace=False).astype(np.int32)
+    keys = np.unique(np.concatenate([keys, [0, int(MAX_VALID)]])).astype(np.int32)
+    st = core.build(keys, np.arange(len(keys), dtype=np.int32), **GEOM)
+    st, _ = core.delete(st, jnp.asarray(np.arange(30000, 60000, dtype=np.int32)))
+    check_invariants(st)
+    live = keys[(keys < 30000) | (keys >= 60000)]
+    return st, live
+
+
+def _mixed_batches(rng, live):
+    """Adversarial mixed batches: every op class aimed at the usual traps."""
+    out = []
+    for name, q in _adversarial_query_batches(rng, live).items():
+        n = len(q)
+        tags = rng.choice(
+            np.array([OP_INSERT, OP_DELETE, OP_POINT, OP_SUCCESSOR], np.int32),
+            n,
+            p=[0.3, 0.2, 0.3, 0.2],
+        )
+        tags[: max(1, n // 8)] = OP_RANGE
+        # the engine's batch contract (same as the repo's mixed tests):
+        # one update per key per batch — duplicated keys keep the update
+        # tag only at their first occurrence, the rest become reads
+        upd = (tags == OP_INSERT) | (tags == OP_DELETE)
+        _, first = np.unique(q[upd], return_index=True)
+        keep = np.zeros(int(upd.sum()), bool)
+        keep[first] = True
+        tags[np.nonzero(upd)[0][~keep]] = OP_POINT
+        vals = (q.astype(np.int64) * 13 % 100000).astype(np.int32)
+        is_range = tags == OP_RANGE
+        vals[is_range] = np.minimum(q[is_range].astype(np.int64) + 5000, 130000).astype(
+            np.int32
+        )
+        out.append((name, tags, q.astype(np.int32), vals))
+    return out
+
+
+def test_budget_sweep_differential(seeded, rng):
+    st, live = seeded
+    batches = _mixed_batches(rng, live)
+    for bname, budget in _budgets(st).items():
+        oracle = st
+        tiered = TieredFliX.from_state(st, budget_bytes=budget)
+        for name, tags, keys, vals in batches:
+            ops, perm = make_ops(tags, keys, vals)
+            oracle, want, wstats = apply_ops(oracle, ops, impl="reference")
+            got, gstats, _ = tiered.apply(ops, impl="reference")
+            tag = f"{bname}/{name}"
+            _assert_results_match(got, want, gstats, wstats, tag)
+            _assert_tiered_matches(tiered, oracle, tag)
+            check_tiered_invariants(tiered)
+        # the budget was honored throughout (one bucket always admitted)
+        if budget is not None:
+            assert tiered.memory_bytes_resident() <= max(budget, tiered.bucket_bytes)
+        if bname == "one_bucket":
+            assert tiered.demoted_total > 0  # the sweep actually paged
+
+
+def test_readonly_batches_leave_mirror_untouched(seeded, rng):
+    st, live = seeded
+    tiered = TieredFliX.from_state(st, budget_bytes=max(1, st.memory_bytes() // 10))
+    before = pairs_to_bytes(*bucket_segments(tiered.host_view())[1:])
+    q = np.sort(rng.choice(live, 200)).astype(np.int32)
+    tags = np.where(np.arange(200) % 2 == 0, OP_POINT, OP_SUCCESSOR).astype(np.int32)
+    ops, _ = make_ops(tags, q, np.zeros(200, np.int32))
+    _, want, _ = apply_ops(st, ops, impl="reference")
+    got, stats, _ = tiered.apply(ops, impl="reference", commit=False)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
+    assert pairs_to_bytes(*bucket_segments(tiered.host_view())[1:]) == before
+    check_tiered_invariants(tiered)
+    assert stats["resident_bytes"] <= max(
+        max(1, st.memory_bytes() // 10), tiered.bucket_bytes
+    )
+
+
+def test_overflow_grow_replay_matches_safe_oracle(rng):
+    # clustered floods into a tiny geometry: overflow → grow → replay
+    keys = np.sort(rng.choice(4096, 400, replace=False)).astype(np.int32)
+    st = core.build(keys, (keys * 7 + 1).astype(np.int32), node_size=8,
+                    nodes_per_bucket=4)
+    oracle = st
+    tiered = TieredFliX.from_state(st, budget_bytes=max(1, st.memory_bytes() // 8))
+    grew = 0
+    for t in range(6):
+        fresh = 1000 + rng.choice(600, 48, replace=False).astype(np.int32)
+        tags = np.full(48, OP_INSERT, np.int32)
+        tags[40:] = OP_POINT
+        ops, _ = make_ops(tags, fresh, (fresh * 13 + t).astype(np.int32))
+        oracle, want, wstats = apply_ops_safe(oracle, ops, impl="reference")
+        got, gstats, restructured = tiered.apply(ops, impl="reference")
+        assert restructured == bool(int(wstats["restructure_retries"])), t
+        grew += int(restructured)
+        _assert_results_match(got, want, gstats, wstats, f"flood{t}")
+        _assert_tiered_matches(tiered, oracle, f"flood{t}")
+        check_tiered_invariants(tiered)
+    assert grew > 0, "workload must actually trigger the grow path"
+    assert tiered.reclaimed_total == 0  # grow never reports reclamation
+
+
+def test_ttl_parity_with_moving_clock(rng):
+    keys = np.sort(rng.choice(8192, 500, replace=False)).astype(np.int32)
+    vals = (keys * 3 + 1).astype(np.int32)
+    exps = np.where(np.arange(500) % 3 == 0, 40 + (keys % 200), NO_EXPIRY).astype(
+        np.int32
+    )
+    st = state_from_pairs(keys, vals, exps, **GEOM)
+    oracle = st
+    tiered = TieredFliX.from_state(st, budget_bytes=max(1, st.memory_bytes() // 10))
+    for now in (0, 60, 150, 400):
+        q = np.sort(rng.choice(8192, 64)).astype(np.int32)
+        tags = rng.choice(
+            np.array([OP_EXPIRE, OP_POINT, OP_SUCCESSOR], np.int32),
+            64,
+            p=[0.4, 0.3, 0.3],
+        )
+        e = np.where(tags == OP_EXPIRE, now + 37 + (q % 50), NO_EXPIRY).astype(
+            np.int32
+        )
+        ops, _ = make_ops(tags, q, (q * 5 + now).astype(np.int32), exps=e)
+        oracle, want, wstats = apply_ops(oracle, ops, impl="reference", now=now)
+        got, gstats, _ = tiered.apply(ops, impl="reference", now=now)
+        _assert_results_match(got, want, gstats, wstats, f"now={now}")
+        _assert_tiered_matches(tiered, oracle, f"now={now}")
+        check_tiered_invariants(tiered, now=now)
+
+
+# ---------------------------------------------------------------------------
+# reclamation (satellite: restructure_shrink + compaction)
+# ---------------------------------------------------------------------------
+
+
+def test_restructure_shrink_reclaims_bytes(rng):
+    keys = np.arange(0, 40000, 2, dtype=np.int32)
+    st = core.build(keys, (keys // 2).astype(np.int32), **GEOM)
+    st, _ = core.delete(st, jnp.asarray(keys[: int(0.9 * len(keys))]))
+    payload = canonical_state_bytes(st)
+    before = st.memory_bytes()
+    new, reclaimed = restructure_shrink(st)
+    assert new.memory_bytes() < before, (new.memory_bytes(), before)
+    assert reclaimed == before - new.memory_bytes()
+    check_invariants(new)
+    # geometry-independent canonical payload is untouched
+    assert canonical_state_bytes(new) == payload
+    # regression: the arrays really are re-materialized smaller
+    assert new.keys.nbytes < st.keys.nbytes
+
+
+def test_tiered_compact_reclaims_and_keeps_parity(rng):
+    keys = np.arange(0, 40000, 2, dtype=np.int32)
+    st = core.build(keys, (keys // 2).astype(np.int32), **GEOM)
+    st, _ = core.delete(st, jnp.asarray(keys[: int(0.9 * len(keys))]))
+    oracle, oracle_reclaimed = restructure_shrink(st)
+    tiered = TieredFliX.from_state(st, budget_bytes=max(1, st.memory_bytes() // 10))
+    reclaimed = tiered.compact()
+    assert reclaimed == oracle_reclaimed
+    assert tiered.reclaimed_total >= reclaimed
+    _assert_tiered_matches(tiered, oracle, "compact")
+    check_tiered_invariants(tiered)
+    # still serves correctly after compaction, within budget
+    q = np.sort(rng.choice(keys, 64)).astype(np.int32)
+    ops, _ = make_ops(np.full(64, OP_POINT, np.int32), q, np.zeros(64, np.int32))
+    _, want, _ = apply_ops(oracle, ops, impl="reference")
+    got, _, _ = tiered.apply(ops, impl="reference")
+    np.testing.assert_array_equal(np.asarray(got["value"]), np.asarray(want["value"]))
+
+
+def test_plan_shard_budget():
+    assert plan_shard_budget(None, 4) is None
+    assert plan_shard_budget(100, 4) == 25
+    assert plan_shard_budget(3, 8) == 1  # never starves a shard to zero
+
+
+# ---------------------------------------------------------------------------
+# cold-tier crash recovery: reopening a durable tiered index must never
+# materialize the full index on device
+# ---------------------------------------------------------------------------
+
+
+def _serve_workload(kv, rng, steps):
+    for t in range(steps):
+        seqs = rng.choice(64, 8, replace=False)
+        pages = rng.integers(0, 16, 8).astype(np.int64)
+        kv.step(allocs=(seqs, pages, seqs * 1000 + pages))
+
+
+def test_crash_recovery_cold_tier(tmp_path, rng, monkeypatch):
+    from repro.serve.kv_index import KVPageIndex
+
+    budget = 8192
+    kv = KVPageIndex(
+        durability_dir=str(tmp_path), snapshot_every=3, device_budget=budget
+    )
+    _serve_workload(kv, np.random.default_rng(7), 7)
+    # oracle: the same workload on a plain single-tier index
+    oracle = KVPageIndex()
+    _serve_workload(oracle, np.random.default_rng(7), 7)
+    want = canonical_state_bytes(oracle.state)
+    del kv  # crash: no close(), recovery replays the WAL tail
+
+    boom = AssertionError("full-index materialization during recovery")
+
+    def _no_materialize(self):
+        raise boom
+
+    monkeypatch.setattr(TieredFliX, "materialize", _no_materialize)
+    kv2 = KVPageIndex(
+        durability_dir=str(tmp_path), snapshot_every=3, device_budget=budget
+    )
+    handle = kv2._durable.handle
+    assert isinstance(handle, TieredFliX)
+    # recovered payload is byte-identical to the uninterrupted oracle —
+    # proven through the host view, still without touching the device
+    assert pairs_to_bytes(*bucket_segments(handle.host_view())[1:]) == want
+    assert kv2.resident_bytes is not None
+    assert kv2.resident_bytes <= max(budget, handle.bucket_bytes)
+    check_tiered_invariants(handle)
+    # and it still serves: reads + one more durable update step
+    rng2 = np.random.default_rng(7)
+    seqs = rng2.choice(64, 8, replace=False)
+    got = np.asarray(kv2.lookup(seqs, np.zeros(8, np.int64)))
+    exp = np.asarray(oracle.lookup(seqs, np.zeros(8, np.int64)))
+    np.testing.assert_array_equal(got, exp)
+    kv2.step(allocs=([99], [0], [4242]))
+    assert int(np.asarray(kv2.lookup([99], [0]))[0]) == 4242
+    kv2.snapshot()
+    kv2.close()
+
+
+def test_gateway_surfaces_residency_metrics(rng):
+    from repro.serve.gateway import Gateway, Request
+    from repro.serve.kv_index import KVPageIndex
+
+    kv = KVPageIndex(device_budget=8192)
+    gw = Gateway(kv, default_rate=1e6, default_burst=1e6)
+    for b in range(4):
+        gw.submit(
+            Request(f"t{b}", f"alloc:{b}", "alloc", seqs=(b,), pages=(0,),
+                    slots=(b * 10,)),
+            now=0.0,
+        )
+    gw.pump(now=0.0)
+    m = gw.metrics
+    assert m["promoted"] >= 1
+    assert m["resident_bytes"] > 0
+    assert m["resident_bytes"] <= max(8192, kv.state.bucket_bytes)
+    assert m["demoted"] >= 0 and m["reclaimed_bytes"] >= 0
