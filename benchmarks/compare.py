@@ -5,11 +5,11 @@
 Both sides are ``flix-bench-v1`` artifacts (``benchmarks.run`` output /
 the committed ``BENCH_PR*.json`` snapshots).  Raw ``us_per_call`` numbers
 are host-dependent, so the *gate* only looks at the same-host speedup
-ratio maps (``apply_ops_fused_speedup``, ``range_fused_speedup``,
-``sharded_speedup``, ``durability_delta_speedup``,
-``gateway_goodput_ratio``, ``tiered_degradation_ratio`` — the middle two
-are payload-volume and virtual-clock request-count ratios, deterministic
-by construction; the tiered ratio divides two same-host wall-clock
+ratio maps (``apply_ops_fused_speedup``, ``pipelined_speedup``,
+``range_fused_speedup``, ``sharded_speedup``,
+``durability_delta_speedup``, ``gateway_goodput_ratio``,
+``tiered_degradation_ratio`` — the volume/virtual-clock ratios are
+deterministic by construction; the rest divide two same-host wall-clock
 sweeps): a key regresses when
 
     fresh < baseline * (1 - tolerance)
@@ -18,7 +18,11 @@ with ``tolerance`` from ``--tolerance`` / ``$REPRO_BENCH_TOL``
 (default 0.20).  Keys whose baseline ratio is below ``--min-baseline`` /
 ``$REPRO_BENCH_MIN_BASELINE`` (default 0.05) are reported but never
 gated — interpret-mode Pallas ratios on CPU runners are diagnostics, not
-perf promises (DESIGN.md §7).  Later baseline files override earlier ones
+perf promises (DESIGN.md §7).  ``pipelined_speedup`` is additionally held
+to an absolute floor of 1.0 (× the same tolerance) on the fresh artifact:
+double-buffered-vs-single-buffer is a same-host ratio, so dropping below
+1.0 is a pipelining regression on any hardware (DESIGN.md §16).
+Later baseline files override earlier ones
 key-by-key, so pass snapshots oldest-first.  Keys present on only one
 side are reported as ``new``/``missing`` without failing (a suite that
 did not run must not trip the gate); a fresh artifact with a non-empty
@@ -38,6 +42,7 @@ import sys
 
 SPEEDUP_FIELDS = (
     "apply_ops_fused_speedup",
+    "pipelined_speedup",
     "range_fused_speedup",
     "ttl_fused_speedup",
     "sharded_speedup",
@@ -46,6 +51,14 @@ SPEEDUP_FIELDS = (
     "tiered_degradation_ratio",
 )
 SCHEMA = "flix-bench-v1"
+
+# Absolute floors on the fresh artifact, independent of any baseline.
+# ``pipelined_speedup`` is double-buffered-vs-single-buffer on the SAME
+# host: on TPU the overlap must not lose to the single-buffer path, and on
+# CPU hosts the suite re-emits the fused time (ratio exactly 1.0), so a
+# value below the floor always means a real pipelining regression — not a
+# host difference (DESIGN.md §16).  The gate tolerance applies.
+ABSOLUTE_FLOORS = {"pipelined_speedup": 1.0}
 
 
 def load_artifact(path: str) -> dict:
@@ -159,10 +172,20 @@ def main(argv: list[str] | None = None) -> int:
         with open(summary_path, "a") as f:
             f.write(table + "\n")
 
+    floor_violations = []
+    for field, floor in ABSOLUTE_FLOORS.items():
+        for key, value in fresh_map.items():
+            if key.startswith(f"{field}/") and value < floor * (1.0 - args.tolerance):
+                floor_violations.append(f"{key}={value:.4f} < floor {floor:.2f}")
+
     failed_suites = fresh_payload.get("failed") or []
     if failed_suites:
         print(f"FAIL: fresh artifact is truncated (failed suites: "
               f"{failed_suites})", file=sys.stderr)
+        return 1
+    if floor_violations:
+        print(f"FAIL: {len(floor_violations)} absolute-floor violation(s): "
+              f"{floor_violations}", file=sys.stderr)
         return 1
     if regressions:
         print(f"FAIL: {len(regressions)} speedup regression(s) beyond "

@@ -36,6 +36,7 @@ import numpy as np
 
 from benchmarks.common import BUILD_SIZE, KEY_SPACE, emit, keyset, time_call
 from repro import core
+from repro.core.config import ExecConfig
 
 SELECTIVITY = {"narrow": 16, "wide": 256}   # expected stored keys per range
 RANGE_FRACTIONS = (10, 50, 90)              # percent of the batch
@@ -88,7 +89,7 @@ def run() -> None:
             def reference():
                 ops, _ = core.make_ops(jt, jk, jv)
                 return core.apply_ops(
-                    st, ops, impl="reference", max_results=MAX_RESULTS
+                    st, ops, config=ExecConfig(impl="reference", max_results=MAX_RESULTS)
                 )
 
             t_ref = time_call(reference)
@@ -106,7 +107,7 @@ def run() -> None:
                 def fused():
                     ops, _ = core.make_ops(jt, jk, jv)
                     return core.apply_ops(
-                        st, ops, impl="fused", max_results=MAX_RESULTS
+                        st, ops, config=ExecConfig(impl="fused", max_results=MAX_RESULTS)
                     )
 
                 t_fused = time_call(fused, iters=1)

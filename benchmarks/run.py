@@ -4,15 +4,18 @@
   python -m benchmarks.run             # everything
   python -m benchmarks.run fig9 fig13  # substring filter
 
-Besides the CSV rows on stdout, every run writes ``BENCH_PR8.json`` — the
+Besides the CSV rows on stdout, every run writes ``BENCH_PR10.json`` — the
 repo's machine-readable perf-trajectory artifact (schema ``flix-bench-v1``,
 DESIGN.md §7): per-suite ``name → us_per_call`` maps plus the
 fused-vs-reference ``apply_ops`` speedups extracted from the
-``mixed_batch`` suite, the RANGE-op speedups from ``range_mix``, the
+``mixed_batch`` suite, the pipelined-vs-fused speedups from the same suite
+(DESIGN.md §16), the RANGE-op speedups from ``range_mix``, the
 TTL-mix speedups from ``ttl_mix``, the sharded-vs-single speedups from
 ``sharded_mix``, the delta-vs-full snapshot write-volume ratios from
-``durability``, the goodput-under-overload ratios from ``gateway``, and
-the oversubscription-degradation ratios from ``tiered_scale``.  (``BENCH_PR*.json`` in
+``durability``, the goodput-under-overload ratios from ``gateway``, the
+oversubscription-degradation ratios from ``tiered_scale``, and the
+deterministic autotuner tile table + sweep record
+(``kernels/autotune.py``).  (``BENCH_PR*.json`` in
 the repo root are committed per-PR snapshots — ``benchmarks.compare``
 diffs against them; don't overwrite them outside a snapshot refresh.)
 """
@@ -66,7 +69,7 @@ SUITES = {
     "tiered_scale_engine": tiered_scale,
 }
 
-BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR9.json")
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR10.json")
 
 
 def _speedups(
@@ -98,6 +101,26 @@ def _sharded_speedups(rows: dict[str, float]) -> dict[str, float]:
         if single is not None:
             out[point] = single / us
     return out
+
+
+def _autotune_record() -> dict:
+    """Model-mode tile sweep over the bench grid (kernels/autotune.py).
+
+    Pure integer arithmetic — identical on every host — so it is safe to
+    embed in the committed artifact and re-derive in CI.  The grid covers
+    the suites' build size and the batch sizes the mixed/sharded sweeps
+    actually run; geometry matches the bench builds (node_size=32,
+    nodes_per_bucket=16)."""
+    from repro.kernels.autotune import autotune
+
+    batch = max(1024, common.BUILD_SIZE // 8)
+    _, record = autotune(
+        (common.BUILD_SIZE // 16, common.BUILD_SIZE),
+        (256, batch),
+        node_size=32,
+        nodes_per_bucket=16,
+    )
+    return record
 
 
 def write_bench_json(
@@ -146,6 +169,21 @@ def write_bench_json(
             mixed, "mixed_batch_apply_fused_upd", "mixed_batch_apply_ops_upd",
             key_prefix="upd",
         ),
+        # double-buffered fused kernel vs the single-buffer fused baseline
+        # (the PR9 path, pinned pipeline="off").  On non-TPU hosts the suite
+        # re-emits the fused time under the pipelined row, so the ratio is
+        # exactly 1.0 — the ≥ 1.0 compare gate then certifies "no
+        # regression" portably and the real overlap win shows up on TPU
+        "pipelined_speedup": _speedups(
+            mixed,
+            "mixed_batch_apply_pipelined_upd",
+            "mixed_batch_apply_fused_upd",
+            key_prefix="upd",
+        ),
+        # deterministic model-mode tile sweep (kernels/autotune.py): the
+        # tuned TileTable rows plus the full per-bucket candidate sweeps,
+        # so the artifact documents *why* each tile was chosen
+        "autotune": _autotune_record(),
         "range_fused_speedup": _speedups(
             ranges, "range_mix_fused_", "range_mix_ref_"
         ),

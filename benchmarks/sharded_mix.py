@@ -18,7 +18,15 @@ number (< 1 — eight XLA CPU shards time-slice one socket); the trend to
 watch on real hardware is rep-vs-a2a crossover as the update ratio grows.
 ``benchmarks.run`` lifts the ``sharded_mix_{rep,a2a}_s*`` /
 ``sharded_mix_single_*`` pairs into the ``sharded_speedup`` field of
-BENCH_PR5.json (schema flix-bench-v1, DESIGN.md §7).
+the bench artifact (schema flix-bench-v1, DESIGN.md §7).
+
+Since PR 10 the suite also records the routing *policy* inputs
+(DESIGN.md §16): ``sharded_mix_crossover_s*`` (smallest update ratio
+where a2a ≤ replicated, plus the full a2a/rep ratio curve) and
+``sharded_mix_skew_s*`` (observed max-shard-load / uniform-share over the
+swept batches, against ``A2A_CAPACITY_HEADROOM`` and the
+``default_a2a_capacity`` it implies — ``covered=1`` means the default
+receive buffers absorb the measured skew without a safe-mode retry).
 """
 
 from __future__ import annotations
@@ -30,6 +38,7 @@ import numpy as np
 from benchmarks.common import BUILD_SIZE, KEY_SPACE, emit, keyset, time_call
 from repro import core
 from repro.core import distributed as dist
+from repro.core.config import ExecConfig
 
 SHARD_COUNTS = (2, 4, 8)
 UPDATE_RATIOS = (0, 50, 100)
@@ -91,8 +100,9 @@ def run() -> None:
     }
 
     # single-device baseline: the same batch through plain apply_ops
+    times: dict[tuple[str, int, int], float] = {}
     for upd, ops in batches.items():
-        t = time_call(lambda ops=ops: core.apply_ops(st, ops, impl="reference"))
+        t = time_call(lambda ops=ops: core.apply_ops(st, ops, config=ExecConfig(impl="reference")))
         emit(
             f"sharded_mix_single_upd{upd}",
             t,
@@ -105,11 +115,57 @@ def run() -> None:
             for mode in ("replicated", "a2a"):
                 t_sh = time_call(
                     lambda ops=ops, idx=idx, mesh=mesh, mode=mode: (
-                        dist.shard_apply_ops(idx, ops, mesh, routing=mode)
+                        dist.shard_apply_ops(idx, ops, mesh, config=ExecConfig(routing=mode))
                     )
                 )
+                times[(mode, s, upd)] = t_sh
                 emit(
                     f"sharded_mix_{mode[:3]}_s{s}_upd{upd}",
                     t_sh,
                     f"batch={batch};speedup_vs_single={single / t_sh:.3f}x",
                 )
+
+    # routing-policy rows (DESIGN.md §16): where replicated stops paying and
+    # the observed key skew that sizes the default a2a receive buffers.
+    for s in shard_counts:
+        idx = indexes[s]
+        # destination shard per op: shard s owns keys in
+        # (part_fences[s-1], part_fences[s]] — same searchsorted the a2a
+        # router runs on device, replayed on host over the batch keys
+        fences = np.asarray(jax.device_get(idx.part_fences))
+        skews = []
+        for upd, ops in batches.items():
+            k = np.asarray(jax.device_get(ops.key))
+            k = k[np.asarray(jax.device_get(ops.tag)) != core.OP_NOP]
+            dest = np.minimum(
+                np.searchsorted(fences, k, side="left"), s - 1
+            )
+            loads = np.bincount(dest, minlength=s)
+            skews.append(loads.max() / (k.size / s))
+        skew = max(skews)
+        chunk = batch // s  # per-shard ingest chunk in a2a mode
+        cap = dist.default_a2a_capacity(chunk, s)
+        emit(
+            f"sharded_mix_skew_s{s}",
+            0.0,
+            f"batch={batch};observed_skew={skew:.3f}"
+            f";headroom={dist.A2A_CAPACITY_HEADROOM:.1f}"
+            f";default_capacity={cap};chunk={chunk}"
+            f";covered={int(skew <= dist.A2A_CAPACITY_HEADROOM)}",
+        )
+        # smallest update ratio where a2a matches/beats replicated on this
+        # host; -1 = replicated wins everywhere (watch on real hardware)
+        cross = next(
+            (
+                u
+                for u in UPDATE_RATIOS
+                if times[("a2a", s, u)] <= times[("replicated", s, u)]
+            ),
+            -1,
+        )
+        ratios = ";".join(
+            f"a2a_over_rep_upd{u}="
+            f"{times[('a2a', s, u)] / times[('replicated', s, u)]:.3f}"
+            for u in UPDATE_RATIOS
+        )
+        emit(f"sharded_mix_crossover_s{s}", 0.0, f"crossover_upd={cross};{ratios}")

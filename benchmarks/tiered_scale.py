@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import BUILD_SIZE, emit, lsm_levels
+from repro.core.config import ExecConfig
 from repro import core
 from repro.core import TieredFliX, make_ops
 from repro.core.baselines import lsm
@@ -85,7 +86,7 @@ def _sweep(st, budget, batches):
     tiered = TieredFliX.from_state(st, budget_bytes=budget)
     t0 = time.perf_counter()
     for ops in batches:
-        tiered.apply(ops, impl="reference")
+        tiered.apply(ops, config=ExecConfig(impl="reference"))
     dt = time.perf_counter() - t0
     return (ROUNDS * BATCH) / dt, tiered
 

@@ -38,6 +38,7 @@ from benchmarks.common import BUILD_SIZE, KEY_SPACE, emit, keyset, time_call
 from repro import core
 from repro.checkpoint.serialize import state_from_pairs
 from repro.core.expiry import NO_EXPIRY, expire_state
+from repro.core.config import ExecConfig
 
 TTL_SKEW = {"light": 0.01, "heavy": 0.25}  # stored rows already expired
 EXPIRE_FRACTIONS = (10, 50, 90)            # percent of the batch
@@ -127,7 +128,7 @@ def run() -> None:
             def reference():
                 ops, _ = core.make_ops(jt, jk, jv, exps=je)
                 return core.apply_ops(
-                    st, ops, impl="reference", max_results=MAX_RESULTS, now=NOW
+                    st, ops, now=NOW, config=ExecConfig(impl="reference", max_results=MAX_RESULTS)
                 )
 
             t_ref = time_call(reference)
@@ -144,7 +145,7 @@ def run() -> None:
                 def fused():
                     ops, _ = core.make_ops(jt, jk, jv, exps=je)
                     return core.apply_ops(
-                        st, ops, impl="fused", max_results=MAX_RESULTS, now=NOW
+                        st, ops, now=NOW, config=ExecConfig(impl="fused", max_results=MAX_RESULTS)
                     )
 
                 t_fused = time_call(fused, iters=1)

@@ -47,12 +47,13 @@ for step in range(50):
     # allocations and frees.
     if seqs or done:
         probe = seqs[0] if seqs else done[0]
-        got, rng_out, _ = idx.step(
+        res = idx.step(
             allocs=(seqs, pages, slots) if seqs else None,
             lookups=(seqs, pages) if seqs else None,
             free_seqs=done if done else None,
             ranges=([probe << PAGE_BITS], [(probe + 1) << PAGE_BITS]),
         )
+        got, rng_out = res.slots, res.range_out
         if seqs:
             assert (np.asarray(got) == np.array(slots)).all()
         n_expect = 0 if probe in done else active[probe]

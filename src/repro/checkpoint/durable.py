@@ -56,9 +56,9 @@ from repro.checkpoint.serialize import (
     state_from_pairs,
 )
 from repro.checkpoint.wal import WriteAheadLog, decode_ops, encode_ops
+from repro.core.config import _UNSET, ExecConfig, resolve_config
 from repro.core.expiry import NO_EXPIRY
 from repro.core.ops import (
-    DEFAULT_MAX_RESULTS,
     OP_DELETE,
     OP_EXPIRE,
     OP_INSERT,
@@ -120,7 +120,14 @@ class EngineBase:
 
 
 class LocalEngine(EngineBase):
-    """Single-device executor behind the durability layer."""
+    """Single-device executor behind the durability layer.
+
+    ``config`` carries the execution strategy (kernel pipeline, tiles, …)
+    threaded to every inner ``apply_ops``; ``impl`` remains as a direct
+    ctor knob and is folded into it.  The per-batch ``max_results`` is NOT
+    part of this config — it is logged per WAL record so replay re-runs
+    each batch under its own budget.
+    """
 
     kind = "local"
 
@@ -128,11 +135,15 @@ class LocalEngine(EngineBase):
         self,
         *,
         impl: str = "auto",
+        config: ExecConfig | None = None,
         node_size: int = 32,
         nodes_per_bucket: int = 16,
         fill: float = 0.5,
     ):
-        self.impl = impl
+        self.config = config if config is not None else ExecConfig(impl=impl)
+        if config is not None and impl != "auto":
+            self.config = self.config.replace(impl=impl)
+        self.impl = self.config.impl
         self.node_size = node_size
         self.nodes_per_bucket = nodes_per_bucket
         self.fill = fill
@@ -155,16 +166,13 @@ class LocalEngine(EngineBase):
         """``apply_ops`` with the restructure-and-retry loop surfaced: the
         durability layer must KNOW when the fence epoch changed, so it
         drives the retry itself instead of calling ``apply_ops_safe``."""
-        new, results, stats = apply_ops(
-            handle, ops, impl=self.impl, max_results=max_results, now=now
-        )
+        cfg = self.config.replace(max_results=max_results, donate=False)
+        new, results, stats = apply_ops(handle, ops, config=cfg, now=now)
         restructured = False
         if bool(new.needs_restructure) and not bool(handle.needs_restructure):
             n_ins = int(jnp.sum((ops.tag == OP_INSERT) | (ops.tag == OP_EXPIRE)))
             grown = restructure_grow(handle, extra_keys=max(n_ins, 1))
-            new, results, stats = apply_ops(
-                grown, ops, impl=self.impl, max_results=max_results, now=now
-            )
+            new, results, stats = apply_ops(grown, ops, config=cfg, now=now)
             assert not bool(new.needs_restructure), "post-restructure overflow"
             restructured = True
         stats = dict(stats)
@@ -189,13 +197,22 @@ class ShardEngine(EngineBase):
         *,
         routing: str = "replicated",
         impl: str = "auto",
+        config: ExecConfig | None = None,
         node_size: int = 32,
         nodes_per_bucket: int = 16,
         fill: float = 0.5,
     ):
         self.mesh = mesh
-        self.routing = routing
-        self.impl = impl
+        self.config = (
+            config if config is not None else ExecConfig(impl=impl, routing=routing)
+        )
+        if config is not None:
+            if impl != "auto":
+                self.config = self.config.replace(impl=impl)
+            if routing != "replicated":
+                self.config = self.config.replace(routing=routing)
+        self.routing = self.config.routing
+        self.impl = self.config.impl
         self.node_size = node_size
         self.nodes_per_bucket = nodes_per_bucket
         self.fill = fill
@@ -224,15 +241,8 @@ class ShardEngine(EngineBase):
     def apply(self, handle, ops: OpBatch, *, max_results: int, now=None):
         from repro.core.distributed import shard_apply_ops, shard_restructure
 
-        new, results, stats = shard_apply_ops(
-            handle,
-            ops,
-            self.mesh,
-            routing=self.routing,
-            impl=self.impl,
-            max_results=max_results,
-            now=now,
-        )
+        cfg = self.config.replace(max_results=max_results, donate=False)
+        new, results, stats = shard_apply_ops(handle, ops, self.mesh, config=cfg, now=now)
         restructured = False
         if bool(new.state.needs_restructure) and not bool(
             handle.state.needs_restructure
@@ -240,13 +250,7 @@ class ShardEngine(EngineBase):
             n_ins = int(jnp.sum((ops.tag == OP_INSERT) | (ops.tag == OP_EXPIRE)))
             grown = shard_restructure(handle, self.mesh, extra_keys=max(n_ins, 1))
             new, results, stats = shard_apply_ops(
-                grown,
-                ops,
-                self.mesh,
-                routing=self.routing,
-                impl=self.impl,
-                max_results=max_results,
-                now=now,
+                grown, ops, self.mesh, config=cfg, now=now
             )
             assert not bool(new.state.needs_restructure), "post-restructure overflow"
             restructured = True
@@ -276,12 +280,16 @@ class TieredEngine(EngineBase):
         *,
         budget_bytes: int | None = None,
         impl: str = "auto",
+        config: ExecConfig | None = None,
         node_size: int = 32,
         nodes_per_bucket: int = 16,
         fill: float = 0.5,
     ):
         self.budget_bytes = budget_bytes
-        self.impl = impl
+        self.config = config if config is not None else ExecConfig(impl=impl)
+        if config is not None and impl != "auto":
+            self.config = self.config.replace(impl=impl)
+        self.impl = self.config.impl
         self.node_size = node_size
         self.nodes_per_bucket = nodes_per_bucket
         self.fill = fill
@@ -307,7 +315,7 @@ class TieredEngine(EngineBase):
 
     def apply(self, handle, ops: OpBatch, *, max_results: int, now=None):
         results, stats, restructured = handle.apply(
-            ops, max_results=max_results, now=now, impl=self.impl
+            ops, config=self.config.replace(max_results=max_results), now=now
         )
         return handle, results, stats, restructured
 
@@ -680,11 +688,19 @@ class DurableFliX:
         self,
         ops: OpBatch,
         *,
-        max_results: int = DEFAULT_MAX_RESULTS,
+        config: ExecConfig | None = None,
         meta=None,
         now: int | None = None,
+        max_results=_UNSET,
     ):
         """Durably execute one sorted batch; returns ``(results, stats)``.
+
+        Execution strategy rides on ``config=ExecConfig(...)`` (the bare
+        ``max_results`` keyword is a deprecated warn-once shim).  Only its
+        ``max_results`` is durable — it is logged per WAL record so replay
+        re-runs each batch under its own budget; the rest of the strategy
+        (impl, pipeline, tiles) belongs to the live engine and may differ
+        at recovery time without changing the recovered state.
 
         ``now`` is the batch's virtual clock (DESIGN.md §14): it is logged
         in the WAL record alongside any per-op expiry column, so replay
@@ -709,6 +725,8 @@ class DurableFliX:
         snapshot refused) because live and durable state have diverged —
         reopening from disk is the only consistent continuation.
         """
+        cfg = resolve_config("DurableFliX.apply", config, max_results=max_results)
+        mr = cfg.max_results
         self._check_poisoned()
         tag, key, val, exp = ops.to_host()
         if exp is None and now is not None:
@@ -719,7 +737,7 @@ class DurableFliX:
         meta_bytes = b"" if meta is None else json.dumps(meta).encode()
         wal_pos = self._wal.tell()
         self._wal.append(
-            seq, encode_ops(tag, key, val, max_results, meta_bytes, exp=exp, now=now)
+            seq, encode_ops(tag, key, val, mr, meta_bytes, exp=exp, now=now)
         )
         self._seq = seq
 
@@ -730,7 +748,7 @@ class DurableFliX:
 
         try:
             new, results, stats, restructured = self.engine.apply(
-                self.handle, ops, max_results=max_results, now=now
+                self.handle, ops, max_results=mr, now=now
             )
         except BaseException:
             self._seq = seq - 1

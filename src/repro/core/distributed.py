@@ -52,10 +52,11 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
+from repro.core.batch import bucket_slices, gather_sublists
 from repro.core.build import build_from_sorted
+from repro.core.config import _UNSET, ExecConfig, resolve_config
 from repro.core.expiry import NO_EXPIRY
 from repro.core.ops import (
-    DEFAULT_MAX_RESULTS,
     OP_DELETE,
     OP_EXPIRE,
     OP_INSERT,
@@ -64,6 +65,7 @@ from repro.core.ops import (
     OP_RANGE,
     OP_SUCCESSOR,
     OpBatch,
+    _compact_by_mask,
     apply_ops,
 )
 from repro.core.query import _suffix_min_with_index, flat_rank, range_offsets
@@ -304,10 +306,6 @@ def _inverse_permutation(order: jax.Array) -> jax.Array:
     )
 
 
-def _pmax_bool(flag: jax.Array, axis: str) -> jax.Array:
-    return jax.lax.pmax(flag.astype(jnp.int32), axis).astype(bool)
-
-
 def _post_update_shard_min(state: FliXState):
     """Smallest present key in this shard (EMPTY if none) and its value."""
     bucket_min = jnp.where(state.num_nodes > 0, state.keys[:, 0, 0], EMPTY)
@@ -317,33 +315,75 @@ def _post_update_shard_min(state: FliXState):
     return m, v
 
 
-def _cross_shard_range(
-    state: FliXState,
+def _predict_post_keys(state: FliXState, ins_keys: jax.Array, del_keys: jax.Array):
+    """Post-update per-bucket sorted key rows + rank fences, *pre-apply*.
+
+    The fused kernel's predict-without-running-the-update argument
+    (``kernels/flix_apply._range_plumbing``) lifted to the shard level: a
+    shard's post-update bucket multiset is (surviving stripe keys minus
+    upsert duplicates) ∪ (this shard's masked insert keys) — exact because
+    one batch never inserts and deletes the same key, and EXPIRE keys count
+    as inserts (get-or-set leaves the key present either way).  This is
+    what lets the cross-shard RANGE counts collective launch *before* the
+    per-shard update pass (DESIGN.md §16): the two touch no shared data
+    until the final dense extract.  NOT valid under an expiry pass at
+    ``now`` — the caller gates on ``has_now`` and falls back to the
+    sequential post-apply phase.
+
+    ``ins_keys``/``del_keys`` are the shard's masked update keys, sorted,
+    EMPTY-padded.  Returns ``(post_keys [nb, S+cap], pref [nb+1])``.
+    """
+    flat_k, _ = flatten_bucket_sorted(state)
+    nb, S = flat_k.shape
+    cap = state.bucket_capacity
+    mflat = flat_k.reshape(-1)
+    nk = max(del_keys.shape[0] - 1, 0)
+    dpos = jnp.minimum(jnp.searchsorted(del_keys, mflat, side="left"), nk)
+    dhit = (del_keys[dpos] == mflat) & (mflat != EMPTY)
+    masked = jnp.where(dhit.reshape(nb, S), EMPTY, flat_k)
+
+    ni = max(ins_keys.shape[0] - 1, 0)
+    ipos = jnp.minimum(jnp.searchsorted(ins_keys, masked.reshape(-1), side="left"), ni)
+    upserted = (ins_keys[ipos] == masked.reshape(-1)) & (masked.reshape(-1) != EMPTY)
+
+    istarts, iends = bucket_slices(state, ins_keys)
+    ik, _, _ = gather_sublists(ins_keys, istarts, iends, cap)
+    post_rows = jnp.concatenate(
+        [jnp.where(upserted.reshape(nb, S), EMPTY, masked), ik], axis=1
+    )
+    post_keys = jnp.sort(post_rows, axis=1)
+    live = jnp.sum(post_keys != EMPTY, axis=1).astype(jnp.int32)
+    pref = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(live).astype(jnp.int32)]
+    )
+    return post_keys, pref
+
+
+def _range_counts_phase(
+    post_keys: jax.Array,
+    pref: jax.Array,
+    mkba: jax.Array,
     is_range: jax.Array,
     lo: jax.Array,
     hi: jax.Array,
     axis: str,
     max_results: int,
 ):
-    """Answer RANGE ops against the union of all shards' post-update states.
+    """The collective half of cross-shard RANGE: ranks → gathered counts →
+    global offsets → per-slot (bucket, rank) sources for this shard.
 
     The §10 dense exclusive-scan contract with *global* offsets: local
     in-range counts are gathered across shards, an exclusive scan over the
     shard axis gives this shard its slot window inside every op's segment,
-    and each emitted slot is filled by exactly one shard — so a ``psum``
-    recombines the dense arrays.  ``is_range``/``lo``/``hi`` must be
-    replicated and in global sorted-batch order; every return value is
-    replicated and byte-identical to single-device ``dense_range_scan``.
+    and each emitted slot is filled by exactly one shard.  ``post_keys`` /
+    ``pref`` describe the shard's post-update key layout — either read from
+    the updated state (sequential path) or predicted pre-apply
+    (:func:`_predict_post_keys`, the overlapped path).  ``is_range`` /
+    ``lo`` / ``hi`` must be replicated and in global sorted-batch order.
     """
     n = lo.shape[0]
-    flat_k, flat_v = flatten_bucket_sorted(state)
-    nb = flat_k.shape[0]
-    live = jnp.sum(flat_k != EMPTY, axis=1).astype(jnp.int32)
-    pref = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(live).astype(jnp.int32)]
-    )
-    rank_lo = flat_rank(flat_k, pref, state.mkba, lo)
-    rank_hi = flat_rank(flat_k, pref, state.mkba, hi)
+    rank_lo = flat_rank(post_keys, pref, mkba, lo)
+    rank_hi = flat_rank(post_keys, pref, mkba, hi)
     local_full = jnp.maximum(rank_hi - rank_lo, 0)
     local_full = jnp.where(is_range, local_full, 0).astype(jnp.int32)
 
@@ -367,21 +407,33 @@ def _cross_shard_range(
     mine = valid & (j >= prefix_lt[owner]) & (j < prefix_lt[owner] + local_full[owner])
     g = rank_lo[owner] + (j - prefix_lt[owner])                # local key rank
     g_c = jnp.where(mine, g, 0)
+    nb = post_keys.shape[0]
     src_b = jnp.clip(
         jnp.searchsorted(pref, g_c, side="right").astype(jnp.int32) - 1, 0, nb - 1
     )
     src_p = g_c - pref[src_b]
-    rk = jax.lax.psum(jnp.where(mine, flat_k[src_b, src_p], 0), axis)
-    rv = jax.lax.psum(jnp.where(mine, flat_v[src_b, src_p], 0), axis)
-    rk = jnp.where(valid, rk, EMPTY)
-    rv = jnp.where(valid, rv, NOT_FOUND)
     return (
-        rk,
-        rv,
+        src_b,
+        src_p,
+        mine,
+        valid,
         jnp.where(is_range, start, 0),
         jnp.where(is_range, emit, 0),
         truncated,
     )
+
+
+def _range_extract_contrib(state: FliXState, src_b, src_p, mine):
+    """This shard's additive contribution to the dense RANGE arrays: actual
+    post-update bytes at the (bucket, in-bucket rank) sources the counts
+    phase resolved.  Exactly one shard owns each emitted slot, so a psum
+    recombines (the caller folds it into the single combine psum)."""
+    flat_k, flat_v = flatten_bucket_sorted(state)
+    src_p = jnp.minimum(src_p, flat_k.shape[1] - 1)  # overflowed buckets are
+    #                            untrustworthy anyway (needs_restructure set)
+    rk = jnp.where(mine, flat_k[src_b, src_p], 0)
+    rv = jnp.where(mine, flat_v[src_b, src_p], 0)
+    return rk, rv
 
 
 def _empty_range_outputs(n: int, max_results: int):
@@ -394,24 +446,21 @@ def _empty_range_outputs(n: int, max_results: int):
     )
 
 
-def _combine_stats(ins_stats, axis: str, truncated, a2a_overflow):
-    out = {
-        "inserted": jax.lax.psum(ins_stats["inserted"], axis),
-        "deleted": jax.lax.psum(ins_stats["deleted"], axis),
-        "overflowed_buckets": jax.lax.psum(ins_stats["overflowed_buckets"], axis),
-        "range_truncated": truncated,
-        "a2a_overflow": a2a_overflow,
-    }
-    if "expired" in ins_stats:
-        out["expired"] = jax.lax.psum(ins_stats["expired"], axis)
-    return out
-
-
 @functools.lru_cache(maxsize=64)
 def _build_replicated(
-    mesh, axis, impl, max_results, has_ranges, donate, has_ttl=False, has_now=False
+    mesh, axis, inner_cfg, max_results, has_ranges, donate, has_ttl=False, has_now=False
 ):
-    """jit(shard_map)-compiled replicated-routing executor (memoized)."""
+    """jit(shard_map)-compiled replicated-routing executor (memoized).
+
+    PR 10 overlap structure (DESIGN.md §16): when the batch has RANGE ops
+    and no expiry pass, the cross-shard recombination's *counts* collective
+    is issued against the predicted post-update layout BEFORE the per-shard
+    update pass — the two touch no shared data until the dense extract — so
+    the scheduler is free to run the ``all_gather`` concurrently with the
+    update compute.  All POINT/SUCCESSOR/RANGE/stats recombination then
+    collapses into a single fused ``psum`` over one contribution pytree
+    (plus the one unavoidable ``pmin`` for the successor winner).
+    """
 
     def body(state, lf, tag, key, val, *extra):
         # extra = (exp,) / (exp, now) when the TTL lanes are enabled
@@ -430,18 +479,40 @@ def _build_replicated(
         mval = jnp.where(keep, val, 0)
         order = jnp.argsort(mkey, stable=True)
         inv = _inverse_permutation(order)
+        stag, skey = mtag[order], mkey[order]
+
+        # overlapped RANGE counts phase: issued pre-apply from the predicted
+        # post-update layout (invalid under an expiry pass at ``now`` — the
+        # prediction cannot see which keys the clock removes)
+        overlap = has_ranges and not has_now
+        if overlap:
+            ins_keys = _compact_by_mask(
+                skey, (stag == OP_INSERT) | (stag == OP_EXPIRE)
+            )
+            del_keys = _compact_by_mask(skey, stag == OP_DELETE)
+            post_keys, pref = _predict_post_keys(state, ins_keys, del_keys)
+            src_b, src_p, mine, rvalid, rstart, rcnt, rtrunc = _range_counts_phase(
+                post_keys,
+                pref,
+                state.mkba,
+                is_rng,
+                key,
+                val.astype(KEY_DTYPE),
+                axis,
+                max_results,
+            )
+
         new_state, res, st = apply_ops(
             state,
             OpBatch(
-                tag=mtag[order],
-                key=mkey[order],
+                tag=stag,
+                key=skey,
                 val=mval[order],
                 exp=None
                 if exp is None
                 else jnp.where(keep, exp, NO_EXPIRY)[order],
             ),
-            impl=impl,
-            max_results=_INNER_MR,
+            config=inner_cfg,
             now=now,
         )
         value = res["value"][inv]
@@ -452,9 +523,6 @@ def _build_replicated(
         # whose get-or-set answer comes back through the value lane
         is_point = (tag == OP_POINT) | (tag == OP_EXPIRE)
         hit = is_point & (value != NOT_FOUND)
-        pv = jax.lax.psum(jnp.where(hit, value, 0), axis)
-        n_hit = jax.lax.psum(hit.astype(jnp.int32), axis)
-        point_val = jnp.where(n_hit > 0, pv, NOT_FOUND)
 
         # SUCCESSOR: shard-local candidates, global min; shard key ranges
         # are disjoint so the min is attained by exactly one shard
@@ -462,13 +530,49 @@ def _build_replicated(
         cand = jnp.where(is_succ, succ_key, EMPTY)
         kmin = jax.lax.pmin(cand, axis)
         winner = is_succ & (cand == kmin) & (cand != EMPTY)
-        sv = jax.lax.psum(jnp.where(winner, value, 0), axis)
-        succ_val = jnp.where(kmin != EMPTY, sv, NOT_FOUND)
 
-        if has_ranges:
-            rk, rv, rstart, rcnt, rtrunc = _cross_shard_range(
-                new_state, is_rng, key, val.astype(KEY_DTYPE), axis, max_results
+        if has_ranges and not overlap:
+            # sequential fallback (TTL with ``now``): counts phase against
+            # the actually-updated state
+            flat_k, _ = flatten_bucket_sorted(new_state)
+            live = jnp.sum(flat_k != EMPTY, axis=1).astype(jnp.int32)
+            pref = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32), jnp.cumsum(live).astype(jnp.int32)]
             )
+            src_b, src_p, mine, rvalid, rstart, rcnt, rtrunc = _range_counts_phase(
+                flat_k,
+                pref,
+                new_state.mkba,
+                is_rng,
+                key,
+                val.astype(KEY_DTYPE),
+                axis,
+                max_results,
+            )
+
+        # ONE fused combine psum over the whole contribution pytree
+        contrib = {
+            "pv": jnp.where(hit, value, 0),
+            "n_hit": hit.astype(jnp.int32),
+            "sv": jnp.where(winner, value, 0),
+            "inserted": st["inserted"],
+            "deleted": st["deleted"],
+            "overflowed_buckets": st["overflowed_buckets"],
+            "restructure": new_state.needs_restructure.astype(jnp.int32),
+        }
+        if has_ttl:
+            contrib["expired"] = st["expired"]
+        if has_ranges:
+            rk_c, rv_c = _range_extract_contrib(new_state, src_b, src_p, mine)
+            contrib["rk"] = rk_c
+            contrib["rv"] = rv_c
+        summed = jax.lax.psum(contrib, axis)
+
+        point_val = jnp.where(summed["n_hit"] > 0, summed["pv"], NOT_FOUND)
+        succ_val = jnp.where(kmin != EMPTY, summed["sv"], NOT_FOUND)
+        if has_ranges:
+            rk = jnp.where(rvalid, summed["rk"], EMPTY)
+            rv = jnp.where(rvalid, summed["rv"], NOT_FOUND)
         else:
             rk, rv, rstart, rcnt, rtrunc = _empty_range_outputs(
                 key.shape[0], max_results
@@ -484,10 +588,18 @@ def _build_replicated(
             "range_start": rstart,
             "range_count": rcnt,
         }
-        stats = _combine_stats(st, axis, rtrunc, jnp.int32(0))
+        stats = {
+            "inserted": summed["inserted"],
+            "deleted": summed["deleted"],
+            "overflowed_buckets": summed["overflowed_buckets"],
+            "range_truncated": rtrunc,
+            "a2a_overflow": jnp.int32(0),
+        }
+        if has_ttl:
+            stats["expired"] = summed["expired"]
         new_state = dataclasses.replace(
             new_state,
-            needs_restructure=_pmax_bool(new_state.needs_restructure, axis),
+            needs_restructure=(summed["restructure"] > 0),
         )
         return new_state, results, stats
 
@@ -529,7 +641,7 @@ def _build_replicated(
 def _build_a2a(
     mesh,
     axis,
-    impl,
+    inner_cfg,
     max_results,
     has_ranges,
     capacity,
@@ -537,7 +649,14 @@ def _build_a2a(
     has_ttl=False,
     has_now=False,
 ):
-    """jit(shard_map)-compiled a2a-routing executor (memoized)."""
+    """jit(shard_map)-compiled a2a-routing executor (memoized).
+
+    Same PR 10 overlap structure as the replicated builder: the RANGE-side
+    batch ``all_gather`` depends only on the raw inputs and is hoisted
+    before routing; the counts collective runs pre-apply against the
+    predicted post-update layout of the *received* rows (gated off under an
+    expiry pass at ``now``); recombination is one fused ``psum`` pytree.
+    """
     n_shards = int(mesh.shape[axis])
 
     def body(state, part_fences, tag, key, val, *extra):
@@ -547,6 +666,20 @@ def _build_a2a(
         n_local = key.shape[0]
         me = jax.lax.axis_index(axis)
         is_rng = tag == OP_RANGE
+
+        overlap = has_ranges and not has_now
+        if has_ranges:
+            # gather every shard's RANGE rows up front — depends only on the
+            # batch inputs, so it overlaps the routing + update below
+            g_tag = jax.lax.all_gather(tag, axis).reshape(-1)
+            g_lo = jax.lax.all_gather(key, axis).reshape(-1)
+            g_hi = jax.lax.all_gather(val, axis).reshape(-1)
+            g_isr = g_tag == OP_RANGE
+            gorder = jnp.argsort(jnp.where(g_isr, g_lo, EMPTY), stable=True)
+            isr_s = g_isr[gorder]
+            q_lo = g_lo[gorder]
+            q_hi = g_hi[gorder].astype(KEY_DTYPE)
+
         # RANGE rows never ride the a2a (the cross-shard phase answers them
         # from the gathered batch); masking them to the EMPTY tail keeps the
         # local sort a valid routing order
@@ -580,16 +713,32 @@ def _build_a2a(
             recv_e = jax.lax.all_to_all(send_e, axis, 0, 0).reshape(-1)
         rord = jnp.argsort(recv_k, stable=True)
         rinv = _inverse_permutation(rord)
+        r_tag, r_key = recv_t[rord], recv_k[rord]
+
+        if overlap:
+            # counts collective pre-apply: the received rows ARE this
+            # shard's update batch, so the prediction sees exactly what the
+            # update pass will apply
+            ins_keys = _compact_by_mask(
+                r_key, (r_tag == OP_INSERT) | (r_tag == OP_EXPIRE)
+            )
+            del_keys = _compact_by_mask(r_key, r_tag == OP_DELETE)
+            post_keys, pref = _predict_post_keys(state, ins_keys, del_keys)
+            src_b, src_p, mine, rvalid, start_s, emit_s, rtrunc = (
+                _range_counts_phase(
+                    post_keys, pref, state.mkba, isr_s, q_lo, q_hi, axis, max_results
+                )
+            )
+
         new_state, res, st = apply_ops(
             state,
             OpBatch(
-                tag=recv_t[rord],
-                key=recv_k[rord],
+                tag=r_tag,
+                key=r_key,
                 val=recv_v[rord],
                 exp=None if recv_e is None else recv_e[rord],
             ),
-            impl=impl,
-            max_results=_INNER_MR,
+            config=inner_cfg,
             now=now,
         )
         value_r = res["value"][rinv]
@@ -626,31 +775,46 @@ def _build_a2a(
             .set(back_sk.reshape(-1))[:n_local][inv]
         )
 
-        if has_ranges:
-            # gather every shard's RANGE rows (tagged with their global
-            # input position), order them as make_ops would, and run the
-            # global-offset range phase
-            g_tag = jax.lax.all_gather(tag, axis).reshape(-1)
-            g_lo = jax.lax.all_gather(key, axis).reshape(-1)
-            g_hi = jax.lax.all_gather(val, axis).reshape(-1)
-            g_isr = g_tag == OP_RANGE
-            gorder = jnp.argsort(jnp.where(g_isr, g_lo, EMPTY), stable=True)
-            isr_s = g_isr[gorder]
-            rk, rv, start_s, emit_s, rtrunc = _cross_shard_range(
-                new_state,
-                isr_s,
-                g_lo[gorder],
-                g_hi[gorder].astype(KEY_DTYPE),
-                axis,
-                max_results,
+        if has_ranges and not overlap:
+            # sequential fallback (TTL with ``now``): counts phase against
+            # the actually-updated state
+            flat_k, _ = flatten_bucket_sorted(new_state)
+            live = jnp.sum(flat_k != EMPTY, axis=1).astype(jnp.int32)
+            pref = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32), jnp.cumsum(live).astype(jnp.int32)]
             )
+            src_b, src_p, mine, rvalid, start_s, emit_s, rtrunc = (
+                _range_counts_phase(
+                    flat_k, pref, new_state.mkba, isr_s, q_lo, q_hi, axis, max_results
+                )
+            )
+
+        # ONE fused combine psum over the whole contribution pytree
+        contrib = {
+            "inserted": st["inserted"],
+            "deleted": st["deleted"],
+            "overflowed_buckets": st["overflowed_buckets"],
+            "a2a_overflow": overflow.astype(jnp.int32),
+            "restructure": new_state.needs_restructure.astype(jnp.int32),
+        }
+        if has_ttl:
+            contrib["expired"] = st["expired"]
+        if has_ranges:
+            rk_c, rv_c = _range_extract_contrib(new_state, src_b, src_p, mine)
+            contrib["rk"] = rk_c
+            contrib["rv"] = rv_c
+        summed = jax.lax.psum(contrib, axis)
+
+        if has_ranges:
+            rk = jnp.where(rvalid, summed["rk"], EMPTY)
+            rv = jnp.where(rvalid, summed["rv"], NOT_FOUND)
             # scatter per-op offsets back to this shard's input rows
             gid = gorder
-            mine = isr_s & (gid // n_local == me)
-            back = jnp.where(mine, gid - me * n_local, n_local)
+            op_mine = isr_s & (gid // n_local == me)
+            back = jnp.where(op_mine, gid - me * n_local, n_local)
             zeros = jnp.zeros((n_local + 1,), jnp.int32)
-            rstart = zeros.at[back].set(start_s)[:n_local]
-            rcnt = zeros.at[back].set(emit_s)[:n_local]
+            rstart = zeros.at[back].set(jnp.where(isr_s, start_s, 0))[:n_local]
+            rcnt = zeros.at[back].set(jnp.where(isr_s, emit_s, 0))[:n_local]
         else:
             rk, rv, _, _, rtrunc = _empty_range_outputs(n_local, max_results)
             rstart = jnp.zeros((n_local,), jnp.int32)
@@ -664,12 +828,18 @@ def _build_a2a(
             "range_start": rstart,
             "range_count": rcnt,
         }
-        stats = _combine_stats(
-            st, axis, rtrunc, jax.lax.psum(overflow, axis).astype(jnp.int32)
-        )
+        stats = {
+            "inserted": summed["inserted"],
+            "deleted": summed["deleted"],
+            "overflowed_buckets": summed["overflowed_buckets"],
+            "range_truncated": rtrunc,
+            "a2a_overflow": summed["a2a_overflow"],
+        }
+        if has_ttl:
+            stats["expired"] = summed["expired"]
         new_state = dataclasses.replace(
             new_state,
-            needs_restructure=_pmax_bool(new_state.needs_restructure, axis),
+            needs_restructure=(summed["restructure"] > 0),
         )
         return new_state, results, stats
 
@@ -707,21 +877,70 @@ def _build_a2a(
     return jax.jit(fn, donate_argnums=donate_argnums)
 
 
+# a2a capacity headroom over the uniform per-destination share.  The value
+# comes from benchmarks/sharded_mix.py's routing-skew measurement: uniform
+# random batches land within ~1.5x of the even share at the sizes the bench
+# sweeps, so 2x absorbs the observed skew while sending ~2/S of the
+# never-overflowing chunk capacity (the safe driver's doubling retry
+# absorbs the pathological remainder).
+A2A_CAPACITY_HEADROOM = 2.0
+
+
+def default_a2a_capacity(
+    chunk: int, n_shards: int, *, headroom: float = A2A_CAPACITY_HEADROOM
+) -> int:
+    """Skew-derived per-(src, dst) a2a capacity for a per-shard batch chunk
+    of ``chunk`` rows: the uniform share ``ceil(chunk / n_shards)`` times
+    :data:`A2A_CAPACITY_HEADROOM`, clamped to ``chunk`` (which can never
+    overflow).  Used by :func:`shard_apply_ops_safe` when the config leaves
+    ``capacity`` unset — its doubling retry makes an underestimate cost one
+    replay, never correctness."""
+    chunk = max(1, int(chunk))
+    if n_shards <= 1:
+        return chunk
+    share = math.ceil(chunk / n_shards)
+    return max(1, min(chunk, math.ceil(share * headroom)))
+
+
+def _inner_config(cfg: ExecConfig, impl: str) -> ExecConfig:
+    """The ExecConfig handed to the per-shard inner ``apply_ops``: resolved
+    impl, the kernel-tuning knobs threaded through, and the tiny
+    ``_INNER_MR`` range budget (the inner dense arrays are ignored — the
+    cross-shard phase answers RANGE).  Normalized so the lru-cached builders
+    key on exactly the fields that matter."""
+    return ExecConfig(
+        impl=impl,
+        pipeline=cfg.pipeline,
+        block_q=cfg.block_q,
+        block_b=cfg.block_b,
+        tile_table=cfg.tile_table,
+        max_results=_INNER_MR,
+    )
+
+
 def shard_apply_ops(
     idx: ShardedFliX,
     ops: OpBatch,
     mesh,
     *,
-    routing: str = "replicated",
-    impl: str = "auto",
-    max_results: int = DEFAULT_MAX_RESULTS,
-    donate: bool = False,
-    capacity: int | None = None,
+    config: ExecConfig | None = None,
     has_updates: bool | None = None,
     has_ranges: bool | None = None,
     now=None,
+    routing=_UNSET,
+    impl=_UNSET,
+    max_results=_UNSET,
+    donate=_UNSET,
+    capacity=_UNSET,
 ):
     """Execute one mixed sorted batch across the mesh.
+
+    Execution strategy comes in as one ``config=ExecConfig(...)``
+    (``routing`` / ``impl`` / ``max_results`` / ``donate`` / ``capacity``
+    plus the fused-kernel pipeline and tile knobs threaded to the per-shard
+    ``apply_ops``); the trailing keywords are deprecated warn-once shims.
+    Per-call facts (``has_updates`` / ``has_ranges`` hints, the TTL clock
+    ``now``) stay keywords — they describe the batch, not the strategy.
 
     Returns ``(idx', results, stats)`` with the single-device ``apply_ops``
     contract (DESIGN.md §11):
@@ -740,15 +959,23 @@ def shard_apply_ops(
       rows are counted in ``stats["a2a_overflow"]`` and the caller replays
       the batch on the same (unmutated) ``idx`` with a larger capacity.
 
-    ``impl`` / ``donate`` / ``max_results`` are forwarded to the per-shard
-    ``apply_ops`` (``impl="auto"`` resolves host-side exactly as on a
-    single device; donation hands the sharded state's buffers to the step).
     On bucket overflow the returned state carries ``needs_restructure`` —
     hosts use :func:`shard_apply_ops_safe`, whose retry path regrows via
     :func:`shard_restructure`.
     """
-    if routing not in ("replicated", "a2a"):
-        raise ValueError(f"unknown routing: {routing!r}")
+    cfg = resolve_config(
+        "shard_apply_ops",
+        config,
+        routing=routing,
+        impl=impl,
+        max_results=max_results,
+        donate=donate,
+        capacity=capacity,
+    )
+    routing = cfg.routing
+    impl = cfg.impl
+    max_results = cfg.max_results
+    capacity = cfg.capacity
     if impl == "auto":
         if jax.default_backend() != "tpu":
             impl = "reference"
@@ -764,7 +991,8 @@ def shard_apply_ops(
             impl = "fused" if has_updates else "reference"
     if has_ranges is None:
         has_ranges = bool(jnp.any(ops.tag == OP_RANGE))
-    donate = donate and jax.default_backend() != "cpu"
+    donate_r = cfg.donate and jax.default_backend() != "cpu"
+    inner_cfg = _inner_config(cfg, impl)
 
     # TTL activation is structural, exactly as in single-device apply_ops: a
     # batch-side expiry column promotes the state (attaching an all-NO_EXPIRY
@@ -790,7 +1018,7 @@ def shard_apply_ops(
 
     if routing == "replicated":
         fn = _build_replicated(
-            mesh, idx.axis, impl, max_results, has_ranges, donate, has_ttl, has_now
+            mesh, idx.axis, inner_cfg, max_results, has_ranges, donate_r, has_ttl, has_now
         )
         new_state, results, stats = fn(
             idx.state, idx.lower_fence, ops.tag, ops.key, ops.val, *extra
@@ -806,11 +1034,11 @@ def shard_apply_ops(
         fn = _build_a2a(
             mesh,
             idx.axis,
-            impl,
+            inner_cfg,
             max_results,
             has_ranges,
             capacity,
-            donate,
+            donate_r,
             has_ttl,
             has_now,
         )
@@ -825,13 +1053,14 @@ def shard_apply_ops_safe(
     ops: OpBatch,
     mesh,
     *,
-    routing: str = "replicated",
-    impl: str = "auto",
-    max_results: int = DEFAULT_MAX_RESULTS,
-    capacity: int | None = None,
+    config: ExecConfig | None = None,
     has_updates: bool | None = None,
     has_ranges: bool | None = None,
     now=None,
+    routing=_UNSET,
+    impl=_UNSET,
+    max_results=_UNSET,
+    capacity=_UNSET,
 ):
     """Host-level driver: apply, restructure-and-retry on bucket overflow.
 
@@ -841,12 +1070,18 @@ def shard_apply_ops_safe(
     (and is also why this driver never donates).  ``has_updates`` /
     ``has_ranges`` let drivers that already know the batch composition
     host-side skip the device syncs (``serve/kv_index.py`` does).
+    Execution strategy comes in as one ``config=ExecConfig(...)``; the
+    trailing keywords are deprecated warn-once shims.
 
-    Under ``routing="a2a"`` with an explicit ``capacity``, per-pair
-    overflow (``stats["a2a_overflow"] > 0``) is ALSO retried here — the
-    documented re-route-with-larger-capacity replay, safe for the same
+    Under ``routing="a2a"``, per-pair overflow
+    (``stats["a2a_overflow"] > 0``) is ALSO retried here — the documented
+    re-route-with-larger-capacity replay, safe for the same
     no-input-mutation reason — doubling the capacity each round up to the
-    chunk size, which can never overflow.
+    chunk size, which can never overflow.  When the config leaves
+    ``capacity`` unset, the starting point is the skew-derived
+    :func:`default_a2a_capacity` rather than the worst-case chunk: ~n_shards
+    times less a2a traffic on typical batches, with at most a couple of
+    doubling replays on pathological skew.
 
     The returned ``stats`` surfaces the whole driver run (host ints, so
     the gateway and bench artifact can report them without device syncs):
@@ -857,6 +1092,21 @@ def shard_apply_ops_safe(
       attempts (the final attempt's own ``a2a_overflow`` stays 0 on
       success — this counter is how the retries remain visible).
     """
+    cfg = resolve_config(
+        "shard_apply_ops_safe",
+        config,
+        routing=routing,
+        impl=impl,
+        max_results=max_results,
+        capacity=capacity,
+    )
+    cap = cfg.capacity
+    if cfg.routing == "a2a" and cap is None:
+        cap = default_a2a_capacity(
+            ops.size // int(mesh.shape[idx.axis]), int(mesh.shape[idx.axis])
+        )
+    # this driver replays batches, so it must own the buffers: never donate
+    run_cfg = cfg.replace(donate=False, capacity=cap)
     a2a_retries = 0
     a2a_dropped = 0
     while True:
@@ -864,23 +1114,20 @@ def shard_apply_ops_safe(
             idx,
             ops,
             mesh,
-            routing=routing,
-            impl=impl,
-            max_results=max_results,
-            capacity=capacity,
+            config=run_cfg,
             has_updates=has_updates,
             has_ranges=has_ranges,
             now=now,
         )
-        if routing != "a2a" or capacity is None:
+        if cfg.routing != "a2a":
             break
         chunk = ops.size // int(mesh.shape[idx.axis])
         overflow = int(stats["a2a_overflow"])
-        if overflow == 0 or capacity >= chunk:
+        if overflow == 0 or run_cfg.capacity >= chunk:
             break
         a2a_retries += 1
         a2a_dropped += overflow
-        capacity = min(chunk, capacity * 2)
+        run_cfg = run_cfg.replace(capacity=min(chunk, run_cfg.capacity * 2))
     overflowed = bool(new_idx.state.needs_restructure) and not bool(
         idx.state.needs_restructure
     )
@@ -891,10 +1138,7 @@ def shard_apply_ops_safe(
             grown,
             ops,
             mesh,
-            routing=routing,
-            impl=impl,
-            max_results=max_results,
-            capacity=capacity,
+            config=run_cfg,
             has_updates=has_updates,
             has_ranges=has_ranges,
             now=now,

@@ -57,6 +57,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.batch import bucket_slices
+from repro.core.config import (
+    _UNSET,
+    DEFAULT_MAX_RESULTS as DEFAULT_MAX_RESULTS,  # canonical home: core.config
+    ExecConfig as ExecConfig,
+    resolve_config,
+)
 from repro.core.state import EMPTY, KEY_DTYPE, NOT_FOUND, VAL_DTYPE, FliXState
 
 OP_INSERT = 0
@@ -72,8 +78,6 @@ OP_EXPIRE = 6  # get-or-set with TTL: exp column = absolute deadline; returns
 #                batch to carry an exp column (DESIGN.md §14).
 
 OP_DTYPE = jnp.int32
-
-DEFAULT_MAX_RESULTS = 128  # per-batch RANGE output budget (static)
 
 
 @jax.tree_util.register_dataclass
@@ -410,19 +414,10 @@ def _apply_ops_reference(
     return s2, results, stats
 
 
-def _apply_ops_plain(
-    state: FliXState,
-    ops: OpBatch,
-    *,
-    impl: str,
-    donate: bool = False,
-    block_q: int | None = None,
-    block_b: int | None = None,
-    max_results: int = DEFAULT_MAX_RESULTS,
-):
+def _apply_ops_plain(state: FliXState, ops: OpBatch, *, impl: str, cfg: ExecConfig):
     """Dispatch one TTL-free batch to the chosen executor (impl resolved)."""
     if impl == "reference":
-        return _apply_ops_reference(state, ops, max_results=max_results)
+        return _apply_ops_reference(state, ops, max_results=cfg.max_results)
     if impl != "fused":
         raise ValueError(f"unknown apply_ops impl: {impl!r}")
 
@@ -434,7 +429,19 @@ def _apply_ops_plain(
     from repro.kernels.flix_query import DEFAULT_BLOCK_Q
 
     backend = jax.default_backend()
-    fn = flix_apply_pallas_donated if donate and backend != "cpu" else flix_apply_pallas
+    fn = (
+        flix_apply_pallas_donated
+        if cfg.donate and backend != "cpu"
+        else flix_apply_pallas
+    )
+    build_size = state.num_buckets * state.nodes_per_bucket * state.node_size
+    block_q, block_b = cfg.resolve_blocks(build_size, ops.size)
+    # "auto" pipelining is a backend property: the double-buffered DMA path
+    # exists to overlap real HBM→VMEM copies with compute, so it engages on
+    # TPU and falls back to the single-buffer kernel elsewhere.  "on"
+    # forces it anywhere (interpret mode included — how the differential
+    # suite proves byte-identity on CPU); "off" forces the fallback.
+    pipeline = (backend == "tpu") if cfg.pipeline == "auto" else (cfg.pipeline == "on")
     return fn(
         state,
         ops.tag,
@@ -442,8 +449,9 @@ def _apply_ops_plain(
         ops.val,
         block_q=block_q or DEFAULT_BLOCK_Q,
         block_b=block_b or DEFAULT_BLOCK_B,
-        max_results=max_results,
+        max_results=cfg.max_results,
         interpret=backend != "tpu",
+        pipeline=pipeline,
     )
 
 
@@ -452,10 +460,7 @@ def _apply_ops_ttl(
     ops: OpBatch,
     *,
     impl: str,
-    donate: bool = False,
-    block_q: int | None = None,
-    block_b: int | None = None,
-    max_results: int = DEFAULT_MAX_RESULTS,
+    cfg: ExecConfig,
     now=None,
 ):
     """TTL-aware batch execution (DESIGN.md §14) over any plain executor.
@@ -522,12 +527,14 @@ def _apply_ops_ttl(
     is_ins = tag2 == OP_INSERT
     val_e = jnp.where(is_ins, exp, val)  # RANGE hi rides val in both planes
 
-    kw = dict(impl=impl, block_q=block_q, block_b=block_b, max_results=max_results)
     s2e, _, _ = _apply_ops_plain(
-        exp_state, OpBatch(tag=tag2, key=key, val=val_e), donate=False, **kw
+        exp_state,
+        OpBatch(tag=tag2, key=key, val=val_e),
+        impl=impl,
+        cfg=cfg.replace(donate=False),
     )
     s2v, results, stats = _apply_ops_plain(
-        value_state, OpBatch(tag=tag2, key=key, val=val2), donate=donate, **kw
+        value_state, OpBatch(tag=tag2, key=key, val=val2), impl=impl, cfg=cfg
     )
 
     new_exps = jnp.where(s2v.keys == EMPTY, NO_EXPIRY, s2e.vals)
@@ -546,13 +553,14 @@ def apply_ops(
     state: FliXState,
     ops: OpBatch,
     *,
-    impl: str = "auto",
-    donate: bool = False,
-    block_q: int | None = None,
-    block_b: int | None = None,
-    max_results: int = DEFAULT_MAX_RESULTS,
+    config: ExecConfig | None = None,
     has_updates: bool | None = None,
     now=None,
+    impl=_UNSET,
+    donate=_UNSET,
+    block_q=_UNSET,
+    block_b=_UNSET,
+    max_results=_UNSET,
 ):
     """Execute one mixed sorted batch.  Returns ``(state', results, stats)``.
 
@@ -571,7 +579,15 @@ def apply_ops(
         keeps a prefix of its smallest keys — and flagged via
         ``stats["range_truncated"]``.
 
-    ``impl`` selects the executor:
+    ``config`` is the single execution-strategy surface
+    (:class:`repro.core.config.ExecConfig`, DESIGN.md §16) — executor
+    choice, pipelining, donation, tile sizes, the RANGE budget.  The bare
+    keywords below (``impl``, ``donate``, ``block_q``, ``block_b``,
+    ``max_results``) are deprecation shims that build one and warn once;
+    they drop next release.  ``has_updates`` and ``now`` are *per-call*
+    facts about the batch, not strategy, so they stay keywords.
+
+    ``config.impl`` selects the executor:
       * ``"reference"`` — the five jnp phases above (insert merge, delete,
         point, successor, range: ≥ 4 full state sweeps).  The differential
         oracle.
@@ -588,7 +604,7 @@ def apply_ops(
         composition host-side (``serve/kv_index.py`` does) answer that
         check without a device sync; leave it ``None`` to inspect the tags.
 
-    ``donate=True`` (fused only) donates the input state's buffers to the
+    ``config.donate=True`` (fused only) donates the input state's buffers to the
     step so step N+1 reuses step N's allocation instead of copying — the
     caller must not touch ``state`` afterwards, so it is unsuitable when a
     restructure-and-retry may replay the batch (``apply_ops_safe`` never
@@ -605,9 +621,19 @@ def apply_ops(
     the overflowing buckets are untrustworthy — same contract as ``insert``;
     hosts use :func:`apply_ops_safe`.
     """
-    if impl == "auto":
+    cfg = resolve_config(
+        "apply_ops",
+        config,
+        impl=impl,
+        donate=donate,
+        block_q=block_q,
+        block_b=block_b,
+        max_results=max_results,
+    )
+    impl_r = cfg.impl
+    if impl_r == "auto":
         if jax.default_backend() != "tpu":
-            impl = "reference"
+            impl_r = "reference"
         else:
             if has_updates is None:
                 has_updates = bool(
@@ -617,31 +643,25 @@ def apply_ops(
                         | (ops.tag == OP_EXPIRE)
                     )
                 )
-            impl = "fused" if has_updates else "reference"
-    kw = dict(
-        impl=impl,
-        donate=donate,
-        block_q=block_q,
-        block_b=block_b,
-        max_results=max_results,
-    )
+            impl_r = "fused" if has_updates else "reference"
     # TTL activation is structural (does an expiry column exist on the state
     # or the batch?), so it is host-decidable even inside shard_map traces.
     if state.exps is not None or ops.exp is not None:
-        return _apply_ops_ttl(state, ops, now=now, **kw)
-    return _apply_ops_plain(state, ops, **kw)
+        return _apply_ops_ttl(state, ops, impl=impl_r, cfg=cfg, now=now)
+    return _apply_ops_plain(state, ops, impl=impl_r, cfg=cfg)
 
 
 def apply_ops_safe(
     state: FliXState,
     ops: OpBatch,
     *,
-    impl: str = "auto",
-    max_results: int = DEFAULT_MAX_RESULTS,
-    validate_ranges: bool = False,
-    validate: bool = False,
+    config: ExecConfig | None = None,
     has_updates: bool | None = None,
     now=None,
+    impl=_UNSET,
+    max_results=_UNSET,
+    validate_ranges=_UNSET,
+    validate=_UNSET,
 ):
     """Host-level driver: apply, restructure-and-retry on overflow.
 
@@ -650,11 +670,11 @@ def apply_ops_safe(
     the regrown pre-batch state, which is safe because ``apply_ops`` never
     mutates its input (which is also why this driver never donates).
 
-    ``validate_ranges=True`` additionally runs the structural RANGE-result
+    ``config.validate_ranges=True`` additionally runs the structural RANGE-result
     checker (``core.invariants.check_range_results``: segments sorted,
     in-bounds, duplicate-free, consecutively packed) on the final results —
     a host-side debugging/testing aid, off on the hot path.
-    ``validate=True`` runs the full structural invariant checker
+    ``config.validate=True`` runs the full structural invariant checker
     (``check_invariants``, incl. the I6 expiry-liveness check against the
     threaded ``now``) on the result state — same caveat.
 
@@ -665,30 +685,35 @@ def apply_ops_safe(
     """
     from repro.core.restructure import restructure_grow
 
+    cfg = resolve_config(
+        "apply_ops_safe",
+        config,
+        impl=impl,
+        max_results=max_results,
+        validate_ranges=validate_ranges,
+        validate=validate,
+    )
+    # a retry replays the batch on the pre-batch state — never donate here
+    run_cfg = cfg.replace(donate=False, validate=False, validate_ranges=False)
     restructure_retries = 0
     new_state, results, stats = apply_ops(
-        state, ops, impl=impl, max_results=max_results, has_updates=has_updates, now=now
+        state, ops, config=run_cfg, has_updates=has_updates, now=now
     )
     if bool(new_state.needs_restructure) and not bool(state.needs_restructure):
         n_ins = int(jnp.sum((ops.tag == OP_INSERT) | (ops.tag == OP_EXPIRE)))
         grown = restructure_grow(state, extra_keys=max(n_ins, 1))
         new_state, results, stats = apply_ops(
-            grown,
-            ops,
-            impl=impl,
-            max_results=max_results,
-            has_updates=has_updates,
-            now=now,
+            grown, ops, config=run_cfg, has_updates=has_updates, now=now
         )
         assert not bool(new_state.needs_restructure), "post-restructure overflow"
         restructure_retries = 1
     stats = dict(stats)
     stats["restructure_retries"] = restructure_retries
-    if validate_ranges:
+    if cfg.validate_ranges:
         from repro.core.invariants import check_range_results
 
-        check_range_results(ops, results, max_results=max_results)
-    if validate:
+        check_range_results(ops, results, max_results=cfg.max_results)
+    if cfg.validate:
         from repro.core.invariants import check_invariants
 
         check_now = now

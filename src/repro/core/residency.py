@@ -38,9 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.build import plan_geometry
+from repro.core.config import _UNSET, ExecConfig, resolve_config
 from repro.core.expiry import NO_EXPIRY
 from repro.core.ops import (
-    DEFAULT_MAX_RESULTS,
     OP_EXPIRE,
     OP_INSERT,
     OpBatch,
@@ -406,19 +406,29 @@ class TieredFliX:
         self,
         ops: OpBatch,
         *,
-        max_results: int = DEFAULT_MAX_RESULTS,
+        config: "ExecConfig | None" = None,
         now: int | None = None,
-        impl: str = "auto",
         commit: bool = True,
+        max_results=_UNSET,
+        impl=_UNSET,
     ):
         """Prefetch → promote → run the unchanged executors → demote.
 
         Returns ``(results, stats, restructured)``; mutates ``self``.
-        ``commit=False`` runs a read-only batch: promotion/demotion still
-        happen (residency is physical placement, not logical content) but
-        the post-apply packed bytes are discarded — required for expiring
-        reads that must not physically reclaim rows.
+        Execution strategy comes in as one ``config=ExecConfig(...)``
+        forwarded to the inner ``apply_ops`` (``max_results`` / ``impl``
+        are deprecated warn-once shims).  ``commit=False`` runs a read-only
+        batch: promotion/demotion still happen (residency is physical
+        placement, not logical content) but the post-apply packed bytes are
+        discarded — required for expiring reads that must not physically
+        reclaim rows.
         """
+        cfg = resolve_config(
+            "TieredFliX.apply", config, max_results=max_results, impl=impl
+        )
+        # this engine replays batches on overflow and keeps the packed bytes
+        # as its own working set: never donate
+        cfg = cfg.replace(donate=False)
         tag, key, val, _ = ops.to_host()
         touched = touched_buckets(
             self.h_mkba,
@@ -448,9 +458,7 @@ class TieredFliX:
             packed = self._gather(w_ids)
         self.promoted_total += promoted
 
-        new_packed, results, stats = apply_ops(
-            packed, ops, impl=impl, max_results=max_results, now=now
-        )
+        new_packed, results, stats = apply_ops(packed, ops, config=cfg, now=now)
         stats = dict(stats)
         restructured = False
         reclaimed = 0
@@ -468,9 +476,7 @@ class TieredFliX:
             before = full.memory_bytes()
             n_ins = int(((tag == OP_INSERT) | (tag == OP_EXPIRE)).sum())
             grown = restructure_grow(full, extra_keys=max(n_ins, 1))
-            new_full, results, stats = apply_ops(
-                grown, ops, impl=impl, max_results=max_results, now=now
-            )
+            new_full, results, stats = apply_ops(grown, ops, config=cfg, now=now)
             assert not bool(new_full.needs_restructure), "post-restructure overflow"
             stats = dict(stats)
             self._install_full(new_full)

@@ -1,0 +1,260 @@
+"""Deterministic tile autotuner for the fused apply kernel (DESIGN.md §16).
+
+The fused kernel's two tile knobs trade off against each other:
+
+  * ``block_q`` — ops per window.  Larger windows mean fewer grid passes
+    over the bucket blocks, but each window revisits every bucket block its
+    op span touches, so an oversized window drags cold stripes through VMEM
+    for a handful of ops.
+  * ``block_b`` — bucket stripes per block.  The merge/delete masks are
+    O(block_b · S²), and the double-buffered variant holds **two** stripe
+    blocks in VMEM at once, so ``block_b`` is bounded by VMEM long before
+    it stops helping amortize grid overhead.
+
+The right point depends on (build_size, batch_size), which is exactly the
+:class:`~repro.core.config.TileTable` key.  This module sweeps the
+candidate grid per size bucket and records one winner per bucket:
+
+  * **model mode** (default): a closed-form cost model scores every
+    candidate — VMEM feasibility, per-step merge cost, window revisit
+    traffic, and fixed grid overhead.  Pure integer arithmetic on the
+    requested sizes: the same sweep on any host picks the same tiles, which
+    is what lets the committed bench artifact embed the table and the
+    determinism test pin it.
+  * **measure mode** (``measure=True``): wall-clock the fused kernel per
+    feasible candidate on a synthetic build and take the best median.
+    Opt-in, machine-dependent — for producing a table on real hardware, not
+    for CI.
+
+Either way the output is plain data: a ``TileTable`` (drops straight into
+``ExecConfig(tile_table=...)``) plus a JSON-ready sweep record that
+``benchmarks/run.py`` embeds in the bench artifact.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.config import TileTable, _pow2_bucket
+
+# candidate grid — DEFAULT_BLOCK_Q (flix_query) and DEFAULT_BLOCK_B
+# (flix_apply) are both members, so the tuned table can only match or beat
+# the static defaults under the model
+CANDIDATE_BLOCK_Q = (128, 256, 512)
+CANDIDATE_BLOCK_B = (1, 2, 4, 8)
+
+# VMEM budget the model holds a candidate to.  Real TPU cores have ~16 MiB;
+# the margin leaves room for the compiler's own temporaries.
+VMEM_BUDGET_BYTES = 12 * 2**20
+_I32 = 4  # bytes
+
+
+def vmem_bytes(block_q: int, block_b: int, *, node_size: int, nodes_per_bucket: int,
+               max_results: int = 128) -> int:
+    """Model of the kernel's VMEM residency for one grid step.
+
+    Counts the double-buffered worst case (two stripe blocks live at once)
+    plus the O(block_b · S²) merge one-hots, which dominate everything else
+    for realistic S.
+    """
+    S = node_size * nodes_per_bucket
+    cap = S  # bucket_capacity == npb * ns
+    stripes = 2 * 2 * block_b * S            # two planes × two slots
+    merge = 2 * block_b * S * S              # ohA/mask temporaries [BB, S, S]
+    tiles = 3 * block_b * cap                # ik / iv / dk
+    meta = 2 * block_b * nodes_per_bucket    # node_max + counts
+    window = 4 * block_q                     # tags, keys, resv, resk
+    fences = 8 * block_b                     # mkba/lf/nxk/nxv/ps/pe rows
+    rng = 3 * max_results
+    return _I32 * (stripes + merge + tiles + meta + window + fences + rng)
+
+
+def model_cost(
+    block_q: int,
+    block_b: int,
+    *,
+    build_size: int,
+    batch_size: int,
+    node_size: int,
+    nodes_per_bucket: int,
+) -> float:
+    """Deterministic cost score for one candidate (lower is better).
+
+    Grid shape: ``n_windows × nb_blocks`` steps.  Window 0 sweeps every
+    bucket block (the full update pass); each later window revisits the
+    ≈ ``block_q / batch`` fraction of the key space its sorted ops span.
+    Active steps pay the O(block_b · S²) merge plus per-op read compute;
+    every step — active or not — pays a fixed dispatch overhead, which is
+    what large tiles amortize.
+    """
+    S = node_size * nodes_per_bucket
+    nb = max(1, math.ceil(build_size / S))
+    nb_p = math.ceil(nb / block_b) * block_b
+    nb_blocks = nb_p // block_b
+    n = max(1, batch_size)
+    n_windows = math.ceil(n / block_q)
+
+    # sorted ops: one window's span of the bucket-block axis
+    span = min(nb_blocks, math.ceil(nb_blocks * block_q / n) + 1)
+    active = nb_blocks + (n_windows - 1) * span
+    total = n_windows * nb_blocks
+
+    merge = block_b * S * S          # phase-1/2 masks per active step
+    reads = block_q * (block_b + nodes_per_bucket + node_size)
+    step_overhead = 4096             # dispatch + pipeline bubble per step
+    return float(active * (merge + reads) + total * step_overhead)
+
+
+def sweep_bucket(
+    build_size: int,
+    batch_size: int,
+    *,
+    node_size: int = 16,
+    nodes_per_bucket: int = 8,
+    candidates_q=CANDIDATE_BLOCK_Q,
+    candidates_b=CANDIDATE_BLOCK_B,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    measure: bool = False,
+) -> dict:
+    """Score every candidate for one (build, batch) bucket; pick the winner.
+
+    Returns a JSON-ready record: the bucket, every candidate's score and
+    feasibility, and the chosen ``(block_q, block_b)``.  Ties break on the
+    sorted candidate order, so the sweep is a pure function of its inputs.
+    """
+    rows = []
+    for bq in sorted(candidates_q):
+        for bb in sorted(candidates_b):
+            vb = vmem_bytes(
+                bq, bb, node_size=node_size, nodes_per_bucket=nodes_per_bucket
+            )
+            feasible = vb <= vmem_budget
+            cost = (
+                model_cost(
+                    bq,
+                    bb,
+                    build_size=build_size,
+                    batch_size=batch_size,
+                    node_size=node_size,
+                    nodes_per_bucket=nodes_per_bucket,
+                )
+                if feasible
+                else None
+            )
+            rows.append(
+                {
+                    "block_q": bq,
+                    "block_b": bb,
+                    "vmem_bytes": vb,
+                    "feasible": feasible,
+                    "model_cost": cost,
+                }
+            )
+    feas = [r for r in rows if r["feasible"]]
+    if not feas:  # pathological geometry: fall back to the smallest tiles
+        feas = [rows[0]]
+        feas[0]["model_cost"] = 0.0
+    if measure:
+        _measure_rows(
+            feas,
+            build_size=build_size,
+            batch_size=batch_size,
+            node_size=node_size,
+            nodes_per_bucket=nodes_per_bucket,
+        )
+        key = lambda r: (r["wall_s"], r["block_q"], r["block_b"])
+    else:
+        key = lambda r: (r["model_cost"], r["block_q"], r["block_b"])
+    best = min(feas, key=key)
+    return {
+        "build_bucket": _pow2_bucket(build_size),
+        "batch_bucket": _pow2_bucket(batch_size),
+        "block_q": best["block_q"],
+        "block_b": best["block_b"],
+        "measured": bool(measure),
+        "candidates": rows,
+    }
+
+
+def _measure_rows(rows, *, build_size, batch_size, node_size, nodes_per_bucket):
+    """Wall-clock each feasible candidate on a synthetic mixed batch
+    (opt-in: timings are machine truth, not reproducible model truth)."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.build import build
+    from repro.core.config import ExecConfig
+    from repro.core.ops import OP_INSERT, OP_POINT, apply_ops, make_ops
+
+    rng = np.random.default_rng(0)
+    keys = rng.choice(build_size * 8, size=build_size, replace=False)
+    state = build(
+        keys, np.arange(build_size),
+        node_size=node_size, nodes_per_bucket=nodes_per_bucket,
+    )
+    half = max(1, batch_size // 2)
+    qk = rng.choice(keys, size=half)
+    ik = rng.choice(build_size * 8, size=batch_size - half) | 1
+    tags = np.concatenate([np.full(half, OP_POINT), np.full(batch_size - half, OP_INSERT)])
+    ops, _ = make_ops(tags, np.concatenate([qk, ik]), np.concatenate([qk, ik]))
+    for r in rows:
+        cfg = ExecConfig(impl="fused", block_q=r["block_q"], block_b=r["block_b"])
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out = apply_ops(state, ops, config=cfg)
+            jax.block_until_ready(out[0].keys)
+            times.append(time.perf_counter() - t0)
+        r["wall_s"] = sorted(times)[1]
+
+
+def autotune(
+    build_sizes,
+    batch_sizes,
+    *,
+    node_size: int = 16,
+    nodes_per_bucket: int = 8,
+    candidates_q=CANDIDATE_BLOCK_Q,
+    candidates_b=CANDIDATE_BLOCK_B,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    measure: bool = False,
+) -> tuple[TileTable, dict]:
+    """Sweep the cross product of size buckets → (TileTable, sweep record).
+
+    The table is ready to thread through ``ExecConfig(tile_table=...)``;
+    the record is JSON-ready for the bench artifact and round-trips back
+    via ``TileTable.from_json(record["table"])``.
+    """
+    sweeps = []
+    entries = {}
+    for build in sorted({_pow2_bucket(b) for b in build_sizes}):
+        for batch in sorted({_pow2_bucket(q) for q in batch_sizes}):
+            rec = sweep_bucket(
+                build,
+                batch,
+                node_size=node_size,
+                nodes_per_bucket=nodes_per_bucket,
+                candidates_q=candidates_q,
+                candidates_b=candidates_b,
+                vmem_budget=vmem_budget,
+                measure=measure,
+            )
+            sweeps.append(rec)
+            entries[(build, batch)] = (rec["block_q"], rec["block_b"])
+    table = TileTable(
+        entries=tuple(
+            (build, batch, bq, bb)
+            for (build, batch), (bq, bb) in sorted(entries.items())
+        )
+    )
+    record = {
+        "node_size": node_size,
+        "nodes_per_bucket": nodes_per_bucket,
+        "vmem_budget_bytes": vmem_budget,
+        "measured": bool(measure),
+        "table": table.to_json(),
+        "sweeps": sweeps,
+    }
+    return table, record

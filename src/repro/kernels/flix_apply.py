@@ -85,13 +85,11 @@ _OP_SUCCESSOR = 3       # must not capture traced constants)
 _OP_RANGE = 5
 
 
-def _apply_kernel(
-    lo_ref,      # scalar prefetch: [n_windows] first bucket block of window
-    hi_ref,      # scalar prefetch: [n_windows] last  bucket block of window
+def _stripe_body(
+    A,           # [BB, S] stripe keys (VMEM-resident, chain order)
+    Av,          # [BB, S] stripe vals
     t_ref,       # [1, QB] op tags for window j
     q_ref,       # [1, QB] sorted op keys for window j
-    keys_ref,    # [BB, npb*ns] bucket-block key stripes (chain order)
-    vals_ref,    # [BB, npb*ns]
     nmax_ref,    # [BB, npb] per-node max keys (EMPTY when inactive)
     ik_ref,      # [BB, cap] sorted per-bucket INSERT keys (EMPTY-padded)
     iv_ref,      # [BB, cap]
@@ -120,11 +118,257 @@ def _apply_kernel(
     ns: int,
     cap: int,
 ):
-    j = pl.program_id(0)
-    i = pl.program_id(1)
+    """One active stripe block: merge + delete + reads + range gather.
+
+    Shared verbatim by the single-buffer kernel (stripes arrive through the
+    automatic BlockSpec pipeline) and the double-buffered kernel (stripes
+    arrive via explicit DMA into two-slot scratch) — only where ``A``/``Av``
+    come *from* differs, so the two variants cannot diverge numerically.
+    """
     S = npb * ns
     bb = block_b
+    # ---- phase 1: upsert merge of the INSERT slice (per stripe) ------
+    B = ik_ref[...]                            # [BB, cap] incoming
+    Bv = iv_ref[...]
+    nmax = nmax_ref[...]                       # [BB, npb]
 
+    validA = A != _EMPTY
+    validB = B != _EMPTY
+    dupA = jnp.any(A[:, :, None] == B[:, None, :], axis=2) & validA
+    keepA = validA & ~dupA                     # incoming value wins
+
+    # merged ranks by compare-count (both sides sorted & unique)
+    lessA_A = jnp.sum((A[:, None, :] < A[:, :, None]) & keepA[:, None, :], axis=2)
+    lessB_A = jnp.sum(
+        (B[:, None, :] < A[:, :, None]) & validB[:, None, :], axis=2
+    )
+    rankA = lessA_A + lessB_A                  # [BB, S]
+    lessA_B = jnp.sum((A[:, None, :] < B[:, :, None]) & keepA[:, None, :], axis=2)
+    lessB_B = jnp.sum(
+        (B[:, None, :] < B[:, :, None]) & validB[:, None, :], axis=2
+    )
+    rankB = lessA_B + lessB_B                  # [BB, cap]
+
+    # original node regions (fixed boundaries; last region open-ended)
+    onn0 = jnp.sum((nmax != _EMPTY).astype(jnp.int32), axis=1)   # [BB]
+    onn_c = jnp.maximum(onn0 - 1, 0)
+
+    def region_of(z):
+        r = jnp.sum((nmax[:, None, :] < z[:, :, None]).astype(jnp.int32), axis=2)
+        return jnp.minimum(r, onn_c[:, None])
+
+    regA = region_of(A)
+    regB = region_of(B)
+
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (bb, npb), 1)
+    mA = jnp.sum(
+        (regA[:, :, None] == iota_r[:, None, :]) & keepA[:, :, None],
+        axis=1,
+    )
+    mB = jnp.sum(
+        (regB[:, :, None] == iota_r[:, None, :]) & validB[:, :, None],
+        axis=1,
+    )
+    m_j = (mA + mB).astype(jnp.int32)          # [BB, npb]
+    s_j = (m_j + ns - 1) // ns                 # pieces per region
+    f_j = jnp.cumsum(m_j, axis=1) - m_j        # first rank of region
+    base_j = jnp.cumsum(s_j, axis=1) - s_j     # first output slot
+    total_new = jnp.sum(s_j, axis=1)           # [BB]
+
+    def dest_of(rank, reg, keep):
+        # balanced split within each region (same formulas as core/insert)
+        oh = reg[:, :, None] == iota_r[:, None, :]
+        m_r = jnp.maximum(jnp.sum(jnp.where(oh, m_j[:, None, :], 0), axis=2), 1)
+        s_r = jnp.maximum(jnp.sum(jnp.where(oh, s_j[:, None, :], 0), axis=2), 1)
+        f_r = jnp.sum(jnp.where(oh, f_j[:, None, :], 0), axis=2)
+        b_r = jnp.sum(jnp.where(oh, base_j[:, None, :], 0), axis=2)
+        rr = rank - f_r
+        piece = (rr * s_r) // m_r
+        start = (piece * m_r + s_r - 1) // s_r
+        pos = rr - start
+        slot = b_r + piece
+        return jnp.where(keep & (slot < npb), slot * ns + pos, S)
+
+    destA = dest_of(rankA, regA, keepA)        # [BB, S]
+    destB = dest_of(rankB, regB, validB)       # [BB, cap]
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bb, 1, S), 2)
+    ohA = destA[:, :, None] == lane            # [BB, S, S]
+    ohB = destB[:, :, None] == lane            # [BB, cap, S]
+    mk = jnp.sum(jnp.where(ohA, A[:, :, None], 0), axis=1) + jnp.sum(
+        jnp.where(ohB, B[:, :, None], 0), axis=1
+    )
+    mv = jnp.sum(jnp.where(ohA, Av[:, :, None], 0), axis=1) + jnp.sum(
+        jnp.where(ohB, Bv[:, :, None], 0), axis=1
+    )
+    filled = jnp.any(ohA, axis=1) | jnp.any(ohB, axis=1)
+    mk = jnp.where(filled, mk, _EMPTY)         # [BB, S] merged stripe
+    mv = jnp.where(filled, mv, 0)
+
+    # ---- phase 2: physical delete on the merged stripe ---------------
+    D = dk_ref[...]                            # [BB, cap]
+    hit = jnp.any(mk[:, :, None] == D[:, None, :], axis=2)
+    hit &= mk != _EMPTY
+    del_cnt = jnp.sum(hit.astype(jnp.int32), axis=1)          # [BB]
+
+    rows = mk.reshape(bb, npb, ns)
+    vrows = mv.reshape(bb, npb, ns)
+    hitr = hit.reshape(bb, npb, ns)
+    keep = (~hitr) & (rows != _EMPTY)
+    dest = jnp.cumsum(keep.astype(jnp.int32), axis=2) - 1
+    lane_n = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, ns, ns), 3)
+    ohc = (dest[..., None] == lane_n) & keep[..., None]
+    nk = jnp.sum(jnp.where(ohc, rows[..., None], 0), axis=2)
+    nfill = jnp.any(ohc, axis=2)
+    nk = jnp.where(nfill, nk, _EMPTY)
+    nv = jnp.where(
+        nk == _EMPTY, 0, jnp.sum(jnp.where(ohc, vrows[..., None], 0), axis=2)
+    )
+    cnt = jnp.sum(keep.astype(jnp.int32), axis=2)             # [BB, npb]
+
+    # chain compaction: surviving nodes shift into the lowest slots
+    nonempty = cnt > 0
+    slot_dest = jnp.cumsum(nonempty.astype(jnp.int32), axis=1) - 1
+    slot_lane = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, npb), 2)
+    ohs = (slot_dest[:, :, None] == slot_lane) & nonempty[:, :, None]
+    fk = jnp.sum(jnp.where(ohs[..., None], nk[:, :, None, :], 0), axis=1)
+    fv = jnp.sum(jnp.where(ohs[..., None], nv[:, :, None, :], 0), axis=1)
+    row_filled = jnp.any(ohs, axis=1)                         # [BB, npb]
+    fk = jnp.where(row_filled[..., None], fk, _EMPTY)
+    fv = jnp.where(row_filled[..., None], fv, 0)
+
+    # metadata
+    ocnt = jnp.sum((fk != _EMPTY).astype(jnp.int32), axis=2)
+    last = jnp.maximum(ocnt - 1, 0)
+    lane3 = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, ns), 2)
+    omax = jnp.sum(jnp.where(lane3 == last[..., None], fk, 0), axis=2)
+    omax = jnp.where(ocnt > 0, omax, _EMPTY)
+    onn_new = jnp.sum((ocnt > 0).astype(jnp.int32), axis=1)   # [BB]
+
+    okeys_ref[...] = fk.reshape(bb, S)
+    ovals_ref[...] = fv.reshape(bb, S)
+    ocnt_ref[...] = ocnt
+    omax_ref[...] = omax
+    onn_ref[...] = onn_new[:, None]
+    oflow_ref[...] = (total_new > npb).astype(jnp.int32)[:, None]
+    odel_ref[...] = del_cnt[:, None]
+
+    # ---- phase 3: reads against the post-update stripe ---------------
+    t = t_ref[0, :]                            # [QB] op tags
+    q = q_ref[0, :]                            # [QB] op keys
+    qcol = q[:, None]
+
+    mkba = mkba_ref[0, :][None, :]             # [1, BB]
+    b_local = jnp.sum(mkba < qcol, axis=1)     # [QB]
+    lf = lf_ref[0, :][None, :]
+    b_sel = jnp.minimum(b_local, bb - 1)
+    oh_b = (
+        jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], bb), 1)
+        == b_sel[:, None]
+    )
+    lf_q = jnp.sum(jnp.where(oh_b, lf, 0), axis=1)
+    is_read = (t == _OP_POINT) | (t == _OP_SUCCESSOR)
+    mine = (b_local < bb) & (qcol[:, 0] > lf_q) & is_read
+
+    # node by post-update node-max votes, position by key votes
+    nmax_rows = _exact_gather_i32(oh_b.astype(jnp.float32), omax)
+    nn_q = jnp.sum(jnp.where(oh_b, onn_new[None, :], 0), axis=1)
+    nidx = jnp.sum(nmax_rows < qcol, axis=1)
+    in_bucket = nidx < nn_q
+    nidx_c = jnp.minimum(nidx, npb - 1)
+
+    flat = b_sel * npb + nidx_c
+    oh_n = (
+        jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], bb * npb), 1)
+        == flat[:, None]
+    ).astype(jnp.float32)
+    krow = _exact_gather_i32(oh_n, fk.reshape(bb * npb, ns))
+    vrow = _exact_gather_i32(oh_n, fv.reshape(bb * npb, ns))
+
+    pos = jnp.sum(krow < qcol, axis=1)
+    pos_c = jnp.minimum(pos, ns - 1)
+    oh_p = (
+        jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], ns), 1)
+        == pos_c[:, None]
+    )
+    key_at = jnp.sum(jnp.where(oh_p, krow, 0), axis=1)
+    val_at = jnp.sum(jnp.where(oh_p, vrow, 0), axis=1)
+
+    # POINT: hit iff the key is stored post-update
+    hit_q = in_bucket & (pos < ns) & (key_at == qcol[:, 0])
+    point_res = jnp.where(hit_q, val_at, _MISS)
+
+    # SUCCESSOR: in-bucket candidate, else the post-update fence rows
+    nxk = jnp.sum(jnp.where(oh_b, nxk_ref[0, :][None, :], 0), axis=1)
+    nxv = jnp.sum(jnp.where(oh_b, nxv_ref[0, :][None, :], 0), axis=1)
+    use_in = in_bucket & (pos < ns)
+    succ_key = jnp.where(use_in, key_at, nxk)
+    succ_val = jnp.where(use_in, val_at, nxv)
+    found = succ_key != _EMPTY
+    succ_val = jnp.where(found, succ_val, _MISS)
+
+    is_p = t == _OP_POINT
+    is_s = t == _OP_SUCCESSOR
+    resv_ref[0, :] = jnp.where(
+        mine & is_p,
+        point_res,
+        jnp.where(mine & is_s, succ_val, resv_ref[0, :]),
+    )
+    resk_ref[0, :] = jnp.where(mine & is_s, succ_key, resk_ref[0, :])
+
+    # ---- phase 4: dense RANGE slots owned by this block's buckets ----
+    # slot p carries the post-update global rank of its key; the block
+    # claims p iff the rank falls in one of its buckets' [pref[b],
+    # pref[b+1]) spans, then maps the in-bucket rank to a (node, pos) of
+    # the stripe just rebuilt above (ocnt cumsum = node boundaries).
+    # Valid slots are a prefix, so g[0] < 0 ⇔ nothing to emit — batches
+    # with no RANGE output skip the gather compute entirely and keep the
+    # PR-2 update-only cost (the init above already wrote EMPTY).
+    @pl.when(g_ref[0, 0] >= 0)
+    def _range_gather():
+        g = g_ref[0, :]                        # [MR]
+        gcol = g[:, None]
+        ps = ps_ref[0, :][None, :]             # [1, BB]
+        pe = pe_ref[0, :][None, :]
+        bloc = jnp.sum((pe <= gcol).astype(jnp.int32), axis=1)
+        bloc_c = jnp.minimum(bloc, bb - 1)
+        oh_rb = (
+            jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], bb), 1)
+            == bloc_c[:, None]
+        )
+        ps_g = jnp.sum(jnp.where(oh_rb, ps, 0), axis=1)
+        mine_r = (g >= 0) & (bloc < bb) & (g >= ps_g)
+        r = g - ps_g                           # rank within the bucket
+
+        cnt_rows = _exact_gather_i32(oh_rb.astype(jnp.float32), ocnt)
+        cum = jnp.cumsum(cnt_rows, axis=1)     # [MR, npb]
+        node_r = jnp.sum((cum <= r[:, None]).astype(jnp.int32), axis=1)
+        node_rc = jnp.minimum(node_r, npb - 1)
+        oh_nd = (
+            jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], npb), 1)
+            == node_rc[:, None]
+        )
+        base = jnp.sum(jnp.where(oh_nd, cum - cnt_rows, 0), axis=1)
+        pos_r = jnp.clip(r - base, 0, ns - 1)
+
+        flat_r = bloc_c * npb + node_rc
+        oh_fr = (
+            jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], bb * npb), 1)
+            == flat_r[:, None]
+        ).astype(jnp.float32)
+        krow_r = _exact_gather_i32(oh_fr, fk.reshape(bb * npb, ns))
+        vrow_r = _exact_gather_i32(oh_fr, fv.reshape(bb * npb, ns))
+        oh_pr = (
+            jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], ns), 1)
+            == pos_r[:, None]
+        )
+        kk = jnp.sum(jnp.where(oh_pr, krow_r, 0), axis=1)
+        vv = jnp.sum(jnp.where(oh_pr, vrow_r, 0), axis=1)
+        rngk_ref[0, :] = jnp.where(mine_r, kk, rngk_ref[0, :])
+        rngv_ref[0, :] = jnp.where(mine_r, vv, rngv_ref[0, :])
+
+
+def _init_outputs(j, i, resv_ref, resk_ref, rngk_ref, rngv_ref):
     @pl.when(i == 0)
     def _init():
         resv_ref[...] = jnp.full_like(resv_ref, _MISS)
@@ -139,254 +383,114 @@ def _apply_kernel(
         rngk_ref[...] = jnp.full_like(rngk_ref, _EMPTY)
         rngv_ref[...] = jnp.full_like(rngv_ref, _MISS)
 
+
+def _apply_kernel(
+    lo_ref,      # scalar prefetch: [n_windows] first bucket block of window
+    hi_ref,      # scalar prefetch: [n_windows] last  bucket block of window
+    t_ref,
+    q_ref,
+    keys_ref,    # [BB, npb*ns] bucket-block key stripes (auto-pipelined)
+    vals_ref,    # [BB, npb*ns]
+    *rest,
+    block_b: int,
+    npb: int,
+    ns: int,
+    cap: int,
+):
+    """Single-buffer variant: stripes stream through the BlockSpec pipeline."""
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+    _init_outputs(j, i, *rest[-4:])
     active = (i >= lo_ref[j]) & (i <= hi_ref[j])
 
     @pl.when(active)
     def _process():
-        # ---- phase 1: upsert merge of the INSERT slice (per stripe) ------
-        A = keys_ref[...]                          # [BB, S] stripe keys
-        Av = vals_ref[...]
-        B = ik_ref[...]                            # [BB, cap] incoming
-        Bv = iv_ref[...]
-        nmax = nmax_ref[...]                       # [BB, npb]
-
-        validA = A != _EMPTY
-        validB = B != _EMPTY
-        dupA = jnp.any(A[:, :, None] == B[:, None, :], axis=2) & validA
-        keepA = validA & ~dupA                     # incoming value wins
-
-        # merged ranks by compare-count (both sides sorted & unique)
-        lessA_A = jnp.sum((A[:, None, :] < A[:, :, None]) & keepA[:, None, :], axis=2)
-        lessB_A = jnp.sum(
-            (B[:, None, :] < A[:, :, None]) & validB[:, None, :], axis=2
+        _stripe_body(
+            keys_ref[...], vals_ref[...], t_ref, q_ref, *rest,
+            block_b=block_b, npb=npb, ns=ns, cap=cap,
         )
-        rankA = lessA_A + lessB_A                  # [BB, S]
-        lessA_B = jnp.sum((A[:, None, :] < B[:, :, None]) & keepA[:, None, :], axis=2)
-        lessB_B = jnp.sum(
-            (B[:, None, :] < B[:, :, None]) & validB[:, None, :], axis=2
+
+
+def _apply_kernel_pipelined(
+    lo_ref,      # scalar prefetch: [n_windows] first bucket block of window
+    hi_ref,      # scalar prefetch: [n_windows] last  bucket block of window
+    t_ref,
+    q_ref,
+    keys_hbm,    # [nb_p, npb*ns] FULL key stripes, HBM-resident (ANY space)
+    vals_hbm,    # [nb_p, npb*ns]
+    *rest,       # the remaining blocked inputs/outputs, then the scratch:
+    #              kscr/vscr [2, BB, S] two-slot VMEM stripes, ksem/vsem
+    #              DMA semaphores [2]
+    block_b: int,
+    npb: int,
+    ns: int,
+    cap: int,
+    nb_blocks: int,
+    n_windows: int,
+):
+    """Double-buffered variant: explicit two-slot bucket-stripe staging.
+
+    The grid is sequential (``dimension_semantics=("arbitrary",
+    "arbitrary")``), so scratch persists across steps: at linear step ``s``
+    the kernel *starts* the async HBM→VMEM copy of step ``s+1``'s stripe
+    block into slot ``(s+1) % 2``, then *waits* on slot ``s % 2`` — whose
+    copy was issued one step earlier — and computes from it.  The next
+    stripe's DMA therefore overlaps this stripe's merge/delete/read
+    compute, which is the PR-10 pipelining contract (DESIGN.md §16).  Block
+    indices are clipped exactly as the single-buffer BlockSpec index map
+    clips them, and the stripe maths is `_stripe_body`, shared verbatim —
+    the two variants are byte-identical by construction.
+
+    The wait is unconditional (inactive steps still staged their block):
+    every started copy is consumed, so semaphore counts can never leak into
+    a later step.
+    """
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+    kscr, vscr, ksem, vsem = rest[-4:]
+    rest = rest[:-4]
+    step = j * nb_blocks + i
+    slot = jax.lax.rem(step, 2)
+
+    def block_of(jj, ii):
+        return jnp.clip(ii, lo_ref[jj], hi_ref[jj])
+
+    def copies(b, sl):
+        row = pl.ds(b * block_b, block_b)
+        return (
+            pltpu.make_async_copy(keys_hbm.at[row, :], kscr.at[sl], ksem.at[sl]),
+            pltpu.make_async_copy(vals_hbm.at[row, :], vscr.at[sl], vsem.at[sl]),
         )
-        rankB = lessA_B + lessB_B                  # [BB, cap]
 
-        # original node regions (fixed boundaries; last region open-ended)
-        onn0 = jnp.sum((nmax != _EMPTY).astype(jnp.int32), axis=1)   # [BB]
-        onn_c = jnp.maximum(onn0 - 1, 0)
+    @pl.when(step == 0)
+    def _warm_up():
+        for c in copies(block_of(j, i), slot):
+            c.start()
 
-        def region_of(z):
-            r = jnp.sum((nmax[:, None, :] < z[:, :, None]).astype(jnp.int32), axis=2)
-            return jnp.minimum(r, onn_c[:, None])
+    @pl.when(step + 1 < n_windows * nb_blocks)
+    def _prefetch_next():
+        nj = jnp.where(i + 1 < nb_blocks, j, j + 1)
+        ni = jnp.where(i + 1 < nb_blocks, i + 1, 0)
+        for c in copies(block_of(nj, ni), jax.lax.rem(step + 1, 2)):
+            c.start()
 
-        regA = region_of(A)
-        regB = region_of(B)
+    for c in copies(block_of(j, i), slot):
+        c.wait()
 
-        iota_r = jax.lax.broadcasted_iota(jnp.int32, (bb, npb), 1)
-        mA = jnp.sum(
-            (regA[:, :, None] == iota_r[:, None, :]) & keepA[:, :, None],
-            axis=1,
+    _init_outputs(j, i, *rest[-4:])
+    active = (i >= lo_ref[j]) & (i <= hi_ref[j])
+
+    @pl.when(active)
+    def _process():
+        _stripe_body(
+            kscr[slot], vscr[slot], t_ref, q_ref, *rest,
+            block_b=block_b, npb=npb, ns=ns, cap=cap,
         )
-        mB = jnp.sum(
-            (regB[:, :, None] == iota_r[:, None, :]) & validB[:, :, None],
-            axis=1,
-        )
-        m_j = (mA + mB).astype(jnp.int32)          # [BB, npb]
-        s_j = (m_j + ns - 1) // ns                 # pieces per region
-        f_j = jnp.cumsum(m_j, axis=1) - m_j        # first rank of region
-        base_j = jnp.cumsum(s_j, axis=1) - s_j     # first output slot
-        total_new = jnp.sum(s_j, axis=1)           # [BB]
-
-        def dest_of(rank, reg, keep):
-            # balanced split within each region (same formulas as core/insert)
-            oh = reg[:, :, None] == iota_r[:, None, :]
-            m_r = jnp.maximum(jnp.sum(jnp.where(oh, m_j[:, None, :], 0), axis=2), 1)
-            s_r = jnp.maximum(jnp.sum(jnp.where(oh, s_j[:, None, :], 0), axis=2), 1)
-            f_r = jnp.sum(jnp.where(oh, f_j[:, None, :], 0), axis=2)
-            b_r = jnp.sum(jnp.where(oh, base_j[:, None, :], 0), axis=2)
-            rr = rank - f_r
-            piece = (rr * s_r) // m_r
-            start = (piece * m_r + s_r - 1) // s_r
-            pos = rr - start
-            slot = b_r + piece
-            return jnp.where(keep & (slot < npb), slot * ns + pos, S)
-
-        destA = dest_of(rankA, regA, keepA)        # [BB, S]
-        destB = dest_of(rankB, regB, validB)       # [BB, cap]
-
-        lane = jax.lax.broadcasted_iota(jnp.int32, (bb, 1, S), 2)
-        ohA = destA[:, :, None] == lane            # [BB, S, S]
-        ohB = destB[:, :, None] == lane            # [BB, cap, S]
-        mk = jnp.sum(jnp.where(ohA, A[:, :, None], 0), axis=1) + jnp.sum(
-            jnp.where(ohB, B[:, :, None], 0), axis=1
-        )
-        mv = jnp.sum(jnp.where(ohA, Av[:, :, None], 0), axis=1) + jnp.sum(
-            jnp.where(ohB, Bv[:, :, None], 0), axis=1
-        )
-        filled = jnp.any(ohA, axis=1) | jnp.any(ohB, axis=1)
-        mk = jnp.where(filled, mk, _EMPTY)         # [BB, S] merged stripe
-        mv = jnp.where(filled, mv, 0)
-
-        # ---- phase 2: physical delete on the merged stripe ---------------
-        D = dk_ref[...]                            # [BB, cap]
-        hit = jnp.any(mk[:, :, None] == D[:, None, :], axis=2)
-        hit &= mk != _EMPTY
-        del_cnt = jnp.sum(hit.astype(jnp.int32), axis=1)          # [BB]
-
-        rows = mk.reshape(bb, npb, ns)
-        vrows = mv.reshape(bb, npb, ns)
-        hitr = hit.reshape(bb, npb, ns)
-        keep = (~hitr) & (rows != _EMPTY)
-        dest = jnp.cumsum(keep.astype(jnp.int32), axis=2) - 1
-        lane_n = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, ns, ns), 3)
-        ohc = (dest[..., None] == lane_n) & keep[..., None]
-        nk = jnp.sum(jnp.where(ohc, rows[..., None], 0), axis=2)
-        nfill = jnp.any(ohc, axis=2)
-        nk = jnp.where(nfill, nk, _EMPTY)
-        nv = jnp.where(
-            nk == _EMPTY, 0, jnp.sum(jnp.where(ohc, vrows[..., None], 0), axis=2)
-        )
-        cnt = jnp.sum(keep.astype(jnp.int32), axis=2)             # [BB, npb]
-
-        # chain compaction: surviving nodes shift into the lowest slots
-        nonempty = cnt > 0
-        slot_dest = jnp.cumsum(nonempty.astype(jnp.int32), axis=1) - 1
-        slot_lane = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, npb), 2)
-        ohs = (slot_dest[:, :, None] == slot_lane) & nonempty[:, :, None]
-        fk = jnp.sum(jnp.where(ohs[..., None], nk[:, :, None, :], 0), axis=1)
-        fv = jnp.sum(jnp.where(ohs[..., None], nv[:, :, None, :], 0), axis=1)
-        row_filled = jnp.any(ohs, axis=1)                         # [BB, npb]
-        fk = jnp.where(row_filled[..., None], fk, _EMPTY)
-        fv = jnp.where(row_filled[..., None], fv, 0)
-
-        # metadata
-        ocnt = jnp.sum((fk != _EMPTY).astype(jnp.int32), axis=2)
-        last = jnp.maximum(ocnt - 1, 0)
-        lane3 = jax.lax.broadcasted_iota(jnp.int32, (bb, npb, ns), 2)
-        omax = jnp.sum(jnp.where(lane3 == last[..., None], fk, 0), axis=2)
-        omax = jnp.where(ocnt > 0, omax, _EMPTY)
-        onn_new = jnp.sum((ocnt > 0).astype(jnp.int32), axis=1)   # [BB]
-
-        okeys_ref[...] = fk.reshape(bb, S)
-        ovals_ref[...] = fv.reshape(bb, S)
-        ocnt_ref[...] = ocnt
-        omax_ref[...] = omax
-        onn_ref[...] = onn_new[:, None]
-        oflow_ref[...] = (total_new > npb).astype(jnp.int32)[:, None]
-        odel_ref[...] = del_cnt[:, None]
-
-        # ---- phase 3: reads against the post-update stripe ---------------
-        t = t_ref[0, :]                            # [QB] op tags
-        q = q_ref[0, :]                            # [QB] op keys
-        qcol = q[:, None]
-
-        mkba = mkba_ref[0, :][None, :]             # [1, BB]
-        b_local = jnp.sum(mkba < qcol, axis=1)     # [QB]
-        lf = lf_ref[0, :][None, :]
-        b_sel = jnp.minimum(b_local, bb - 1)
-        oh_b = (
-            jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], bb), 1)
-            == b_sel[:, None]
-        )
-        lf_q = jnp.sum(jnp.where(oh_b, lf, 0), axis=1)
-        is_read = (t == _OP_POINT) | (t == _OP_SUCCESSOR)
-        mine = (b_local < bb) & (qcol[:, 0] > lf_q) & is_read
-
-        # node by post-update node-max votes, position by key votes
-        nmax_rows = _exact_gather_i32(oh_b.astype(jnp.float32), omax)
-        nn_q = jnp.sum(jnp.where(oh_b, onn_new[None, :], 0), axis=1)
-        nidx = jnp.sum(nmax_rows < qcol, axis=1)
-        in_bucket = nidx < nn_q
-        nidx_c = jnp.minimum(nidx, npb - 1)
-
-        flat = b_sel * npb + nidx_c
-        oh_n = (
-            jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], bb * npb), 1)
-            == flat[:, None]
-        ).astype(jnp.float32)
-        krow = _exact_gather_i32(oh_n, fk.reshape(bb * npb, ns))
-        vrow = _exact_gather_i32(oh_n, fv.reshape(bb * npb, ns))
-
-        pos = jnp.sum(krow < qcol, axis=1)
-        pos_c = jnp.minimum(pos, ns - 1)
-        oh_p = (
-            jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], ns), 1)
-            == pos_c[:, None]
-        )
-        key_at = jnp.sum(jnp.where(oh_p, krow, 0), axis=1)
-        val_at = jnp.sum(jnp.where(oh_p, vrow, 0), axis=1)
-
-        # POINT: hit iff the key is stored post-update
-        hit_q = in_bucket & (pos < ns) & (key_at == qcol[:, 0])
-        point_res = jnp.where(hit_q, val_at, _MISS)
-
-        # SUCCESSOR: in-bucket candidate, else the post-update fence rows
-        nxk = jnp.sum(jnp.where(oh_b, nxk_ref[0, :][None, :], 0), axis=1)
-        nxv = jnp.sum(jnp.where(oh_b, nxv_ref[0, :][None, :], 0), axis=1)
-        use_in = in_bucket & (pos < ns)
-        succ_key = jnp.where(use_in, key_at, nxk)
-        succ_val = jnp.where(use_in, val_at, nxv)
-        found = succ_key != _EMPTY
-        succ_val = jnp.where(found, succ_val, _MISS)
-
-        is_p = t == _OP_POINT
-        is_s = t == _OP_SUCCESSOR
-        resv_ref[0, :] = jnp.where(
-            mine & is_p,
-            point_res,
-            jnp.where(mine & is_s, succ_val, resv_ref[0, :]),
-        )
-        resk_ref[0, :] = jnp.where(mine & is_s, succ_key, resk_ref[0, :])
-
-        # ---- phase 4: dense RANGE slots owned by this block's buckets ----
-        # slot p carries the post-update global rank of its key; the block
-        # claims p iff the rank falls in one of its buckets' [pref[b],
-        # pref[b+1]) spans, then maps the in-bucket rank to a (node, pos) of
-        # the stripe just rebuilt above (ocnt cumsum = node boundaries).
-        # Valid slots are a prefix, so g[0] < 0 ⇔ nothing to emit — batches
-        # with no RANGE output skip the gather compute entirely and keep the
-        # PR-2 update-only cost (the init above already wrote EMPTY).
-        @pl.when(g_ref[0, 0] >= 0)
-        def _range_gather():
-            g = g_ref[0, :]                        # [MR]
-            gcol = g[:, None]
-            ps = ps_ref[0, :][None, :]             # [1, BB]
-            pe = pe_ref[0, :][None, :]
-            bloc = jnp.sum((pe <= gcol).astype(jnp.int32), axis=1)
-            bloc_c = jnp.minimum(bloc, bb - 1)
-            oh_rb = (
-                jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], bb), 1)
-                == bloc_c[:, None]
-            )
-            ps_g = jnp.sum(jnp.where(oh_rb, ps, 0), axis=1)
-            mine_r = (g >= 0) & (bloc < bb) & (g >= ps_g)
-            r = g - ps_g                           # rank within the bucket
-
-            cnt_rows = _exact_gather_i32(oh_rb.astype(jnp.float32), ocnt)
-            cum = jnp.cumsum(cnt_rows, axis=1)     # [MR, npb]
-            node_r = jnp.sum((cum <= r[:, None]).astype(jnp.int32), axis=1)
-            node_rc = jnp.minimum(node_r, npb - 1)
-            oh_nd = (
-                jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], npb), 1)
-                == node_rc[:, None]
-            )
-            base = jnp.sum(jnp.where(oh_nd, cum - cnt_rows, 0), axis=1)
-            pos_r = jnp.clip(r - base, 0, ns - 1)
-
-            flat_r = bloc_c * npb + node_rc
-            oh_fr = (
-                jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], bb * npb), 1)
-                == flat_r[:, None]
-            ).astype(jnp.float32)
-            krow_r = _exact_gather_i32(oh_fr, fk.reshape(bb * npb, ns))
-            vrow_r = _exact_gather_i32(oh_fr, fv.reshape(bb * npb, ns))
-            oh_pr = (
-                jax.lax.broadcasted_iota(jnp.int32, (g.shape[0], ns), 1)
-                == pos_r[:, None]
-            )
-            kk = jnp.sum(jnp.where(oh_pr, krow_r, 0), axis=1)
-            vv = jnp.sum(jnp.where(oh_pr, vrow_r, 0), axis=1)
-            rngk_ref[0, :] = jnp.where(mine_r, kk, rngk_ref[0, :])
-            rngv_ref[0, :] = jnp.where(mine_r, vv, rngv_ref[0, :])
 
 
-def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpret):
+def _fused_apply(
+    state, tag, key, val, *, block_q, block_b, max_results, interpret, pipeline
+):
     """Trace the fused apply: returns (new_state, results, stats)."""
     from repro.core.ops import derive_type_views
     from repro.core.query import (
@@ -553,14 +657,47 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpr
     def window_map(j, i, lo_ref, hi_ref):
         return (j, 0)
 
+    # the pipelined variant stages the big stripe planes itself: keys/vals
+    # stay HBM-resident (ANY memory space) and a two-slot VMEM scratch +
+    # DMA semaphore pair per plane double-buffers them across grid steps;
+    # everything else keeps the automatic BlockSpec pipeline either way
+    if pipeline:
+        stripe_specs = [
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ]
+        scratch_shapes = [
+            pltpu.VMEM((2, block_b, S), jnp.int32),
+            pltpu.VMEM((2, block_b, S), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ]
+        kernel = functools.partial(
+            _apply_kernel_pipelined,
+            block_b=block_b,
+            npb=npb,
+            ns=ns,
+            cap=cap,
+            nb_blocks=nb_blocks,
+            n_windows=n_windows,
+        )
+    else:
+        stripe_specs = [
+            pl.BlockSpec((block_b, S), bucket_map),
+            pl.BlockSpec((block_b, S), bucket_map),
+        ]
+        scratch_shapes = []
+        kernel = functools.partial(
+            _apply_kernel, block_b=block_b, npb=npb, ns=ns, cap=cap
+        )
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(n_windows, nb_blocks),
         in_specs=[
             pl.BlockSpec((1, block_q), window_map),
             pl.BlockSpec((1, block_q), window_map),
-            pl.BlockSpec((block_b, S), bucket_map),
-            pl.BlockSpec((block_b, S), bucket_map),
+            *stripe_specs,
             pl.BlockSpec((block_b, npb), bucket_map),
             pl.BlockSpec((block_b, cap), bucket_map),
             pl.BlockSpec((block_b, cap), bucket_map),
@@ -586,6 +723,7 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpr
             pl.BlockSpec((1, mrp), lambda j, i, lo, hi: (0, 0)),
             pl.BlockSpec((1, mrp), lambda j, i, lo, hi: (0, 0)),
         ],
+        scratch_shapes=scratch_shapes,
     )
 
     (
@@ -601,9 +739,7 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpr
         rngk,
         rngv,
     ) = pl.pallas_call(
-        functools.partial(
-            _apply_kernel, block_b=block_b, npb=npb, ns=ns, cap=cap
-        ),
+        kernel,
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((nb_p, S), jnp.int32),
@@ -673,7 +809,8 @@ def _fused_apply(state, tag, key, val, *, block_q, block_b, max_results, interpr
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_q", "block_b", "max_results", "interpret")
+    jax.jit,
+    static_argnames=("block_q", "block_b", "max_results", "interpret", "pipeline"),
 )
 def flix_apply_pallas(
     state: FliXState,
@@ -685,8 +822,16 @@ def flix_apply_pallas(
     block_b: int = DEFAULT_BLOCK_B,
     max_results: int = 128,
     interpret: bool = False,
+    pipeline: bool = False,
 ):
-    """Fused mixed-batch apply.  Same contract as ``core.ops.apply_ops``."""
+    """Fused mixed-batch apply.  Same contract as ``core.ops.apply_ops``.
+
+    ``pipeline=True`` selects the double-buffered bucket-stripe variant
+    (`_apply_kernel_pipelined`): explicit two-slot scratch + async-copy
+    staging so the next stripe's HBM→VMEM transfer overlaps the current
+    stripe's compute.  Byte-identical to ``pipeline=False`` — the stripe
+    maths is shared — and works in interpret mode, which is how the
+    differential suite proves it off-TPU."""
     return _fused_apply(
         state,
         tag,
@@ -696,12 +841,13 @@ def flix_apply_pallas(
         block_b=block_b,
         max_results=max_results,
         interpret=interpret,
+        pipeline=pipeline,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_q", "block_b", "max_results", "interpret"),
+    static_argnames=("block_q", "block_b", "max_results", "interpret", "pipeline"),
     donate_argnums=(0,),
 )
 def flix_apply_pallas_donated(
@@ -714,6 +860,7 @@ def flix_apply_pallas_donated(
     block_b: int = DEFAULT_BLOCK_B,
     max_results: int = 128,
     interpret: bool = False,
+    pipeline: bool = False,
 ):
     """Donating variant: the input state's buffers are handed to XLA so step
     N+1's stripes reuse step N's allocation instead of copying.  The caller
@@ -729,4 +876,5 @@ def flix_apply_pallas_donated(
         block_b=block_b,
         max_results=max_results,
         interpret=interpret,
+        pipeline=pipeline,
     )

@@ -16,6 +16,7 @@ import numpy as np
 from repro.models import transformer as tf
 from repro.models.model import get_config
 from repro.serve.kv_index import KVPageIndex
+from repro.core.config import ExecConfig
 
 PAGE_TOKENS = 16  # tokens per KV page tracked by the index
 
@@ -110,9 +111,8 @@ def main() -> None:
     params = tf.init_params(rng, cfg)
     cache = tf.init_cache(cfg, args.batch, args.max_len, dtype=jnp.float32)
     kv_index = KVPageIndex(
-        impl=args.index_impl,
+        config=ExecConfig(impl=args.index_impl, routing=args.index_routing),
         shards=args.shards,
-        routing=args.index_routing,
         durability_dir=args.wal_dir,
         snapshot_every=args.snapshot_every,
         snapshot_window=args.snapshot_window,
@@ -177,11 +177,11 @@ def main() -> None:
                 allocs = (seqs, np.full(args.batch, page), seqs * 1000 + page)
                 if args.page_ttl:
                     allocs = (*allocs, np.full(args.batch, i + args.page_ttl))
-                slots, _, _ = kv_index.step(
+                slots = kv_index.step(
                     allocs=allocs,
                     lookups=(seqs, np.zeros(args.batch, int)),
                     now=i if args.page_ttl else None,
-                )
+                ).slots
                 # head page (deadline = page_ttl) is visible until its
                 # deadline passes, then lazily expired
                 expect = (
@@ -229,10 +229,10 @@ def main() -> None:
         # read at it sees nothing — TTL is governed by the explicit virtual
         # clock, never by when this process happens to run
         horizon = args.steps + args.page_ttl
-        gone, _, _ = kv_index.step(
+        gone = kv_index.step(
             lookups=(np.arange(args.batch), np.zeros(args.batch, int)),
             now=horizon,
-        )
+        ).slots
         assert (np.asarray(gone) == -1).all()
         print(f"page TTLs honored ✓ (head pages invisible at now={horizon})")
     if args.snapshot_window:
@@ -240,7 +240,7 @@ def main() -> None:
 
         v = kv_index.version
         lo, hi = 0, args.batch << 12
-        pinned = kv_index.step(ranges=([lo], [hi]), as_of=v, range_budget=1024)[1]
+        pinned = kv_index.step(ranges=([lo], [hi]), as_of=v, range_budget=1024).range_out
         base = (
             np.asarray(pinned["keys"]).tobytes()
             + np.asarray(pinned["vals"]).tobytes()
@@ -248,7 +248,9 @@ def main() -> None:
         for extra in range(3):  # three later update batches
             kv_index.step(allocs=([4000 + extra], [0], [extra]))
         if args.snapshot_window > 3:
-            again = kv_index.step(ranges=([lo], [hi]), as_of=v, range_budget=1024)[1]
+            again = kv_index.step(
+                ranges=([lo], [hi]), as_of=v, range_budget=1024
+            ).range_out
             assert (
                 np.asarray(again["keys"]).tobytes()
                 + np.asarray(again["vals"]).tobytes()

@@ -533,7 +533,7 @@ class Gateway:
                 self.metrics["committed_requests"] += len(pinned_keys)
             return PumpReport(pinned_keys, n_pinned, expired, None, {}, None)
         try:
-            slots, range_out, stats = self.index.step(
+            step_res = self.index.step(
                 allocs=(al_seq, al_page, al_slot) if al_seq else None,
                 lookups=(lu_seq, lu_page) if lu_seq else None,
                 free_seqs=fr_seq or None,
@@ -542,6 +542,7 @@ class Gateway:
                 range_budget=self.range_budget,
                 meta=meta,
             )
+            slots, range_out, stats = step_res.slots, step_res.range_out, step_res.stats
         except Exception as e:  # noqa: BLE001 — mapped to typed errors
             # CrashError/KeyboardInterrupt are BaseException: they pass
             # through like the process death they simulate
@@ -615,13 +616,14 @@ class Gateway:
                     rg_lo.append(int(s) << PAGE_BITS)
                     rg_hi.append((int(s) + 1) << PAGE_BITS)
         try:
-            slots, range_out, _stats = self.index.step(
+            step_res = self.index.step(
                 lookups=(lu_seq, lu_page) if lu_seq else None,
                 ranges=(rg_lo, rg_hi) if rg_lo else None,
                 max_pages=self.max_pages,
                 range_budget=self.range_budget,
                 as_of=as_of,
             )
+            slots, range_out = step_res.slots, step_res.range_out
         except SnapshotGone as e:
             for tk in tks:
                 self._pending.pop(tk.request.key, None)

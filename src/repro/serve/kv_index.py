@@ -41,6 +41,9 @@ Two first-class time features ride the same batch model (DESIGN.md §14):
 
 from __future__ import annotations
 
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -57,8 +60,30 @@ from repro.core import (
     make_ops,
     unsort,
 )
+from repro.core.config import _UNSET, ExecConfig, resolve_config
 
 PAGE_BITS = 12  # up to 4096 pages (≈ pages × page_size tokens) per sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class StepResult:
+    """One engine step's outcome (:meth:`KVPageIndex.step`).
+
+    * ``slots``     — resolved cache slots aligned with the ``lookups``
+      input order followed by the ``getsets`` input order (NOT_FOUND = -1).
+    * ``range_out`` — None without ``ranges``, else the dense ``keys`` /
+      ``vals`` arrays plus per-op ``start`` / ``count`` aligned with the
+      ``ranges`` input order.
+    * ``stats``     — the engine step's stats dict (empty for a no-op step).
+
+    Deliberately NOT iterable: the pre-PR-10 positional
+    ``(slots, range_out, stats)`` tuple is gone, and stale unpacking should
+    fail loudly here rather than silently misbind fields.
+    """
+
+    slots: jax.Array
+    range_out: dict | None
+    stats: dict
 
 
 class SnapshotGone(LookupError):
@@ -79,14 +104,18 @@ def _next_pow2(n: int) -> int:
 class KVPageIndex:
     """Host-driven wrapper around a FliXState (functional underneath).
 
-    ``impl`` selects the ``apply_ops`` executor for every engine step
-    (``"auto"`` = the fused compute-to-bucket kernel on TPU, the jnp
-    reference engine elsewhere — see ``core.ops.apply_ops``).
+    ``config`` is the execution strategy for every engine step — one
+    :class:`~repro.core.config.ExecConfig` whose ``impl`` picks the
+    ``apply_ops`` executor (``"auto"`` = the fused compute-to-bucket kernel
+    on TPU, the jnp reference engine elsewhere), whose ``routing`` picks
+    the distributed batch mode when sharded, and whose pipeline/tile knobs
+    thread to the fused kernel.  The bare ``impl`` / ``routing`` keywords
+    are deprecated warn-once shims for it.
 
     ``shards`` > 0 range-partitions the index over that many local devices
-    and serves every step through ``shard_apply_ops`` (``routing`` picks
-    the distributed batch mode; replicated is right for the control-plane
-    batch sizes this index sees).  All public methods behave identically.
+    and serves every step through ``shard_apply_ops`` (replicated routing
+    is right for the control-plane batch sizes this index sees).  All
+    public methods behave identically.
 
     ``durability_dir`` switches on the DESIGN.md §12 persistence layer:
     every update step is WAL-logged (fsynced) before execution and
@@ -119,22 +148,24 @@ class KVPageIndex:
         *,
         node_size: int = 16,
         nodes_per_bucket: int = 8,
-        impl: str = "auto",
+        config: ExecConfig | None = None,
         shards: int = 0,
-        routing: str = "replicated",
         durability_dir=None,
         snapshot_every: int = 64,
         wal_fsync: bool = True,
         crash_hook=None,
         snapshot_window: int = 0,
         device_budget: int | None = None,
+        impl=_UNSET,
+        routing=_UNSET,
     ):
         # seed with one sentinel key (outside the (seq,page) space) so the
         # structure is never empty
         from repro.core import MAX_VALID
 
-        self.impl = impl
-        self.routing = routing
+        self.config = resolve_config("KVPageIndex", config, impl=impl, routing=routing)
+        self.impl = self.config.impl
+        self.routing = self.config.routing
         self._durable = None
         self._closed = False
         self.snapshot_window = int(snapshot_window)
@@ -192,21 +223,20 @@ class KVPageIndex:
             if self.mesh is not None:
                 engine = ShardEngine(
                     self.mesh,
-                    routing=routing,
-                    impl=impl,
+                    config=self.config,
                     node_size=node_size,
                     nodes_per_bucket=nodes_per_bucket,
                 )
             elif device_budget is not None:
                 engine = TieredEngine(
                     budget_bytes=device_budget,
-                    impl=impl,
+                    config=self.config,
                     node_size=node_size,
                     nodes_per_bucket=nodes_per_bucket,
                 )
             else:
                 engine = LocalEngine(
-                    impl=impl,
+                    config=self.config,
                     node_size=node_size,
                     nodes_per_bucket=nodes_per_bucket,
                 )
@@ -289,12 +319,8 @@ class KVPageIndex:
         violating ``apply_ops``' one-update-op-per-key precondition.
         Checked here because the ids are host values anyway.
 
-        Returns ``(slots, range_out, stats)``; ``slots`` is aligned with
-        the ``lookups`` input order followed by the ``getsets`` input
-        order (NOT_FOUND = -1 for unmapped pages), and ``range_out`` is
-        None without ``ranges``, else a dict of the dense ``keys``/``vals``
-        arrays plus per-op ``start``/``count`` aligned with the ``ranges``
-        input order.
+        Returns a :class:`StepResult` (``slots`` / ``range_out`` /
+        ``stats`` — see its docstring for the field contracts).
         """
         # empty op lists are the same as absent ones — callers naturally pass
         # this step's (often empty) completion list every step, and an empty
@@ -418,7 +444,7 @@ class KVPageIndex:
             vals.append(jnp.asarray(hi, jnp.int32))
             exps.append(jnp.full((n_range,), NO_EXPIRY, jnp.int32))
         if not keys:
-            return jnp.zeros((0,), jnp.int32), None, {}
+            return StepResult(slots=jnp.zeros((0,), jnp.int32), range_out=None, stats={})
 
         tag = jnp.concatenate(tags)
         key = jnp.concatenate(keys)
@@ -446,13 +472,11 @@ class KVPageIndex:
             # rewrites the whole state, pure waste for an update-free batch
             # (DESIGN.md §9/§10), while the reference lax.cond phases skip
             # it.
+            cfg = self.config.replace(
+                impl="reference", max_results=range_budget, donate=False
+            )
             _, results, stats = self._apply(
-                ops,
-                impl="reference",
-                max_results=range_budget,
-                has_ranges=has_ranges,
-                now=now,
-                handle=pinned,
+                ops, config=cfg, has_ranges=has_ranges, now=now, handle=pinned
             )
         elif n_alloc == 0 and n_getset == 0:
             # only inserts can overflow — free steps skip the restructure-
@@ -460,11 +484,12 @@ class KVPageIndex:
             # replay the batch, the old state's buffers are donated to the
             # step (fused path; a no-op on CPU) — unless pinned snapshot
             # versions alias them (snapshot_window > 0)
+            cfg = self.config.replace(
+                max_results=range_budget, donate=self.snapshot_window == 0
+            )
             new, results, stats = self._apply(
                 ops,
-                impl=self.impl,
-                donate=self.snapshot_window == 0,
-                max_results=range_budget,
+                config=cfg,
                 has_updates=True,
                 has_ranges=has_ranges,
                 meta=meta,
@@ -475,11 +500,11 @@ class KVPageIndex:
             # allocation steps go through the safe driver; its retry path
             # regrows (sharded: rebalances fences via shard_restructure —
             # the cluster analogue of §3.5 relaunch) and replays the batch
+            cfg = self.config.replace(max_results=range_budget, donate=False)
             new, results, stats = self._apply(
                 ops,
+                config=cfg,
                 safe=True,
-                impl=self.impl,
-                max_results=range_budget,
                 has_updates=True,
                 has_ranges=has_ranges,
                 meta=meta,
@@ -496,26 +521,31 @@ class KVPageIndex:
                 "start": unsort(results["range_start"], sub),
                 "count": unsort(results["range_count"], sub),
             }
-        return values[n_alloc : n_alloc + n_lookup + n_getset], range_out, stats
+        return StepResult(
+            slots=values[n_alloc : n_alloc + n_lookup + n_getset],
+            range_out=range_out,
+            stats=stats,
+        )
 
     def _apply(
         self,
         ops,
         *,
+        config: ExecConfig,
         safe=False,
-        donate=False,
+        has_updates=None,
         has_ranges=False,
         meta=None,
         now=None,
         handle=None,
-        **kw,
     ):
         """Dispatch one engine batch to the local or sharded executor.
 
-        Same step policy either way (one copy of it, in :meth:`step`); the
-        sharded path adds the routing mode and the host-known ``has_ranges``
-        hint (the local ``apply_ops`` needs no such hint — its range phase
-        is a traced ``lax.cond``).
+        Same step policy either way (one copy of it, in :meth:`step`):
+        ``config`` carries the whole execution strategy for the batch,
+        already specialized per step kind (reference-engine reads, donated
+        frees, safe allocations).  ``has_updates`` / ``has_ranges`` are the
+        host-known batch-composition hints.
 
         ``handle`` overrides the state the batch runs against (pinned
         snapshot reads — read-only by construction, never committed).
@@ -524,16 +554,9 @@ class KVPageIndex:
         ``DurableFliX.apply`` — WAL-ahead, restructure-and-retry inside —
         so it forfeits donation; pure reads bypass the log entirely.
         """
-        if self._durable is not None and (safe or kw.get("has_updates")):
-            from repro.core.ops import DEFAULT_MAX_RESULTS
-
-            kw.pop("has_updates", None)
-            kw.pop("impl", None)
+        if self._durable is not None and (safe or has_updates):
             results, stats = self._durable.apply(
-                ops,
-                max_results=kw.pop("max_results", DEFAULT_MAX_RESULTS),
-                meta=meta,
-                now=now,
+                ops, config=config.replace(donate=False), meta=meta, now=now
             )
             return self._durable.handle, results, stats
         if self.mesh is not None:
@@ -545,41 +568,40 @@ class KVPageIndex:
                     sharded,
                     ops,
                     self.mesh,
-                    routing=self.routing,
+                    config=config.replace(donate=False),
+                    has_updates=has_updates,
                     has_ranges=has_ranges,
                     now=now,
-                    **kw,
                 )
             return shard_apply_ops(
                 sharded,
                 ops,
                 self.mesh,
-                routing=self.routing,
-                donate=donate,
+                config=config,
+                has_updates=has_updates,
                 has_ranges=has_ranges,
                 now=now,
-                **kw,
             )
         state = self.state if handle is None else handle
         from repro.core.residency import TieredFliX
 
         if isinstance(state, TieredFliX):
-            from repro.core.ops import DEFAULT_MAX_RESULTS
-
             # the tiered handle mutates in place and carries its own
             # restructure-and-retry; commit=False keeps read-only steps
             # (incl. throwaway expiry views) from changing logical content
             results, stats, _ = state.apply(
                 ops,
-                max_results=kw.get("max_results", DEFAULT_MAX_RESULTS),
+                config=config,
                 now=now,
-                impl=kw.get("impl", self.impl),
-                commit=bool(safe or kw.get("has_updates")),
+                commit=bool(safe or has_updates),
             )
             return state, results, stats
         if safe:
-            return apply_ops_safe(state, ops, now=now, **kw)
-        return apply_ops(state, ops, donate=donate, now=now, **kw)
+            return apply_ops_safe(
+                state, ops, config=config.replace(donate=False), now=now,
+                has_updates=has_updates,
+            )
+        return apply_ops(state, ops, config=config, has_updates=has_updates, now=now)
 
     def _commit(self, new, *, bump: bool = False, now: int | None = None):
         """Install an update step's result (local state or sharded index);
@@ -601,18 +623,15 @@ class KVPageIndex:
     # ---- per-type conveniences (each is still one engine step) ---------
     def allocate(self, seq_ids, page_nos, slots):
         """Batch-register pages → slots (an engine allocation step)."""
-        _, _, stats = self.step(allocs=(seq_ids, page_nos, slots))
-        return stats
+        return self.step(allocs=(seq_ids, page_nos, slots)).stats
 
     def lookup(self, seq_ids, page_nos):
         """Batch lookup → cache slots (NOT_FOUND = -1 for unmapped pages)."""
-        slots, _, _ = self.step(lookups=(seq_ids, page_nos))
-        return slots
+        return self.step(lookups=(seq_ids, page_nos)).slots
 
     def free_sequences(self, seq_ids, *, max_pages: int = 256):
         """Batch-free every page of the given sequences (physical removal)."""
-        _, _, stats = self.step(free_seqs=seq_ids, max_pages=max_pages)
-        return stats
+        return self.step(free_seqs=seq_ids, max_pages=max_pages).stats
 
     def pages_of(self, seq_id: int, *, max_pages: int = 256):
         """All (page_no, slot) of a sequence, in order (a RANGE engine step).
@@ -624,7 +643,7 @@ class KVPageIndex:
         """
         lo = seq_id << PAGE_BITS
         hi = (seq_id + 1) << PAGE_BITS
-        _, rng_out, _ = self.step(ranges=([lo], [hi]), range_budget=max_pages)
+        rng_out = self.step(ranges=([lo], [hi]), range_budget=max_pages).range_out
         return (
             rng_out["keys"] & ((1 << PAGE_BITS) - 1),
             rng_out["vals"],
@@ -639,10 +658,7 @@ class KVPageIndex:
         """Batch get-or-set with TTL (one ``OP_EXPIRE`` engine step):
         returns the existing slot (deadline refreshed) for mapped pages,
         NOT_FOUND for pages registered by this call."""
-        slots_out, _, _ = self.step(
-            getsets=(seq_ids, page_nos, slots, deadlines), now=now
-        )
-        return slots_out
+        return self.step(getsets=(seq_ids, page_nos, slots, deadlines), now=now).slots
 
     # ---- snapshot versions ----------------------------------------------
     @property

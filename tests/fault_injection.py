@@ -37,6 +37,7 @@ import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+from repro.core.config import ExecConfig  # noqa: E402
 from repro.checkpoint import DurableFliX, LocalEngine  # noqa: E402
 from repro.checkpoint.serialize import canonical_state_bytes  # noqa: E402
 from repro.core.expiry import NO_EXPIRY  # noqa: E402
@@ -226,7 +227,9 @@ def run_workload_ttl(
     while dur.seq < n_batches:
         tag, key, val, exp, now, mr = make_batch_host_ttl(dur.seq + 1, seed)
         dur.apply(
-            OpBatch.from_host(tag, key, val, exp), max_results=mr, now=now
+            OpBatch.from_host(tag, key, val, exp),
+            config=ExecConfig(max_results=mr),
+            now=now,
         )
         if ack is not None:
             ack(dur.seq)
@@ -322,7 +325,7 @@ def run_workload(
         )
     while dur.seq < n_batches:
         tag, key, val, mr = make_batch_host(dur.seq + 1, seed)
-        dur.apply(OpBatch.from_host(tag, key, val), max_results=mr)
+        dur.apply(OpBatch.from_host(tag, key, val), config=ExecConfig(max_results=mr))
         if ack is not None:
             ack(dur.seq)
     if ret == "instance":

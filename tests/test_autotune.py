@@ -1,0 +1,114 @@
+"""Autotuner determinism + TileTable plumbing (DESIGN.md §16).
+
+The model-mode sweep must be a pure function of its inputs: the committed
+bench artifact embeds the table, the determinism test here re-derives it,
+and ``ExecConfig.resolve_blocks`` must hand the fused kernel exactly the
+tuned tiles (explicit overrides still winning).
+"""
+
+import numpy as np
+
+from repro.core.config import DEFAULT_MAX_RESULTS, ExecConfig, TileTable
+from repro.kernels.autotune import (
+    CANDIDATE_BLOCK_B,
+    CANDIDATE_BLOCK_Q,
+    VMEM_BUDGET_BYTES,
+    autotune,
+    sweep_bucket,
+    vmem_bytes,
+)
+
+BUILDS = (4096, 65536)
+BATCHES = (256, 2048)
+
+
+def test_sweep_is_deterministic():
+    a_table, a_rec = autotune(BUILDS, BATCHES)
+    b_table, b_rec = autotune(BUILDS, BATCHES)
+    assert a_table == b_table
+    assert a_rec == b_rec
+    # shuffled/duplicated inputs bucket to the same sweep
+    c_table, _ = autotune(BUILDS[::-1] + BUILDS, BATCHES[::-1])
+    assert c_table == a_table
+
+
+def test_sweep_covers_grid_and_respects_vmem():
+    table, rec = autotune(BUILDS, BATCHES)
+    assert len(table.entries) == len(BUILDS) * len(BATCHES)
+    for sweep in rec["sweeps"]:
+        assert len(sweep["candidates"]) == len(CANDIDATE_BLOCK_Q) * len(
+            CANDIDATE_BLOCK_B
+        )
+        chosen = next(
+            c
+            for c in sweep["candidates"]
+            if c["block_q"] == sweep["block_q"] and c["block_b"] == sweep["block_b"]
+        )
+        assert chosen["feasible"]
+        assert chosen["vmem_bytes"] <= VMEM_BUDGET_BYTES
+        # the winner has the minimum model cost among feasible candidates
+        best = min(
+            c["model_cost"] for c in sweep["candidates"] if c["feasible"]
+        )
+        assert chosen["model_cost"] == best
+
+
+def test_vmem_model_scales_with_tiles():
+    small = vmem_bytes(128, 1, node_size=16, nodes_per_bucket=8)
+    big = vmem_bytes(512, 8, node_size=16, nodes_per_bucket=8)
+    assert big > small > 0
+
+
+def test_table_roundtrips_artifact_and_execconfig():
+    table, rec = autotune(BUILDS, BATCHES)
+    # artifact round-trip: JSON rows -> identical table
+    assert TileTable.from_json(rec["table"]) == table
+    # ExecConfig consults the table when blocks are unset...
+    cfg = ExecConfig(tile_table=table)
+    for build, batch, bq, bb in table.entries:
+        assert cfg.resolve_blocks(build, batch) == (bq, bb)
+    # ...explicit overrides always win...
+    cfg2 = cfg.replace(block_q=64)
+    build, batch, _, bb = table.entries[0]
+    assert cfg2.resolve_blocks(build, batch) == (64, bb)
+    # ...and off-grid sizes fall back to the nearest bucket, deterministically
+    got = cfg.resolve_blocks(3 * BUILDS[-1], 3 * BATCHES[-1])
+    assert got == cfg.resolve_blocks(3 * BUILDS[-1], 3 * BATCHES[-1])
+    assert got[0] in CANDIDATE_BLOCK_Q and got[1] in CANDIDATE_BLOCK_B
+
+
+def test_tuned_config_runs_byte_identical(rng):
+    """A tile table changes execution strategy only: apply_ops under the
+    tuned config matches the kernel-default config byte-for-byte."""
+    import jax.numpy as jnp
+
+    from repro import core
+
+    keys = rng.choice(30000, size=1500, replace=False).astype(np.int32)
+    st = core.build(keys, np.arange(1500, dtype=np.int32), node_size=8,
+                    nodes_per_bucket=8)
+    table, _ = autotune([st.num_buckets * st.bucket_capacity], [256])
+    q = np.sort(rng.choice(keys, 200)).astype(np.int32)
+    ins = np.setdiff1d(np.arange(0, 30000, 11, dtype=np.int32), keys)[:56]
+    tags = np.concatenate(
+        [np.full(200, core.OP_POINT), np.full(56, core.OP_INSERT)]
+    ).astype(np.int32)
+    ops, _ = core.make_ops(
+        tags, np.concatenate([q, ins]), np.concatenate([q, ins]), pad_to=256
+    )
+    base = core.apply_ops(st, ops, config=ExecConfig(impl="fused"))
+    tuned = core.apply_ops(
+        st, ops, config=ExecConfig(impl="fused", tile_table=table)
+    )
+    for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(base[0], f)), np.asarray(getattr(tuned[0], f))
+        )
+    mask = np.asarray(base[0].keys) != int(core.EMPTY)
+    np.testing.assert_array_equal(
+        np.asarray(base[0].vals)[mask], np.asarray(tuned[0].vals)[mask]
+    )
+    for k in base[1]:
+        np.testing.assert_array_equal(
+            np.asarray(base[1][k]), np.asarray(tuned[1][k]), err_msg=k
+        )

@@ -103,6 +103,27 @@ def test_step_summary_written(tmp_path, monkeypatch):
     assert "Bench speedup deltas" in text and "| sharded_speedup/k |" in text
 
 
+def test_pipelined_absolute_floor(tmp_path, capsys):
+    """``pipelined_speedup`` gates against the 1.0 floor even with no
+    baseline key at all — double-buffering losing to single-buffer on the
+    same host is a regression on any hardware (DESIGN.md §16)."""
+    base = _write(tmp_path, "base.json", _artifact({}))  # no pipelined keys
+    bad = _write(
+        tmp_path, "bad.json", _artifact({"upd0": 0.70}, field="pipelined_speedup")
+    )
+    assert compare.main([bad, base]) == 1
+    assert "floor" in capsys.readouterr().err
+    # exactly 1.0 (the CPU-host fallback value) and floor-minus-tolerance pass
+    ok = _write(
+        tmp_path, "ok.json", _artifact({"upd0": 1.0}, field="pipelined_speedup")
+    )
+    assert compare.main([ok, base]) == 0
+    near = _write(
+        tmp_path, "near.json", _artifact({"upd0": 0.85}, field="pipelined_speedup")
+    )
+    assert compare.main([near, base]) == 0
+
+
 def test_schema_mismatch_rejected(tmp_path):
     bad = tmp_path / "bad.json"
     bad.write_text(json.dumps({"schema": "other"}))

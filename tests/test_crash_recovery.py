@@ -31,6 +31,7 @@ import numpy as np
 import pytest
 
 import fault_injection as fi
+from repro.core.config import ExecConfig
 from repro.checkpoint import (
     DurableFliX,
     SnapshotCorruptionError,
@@ -228,10 +229,10 @@ def test_engine_failure_rolls_back_the_wal_record(tmp_path, oracle):
 
         dur.engine.apply = boom
         with pytest.raises(RuntimeError, match="engine OOM"):
-            dur.apply(OpBatch.from_host(tag, key, val), max_results=mr)
+            dur.apply(OpBatch.from_host(tag, key, val), config=ExecConfig(max_results=mr))
         dur.engine.apply = real_apply
         assert dur.seq == 4  # rolled back: the instance stays usable
-        dur.apply(OpBatch.from_host(tag, key, val), max_results=mr)
+        dur.apply(OpBatch.from_host(tag, key, val), config=ExecConfig(max_results=mr))
         assert dur.seq == 5
     finally:
         dur.close()
@@ -257,9 +258,9 @@ def test_engine_failure_with_failed_rollback_poisons(tmp_path, oracle):
         dur._wal.truncate_to = no_rollback
         tag, key, val, mr = fi.make_batch_host(3)
         with pytest.raises(RuntimeError, match="engine OOM"):
-            dur.apply(OpBatch.from_host(tag, key, val), max_results=mr)
+            dur.apply(OpBatch.from_host(tag, key, val), config=ExecConfig(max_results=mr))
         with pytest.raises(RuntimeError, match="diverged"):
-            dur.apply(OpBatch.from_host(tag, key, val), max_results=mr)
+            dur.apply(OpBatch.from_host(tag, key, val), config=ExecConfig(max_results=mr))
         with pytest.raises(RuntimeError, match="diverged"):
             dur.snapshot()
     finally:

@@ -33,6 +33,7 @@ from repro.kernels.flix_delete import flix_delete_pallas
 from repro.kernels.flix_insert import flix_insert_pallas
 from repro.kernels.flix_query import flix_point_query_pallas
 from repro.kernels.flix_successor import flix_successor_pallas
+from repro.core.config import ExecConfig
 
 STATE_FIELDS = ("keys", "vals", "node_count", "node_max", "num_nodes", "mkba")
 
@@ -280,13 +281,17 @@ def test_apply_ops_partial_mixes(adversarial, rng, present):
 # ---------------------------------------------------------------------------
 
 
-def _assert_fused_matches_reference(st, tags, keys, vals, *, pad_to, max_results=128):
+def _assert_fused_matches_reference(
+    st, tags, keys, vals, *, pad_to, max_results=128, pipeline="auto"
+):
     ops, _ = core.make_ops(tags, keys, vals, pad_to=pad_to)
     s_ref, r_ref, stats_ref = core.apply_ops(
-        st, ops, impl="reference", max_results=max_results
+        st, ops, config=ExecConfig(impl="reference", max_results=max_results)
     )
     s_f, r_f, stats_f = core.apply_ops(
-        st, ops, impl="fused", max_results=max_results
+        st,
+        ops,
+        config=ExecConfig(impl="fused", max_results=max_results, pipeline=pipeline),
     )
     for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
         np.testing.assert_array_equal(
@@ -413,8 +418,8 @@ def test_fused_apply_overflow_flag_and_state(rng):
     bkeys = np.concatenate([flood, keys]).astype(np.int32)
     bvals = np.concatenate([flood, np.zeros(len(keys), np.int32)])
     ops, _ = core.make_ops(tags, bkeys, bvals, pad_to=256)
-    s_ref, _, stats_ref = core.apply_ops(st, ops, impl="reference")
-    s_f, _, stats_f = core.apply_ops(st, ops, impl="fused")
+    s_ref, _, stats_ref = core.apply_ops(st, ops, config=ExecConfig(impl="reference"))
+    s_f, _, stats_f = core.apply_ops(st, ops, config=ExecConfig(impl="fused"))
     assert bool(s_ref.needs_restructure) and bool(s_f.needs_restructure)
     assert int(stats_ref["overflowed_buckets"]) == int(stats_f["overflowed_buckets"])
     for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
@@ -522,3 +527,164 @@ def test_apply_ops_safe_overflow_recovery(rng):
     np.testing.assert_array_equal(res_in[len(flood):], points)
     got = np.asarray(core.point_query(st2, jnp.asarray(np.sort(flood))))
     np.testing.assert_array_equal(got, np.sort(flood))
+
+# ---------------------------------------------------------------------------
+# pipelined fused kernel: double-buffered staging == single-buffer, byte-exact
+# ---------------------------------------------------------------------------
+
+
+def _fused_both_pipelines(st, ops, *, max_results=128, now=None):
+    """Run the fused executor with the double-buffered kernel forced on and
+    forced off; assert the two runs are byte-identical; return the on-run."""
+    outs = {}
+    for mode in ("on", "off"):
+        outs[mode] = core.apply_ops(
+            st,
+            ops,
+            now=now,
+            config=ExecConfig(impl="fused", pipeline=mode, max_results=max_results),
+        )
+    s_on, r_on, t_on = outs["on"]
+    s_off, r_off, t_off = outs["off"]
+    for f in STATE_FIELDS + (("exps",) if s_on.exps is not None else ()):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s_on, f)), np.asarray(getattr(s_off, f)), err_msg=f
+        )
+    assert bool(s_on.needs_restructure) == bool(s_off.needs_restructure)
+    for k in r_on:
+        np.testing.assert_array_equal(
+            np.asarray(r_on[k]), np.asarray(r_off[k]), err_msg=k
+        )
+    for k in t_on:
+        assert int(t_on[k]) == int(t_off[k]), k
+    return outs["on"]
+
+
+@pytest.mark.parametrize(
+    "present",
+    [
+        (core.OP_INSERT,),
+        (core.OP_DELETE,),
+        (core.OP_INSERT, core.OP_POINT),
+        (core.OP_RANGE, core.OP_SUCCESSOR),
+        (core.OP_INSERT, core.OP_DELETE, core.OP_POINT,
+         core.OP_SUCCESSOR, core.OP_RANGE),
+    ],
+)
+def test_pipelined_kernel_partial_mixes(adversarial, rng, present):
+    """The double-buffered DMA kernel forced on (interpret mode) matches the
+    reference engine on the adversarial mixes — same grid as the fused
+    proofs, now through the explicit two-slot staging path."""
+    st, live = adversarial
+    absent_keys = np.setdiff1d(np.arange(0, 130000, 5, dtype=np.int32), live)
+    pools = {
+        core.OP_INSERT: rng.choice(absent_keys, 120, replace=False),
+        core.OP_DELETE: rng.choice(live, 120, replace=False),
+        core.OP_POINT: rng.integers(0, 130000, 120),
+        core.OP_SUCCESSOR: rng.integers(0, 130000, 120),
+        core.OP_RANGE: np.sort(rng.integers(0, 125000, 40)),
+    }
+    tags, keys, vals = [], [], []
+    for t in present:
+        k = pools[t].astype(np.int32)
+        tags.append(np.full(len(k), t, np.int32))
+        keys.append(k)
+        if t == core.OP_INSERT:
+            vals.append(np.arange(len(k), dtype=np.int32) + 3_000_000)
+        elif t == core.OP_RANGE:
+            vals.append((k + rng.integers(0, 2000, len(k))).astype(np.int32))
+        else:
+            vals.append(np.zeros(len(k), np.int32))
+    _assert_fused_matches_reference(
+        st,
+        np.concatenate(tags),
+        np.concatenate(keys),
+        np.concatenate(vals),
+        pad_to=512,
+        max_results=256,
+        pipeline="on",
+    )
+    ops, _ = core.make_ops(
+        np.concatenate(tags), np.concatenate(keys), np.concatenate(vals), pad_to=512
+    )
+    _fused_both_pipelines(st, ops, max_results=256)
+
+
+def test_pipelined_kernel_overflow_restructure(rng):
+    """An overflowing batch through the double-buffered kernel: the pre-retry
+    state bytes and the restructure flag agree with the single-buffer path,
+    and the safe driver recovers identically on top of it."""
+    keys = np.arange(0, 640, 10, dtype=np.int32)
+    st = core.build(keys, keys, node_size=4, nodes_per_bucket=2)
+    flood = np.arange(1, 200, 2, dtype=np.int32)
+    tags = np.concatenate([
+        np.full(len(flood), core.OP_INSERT),
+        np.full(len(keys), core.OP_POINT),
+    ]).astype(np.int32)
+    bkeys = np.concatenate([flood, keys]).astype(np.int32)
+    bvals = np.concatenate([flood, np.zeros(len(keys), np.int32)])
+    ops, perm = core.make_ops(tags, bkeys, bvals, pad_to=256)
+    s_on, _, _ = _fused_both_pipelines(st, ops)
+    assert bool(s_on.needs_restructure)
+    s2, res, _ = core.apply_ops_safe(
+        st, ops, config=ExecConfig(impl="fused", pipeline="on")
+    )
+    assert not bool(s2.needs_restructure)
+    check_invariants(s2)
+    res_in = np.asarray(core.unsort(res["value"], perm))
+    np.testing.assert_array_equal(res_in[len(flood) : len(flood) + len(keys)], keys)
+
+
+def test_pipelined_kernel_ttl_batch(adversarial, rng):
+    """TTL batches (expiry column + EXPIRE ops + now) through the pipelined
+    kernel: both TTL planes ride the same double-buffered apply, so on/off
+    must agree byte-for-byte including the expiry column."""
+    from repro.core.expiry import NO_EXPIRY, attach_expiry
+
+    st, live = adversarial
+    st = attach_expiry(st)
+    absent = np.setdiff1d(np.arange(0, 130000, 7, dtype=np.int32), live)
+    now = 100
+    ins = rng.choice(absent, 60, replace=False).astype(np.int32)
+    exp_new = rng.choice(live, 60, replace=False).astype(np.int32)  # get-or-set
+    points = rng.choice(live, 60, replace=False).astype(np.int32)
+    rlo = np.sort(rng.integers(0, 125000, 20)).astype(np.int32)
+    rhi = (rlo + rng.integers(0, 3000, 20)).astype(np.int32)
+    tags = np.concatenate([
+        np.full(len(ins), core.OP_INSERT),
+        np.full(len(exp_new), core.OP_EXPIRE),
+        np.full(len(points), core.OP_POINT),
+        np.full(len(rlo), core.OP_RANGE),
+    ]).astype(np.int32)
+    keys = np.concatenate([ins, exp_new, points, rlo]).astype(np.int32)
+    vals = np.concatenate([
+        ins + 1_000_000,
+        exp_new + 2_000_000,
+        np.zeros(len(points), np.int32),
+        rhi,
+    ]).astype(np.int32)
+    exps = np.concatenate([
+        now + 5 + (ins % 50),                     # TTL'd inserts
+        np.full(len(exp_new), now + 40),          # EXPIRE deadlines
+        np.full(len(points) + len(rlo), int(NO_EXPIRY)),
+    ]).astype(np.int64)
+    ops, _ = core.make_ops(tags, keys, vals, exps=jnp.asarray(exps), pad_to=512)
+    s_on, r_on, t_on = _fused_both_pipelines(st, ops, max_results=256, now=now)
+    # and the pipelined TTL run matches the reference engine exactly
+    s_ref, r_ref, t_ref = core.apply_ops(
+        st, ops, now=now, config=ExecConfig(impl="reference", max_results=256)
+    )
+    for f in ("keys", "exps", "node_count", "node_max", "num_nodes", "mkba"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_on, f)), err_msg=f
+        )
+    mask = np.asarray(s_ref.keys) != int(EMPTY)
+    np.testing.assert_array_equal(
+        np.asarray(s_ref.vals)[mask], np.asarray(s_on.vals)[mask]
+    )
+    for k in r_ref:
+        np.testing.assert_array_equal(
+            np.asarray(r_ref[k]), np.asarray(r_on[k]), err_msg=k
+        )
+    for k in t_ref:
+        assert int(t_ref[k]) == int(t_on[k]), k

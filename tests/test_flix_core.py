@@ -7,6 +7,7 @@ import pytest
 from repro import core
 from repro.core.invariants import check_invariants
 from repro.core.state import EMPTY, NOT_FOUND
+from repro.core.config import ExecConfig
 
 
 @pytest.fixture
@@ -131,7 +132,7 @@ def test_successor_cache_identical_and_invalidated(built, rng):
     bkeys = np.sort(rng.integers(0, 100001, 64).astype(np.int32))
     ops, perm = core.make_ops(tags, bkeys, np.zeros(64, np.int32))
     for impl in ("reference", "fused"):
-        s2, res, _ = core.apply_ops(stc, ops, impl=impl)
+        s2, res, _ = core.apply_ops(stc, ops, config=ExecConfig(impl=impl))
         assert s2.succ_smin is None
         got = np.asarray(core.unsort(res["succ_key"], perm))
         want, _ = core.successor_query(st, jnp.asarray(bkeys))

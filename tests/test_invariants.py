@@ -20,6 +20,7 @@ import pytest
 
 from repro import core
 from repro.core.invariants import check_invariants
+from repro.core.config import ExecConfig
 
 
 def _rand_state(rng, n=2000, ns=8, npb=8, space=100000):
@@ -98,7 +99,7 @@ def test_mixed_apply_ops_sequences(seed):
         vals = np.concatenate([iv, np.zeros(450, np.int32), rhi])
         ops, _ = core.make_ops(tags, keys, vals, pad_to=1024)
         st, results, stats = core.apply_ops_safe(
-            st, ops, max_results=256, validate_ranges=True
+            st, ops, config=ExecConfig(max_results=256, validate_ranges=True)
         )
         model.update(zip(ins.tolist(), iv.tolist()))
         for k in dels.tolist():
@@ -121,7 +122,7 @@ def test_check_range_results_catches_violations(rng):
     ops, _ = core.make_ops(
         np.full(2, core.OP_RANGE, np.int32), rlo, rhi, pad_to=4
     )
-    _, results, _ = core.apply_ops(st, ops, impl="reference", max_results=64)
+    _, results, _ = core.apply_ops(st, ops, config=ExecConfig(impl="reference", max_results=64))
     core.check_range_results(ops, results, max_results=64)
     bad = dict(results)
     bad["range_key"] = np.asarray(results["range_key"]).copy()
@@ -159,7 +160,7 @@ def _ttl_state(rng, *, now=100):
         np.array([0], np.int32),
         pad_to=8,
     )
-    st, _, _ = core.apply_ops(st, ops, impl="reference", now=now)
+    st, _, _ = core.apply_ops(st, ops, now=now, config=ExecConfig(impl="reference"))
     return st
 
 
@@ -229,7 +230,7 @@ def test_i6_wired_through_apply_ops_safe(rng):
     exps = np.array([now, core.NO_EXPIRY], np.int32)  # deadline == now
     ops, perm = core.make_ops(tags, keys, vals, exps=jnp.asarray(exps), pad_to=8)
     st, res, _ = core.apply_ops_safe(
-        st, ops, impl="reference", now=now, validate=True
+        st, ops, now=now, config=ExecConfig(impl="reference", validate=True)
     )
     assert int(np.asarray(core.unsort(res["value"], perm))[1]) == 3
     # next batch's pre-pass reclaims it; liveness IS asserted there
@@ -240,7 +241,7 @@ def test_i6_wired_through_apply_ops_safe(rng):
         pad_to=8,
     )
     st, _, stats = core.apply_ops_safe(
-        st, ops2, impl="reference", now=now, validate=True
+        st, ops2, now=now, config=ExecConfig(impl="reference", validate=True)
     )
     assert int(stats["expired"]) == 1
     check_invariants(st, now=now)

@@ -23,6 +23,7 @@ import pytest
 from repro import core
 from repro.core.state import EMPTY, NOT_FOUND
 from repro.kernels.flix_range import flix_range_pallas
+from repro.core.config import ExecConfig
 
 # hypothesis drives the wide generative sweep in CI (requirements-dev.txt);
 # without it the seeded-rng fallbacks below still exercise every property,
@@ -98,7 +99,7 @@ def _check_reference_matches_model(build, inserts, deletes, ranges, budget):
     state, post, tags, keys, vals = _build_batch(build, inserts, deletes, ranges)
     ops, perm = core.make_ops(tags, keys, vals, pad_to=256)
     _, res, stats = core.apply_ops_safe(
-        state, ops, impl="reference", max_results=budget, validate_ranges=True
+        state, ops, config=ExecConfig(impl="reference", max_results=budget, validate_ranges=True)
     )
     dk, dv, starts, counts, truncated = _model_segments(
         post, tags, keys, vals, budget
@@ -150,11 +151,11 @@ def _check_fused_matches_reference(build, inserts, deletes, ranges, budget):
     state, _, tags, keys, vals = _build_batch(build, inserts, deletes, ranges)
     ops, _ = core.make_ops(tags, keys, vals, pad_to=128)
     s_ref, r_ref, t_ref = core.apply_ops(
-        state, ops, impl="reference", max_results=budget
+        state, ops, config=ExecConfig(impl="reference", max_results=budget)
     )
     if bool(s_ref.needs_restructure):
         return  # overflowed buckets are untrustworthy by contract
-    s_f, r_f, t_f = core.apply_ops(state, ops, impl="fused", max_results=budget)
+    s_f, r_f, t_f = core.apply_ops(state, ops, config=ExecConfig(impl="fused", max_results=budget))
     for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
         np.testing.assert_array_equal(
             np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_f, f)), err_msg=f
@@ -265,7 +266,7 @@ def test_truncation_deterministic_and_flagged(rng):
     ops, _ = core.make_ops(tags, los, his, pad_to=16)
     runs = []
     for impl in ("reference", "fused", "reference"):
-        _, res, stats = core.apply_ops(st_, ops, impl=impl, max_results=64)
+        _, res, stats = core.apply_ops(st_, ops, config=ExecConfig(impl=impl, max_results=64))
         assert int(stats["range_truncated"]) > 0
         runs.append({k: np.asarray(v) for k, v in res.items()})
     for k in ("range_key", "range_val", "range_start", "range_count"):
@@ -276,7 +277,7 @@ def test_truncation_deterministic_and_flagged(rng):
     assert rc.sum() == 64
     # an under-budget run of the same batch is complete and unflagged
     _, res_big, stats_big = core.apply_ops(
-        st_, ops, impl="reference", max_results=4096
+        st_, ops, config=ExecConfig(impl="reference", max_results=4096)
     )
     assert int(stats_big["range_truncated"]) == 0
     n_total = int(np.asarray(res_big["range_count"]).sum())
@@ -293,9 +294,9 @@ def test_bucket_boundary_ranges(rng):
     his = np.concatenate([mk + 1, mk + 500]).astype(np.int32)
     tags = np.full(len(los), core.OP_RANGE, np.int32)
     ops, _ = core.make_ops(tags, los, his, pad_to=16)
-    _, res, _ = core.apply_ops(st_, ops, impl="reference", max_results=1024)
+    _, res, _ = core.apply_ops(st_, ops, config=ExecConfig(impl="reference", max_results=1024))
     core.check_range_results(ops, res, max_results=1024)
-    _, res_f, _ = core.apply_ops(st_, ops, impl="fused", max_results=1024)
+    _, res_f, _ = core.apply_ops(st_, ops, config=ExecConfig(impl="fused", max_results=1024))
     for k in ("range_key", "range_val", "range_start", "range_count"):
         np.testing.assert_array_equal(
             np.asarray(res[k]), np.asarray(res_f[k]), err_msg=k

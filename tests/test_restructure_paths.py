@@ -21,6 +21,7 @@ from repro import core
 from repro.core.invariants import check_invariants
 from repro.core.restructure import restructure_grow
 from repro.core.state import EMPTY, NOT_FOUND
+from repro.core.config import ExecConfig
 
 
 def _tiny_state():
@@ -90,7 +91,7 @@ def test_apply_ops_safe_replay_full_mix(impl):
     )
     ops, perm = core.make_ops(tags, bkeys, bvals, pad_to=256)
 
-    st2, res, stats = core.apply_ops_safe(st, ops, impl=impl)
+    st2, res, stats = core.apply_ops_safe(st, ops, config=ExecConfig(impl=impl))
     assert not bool(st2.needs_restructure)
     check_invariants(st2)
 
@@ -147,8 +148,8 @@ def test_apply_ops_safe_replay_reference_fused_identical():
     bvals = np.concatenate([flood, np.zeros(len(keys), np.int32)])
     ops, _ = core.make_ops(tags, bkeys, bvals, pad_to=256)
 
-    s_ref, r_ref, _ = core.apply_ops_safe(st, ops, impl="reference")
-    s_f, r_f, _ = core.apply_ops_safe(st, ops, impl="fused")
+    s_ref, r_ref, _ = core.apply_ops_safe(st, ops, config=ExecConfig(impl="reference"))
+    s_f, r_f, _ = core.apply_ops_safe(st, ops, config=ExecConfig(impl="fused"))
     for f in ("keys", "node_count", "node_max", "num_nodes", "mkba"):
         np.testing.assert_array_equal(
             np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_f, f)), err_msg=f

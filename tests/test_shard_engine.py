@@ -16,6 +16,7 @@ import pytest
 
 from repro import core
 from repro.core import distributed as dist
+from repro.core.config import ExecConfig
 
 pytestmark = pytest.mark.skipif(
     len(jax.devices()) < 8,
@@ -100,8 +101,8 @@ def _post_state_parity(new_idx, mesh, single_state, probe_keys):
     """The updated sharded index answers like the updated single state."""
     q = np.sort(probe_keys)
     qops, _ = core.make_ops(np.full(q.shape, core.OP_POINT, np.int32), q)
-    _, got, _ = dist.shard_apply_ops(new_idx, qops, mesh, max_results=8)
-    _, want, _ = core.apply_ops(single_state, qops, impl="reference", max_results=8)
+    _, got, _ = dist.shard_apply_ops(new_idx, qops, mesh, config=ExecConfig(max_results=8))
+    _, want, _ = core.apply_ops(single_state, qops, config=ExecConfig(impl="reference", max_results=8))
     assert (np.asarray(got["value"]) == np.asarray(want["value"])).all()
 
 
@@ -111,9 +112,9 @@ def test_matches_single_device(rng, n_shards, routing):
     keys, st, idx, mesh = _build_pair(rng, n_shards=n_shards)
     ops = _mixed_batch(rng, keys)
     mr = 512
-    s2, want_res, want_stats = core.apply_ops(st, ops, impl="reference", max_results=mr)
+    s2, want_res, want_stats = core.apply_ops(st, ops, config=ExecConfig(impl="reference", max_results=mr))
     new_idx, res, stats = dist.shard_apply_ops(
-        idx, ops, mesh, routing=routing, max_results=mr
+        idx, ops, mesh, config=ExecConfig(routing=routing, max_results=mr)
     )
     _assert_identical(res, stats, want_res, want_stats, f"{routing}/s{n_shards}")
     assert int(stats["a2a_overflow"]) == 0
@@ -127,10 +128,10 @@ def test_truncation_deterministic_under_global_budget(rng, routing):
     keys, st, idx, mesh = _build_pair(rng)
     ops = _mixed_batch(rng, keys, n_rg=96, span=8_000)
     mr = 64  # far below the full result volume -> earlier-op-wins truncation
-    _, want_res, want_stats = core.apply_ops(st, ops, impl="reference", max_results=mr)
+    _, want_res, want_stats = core.apply_ops(st, ops, config=ExecConfig(impl="reference", max_results=mr))
     assert int(want_stats["range_truncated"]) > 0  # the case is exercised
     _, res, stats = dist.shard_apply_ops(
-        idx, ops, mesh, routing=routing, max_results=mr
+        idx, ops, mesh, config=ExecConfig(routing=routing, max_results=mr)
     )
     _assert_identical(res, stats, want_res, want_stats, routing)
 
@@ -138,10 +139,10 @@ def test_truncation_deterministic_under_global_budget(rng, routing):
 def test_read_only_and_nop_batches(rng):
     keys, st, idx, mesh = _build_pair(rng)
     ops = _mixed_batch(rng, keys, n_ins=0, n_del=0, n_pt=512, n_sc=512, n_rg=32)
-    _, want_res, want_stats = core.apply_ops(st, ops, impl="reference", max_results=256)
+    _, want_res, want_stats = core.apply_ops(st, ops, config=ExecConfig(impl="reference", max_results=256))
     for routing in ("replicated", "a2a"):
         _, res, stats = dist.shard_apply_ops(
-            idx, ops, mesh, routing=routing, max_results=256
+            idx, ops, mesh, config=ExecConfig(routing=routing, max_results=256)
         )
         _assert_identical(res, stats, want_res, want_stats, routing)
     # all-NOP padding batch is legal and a no-op
@@ -149,7 +150,7 @@ def test_read_only_and_nop_batches(rng):
         np.zeros(0, np.int32), np.zeros(0, np.int32), pad_to=64
     )
     for routing in ("replicated", "a2a"):
-        new_idx, res, stats = dist.shard_apply_ops(idx, nops, mesh, routing=routing)
+        new_idx, res, stats = dist.shard_apply_ops(idx, nops, mesh, config=ExecConfig(routing=routing))
         assert int(stats["inserted"]) == 0 and int(stats["deleted"]) == 0
         assert (np.asarray(res["value"]) == int(core.NOT_FOUND)).all()
 
@@ -173,13 +174,13 @@ def test_a2a_overflow_reported_and_reroute_succeeds(rng):
     keys, st, idx, mesh = _build_pair(rng)
     ops = _skewed_batch(rng, idx)
     # capacity 64 per (src, dst) pair cannot carry 1024 rows to one shard
-    _, _, stats = dist.shard_apply_ops(idx, ops, mesh, routing="a2a", capacity=64)
+    _, _, stats = dist.shard_apply_ops(idx, ops, mesh, config=ExecConfig(routing="a2a", capacity=64))
     assert int(stats["a2a_overflow"]) == 1024 - 4 * 64
     # the documented recovery: replay the same batch on the same (unmutated)
     # index with a larger capacity — results now match the replicated mode
-    _, res, stats = dist.shard_apply_ops(idx, ops, mesh, routing="a2a", capacity=256)
+    _, res, stats = dist.shard_apply_ops(idx, ops, mesh, config=ExecConfig(routing="a2a", capacity=256))
     assert int(stats["a2a_overflow"]) == 0
-    _, want, _ = dist.shard_apply_ops(idx, ops, mesh, routing="replicated")
+    _, want, _ = dist.shard_apply_ops(idx, ops, mesh, config=ExecConfig(routing="replicated"))
     for k in ("value", "succ_key"):
         assert (np.asarray(res[k]) == np.asarray(want[k])).all(), k
 
@@ -194,13 +195,13 @@ def test_safe_driver_surfaces_a2a_retry_stats(rng):
     keys, st, idx, mesh = _build_pair(rng)
     ops = _skewed_batch(rng, idx)
     new_idx, res, stats = dist.shard_apply_ops_safe(
-        idx, ops, mesh, routing="a2a", capacity=64
+        idx, ops, mesh, config=ExecConfig(routing="a2a", capacity=64)
     )
     assert int(stats["a2a_retries"]) >= 1
     assert int(stats["a2a_overflow_dropped"]) >= 1024 - 4 * 64
     assert int(stats["a2a_overflow"]) == 0  # final attempt carried everything
     assert int(stats["restructure_retries"]) == 0  # read batch: no regrow
-    _, want, _ = dist.shard_apply_ops(idx, ops, mesh, routing="replicated")
+    _, want, _ = dist.shard_apply_ops(idx, ops, mesh, config=ExecConfig(routing="replicated"))
     for k in ("value", "succ_key"):
         assert (np.asarray(res[k]) == np.asarray(want[k])).all(), k
 
@@ -231,11 +232,11 @@ def test_a2a_matches_replicated_on_skew(rng):
     bv[-32:] = bk[-32:] + 500
     ops, _ = core.make_ops(tags, bk, bv, pad_to=1280)
     _, want_res, want_stats = dist.shard_apply_ops(
-        idx, ops, mesh, routing="replicated", max_results=256
+        idx, ops, mesh, config=ExecConfig(routing="replicated", max_results=256)
     )
     # default capacity (= chunk size) can never overflow, even at full skew
     _, res, stats = dist.shard_apply_ops(
-        idx, ops, mesh, routing="a2a", max_results=256
+        idx, ops, mesh, config=ExecConfig(routing="a2a", max_results=256)
     )
     assert int(stats["a2a_overflow"]) == 0
     _assert_identical(res, stats, want_res, want_stats, "skew")
@@ -265,7 +266,7 @@ def test_shard_restructure_rebalances_and_preserves_contents(rng):
     # every key still resolves post-rebalance
     probe = np.sort(np.concatenate([keys, extra]))
     qops, _ = core.make_ops(np.full(probe.shape, core.OP_POINT, np.int32), probe)
-    _, res, _ = dist.shard_apply_ops(idx3, qops, mesh, max_results=8)
+    _, res, _ = dist.shard_apply_ops(idx3, qops, mesh, config=ExecConfig(max_results=8))
     assert (np.asarray(res["value"]) != int(core.NOT_FOUND)).all()
 
 
@@ -278,7 +279,7 @@ def test_shard_restructure_rebalances_and_preserves_contents(rng):
 def test_sharded_kv_index_serves_like_local(routing):
     from repro.serve.kv_index import KVPageIndex
 
-    kv = KVPageIndex(shards=4, routing=routing)
+    kv = KVPageIndex(shards=4, config=ExecConfig(routing=routing))
     ref = KVPageIndex()
     seqs = np.arange(8)
     for idx_obj in (kv, ref):
@@ -376,10 +377,10 @@ def test_ttl_matches_single_device(rng, routing):
 
     mr = 512
     s2, want_res, want_stats = core.apply_ops(
-        st, ops, impl="reference", max_results=mr, now=now
+        st, ops, now=now, config=ExecConfig(impl="reference", max_results=mr)
     )
     new_idx, res, stats = dist.shard_apply_ops(
-        idx, ops, mesh, routing=routing, max_results=mr, now=now
+        idx, ops, mesh, now=now, config=ExecConfig(routing=routing, max_results=mr)
     )
     _assert_identical(res, stats, want_res, want_stats, f"ttl/{routing}")
     assert int(stats["expired"]) == int(want_stats["expired"]) > 0
@@ -392,10 +393,10 @@ def test_ttl_matches_single_device(rng, routing):
         np.full(probe.shape, core.OP_POINT, np.int32), probe, pad_to=1024
     )
     _, want2, wstats2 = core.apply_ops(
-        s2, qops, impl="reference", max_results=8, now=later
+        s2, qops, now=later, config=ExecConfig(impl="reference", max_results=8)
     )
     _, got2, gstats2 = dist.shard_apply_ops(
-        new_idx, qops, mesh, routing=routing, max_results=8, now=later
+        new_idx, qops, mesh, now=later, config=ExecConfig(routing=routing, max_results=8)
     )
     assert (np.asarray(got2["value"]) == np.asarray(want2["value"])).all()
     assert int(gstats2["expired"]) == int(wstats2["expired"]) > 0

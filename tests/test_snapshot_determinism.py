@@ -35,6 +35,7 @@ from repro.checkpoint.serialize import (
 )
 from repro.core.query import with_successor_cache
 from repro.core.restructure import restructure_auto, restructure_grow
+from repro.core.config import ExecConfig
 
 try:
     from hypothesis import HealthCheck, given, settings
@@ -74,8 +75,8 @@ def _mixed_ops(rng, n=64):
 def test_fused_and_reference_serialize_identically(rng):
     st0 = _state(rng)
     ops = _mixed_ops(rng)
-    ref, _, _ = core.apply_ops(st0, ops, impl="reference")
-    fus, _, _ = core.apply_ops(st0, ops, impl="fused")
+    ref, _, _ = core.apply_ops(st0, ops, config=ExecConfig(impl="reference"))
+    fus, _, _ = core.apply_ops(st0, ops, config=ExecConfig(impl="fused"))
     assert canonical_state_bytes(ref) == canonical_state_bytes(fus)
 
 
@@ -86,8 +87,8 @@ def test_successor_cache_is_invisible(rng):
     assert canonical_state_bytes(cached) == canonical_state_bytes(st0)
     # and after an update batch on the cached state (cache dropped/rebuilt)
     ops = _mixed_ops(rng)
-    a, _, _ = core.apply_ops(st0, ops, impl="reference")
-    b, _, _ = core.apply_ops(cached, ops, impl="reference")
+    a, _, _ = core.apply_ops(st0, ops, config=ExecConfig(impl="reference"))
+    b, _, _ = core.apply_ops(cached, ops, config=ExecConfig(impl="reference"))
     assert canonical_state_bytes(a) == canonical_state_bytes(b)
 
 
@@ -102,8 +103,8 @@ def test_restructure_is_a_logical_noop(rng):
     assert canonical_state_bytes(shrunk) == base
     # ...and the same batch applied pre- vs post-restructure converges
     ops = _mixed_ops(rng)
-    a, _, _ = core.apply_ops(st0, ops, impl="reference")
-    b, _, _ = core.apply_ops(grown, ops, impl="reference")
+    a, _, _ = core.apply_ops(st0, ops, config=ExecConfig(impl="reference"))
+    b, _, _ = core.apply_ops(grown, ops, config=ExecConfig(impl="reference"))
     assert canonical_state_bytes(a) == canonical_state_bytes(b)
 
 
@@ -124,7 +125,7 @@ def test_batch_split_independence(rng):
                 jnp.asarray(keys[lo:hi]),
                 jnp.asarray(vals[lo:hi]),
             )
-            s, _, _ = core.apply_ops(s, ops, impl="reference")
+            s, _, _ = core.apply_ops(s, ops, config=ExecConfig(impl="reference"))
         return canonical_state_bytes(s)
 
     assert run((0, 64)) == run((0, 32), (32, 64))
@@ -133,7 +134,7 @@ def test_batch_split_independence(rng):
 def test_roundtrip_through_canonical_bytes(rng):
     st0 = _state(rng)
     ops = _mixed_ops(rng)
-    s1, _, _ = core.apply_ops(st0, ops, impl="reference")
+    s1, _, _ = core.apply_ops(st0, ops, config=ExecConfig(impl="reference"))
     data = canonical_state_bytes(s1)
     keys, vals, exps = parse_canonical(data)
     rebuilt = state_from_pairs(keys, vals, exps)
@@ -219,7 +220,7 @@ def _apply_seq(st0, seqs, impl, cache_every=0):
         ops, _ = core.make_ops(
             jnp.asarray(tag), jnp.asarray(keys), jnp.asarray(vals)
         )
-        s, _, _ = core.apply_ops(s, ops, impl=impl)
+        s, _, _ = core.apply_ops(s, ops, config=ExecConfig(impl=impl))
     return s
 
 

@@ -104,10 +104,10 @@ def test_kv_page_index_pages_of_via_engine(rng):
 
     # update-then-read inside ONE engine step: the enumeration travels in
     # the same batch as the allocations it observes
-    _, rng_out, _ = idx.step(
+    rng_out = idx.step(
         allocs=([3, 3], [0, 1], [30, 31]),
         ranges=([3 << PAGE_BITS], [4 << PAGE_BITS]),
-    )
+    ).range_out
     assert int(rng_out["count"][0]) == 2
     got_pages = np.asarray(rng_out["keys"])[:2] & ((1 << PAGE_BITS) - 1)
     assert got_pages.tolist() == [0, 1]
@@ -171,7 +171,7 @@ def test_train_driver_resume_cli(tmp_path):
 
 
 def _range_bytes(idx, as_of=None, hi=1 << 20):
-    _, rr, _ = idx.step(ranges=([0], [hi]), as_of=as_of, range_budget=512)
+    rr = idx.step(ranges=([0], [hi]), as_of=as_of, range_budget=512).range_out
     return np.asarray(rr["keys"]).tobytes() + np.asarray(rr["vals"]).tobytes()
 
 
@@ -221,7 +221,7 @@ def test_pinned_read_replays_at_pinned_clock():
     # expires the pages, the pinned cut still holds them
     idx.step(allocs=([9], [0], [900], [999]), now=50)
     assert _range_bytes(idx, as_of=v) == base
-    got, _, _ = idx.step(lookups=(seqs, np.zeros(4, int)), now=50)
+    got = idx.step(lookups=(seqs, np.zeros(4, int)), now=50).slots
     assert (np.asarray(got) == -1).all()  # live view: all expired
 
 

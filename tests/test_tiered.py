@@ -51,6 +51,7 @@ from repro.core import (
     restructure_shrink,
 )
 from repro.core.distributed import plan_shard_budget
+from repro.core.config import ExecConfig
 from repro.core.ops import (
     OP_DELETE,
     OP_EXPIRE,
@@ -161,8 +162,8 @@ def test_budget_sweep_differential(seeded, rng):
         tiered = TieredFliX.from_state(st, budget_bytes=budget)
         for name, tags, keys, vals in batches:
             ops, perm = make_ops(tags, keys, vals)
-            oracle, want, wstats = apply_ops(oracle, ops, impl="reference")
-            got, gstats, _ = tiered.apply(ops, impl="reference")
+            oracle, want, wstats = apply_ops(oracle, ops, config=ExecConfig(impl="reference"))
+            got, gstats, _ = tiered.apply(ops, config=ExecConfig(impl="reference"))
             tag = f"{bname}/{name}"
             _assert_results_match(got, want, gstats, wstats, tag)
             _assert_tiered_matches(tiered, oracle, tag)
@@ -181,8 +182,8 @@ def test_readonly_batches_leave_mirror_untouched(seeded, rng):
     q = np.sort(rng.choice(live, 200)).astype(np.int32)
     tags = np.where(np.arange(200) % 2 == 0, OP_POINT, OP_SUCCESSOR).astype(np.int32)
     ops, _ = make_ops(tags, q, np.zeros(200, np.int32))
-    _, want, _ = apply_ops(st, ops, impl="reference")
-    got, stats, _ = tiered.apply(ops, impl="reference", commit=False)
+    _, want, _ = apply_ops(st, ops, config=ExecConfig(impl="reference"))
+    got, stats, _ = tiered.apply(ops, config=ExecConfig(impl="reference"), commit=False)
     for k in want:
         np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
     assert pairs_to_bytes(*bucket_segments(tiered.host_view())[1:]) == before
@@ -205,8 +206,8 @@ def test_overflow_grow_replay_matches_safe_oracle(rng):
         tags = np.full(48, OP_INSERT, np.int32)
         tags[40:] = OP_POINT
         ops, _ = make_ops(tags, fresh, (fresh * 13 + t).astype(np.int32))
-        oracle, want, wstats = apply_ops_safe(oracle, ops, impl="reference")
-        got, gstats, restructured = tiered.apply(ops, impl="reference")
+        oracle, want, wstats = apply_ops_safe(oracle, ops, config=ExecConfig(impl="reference"))
+        got, gstats, restructured = tiered.apply(ops, config=ExecConfig(impl="reference"))
         assert restructured == bool(int(wstats["restructure_retries"])), t
         grew += int(restructured)
         _assert_results_match(got, want, gstats, wstats, f"flood{t}")
@@ -236,8 +237,8 @@ def test_ttl_parity_with_moving_clock(rng):
             np.int32
         )
         ops, _ = make_ops(tags, q, (q * 5 + now).astype(np.int32), exps=e)
-        oracle, want, wstats = apply_ops(oracle, ops, impl="reference", now=now)
-        got, gstats, _ = tiered.apply(ops, impl="reference", now=now)
+        oracle, want, wstats = apply_ops(oracle, ops, now=now, config=ExecConfig(impl="reference"))
+        got, gstats, _ = tiered.apply(ops, config=ExecConfig(impl="reference"), now=now)
         _assert_results_match(got, want, gstats, wstats, f"now={now}")
         _assert_tiered_matches(tiered, oracle, f"now={now}")
         check_tiered_invariants(tiered, now=now)
@@ -278,8 +279,8 @@ def test_tiered_compact_reclaims_and_keeps_parity(rng):
     # still serves correctly after compaction, within budget
     q = np.sort(rng.choice(keys, 64)).astype(np.int32)
     ops, _ = make_ops(np.full(64, OP_POINT, np.int32), q, np.zeros(64, np.int32))
-    _, want, _ = apply_ops(oracle, ops, impl="reference")
-    got, _, _ = tiered.apply(ops, impl="reference")
+    _, want, _ = apply_ops(oracle, ops, config=ExecConfig(impl="reference"))
+    got, _, _ = tiered.apply(ops, config=ExecConfig(impl="reference"))
     np.testing.assert_array_equal(np.asarray(got["value"]), np.asarray(want["value"]))
 
 

@@ -30,6 +30,7 @@ from repro import core
 from repro.core.expiry import NO_EXPIRY
 from repro.core.state import EMPTY, MAX_VALID, NOT_FOUND
 from repro.checkpoint.serialize import state_from_pairs
+from repro.core.config import ExecConfig
 
 from clock_model import (
     TTLModel,
@@ -195,11 +196,8 @@ def _apply(state, tags, keys, vals, exps, *, now, impl, budget):
     state, res, stats = core.apply_ops_safe(
         state,
         ops,
-        impl=impl,
-        max_results=budget,
-        now=now,
-        validate=True,  # I1–I6 incl. expiry liveness at this `now`
-        validate_ranges=True,
+        now=now,  # I1–I6 incl. expiry liveness at this `now`
+         config=ExecConfig(impl=impl, max_results=budget, validate=True, validate_ranges=True)
     )
     values = np.asarray(core.unsort(res["value"], perm))[: len(tags)]
     return state, values, res, stats, perm
@@ -257,12 +255,12 @@ def _check_fused_matches_reference(wl, budget=256):
             tags, keys, vals, exps=jnp.asarray(exps), pad_to=PAD
         )
         n_ref, r_ref, t_ref = core.apply_ops(
-            s_ref, ops, impl="reference", max_results=budget, now=now
+            s_ref, ops, now=now, config=ExecConfig(impl="reference", max_results=budget)
         )
         if bool(n_ref.needs_restructure):
             return  # overflowed buckets are untrustworthy by contract
         n_f, r_f, t_f = core.apply_ops(
-            s_f, ops, impl="fused", max_results=budget, now=now
+            s_f, ops, now=now, config=ExecConfig(impl="fused", max_results=budget)
         )
         for f in ("keys", "exps", "node_count", "node_max", "num_nodes", "mkba"):
             np.testing.assert_array_equal(
@@ -443,7 +441,7 @@ def test_now_none_skips_expiry():
         pad_to=8,
     )
     _, res, stats = core.apply_ops(
-        state, ops, impl="reference", max_results=8
+        state, ops, config=ExecConfig(impl="reference", max_results=8)
     )  # no now=
     assert int(np.asarray(core.unsort(res["value"], perm))[0]) == 5 * 7 + 1
     assert int(stats["expired"]) == 0

@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Gate the repo's own callers off the deprecated ExecConfig keywords.
+
+The PR-10 API migration keeps the legacy per-entry-point keywords
+(``impl``, ``donate``, ``block_q``, ``block_b``, ``max_results``,
+``capacity``, ``routing``, ``validate``, ``validate_ranges``) alive as
+warn-once shims for *external* callers, but the repo itself must be fully
+on ``config=ExecConfig(...)`` so the shims can drop next release.  This
+check walks every in-repo Python file with ``ast`` and fails on any call
+to an engine entry point that still passes a deprecated keyword.
+
+Exemptions: ``src/repro/core/`` (the shim implementation itself) and
+``tests/test_exec_config.py`` (which proves the shims warn).
+
+    python tools/check_exec_config.py          # from the repo root
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+DEPRECATED = {
+    "impl",
+    "donate",
+    "block_q",
+    "block_b",
+    "max_results",
+    "capacity",
+    "routing",
+    "validate",
+    "validate_ranges",
+}
+ENTRY_POINTS = {
+    "apply_ops",
+    "apply_ops_safe",
+    "shard_apply_ops",
+    "shard_apply_ops_safe",
+    "KVPageIndex",
+    "apply",  # DurableFliX.apply / TieredFliX.apply (see APPLY_ALLOWED)
+}
+# ``apply`` is matched by bare method name, which also catches the internal
+# ``EngineBase.apply`` adapter seam (checkpoint/durable.py) — there
+# ``max_results`` is a required keyword carrying per-record replay data, not
+# a shim.  Syntactically indistinguishable, so ``max_results`` on ``apply``
+# is left to the runtime warn-once shim instead of this static gate.
+APPLY_ALLOWED = {"max_results"}
+EXEMPT = ("src/repro/core/", "tests/test_exec_config.py")
+SCAN_DIRS = ("src", "tests", "examples", "benchmarks", "tools")
+
+
+def callee_name(node: ast.Call) -> str | None:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    try:
+        tree = ast.parse(path.read_text())
+    except SyntaxError as e:
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = callee_name(node)
+        if name not in ENTRY_POINTS:
+            continue
+        deprecated = DEPRECATED - APPLY_ALLOWED if name == "apply" else DEPRECATED
+        bad = sorted(k.arg for k in node.keywords if k.arg in deprecated)
+        if bad:
+            out.append(
+                f"{path}:{node.lineno}: {callee_name(node)}() passes deprecated "
+                f"keyword(s) {bad} — use config=ExecConfig(...)"
+            )
+    return out
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    violations = []
+    for d in SCAN_DIRS:
+        for p in sorted((root / d).rglob("*.py")):
+            rel = p.relative_to(root).as_posix()
+            if "__pycache__" in rel or any(rel.startswith(e) or rel == e for e in EXEMPT):
+                continue
+            violations += check_file(p)
+    if violations:
+        print("\n".join(violations))
+        print(f"\n{len(violations)} deprecated-keyword call site(s).")
+        return 1
+    print("exec-config check: all in-repo callers use config=ExecConfig(...)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
